@@ -1,0 +1,34 @@
+//! §Perf probe (EXPERIMENTS.md §Perf): per-step time breakdown of the
+//! training hot loop — fwd/bwd XLA compute vs gradient staging vs
+//! aggregation + optimizer + parameter upload.
+//!
+//!     cargo run --release --example perfprobe [tiny|small]
+use std::path::PathBuf;
+use std::time::Instant;
+use easyscale::exec::{DeviceType, Placement};
+use easyscale::runtime::Engine;
+use easyscale::train::{Determinism, TrainConfig, Trainer};
+
+fn main() {
+    let preset = std::env::args().nth(1).unwrap_or_else(|| "small".into());
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let eng = Engine::open(&root, &preset).unwrap();
+    let cfg = TrainConfig { determinism: Determinism::D1, ..TrainConfig::new(4) };
+    let mut t = Trainer::new(&eng, cfg, Placement::homogeneous(DeviceType::V100, 2, 4)).unwrap();
+    t.run(&eng, 3).unwrap();
+    let n = 10;
+    let t0 = Instant::now();
+    let mut compute = 0.0; let mut stage = 0.0;
+    for _ in 0..n {
+        t.step(&eng).unwrap();
+        for timing in &t.last_timing {
+            compute += timing.compute_s.iter().sum::<f64>();
+            stage += timing.stage_s.iter().sum::<f64>();
+        }
+    }
+    let total = t0.elapsed().as_secs_f64();
+    // isolate opt_update + aggregation: total - fwd compute - stage
+    println!("preset {preset}: {:.3}s/step total | fwd_bwd {:.3}s | stage {:.5}s | agg+update+upload {:.3}s",
+        total / n as f64, compute / n as f64, stage / n as f64,
+        (total - compute - stage) / n as f64);
+}

@@ -1,0 +1,52 @@
+//! Quickstart: train the transformer LM elastically on two simulated GPUs
+//! and watch the loss fall toward the corpus entropy floor.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Everything on the hot path is Rust + PJRT: the JAX/Pallas layers ran
+//! once at `make artifacts` time.
+
+use std::path::PathBuf;
+
+use easyscale::exec::{DeviceType, Placement};
+use easyscale::runtime::Engine;
+use easyscale::train::{Determinism, TrainConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let preset = std::env::args().nth(1).unwrap_or_else(|| "tiny".to_string());
+    let engine = Engine::open(&root, &preset)?;
+    println!(
+        "loaded preset '{preset}': {} params, vocab {}, seq {}",
+        engine.manifest.model.n_params,
+        engine.manifest.model.vocab_size,
+        engine.manifest.model.seq_len
+    );
+
+    // 4 logical workers (EasyScaleThreads) on 2 simulated V100s.
+    let max_p = 4;
+    let cfg = TrainConfig {
+        lr: 0.1,
+        determinism: Determinism::D1,
+        ..TrainConfig::new(max_p)
+    };
+    let placement = Placement::homogeneous(DeviceType::V100, 2, max_p);
+    let mut trainer = Trainer::new(&engine, cfg, placement)?;
+
+    println!("corpus entropy floor: {:.4} nats/token", trainer.corpus.entropy_rate());
+    let steps = 60u64;
+    for step in 0..steps {
+        let loss = trainer.step(&engine)?;
+        if step % 5 == 0 {
+            println!("step {step:3}  train loss {loss:.4}");
+        }
+    }
+    let eval = trainer.eval(&engine)?;
+    println!(
+        "final: train {:.4}, eval {:.4}, fingerprint {:016x}",
+        trainer.loss_history.last().unwrap(),
+        eval,
+        trainer.param_fingerprint()
+    );
+    Ok(())
+}

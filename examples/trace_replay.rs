@@ -1,0 +1,56 @@
+//! Trace replay (paper §5.2, Fig. 14/15): 160 jobs over the 64-GPU
+//! heterogeneous cluster under YARN-CS, EasyScale_homo and EasyScale_heter.
+//!
+//!     cargo run --release --example trace_replay [n_jobs] [interarrival_s]
+
+use easyscale::metrics::MetricSink;
+use easyscale::sim::simulator::{ElasticSim, SchedulerKind};
+use easyscale::sim::trace::gen_trace;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(160);
+    let inter: f64 = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(60.0);
+    let trace = gen_trace(11, n, inter);
+    println!("replaying {n} jobs (mean interarrival {inter}s) on 32xV100 + 16xP100 + 16xT4\n");
+
+    let mut outs = Vec::new();
+    for kind in [
+        SchedulerKind::YarnCs,
+        SchedulerKind::EasyScaleHomo,
+        SchedulerKind::EasyScaleHeter,
+    ] {
+        let out = ElasticSim::new(kind).run(&trace);
+        println!(
+            "{:>16}: avg JCT {:>9.1}s  makespan {:>9.1}s  mean allocated GPUs {:>5.1}  reconfigs {}",
+            kind.name(),
+            out.avg_jct_s(),
+            out.makespan_s,
+            out.alloc_series.time_weighted_mean(),
+            out.reconfigs
+        );
+        outs.push(out);
+    }
+    let yarn_jct = outs[0].avg_jct_s();
+    let yarn_ms = outs[0].makespan_s;
+    println!();
+    println!("Fig. 14 (paper: homo 8.3x / 2.5x, heter 13.2x / 2.8x):");
+    for o in &outs[1..] {
+        println!(
+            "  {:>16}: JCT speedup {:.1}x, makespan speedup {:.1}x",
+            o.kind.name(),
+            yarn_jct / o.avg_jct_s(),
+            yarn_ms / o.makespan_s
+        );
+    }
+
+    let mut sink = MetricSink::new();
+    for o in &outs {
+        for &(x, y) in &o.alloc_series.points {
+            sink.push(&o.alloc_series.name, x, y);
+        }
+    }
+    let path = std::path::Path::new("fig15_allocated_gpus.csv");
+    sink.write_csv(path)?;
+    println!("\nFig. 15 series written to {}", path.display());
+    Ok(())
+}

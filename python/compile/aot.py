@@ -1,0 +1,194 @@
+"""AOT compile path: lower the Layer-2 graphs to HLO text + manifest.
+
+Run once at build time (`make artifacts`); never on the request path. Emits,
+per preset, into <out-dir>/<preset>/:
+
+  fwd_bwd.det.hlo.txt     D2 hardware-agnostic (Pallas) training step
+  fwd_bwd.v100.hlo.txt    per-"GPU-type" vendor-kernel variants
+  fwd_bwd.p100.hlo.txt
+  fwd_bwd.t4.hlo.txt
+  opt_update.hlo.txt      fused Pallas SGD-momentum step (device-agnostic)
+  eval_loss.hlo.txt       dropout-free forward loss
+  init_params.bin         raw little-endian f32 init (manifest order)
+  manifest.json           config + full I/O signatures for the Rust runtime
+
+HLO *text* is the interchange format (see compile/hlo.py for why not
+serialized protos).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hlo import lower_to_hlo_text
+from .model import (
+    PRESETS,
+    ModelConfig,
+    eval_loss_fn,
+    fwd_bwd_fn,
+    init_params,
+    opt_update_fn,
+    param_spec,
+)
+
+VARIANTS = ["det", "v100", "p100", "t4"]
+MOMENTUM = 0.9
+INIT_SEED = 42
+
+
+def _abstract_params(cfg: ModelConfig):
+    return [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in param_spec(cfg)
+    ]
+
+
+def build_preset(preset: str, cfg: ModelConfig, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    spec = param_spec(cfg)
+    p_abs = _abstract_params(cfg)
+    tokens_abs = jax.ShapeDtypeStruct(
+        (cfg.batch_per_est, cfg.seq_len + 1), jnp.int32
+    )
+    rng_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    lr_abs = jax.ShapeDtypeStruct((), jnp.float32)
+
+    artifacts = {}
+
+    for variant in VARIANTS:
+        name = f"fwd_bwd.{variant}.hlo.txt"
+        text = lower_to_hlo_text(
+            fwd_bwd_fn(cfg, variant), *p_abs, tokens_abs, rng_abs
+        )
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        print(f"  [{preset}] {name}: {len(text)} chars")
+    artifacts["fwd_bwd"] = {
+        "variants": {v: f"fwd_bwd.{v}.hlo.txt" for v in VARIANTS},
+        "inputs": [
+            *(
+                {"name": n, "shape": list(s), "dtype": "f32"}
+                for n, s in spec
+            ),
+            {
+                "name": "tokens",
+                "shape": [cfg.batch_per_est, cfg.seq_len + 1],
+                "dtype": "i32",
+            },
+            {"name": "rng", "shape": [2], "dtype": "u32"},
+        ],
+        "outputs": [
+            {"name": "loss", "shape": [], "dtype": "f32"},
+            *(
+                {"name": f"grad/{n}", "shape": list(s), "dtype": "f32"}
+                for n, s in spec
+            ),
+        ],
+    }
+
+    text = lower_to_hlo_text(
+        opt_update_fn(cfg, MOMENTUM), *p_abs, *p_abs, *p_abs, lr_abs
+    )
+    with open(os.path.join(out_dir, "opt_update.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"  [{preset}] opt_update.hlo.txt: {len(text)} chars")
+    artifacts["opt_update"] = {
+        "file": "opt_update.hlo.txt",
+        "inputs": [
+            *({"name": n, "shape": list(s), "dtype": "f32"} for n, s in spec),
+            *(
+                {"name": f"mom/{n}", "shape": list(s), "dtype": "f32"}
+                for n, s in spec
+            ),
+            *(
+                {"name": f"grad/{n}", "shape": list(s), "dtype": "f32"}
+                for n, s in spec
+            ),
+            {"name": "lr", "shape": [], "dtype": "f32"},
+        ],
+        "outputs": [
+            *({"name": n, "shape": list(s), "dtype": "f32"} for n, s in spec),
+            *(
+                {"name": f"mom/{n}", "shape": list(s), "dtype": "f32"}
+                for n, s in spec
+            ),
+        ],
+    }
+
+    text = lower_to_hlo_text(eval_loss_fn(cfg, "det"), *p_abs, tokens_abs)
+    with open(os.path.join(out_dir, "eval_loss.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"  [{preset}] eval_loss.hlo.txt: {len(text)} chars")
+    artifacts["eval_loss"] = {
+        "file": "eval_loss.hlo.txt",
+        "inputs": [
+            *({"name": n, "shape": list(s), "dtype": "f32"} for n, s in spec),
+            {
+                "name": "tokens",
+                "shape": [cfg.batch_per_est, cfg.seq_len + 1],
+                "dtype": "i32",
+            },
+        ],
+        "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}],
+    }
+
+    # Deterministic initial parameters, raw f32 LE bytes in manifest order.
+    params = init_params(cfg, seed=INIT_SEED)
+    with open(os.path.join(out_dir, "init_params.bin"), "wb") as f:
+        for n, _ in spec:
+            f.write(np.asarray(params[n], dtype="<f4").tobytes())
+
+    n_params = int(sum(int(np.prod(s)) for _, s in spec))
+    manifest = {
+        "preset": preset,
+        "model": {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "batch_per_est": cfg.batch_per_est,
+            "dropout": cfg.dropout,
+            "momentum": MOMENTUM,
+            "init_seed": INIT_SEED,
+            "n_params": n_params,
+        },
+        "params": [
+            {"name": n, "shape": list(s), "size": int(np.prod(s)) if s else 1}
+            for n, s in spec
+        ],
+        "artifacts": artifacts,
+        "init_params": "init_params.bin",
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  [{preset}] manifest.json: {n_params} params")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--presets",
+        default="tiny,small",
+        help="comma-separated subset of: " + ",".join(PRESETS),
+    )
+    args = ap.parse_args()
+    presets = [p for p in args.presets.split(",") if p]
+    for preset in presets:
+        cfg = PRESETS[preset]
+        print(f"building preset '{preset}' ...")
+        build_preset(preset, cfg, os.path.join(args.out_dir, preset))
+    # Top-level marker manifest so `make` has a single stamp file.
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"presets": presets}, f)
+
+
+if __name__ == "__main__":
+    main()

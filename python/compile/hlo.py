@@ -1,0 +1,28 @@
+"""HLO-text lowering helper (the AOT interchange format).
+
+HLO *text* (not serialized HloModuleProto) is the interchange format between
+the build-time JAX layer and the run-time Rust layer: jax >= 0.5 emits protos
+with 64-bit instruction ids which xla_extension 0.5.1 (what the published
+`xla` 0.1.6 crate links) rejects (`proto.id() <= INT_MAX`). The HLO text
+parser reassigns ids, so text round-trips cleanly.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def lower_to_hlo_text(fn, *example_args) -> str:
+    """Jit-lower `fn` at the given abstract args and return XLA HLO text.
+
+    The computation is lowered with ``return_tuple=True`` so the Rust side
+    always unwraps a single tuple result (``Literal::to_tuple``), regardless
+    of arity.
+    """
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

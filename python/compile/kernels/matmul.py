@@ -1,0 +1,151 @@
+"""Layer-1 matmul kernels.
+
+Two families, mirroring the paper's GPU-kernel-level non-determinism (§3.3):
+
+* ``pallas_matmul`` — the **hardware-agnostic deterministic kernel** used by
+  determinism level D2. A classic blocked Pallas matmul with a *fixed*
+  BlockSpec schedule (tile sizes and K-loop march order are properties of the
+  kernel, never of the device), so the float-summation order — and therefore
+  the bitwise result — is identical on every device. This is the TPU
+  re-think of the paper's "pass algo_id to cuBLAS / limit SM count" fix:
+  on TPU the accumulation order is the *tiling schedule*, which Pallas pins.
+
+* ``splitk_matmul`` — the **vendor-kernel emulation**. Real cuBLAS/cuDNN
+  pick different split-K schedules per GPU architecture; different split-K
+  factors reassociate the K-reduction and produce bitwise-different f32
+  results. Device profiles map GPU types to split factors (V100 -> 1,
+  P100 -> 2, T4 -> 4), which is exactly the mechanism by which heterogeneous
+  GPUs break bitwise reproducibility in the paper.
+
+Pallas kernels run with ``interpret=True``: the CPU PJRT backend cannot
+execute Mosaic custom-calls, and interpret mode lowers the kernel to plain
+HLO so it composes into the same AOT artifact (see DESIGN.md
+§Hardware-Adaptation for the real-TPU tiling/VMEM discussion).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed schedule of the deterministic kernel. On a real TPU these blocks are
+# sized for VMEM (see DESIGN.md §Perf): a (128, 512) x (512, 128) f32 tile
+# set occupies ~0.57 MB of the ~16 MB VMEM, leaving ample double-buffering
+# headroom. Block sizes shrink to the dimension when a matrix is smaller.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 512
+
+# Split-K factors per simulated GPU type: the "cuBLAS algorithm id" of our
+# substitute hardware stack.
+DEVICE_SPLITK = {"v100": 1, "p100": 2, "t4": 4}
+
+
+def _block(dim: int, pref: int) -> int:
+    """Largest divisor of `dim` that is <= pref, preferring `pref` itself."""
+    if dim % pref == 0:
+        return pref
+    b = min(dim, pref)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """Blocked matmul body. The output block is revisited along the K grid
+    dimension and accumulated in place; K marches in a fixed 0..nk order,
+    which pins the float-summation order."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def pallas_matmul_raw(x: jax.Array, w: jax.Array) -> jax.Array:
+    """The deterministic blocked matmul, no autodiff plumbing.
+
+    x: (M, K), w: (K, N) -> (M, N). Requires 2-D inputs.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul shape mismatch {x.shape} @ {w.shape}"
+    bm, bn, bk = _block(m, BLOCK_M), _block(n, BLOCK_N), _block(k, BLOCK_K)
+    nk = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+@jax.custom_vjp
+def pallas_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable deterministic matmul: fwd and both bwd matmuls all run
+    through the same fixed-schedule Pallas kernel, so gradients are as
+    deterministic as activations."""
+    return pallas_matmul_raw(x, w)
+
+
+def _pallas_matmul_fwd(x, w):
+    return pallas_matmul_raw(x, w), (x, w)
+
+
+def _pallas_matmul_bwd(res, g):
+    x, w = res
+    # dx = g @ w^T ; dw = x^T @ g — transposes are data movement only
+    # (bitwise-neutral); the reductions run through the pinned kernel.
+    dx = pallas_matmul_raw(g, w.T)
+    dw = pallas_matmul_raw(x.T, g)
+    return dx, dw
+
+
+pallas_matmul.defvjp(_pallas_matmul_fwd, _pallas_matmul_bwd)
+
+
+def splitk_matmul(x: jax.Array, w: jax.Array, k_splits: int) -> jax.Array:
+    """Vendor-kernel emulation: split the K reduction into `k_splits` chunks,
+    reduce each chunk with a dense matmul, then sum the partials in fixed
+    chunk order. Different `k_splits` reassociate the sum -> bitwise-different
+    f32 results, exactly like different cuBLAS algorithms across GPU types.
+
+    Deterministic for a *fixed* k_splits (same device type twice -> same
+    bits); only *changing* device type changes the bits.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul shape mismatch {x.shape} @ {w.shape}"
+    if k_splits <= 1 or k % k_splits != 0:
+        return jnp.dot(x, w, preferred_element_type=x.dtype)
+    ck = k // k_splits
+    xs = x.reshape(m, k_splits, ck)
+    ws = w.reshape(k_splits, ck, n)
+    # einsum over the chunk dim would let XLA reassociate; an explicit
+    # fori-style ordered sum pins the order.
+    out = jnp.dot(xs[:, 0, :], ws[0], preferred_element_type=x.dtype)
+    for i in range(1, k_splits):
+        out = out + jnp.dot(xs[:, i, :], ws[i], preferred_element_type=x.dtype)
+    return out
+
+
+def matmul_2d(x: jax.Array, w: jax.Array, variant: str) -> jax.Array:
+    """Variant dispatch used by the Layer-2 model for every dense projection.
+
+    variant == "det"  -> the Pallas hardware-agnostic kernel (D2 on);
+    variant in DEVICE_SPLITK -> that device's vendor-kernel emulation.
+    """
+    if variant == "det":
+        return pallas_matmul(x, w)
+    return splitk_matmul(x, w, DEVICE_SPLITK[variant])

@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Layer-1 kernels.
+
+These are the CORE correctness signal: every Pallas kernel is checked
+against these references in python/tests/ before anything is AOT-compiled
+for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain dense matmul, f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=x.dtype)
+
+
+def sgd_momentum_ref(p, m, g, lr, mu: float = 0.9):
+    """Reference SGD-with-momentum update: m' = mu*m + g; p' = p - lr*m'."""
+    lr = jnp.asarray(lr, dtype=p.dtype)
+    m_new = mu * m + g
+    p_new = p - lr * m_new
+    return p_new, m_new

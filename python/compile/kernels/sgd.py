@@ -1,0 +1,76 @@
+"""Layer-1 fused SGD-with-momentum update kernel (Pallas).
+
+The optimizer step runs once per global mini-batch on every parameter tensor
+(the hottest *elementwise* path in the system), so it is expressed as a
+Pallas kernel: a 1-D grid over tiles of the flattened tensor, fusing the
+momentum update and the parameter update into a single VMEM-resident pass.
+
+    m' = mu * m + g
+    p' = p - lr * m'
+
+The kernel is schedule-fixed (tile order is the grid order), hence
+deterministic across devices — the optimizer never contributes to the
+paper's D2 heterogeneity problem.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size: one (padded) VMEM-sized block per grid step. On interpret-mode
+# CPU the grid lowers to an XLA while-loop, so fewer+larger blocks execute
+# dramatically faster; on a real TPU 2 MB f32 blocks stay comfortably within
+# the ~16 MB VMEM with double-buffering headroom (see EXPERIMENTS.md §Perf/L1
+# for the before/after of this tile choice: 4096 -> 512Ki elements).
+TILE = 512 * 1024
+
+
+def _tile(size: int) -> int:
+    t = min(size, TILE)
+    while size % t != 0:
+        t -= 1
+    return t
+
+
+def _sgd_kernel(lr_ref, p_ref, m_ref, g_ref, po_ref, mo_ref, *, mu: float):
+    m_new = mu * m_ref[...] + g_ref[...]
+    mo_ref[...] = m_new
+    po_ref[...] = p_ref[...] - lr_ref[0] * m_new
+
+
+def sgd_momentum_update(
+    p: jax.Array, m: jax.Array, g: jax.Array, lr: jax.Array, mu: float = 0.9
+):
+    """Fused update of one parameter tensor. `lr` is a scalar f32 array.
+
+    Returns (p_new, m_new) with the same shape/dtype as `p`.
+    """
+    shape = p.shape
+    size = p.size
+    t = _tile(size)
+    lr1 = jnp.reshape(lr, (1,)).astype(p.dtype)
+    p1, m1, g1 = (a.reshape(size) for a in (p, m, g))
+    p_new, m_new = pl.pallas_call(
+        functools.partial(_sgd_kernel, mu=mu),
+        grid=(size // t,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # lr broadcast to all tiles
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((size,), p.dtype),
+            jax.ShapeDtypeStruct((size,), p.dtype),
+        ],
+        interpret=True,
+    )(lr1, p1, m1, g1)
+    return p_new.reshape(shape), m_new.reshape(shape)

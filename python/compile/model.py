@@ -1,0 +1,251 @@
+"""Layer-2: the JAX training-step graph (decoder-only transformer LM).
+
+This is the per-EasyScaleThread microbatch computation: one fwd/bwd over the
+EST's microbatch producing (loss, grads). Gradient *aggregation* across ESTs
+is deliberately NOT part of this graph — the paper's ElasticDDP performs it
+over staged host buffers with a pinned ring order, which lives in the Rust
+coordinator (rust/src/comm/). Keeping aggregation out of the artifact is
+what makes the artifact placement-independent.
+
+All dense projections route through kernels.matmul.matmul_2d(variant), which
+is how GPU-kernel-level (non-)determinism enters the graph:
+  variant="det"            -> Pallas fixed-schedule kernel (D2)
+  variant in {v100,p100,t4} -> that device's vendor split-K emulation.
+
+Every array is f32; tokens are i32; RNG enters as an explicit u32[2] key so
+that dropout masks are a pure function of (seed, virtual rank, step) — the
+Rust side owns key derivation (D0 treatment).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul_2d
+
+Params = Dict[str, jax.Array]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Transformer LM hyper-parameters. `batch_per_est` is the microbatch
+    each EasyScaleThread processes; the global batch is
+    batch_per_est * maxP, fixed by the user exactly as on fixed GPUs."""
+
+    vocab_size: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 1024
+    seq_len: int = 128
+    batch_per_est: int = 4
+    dropout: float = 0.1
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+PRESETS: Dict[str, ModelConfig] = {
+    # CI-size: fast enough for pytest sweeps and Rust integration tests.
+    "tiny": ModelConfig(
+        vocab_size=256, d_model=64, n_layers=2, n_heads=4, d_ff=256,
+        seq_len=64, batch_per_est=2,
+    ),
+    # Default e2e preset (~3.4M params): a few hundred steps on CPU.
+    "small": ModelConfig(),
+    # ~124M params, the paper-scale validation target (run shorter on CPU).
+    "m100": ModelConfig(
+        vocab_size=8192, d_model=768, n_layers=12, n_heads=12, d_ff=3072,
+        seq_len=256, batch_per_est=4,
+    ),
+}
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list. This order is the contract with the Rust
+    runtime (manifest order == artifact input order == gradient output
+    order) and — reversed — the DDP bucket-construction order (D1)."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab_size, cfg.d_model)),
+        ("pos", (cfg.seq_len, cfg.d_model)),
+    ]
+    d, f = cfg.d_model, cfg.d_ff
+    for l in range(cfg.n_layers):
+        p = f"layer{l}/"
+        spec += [
+            (p + "ln1_scale", (d,)),
+            (p + "ln1_bias", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "ln2_scale", (d,)),
+            (p + "ln2_bias", (d,)),
+            (p + "w1", (d, f)),
+            (p + "b1", (f,)),
+            (p + "w2", (f, d)),
+            (p + "b2", (d,)),
+        ]
+    spec += [
+        ("lnf_scale", (d,)),
+        ("lnf_bias", (d,)),
+        ("head", (d, cfg.vocab_size)),
+    ]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 42) -> Params:
+    """Deterministic init: normal(0, 0.02) for matrices/embeddings, ones for
+    LN scales, zeros for biases. Keys are folded per-parameter-name so the
+    init of one tensor never depends on enumeration order of the others."""
+    params: Params = {}
+    base = jax.random.PRNGKey(seed)
+    for i, (name, shape) in enumerate(param_spec(cfg)):
+        if name.endswith("_scale"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("_bias") or name.endswith("b1") or name.endswith("b2"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            k = jax.random.fold_in(base, i)
+            params[name] = 0.02 * jax.random.normal(k, shape, jnp.float32)
+    return params
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _dense(x, w, variant):
+    """(B, S, D) @ (D, N) through the variant matmul (2-D kernels)."""
+    b, s, d = x.shape
+    y = matmul_2d(x.reshape(b * s, d), w, variant)
+    return y.reshape(b, s, w.shape[1])
+
+
+def _attention(x, p, prefix, cfg: ModelConfig, variant: str):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = _dense(x, p[prefix + "wq"], variant).reshape(b, s, h, hd)
+    k = _dense(x, p[prefix + "wk"], variant).reshape(b, s, h, hd)
+    v = _dense(x, p[prefix + "wv"], variant).reshape(b, s, h, hd)
+    # Attention einsums are fixed-schedule XLA reductions — deterministic on
+    # our substrate; only the dense projections model vendor-kernel variance
+    # (mirrors the paper, where conv/gemm kernels are the variant-sensitive
+    # ops while cheap elementwise/softmax ops are not).
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, d)
+    return _dense(out, p[prefix + "wo"], variant)
+
+
+def _dropout(x, rate, key, deterministic):
+    if deterministic or rate <= 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), jnp.zeros_like(x))
+
+
+def forward(
+    params: Params,
+    tokens: jax.Array,  # i32[B, S+1]
+    rng: jax.Array,  # u32[2]
+    cfg: ModelConfig,
+    variant: str,
+    train: bool,
+) -> jax.Array:
+    """Causal-LM loss over the microbatch. Returns scalar mean token loss."""
+    x_tok = tokens[:, :-1]
+    y_tok = tokens[:, 1:]
+    b, s = x_tok.shape
+    # Build a usable PRNG key from the raw u32[2] input: fold both words
+    # into a fixed base key. Dropout masks are then a pure function of the
+    # Rust-supplied (seed, virtual rank, step) derivation.
+    key = jax.random.fold_in(jax.random.PRNGKey(0), rng[0].astype(jnp.uint32))
+    key = jax.random.fold_in(key, rng[1].astype(jnp.uint32))
+
+    x = params["embed"][x_tok] + params["pos"][:s][None, :, :]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}/"
+        key, k_attn, k_ffn = jax.random.split(key, 3)
+        h = _layer_norm(x, params[p + "ln1_scale"], params[p + "ln1_bias"])
+        h = _attention(h, params, p, cfg, variant)
+        h = _dropout(h, cfg.dropout, k_attn, not train)
+        x = x + h
+        h = _layer_norm(x, params[p + "ln2_scale"], params[p + "ln2_bias"])
+        h = _dense(h, params[p + "w1"], variant) + params[p + "b1"]
+        h = jax.nn.gelu(h)
+        h = _dense(h, params[p + "w2"], variant) + params[p + "b2"]
+        h = _dropout(h, cfg.dropout, k_ffn, not train)
+        x = x + h
+    x = _layer_norm(x, params["lnf_scale"], params["lnf_bias"])
+    logits = _dense(x, params["head"], variant)  # (B, S, V)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y_tok[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def fwd_bwd_fn(cfg: ModelConfig, variant: str):
+    """(params..., tokens, rng) -> (loss, grads...) in param_spec order."""
+    names = [n for n, _ in param_spec(cfg)]
+
+    def fn(*args):
+        plist = args[: len(names)]
+        tokens, rng = args[len(names)], args[len(names) + 1]
+        params = dict(zip(names, plist))
+
+        def loss_of(params):
+            return forward(params, tokens, rng, cfg, variant, train=True)
+
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        return (loss, *[grads[n] for n in names])
+
+    return fn
+
+
+def eval_loss_fn(cfg: ModelConfig, variant: str):
+    """(params..., tokens) -> (loss,) — dropout-free forward."""
+    names = [n for n, _ in param_spec(cfg)]
+
+    def fn(*args):
+        plist = args[: len(names)]
+        tokens = args[len(names)]
+        params = dict(zip(names, plist))
+        rng = jnp.zeros((2,), jnp.uint32)
+        return (forward(params, tokens, rng, cfg, variant, train=False),)
+
+    return fn
+
+
+def opt_update_fn(cfg: ModelConfig, momentum: float = 0.9):
+    """(params..., momenta..., grads..., lr) -> (params'..., momenta'...).
+
+    Runs the fused Pallas SGD kernel per tensor. Buffer donation is applied
+    at lowering time (aot.py) so params/momenta update in place on device.
+    """
+    from .kernels.sgd import sgd_momentum_update
+
+    names = [n for n, _ in param_spec(cfg)]
+    np_ = len(names)
+
+    def fn(*args):
+        ps = args[:np_]
+        ms = args[np_ : 2 * np_]
+        gs = args[2 * np_ : 3 * np_]
+        lr = args[3 * np_]
+        new_p, new_m = [], []
+        for p, m, g in zip(ps, ms, gs):
+            pn, mn = sgd_momentum_update(p, m, g, lr, mu=momentum)
+            new_p.append(pn)
+            new_m.append(mn)
+        return (*new_p, *new_m)
+
+    return fn

@@ -1,0 +1,7 @@
+"""Make `pytest python/tests/` work from the repository root: the build-time
+package (`compile`) lives in python/, which is not otherwise on sys.path."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

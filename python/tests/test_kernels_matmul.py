@@ -1,0 +1,137 @@
+"""L1 correctness: Pallas deterministic matmul vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; equality vs ref is allclose (different but
+deterministic summation order); determinism checks are bitwise.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import (
+    DEVICE_SPLITK,
+    matmul_2d,
+    pallas_matmul,
+    pallas_matmul_raw,
+    splitk_matmul,
+    _block,
+)
+from compile.kernels.ref import matmul_ref
+
+
+def _rand(shape, dtype, seed):
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(*shape), dtype
+    )
+
+
+dims = st.sampled_from([1, 2, 3, 4, 8, 16, 64, 128, 192, 256, 320])
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**16))
+def test_pallas_matmul_matches_ref_f32(m, k, n, seed):
+    x = _rand((m, k), jnp.float32, seed)
+    w = _rand((k, n), jnp.float32, seed + 1)
+    got = pallas_matmul_raw(x, w)
+    want = matmul_ref(x, w)
+    # different (but fixed) summation order vs the reference: tolerance
+    # scales with the K-reduction length
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.sampled_from([8, 64]), k=st.sampled_from([32, 128]),
+       n=st.sampled_from([8, 64]), seed=st.integers(0, 2**16))
+def test_pallas_matmul_matches_ref_bf16(m, k, n, seed):
+    x = _rand((m, k), jnp.bfloat16, seed)
+    w = _rand((k, n), jnp.bfloat16, seed + 1)
+    got = pallas_matmul_raw(x, w)
+    want = matmul_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
+
+
+def test_pallas_matmul_bitwise_deterministic():
+    x = _rand((192, 640), jnp.float32, 0)
+    w = _rand((640, 256), jnp.float32, 1)
+    a = np.asarray(pallas_matmul_raw(x, w))
+    b = np.asarray(pallas_matmul_raw(x, w))
+    assert (a.view(np.uint32) == b.view(np.uint32)).all()
+
+
+def test_pallas_matmul_grad_matches_ref():
+    x = _rand((64, 128), jnp.float32, 2)
+    w = _rand((128, 32), jnp.float32, 3)
+
+    def f_pallas(x, w):
+        return jnp.sum(jnp.tanh(pallas_matmul(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.tanh(matmul_ref(x, w)))
+
+    gx_p, gw_p = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx_p, gx_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw_p, gw_r, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(k_splits=st.sampled_from([1, 2, 4, 8]), seed=st.integers(0, 2**16))
+def test_splitk_matches_ref(k_splits, seed):
+    x = _rand((32, 256), jnp.float32, seed)
+    w = _rand((256, 16), jnp.float32, seed + 1)
+    got = splitk_matmul(x, w, k_splits)
+    want = matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_splitk_variants_bitwise_differ():
+    """The heterogeneity-emulation contract: different 'GPU types' give
+    bitwise-different (but numerically close) results."""
+    x = _rand((64, 512), jnp.float32, 7)
+    w = _rand((512, 64), jnp.float32, 8)
+    outs = {
+        v: np.asarray(splitk_matmul(x, w, ks))
+        for v, ks in DEVICE_SPLITK.items()
+    }
+    assert (outs["v100"] != outs["p100"]).any()
+    assert (outs["p100"] != outs["t4"]).any()
+
+
+def test_splitk_fixed_variant_is_deterministic():
+    x = _rand((64, 512), jnp.float32, 9)
+    w = _rand((512, 64), jnp.float32, 10)
+    a = np.asarray(splitk_matmul(x, w, 4))
+    b = np.asarray(splitk_matmul(x, w, 4))
+    assert (a.view(np.uint32) == b.view(np.uint32)).all()
+
+
+def test_matmul_2d_dispatch():
+    x = _rand((16, 64), jnp.float32, 11)
+    w = _rand((64, 16), jnp.float32, 12)
+    for v in ["det", "v100", "p100", "t4"]:
+        np.testing.assert_allclose(
+            matmul_2d(x, w, v), matmul_ref(x, w), rtol=1e-5, atol=1e-5
+        )
+    with pytest.raises(KeyError):
+        matmul_2d(x, w, "a100")
+
+
+@settings(max_examples=30, deadline=None)
+@given(dim=st.integers(1, 700), pref=st.sampled_from([128, 512, 4096]))
+def test_block_divides(dim, pref):
+    b = _block(dim, pref)
+    assert 1 <= b <= min(dim, pref) or (dim % pref == 0 and b == pref)
+    assert dim % b == 0
+
+
+def test_splitk_non_divisible_falls_back():
+    x = _rand((8, 30), jnp.float32, 13)
+    w = _rand((30, 8), jnp.float32, 14)
+    got = splitk_matmul(x, w, 4)  # 30 % 4 != 0 -> dense fallback
+    np.testing.assert_allclose(got, matmul_ref(x, w), rtol=1e-6)

@@ -1,0 +1,67 @@
+//! Fig. 2/3 (motivation): naive elastic frameworks produce models that
+//! depend on the number of GPUs. We train the same job (same seed, same
+//! hyper-parameters) with determinism 'none' (TorchElastic-style physical
+//! identities) on 1/2/4 GPUs and report the loss divergence vs the fixed
+//! 4-GPU DDP run — then the same sweep under EasyScale D1, where every row
+//! is exactly zero.
+//!
+//!     cargo bench --bench fig02_motivation
+
+use std::path::PathBuf;
+
+use easyscale::exec::{DeviceType, Placement};
+use easyscale::runtime::Engine;
+use easyscale::train::{Determinism, TrainConfig, Trainer};
+use easyscale::util::bench::Table;
+
+fn run(engine: &Engine, det: Determinism, gpus: usize, steps: u64) -> (Vec<f32>, u64) {
+    let cfg = TrainConfig { determinism: det, ..TrainConfig::new(4) };
+    let mut t = Trainer::new(
+        engine,
+        cfg,
+        Placement::homogeneous(DeviceType::V100, gpus, 4),
+    )
+    .unwrap();
+    t.run(engine, steps).unwrap();
+    (t.loss_history.clone(), t.param_fingerprint())
+}
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("tiny/manifest.json").exists() {
+        eprintln!("SKIP fig02: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::open(&root, "tiny").unwrap();
+    let steps = 10u64;
+    let (ref_loss, ref_fp) = run(&engine, Determinism::NONE, 4, steps);
+
+    println!("== Fig. 2 analogue: loss divergence vs fixed 4-GPU run (same seed) ==");
+    let mut table = Table::new(&["mode", "gpus", "max |loss diff|", "final loss", "bitwise == 4-GPU?"]);
+    for det in [Determinism::NONE, Determinism::D1] {
+        let (ref_loss_det, ref_fp_det) = if det == Determinism::NONE {
+            (ref_loss.clone(), ref_fp)
+        } else {
+            run(&engine, det, 4, steps)
+        };
+        for gpus in [1usize, 2, 4] {
+            let (loss, fp) = run(&engine, det, gpus, steps);
+            let max_d = loss
+                .iter()
+                .zip(&ref_loss_det)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            table.row(&[
+                format!("{}", det.name()),
+                format!("{gpus}"),
+                format!("{max_d:.3e}"),
+                format!("{:.4}", loss.last().unwrap()),
+                format!("{}", fp == ref_fp_det),
+            ]);
+        }
+    }
+    table.print();
+    println!();
+    println!("paper: TorchElastic/Pollux curves diverge up to 5.8% at epoch 10;");
+    println!("EasyScale (D1) rows are bitwise identical at every GPU count.");
+}

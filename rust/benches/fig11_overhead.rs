@@ -1,0 +1,82 @@
+//! Fig. 11: the overhead of enforcing determinism.
+//!
+//! Two parts:
+//!  (a) REAL measurement on our transformer artifacts: per-step time of
+//!      each device's vendor kernel variant vs the D2 hardware-agnostic
+//!      (Pallas) kernel, normalized per "GPU type" — the D1 column is the
+//!      same executable plus bucket bookkeeping, so ~0%.
+//!  (b) The Table-1 workload cost model (anchored to the paper's reported
+//!      ratios) for all 8 models x 3 GPU types.
+//!
+//!     cargo bench --bench fig11_overhead
+
+use std::path::PathBuf;
+
+use easyscale::exec::DeviceType;
+use easyscale::model::workload::WORKLOADS;
+use easyscale::runtime::Engine;
+use easyscale::util::bench::{time_it, Table};
+use easyscale::util::rng::dropout_key;
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("tiny/manifest.json").exists() {
+        eprintln!("SKIP fig11: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::open(&root, "tiny").unwrap();
+    let params = engine.manifest.load_init_params().unwrap();
+    let m = &engine.manifest.model;
+    let mut rng = easyscale::util::rng::SplitMix64::new(1);
+    let tokens: Vec<i32> = (0..m.batch_per_est * (m.seq_len + 1))
+        .map(|_| rng.next_below(m.vocab_size as u64) as i32)
+        .collect();
+    let key = dropout_key(0, 0, 0);
+
+    println!("== Fig. 11(a): measured fwd/bwd time per kernel variant (tiny preset, CPU PJRT) ==");
+    let mut table = Table::new(&["variant (role)", "mean ms", "norm vs own vendor kernel"]);
+    let mut base = std::collections::BTreeMap::new();
+    for (variant, role) in [
+        ("v100", "vendor kernel of V100"),
+        ("p100", "vendor kernel of P100"),
+        ("t4", "vendor kernel of T4"),
+        ("det", "D2 hardware-agnostic (Pallas)"),
+    ] {
+        engine.warmup(variant).unwrap();
+        let stats = time_it(3, 15, || {
+            engine.fwd_bwd(variant, &params, &tokens, key).unwrap();
+        });
+        base.insert(variant, stats.mean_s);
+        table.row(&[
+            format!("{variant} ({role})"),
+            format!("{:.2}", stats.per_iter_ms()),
+            String::new(),
+        ]);
+    }
+    table.print();
+    let vendor_mean = (base["v100"] + base["p100"] + base["t4"]) / 3.0;
+    println!(
+        "D2 (det/Pallas interpret) vs mean vendor variant: {:.2}x  — structural cost of the\n\
+         fixed-schedule kernel; on the transformer this stays small (paper: <1% for\n\
+         attention models, 236% for conv models that lose cuDNN).",
+        base["det"] / vendor_mean
+    );
+    println!();
+
+    println!("== Fig. 11(b): Table-1 workload cost model (runtime normalized to non-deterministic baseline) ==");
+    let mut table = Table::new(&["model", "V100 D1", "V100 D1+D2", "P100 D1+D2", "T4 D1+D2", "hetero-eligible"]);
+    for w in WORKLOADS {
+        let p = w.profile();
+        let mut cells = vec![p.name.to_string(), "1.00".to_string()];
+        for dev in [DeviceType::V100, DeviceType::P100, DeviceType::T4] {
+            let slow = w.capability(dev, false) / w.capability(dev, true);
+            cells.push(format!("{slow:.2}"));
+        }
+        cells.push(format!("{}", w.hetero_eligible()));
+        table.row(&cells);
+    }
+    table.print();
+    println!();
+    println!("paper: NeuMF/Bert/Electra/Swin pay <1%; ShuffleNet/ResNet50/VGG19/YOLOv3");
+    println!("pay ~236% on average for D2, so EasyScale schedules them homogeneous-only.");
+}

@@ -1,0 +1,108 @@
+//! Fig. 13 + §5.1.4: EasyScaleThread overheads.
+//!
+//!  (a) context-switch overhead: per-step time with 1 EST per executor vs
+//!      k time-sliced ESTs (per-EST normalized) — the state save/restore
+//!      and gradient staging must be ~free (paper: <=1%).
+//!  (b) gradient copy/sync: per-EST compute+stage time for EST 0..k-2 vs
+//!      the last EST (which triggers the ring sync), normalized.
+//!  (c) data-worker sharing: launch-time model (paper: first mini-batch
+//!      time reduced to 32.9% on average).
+//!
+//!     cargo bench --bench fig13_context_switch
+
+use std::path::PathBuf;
+
+use easyscale::data::SharedDataWorkers;
+use easyscale::exec::{DeviceType, Placement};
+use easyscale::runtime::Engine;
+use easyscale::train::{Determinism, TrainConfig, Trainer};
+use easyscale::util::bench::Table;
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("tiny/manifest.json").exists() {
+        eprintln!("SKIP fig13: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::open(&root, "tiny").unwrap();
+
+    // (a)+(b): run 8 ESTs on one executor, collect per-EST timings.
+    let cfg = TrainConfig {
+        determinism: Determinism::D1,
+        aug_rate: 0.0,
+        ..TrainConfig::new(8)
+    };
+    let mut t =
+        Trainer::new(&engine, cfg, Placement::homogeneous(DeviceType::V100, 1, 8)).unwrap();
+    t.run(&engine, 3).unwrap(); // warmup
+    let mut per_est_compute = vec![0.0f64; 8];
+    let mut per_est_stage = vec![0.0f64; 8];
+    let iters = 8u64;
+    for _ in 0..iters {
+        t.step(&engine).unwrap();
+        let timing = &t.last_timing[0];
+        for i in 0..8 {
+            per_est_compute[i] += timing.compute_s[i];
+            per_est_stage[i] += timing.stage_s[i];
+        }
+    }
+    // reference: 1 EST per executor (DDP-like), same artifacts
+    let cfg1 = TrainConfig {
+        determinism: Determinism::D1,
+        aug_rate: 0.0,
+        ..TrainConfig::new(1)
+    };
+    let mut t1 =
+        Trainer::new(&engine, cfg1, Placement::homogeneous(DeviceType::V100, 1, 1)).unwrap();
+    t1.run(&engine, 3).unwrap();
+    let mut ddp_compute = 0.0;
+    for _ in 0..iters {
+        t1.step(&engine).unwrap();
+        ddp_compute += t1.last_timing[0].compute_s[0];
+    }
+    let ddp_ms = ddp_compute / iters as f64 * 1e3;
+
+    println!("== Fig. 13a: context-switch overhead (per-EST fwd/bwd, 8 ESTs time-sliced) ==");
+    let mut table = Table::new(&["EST", "compute ms", "stage ms", "norm vs 1-EST-per-GPU"]);
+    for i in 0..8 {
+        let c = per_est_compute[i] / iters as f64 * 1e3;
+        let s = per_est_stage[i] / iters as f64 * 1e3;
+        table.row(&[
+            format!("EST {i}{}", if i == 7 { " (sync)" } else { "" }),
+            format!("{c:.2}"),
+            format!("{s:.4}"),
+            format!("{:.3}", (c + s) / ddp_ms),
+        ]);
+    }
+    table.print();
+    let avg_overhead: f64 = (0..8)
+        .map(|i| (per_est_compute[i] + per_est_stage[i]) / ddp_compute.max(1e-12) * 8.0)
+        .sum::<f64>()
+        / 8.0
+        - 1.0;
+    let _ = avg_overhead;
+    let stage_total: f64 = per_est_stage.iter().sum();
+    let comp_total: f64 = per_est_compute.iter().sum();
+    println!(
+        "gradient staging share of step time: {:.3}% (paper: context switch <=1%)",
+        100.0 * stage_total / (stage_total + comp_total)
+    );
+    println!();
+
+    // (c) data-worker sharing
+    println!("== §5.1.4: data-worker sharing, first-mini-batch launch time ==");
+    let pool = SharedDataWorkers::new(0, &[0], 4, 2);
+    let mut table = Table::new(&["ESTs", "naive (per-EST pools) ms", "shared pool ms", "shared/naive"]);
+    for n in [2usize, 4, 8, 16] {
+        let naive = pool.launch_time_ms(false, n);
+        let shared = pool.launch_time_ms(true, n);
+        table.row(&[
+            format!("{n}"),
+            format!("{naive:.0}"),
+            format!("{shared:.0}"),
+            format!("{:.1}%", 100.0 * shared / naive),
+        ]);
+    }
+    table.print();
+    println!("paper: first-mini-batch time reduced to 32.9% on average (32 -> 4 workers).");
+}

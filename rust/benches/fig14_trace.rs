@@ -1,0 +1,74 @@
+//! Fig. 14 + Fig. 15: the trace experiment on the 64-GPU heterogeneous
+//! cluster (32 V100 + 16 P100 + 16 T4), comparing YARN-CS, EasyScale_homo
+//! and EasyScale_heter on average JCT and makespan, and emitting the
+//! allocated-GPU timelines.
+//!
+//!     cargo bench --bench fig14_trace
+
+use easyscale::metrics::MetricSink;
+use easyscale::sim::simulator::{ElasticSim, SchedulerKind};
+use easyscale::sim::trace::gen_trace;
+use easyscale::util::bench::Table;
+
+fn main() {
+    // the paper's regime: heavy-tailed runtimes, real large-gang tail,
+    // arrivals that keep the 64-GPU fleet contended for days
+    let trace = gen_trace(11, 160, 900.0);
+    let total_demand: f64 = trace.iter().map(|j| j.duration_s * j.max_p as f64).sum();
+    println!(
+        "trace: 160 jobs, total demand {:.0} GPU-hours on 64 GPUs",
+        total_demand / 3600.0
+    );
+
+    let mut outs = Vec::new();
+    for kind in [
+        SchedulerKind::YarnCs,
+        SchedulerKind::EasyScaleHomo,
+        SchedulerKind::EasyScaleHeter,
+    ] {
+        let t0 = std::time::Instant::now();
+        let out = ElasticSim::new(kind).run(&trace);
+        eprintln!("  simulated {} in {:.2}s", kind.name(), t0.elapsed().as_secs_f64());
+        outs.push(out);
+    }
+
+    println!("\n== Fig. 14: average JCT and makespan ==");
+    let mut table = Table::new(&[
+        "scheduler",
+        "avg JCT (h)",
+        "JCT speedup",
+        "makespan (h)",
+        "makespan speedup",
+        "mean GPUs used",
+    ]);
+    let yarn_jct = outs[0].avg_jct_s();
+    let yarn_ms = outs[0].makespan_s;
+    for o in &outs {
+        table.row(&[
+            o.kind.name().to_string(),
+            format!("{:.2}", o.avg_jct_s() / 3600.0),
+            format!("{:.1}x", yarn_jct / o.avg_jct_s()),
+            format!("{:.2}", o.makespan_s / 3600.0),
+            format!("{:.1}x", yarn_ms / o.makespan_s),
+            format!("{:.1}", o.alloc_series.time_weighted_mean()),
+        ]);
+    }
+    table.print();
+    println!("paper: homo 8.3x JCT / 2.5x makespan; heter 13.2x / 2.8x.");
+    println!("shape check: heter > homo > YARN-CS on both axes.");
+
+    let mut sink = MetricSink::new();
+    for o in &outs {
+        for &(x, y) in &o.alloc_series.points {
+            sink.push(&o.alloc_series.name, x, y);
+        }
+    }
+    let path = std::path::Path::new("fig15_allocated_gpus.csv");
+    sink.write_csv(path).unwrap();
+    println!(
+        "\nFig. 15 (allocated GPUs over time) written to {} — heter mean {:.1} vs homo {:.1}",
+        path.display(),
+        outs[2].alloc_series.time_weighted_mean(),
+        outs[1].alloc_series.time_weighted_mean()
+    );
+}

@@ -1,0 +1,62 @@
+//! Fig. 16: the production serving-cluster colocation statistics, before
+//! and after deploying EasyScale (3,200 GPUs, two simulated days).
+//!
+//!     cargo bench --bench fig16_cluster
+
+use easyscale::sim::serving::{run_serving_sim, ServingSimConfig};
+use easyscale::util::bench::Table;
+
+fn main() {
+    let out = run_serving_sim(&ServingSimConfig::default());
+
+    println!("== Fig. 16: cluster statistics before/after EasyScale ==");
+    let mut table = Table::new(&["metric", "before", "after", "delta", "paper"]);
+    table.row(&[
+        "GPU allocation ratio".into(),
+        format!("{:.1}%", out.day_alloc_ratio[0]),
+        format!("{:.1}%", out.day_alloc_ratio[1]),
+        format!("+{:.1} pts", out.day_alloc_ratio[1] - out.day_alloc_ratio[0]),
+        "+17.1%".into(),
+    ]);
+    table.row(&[
+        "avg SM utilization".into(),
+        format!("{:.1}%", out.day_sm_util[0]),
+        format!("{:.1}%", out.day_sm_util[1]),
+        format!(
+            "+{:.1}% rel",
+            100.0 * (out.day_sm_util[1] - out.day_sm_util[0]) / out.day_sm_util[0]
+        ),
+        "+62.1%".into(),
+    ]);
+    table.row(&[
+        "preemptions / day".into(),
+        "0".into(),
+        format!("{}", out.preemptions),
+        String::new(),
+        "362".into(),
+    ]);
+    table.row(&[
+        "scale-in latency".into(),
+        "-".into(),
+        format!("{:.1}s avg / {:.1}s max", out.avg_scale_in_s, out.max_scale_in_s),
+        String::new(),
+        "seconds".into(),
+    ]);
+    table.row(&[
+        "job failures from preemption".into(),
+        "-".into(),
+        format!("{}", out.failed_jobs),
+        String::new(),
+        "0".into(),
+    ]);
+    let avg_training: f64 =
+        out.training_alloc.points[1440..].iter().map(|p| p.1).sum::<f64>() / 1440.0;
+    table.row(&[
+        "avg opportunistic training GPUs".into(),
+        "0".into(),
+        format!("{avg_training:.0}"),
+        String::new(),
+        "459".into(),
+    ]);
+    table.print();
+}

@@ -1,0 +1,185 @@
+//! The bitwise-comparison profiling tool (paper §4: "a semi-automatic
+//! profiling tool to perform bitwise comparison among tensors, therefore to
+//! locate the inconsistent results of operators, identifying the sources of
+//! non-determinism").
+//!
+//! Given two parameter sets (or checkpoints), it reports per-tensor bitwise
+//! diffs, locating *which* tensor diverged first and by how much — the tool
+//! we use throughout the Fig. 10 experiments and that `easyscale
+//! bitwise-compare` exposes on checkpoints.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::train::Checkpoint;
+
+/// Diff summary for one tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorDiff {
+    pub name: String,
+    pub n_elems: usize,
+    pub n_bit_diffs: usize,
+    pub max_abs_diff: f32,
+    pub first_diff_idx: Option<usize>,
+}
+
+impl TensorDiff {
+    pub fn identical(&self) -> bool {
+        self.n_bit_diffs == 0
+    }
+}
+
+/// Compare two same-shaped tensors bit by bit.
+pub fn diff_tensor(name: &str, a: &[f32], b: &[f32]) -> TensorDiff {
+    assert_eq!(a.len(), b.len(), "tensor {name} length mismatch");
+    let mut n_bit_diffs = 0;
+    let mut max_abs_diff = 0.0f32;
+    let mut first_diff_idx = None;
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            n_bit_diffs += 1;
+            if first_diff_idx.is_none() {
+                first_diff_idx = Some(i);
+            }
+            let d = (x - y).abs();
+            if d > max_abs_diff {
+                max_abs_diff = d;
+            }
+        }
+    }
+    TensorDiff {
+        name: name.to_string(),
+        n_elems: a.len(),
+        n_bit_diffs,
+        max_abs_diff,
+        first_diff_idx,
+    }
+}
+
+/// Full report over two parameter sets (manifest order with names).
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    pub tensors: Vec<TensorDiff>,
+}
+
+impl DiffReport {
+    pub fn compare(
+        names: &[String],
+        a: &[Vec<f32>],
+        b: &[Vec<f32>],
+    ) -> Result<DiffReport> {
+        anyhow::ensure!(a.len() == b.len() && a.len() == names.len(), "arity mismatch");
+        let tensors = names
+            .iter()
+            .zip(a.iter().zip(b))
+            .map(|(n, (x, y))| diff_tensor(n, x, y))
+            .collect();
+        Ok(DiffReport { tensors })
+    }
+
+    pub fn bitwise_identical(&self) -> bool {
+        self.tensors.iter().all(|t| t.identical())
+    }
+
+    pub fn total_bit_diffs(&self) -> usize {
+        self.tensors.iter().map(|t| t.n_bit_diffs).sum()
+    }
+
+    /// First diverging tensor (localizes the offending operator — the
+    /// "semi-automatic" part of the paper's tool).
+    pub fn first_divergence(&self) -> Option<&TensorDiff> {
+        self.tensors.iter().find(|t| !t.identical())
+    }
+
+    pub fn summary(&self) -> String {
+        if self.bitwise_identical() {
+            return format!("BITWISE IDENTICAL ({} tensors)", self.tensors.len());
+        }
+        let n_bad = self.tensors.iter().filter(|t| !t.identical()).count();
+        let first = self.first_divergence().unwrap();
+        format!(
+            "DIFFERS: {}/{} tensors, {} elements total; first at '{}' (idx {}, max |d| {:e})",
+            n_bad,
+            self.tensors.len(),
+            self.total_bit_diffs(),
+            first.name,
+            first.first_diff_idx.unwrap_or(0),
+            first.max_abs_diff,
+        )
+    }
+}
+
+/// Compare the parameters of two checkpoints on disk.
+pub fn compare_checkpoints(a: &Path, b: &Path) -> Result<DiffReport> {
+    let sa = Checkpoint::load(a)?;
+    let sb = Checkpoint::load(b)?;
+    anyhow::ensure!(
+        sa.params.len() == sb.params.len(),
+        "checkpoints have different parameter counts"
+    );
+    let names: Vec<String> = (0..sa.params.len()).map(|i| format!("param{i}")).collect();
+    DiffReport::compare(&names, &sa.params, &sb.params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_tensors() {
+        let a = vec![1.0f32, 2.0, -0.0];
+        let d = diff_tensor("t", &a, &a.clone());
+        assert!(d.identical());
+        assert_eq!(d.first_diff_idx, None);
+    }
+
+    #[test]
+    fn negative_zero_is_a_bit_diff() {
+        // 0.0 and -0.0 compare equal as floats but differ in bits — exactly
+        // the class of drift a float == check would miss.
+        let d = diff_tensor("t", &[0.0f32], &[-0.0f32]);
+        assert_eq!(d.n_bit_diffs, 1);
+        assert_eq!(d.max_abs_diff, 0.0);
+    }
+
+    #[test]
+    fn locates_first_divergence() {
+        let names = vec!["a".to_string(), "b".to_string(), "c".to_string()];
+        let x = vec![vec![1.0f32; 4], vec![2.0f32; 4], vec![3.0f32; 4]];
+        let mut y = x.clone();
+        y[1][2] = 2.0000002;
+        y[2][0] = 3.5;
+        let r = DiffReport::compare(&names, &x, &y).unwrap();
+        assert!(!r.bitwise_identical());
+        assert_eq!(r.total_bit_diffs(), 2);
+        let first = r.first_divergence().unwrap();
+        assert_eq!(first.name, "b");
+        assert_eq!(first.first_diff_idx, Some(2));
+        assert!(r.summary().contains("first at 'b'"));
+    }
+
+    #[test]
+    fn checkpoint_comparison() {
+        use crate::comm::BucketPlan;
+        use crate::est::EstContext;
+        use crate::train::trainer::TrainState;
+        let dir = std::env::temp_dir().join("easyscale_bitwise_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = |tweak: f32| TrainState {
+            step: 1,
+            restart_count: 0,
+            params: vec![vec![1.0f32, tweak]],
+            momenta: vec![vec![0.0f32, 0.0]],
+            est_contexts: vec![EstContext::new(0, 0)],
+            bucket_plan: BucketPlan::build(&[2], 64),
+            data_items: vec![],
+        };
+        let (p1, p2) = (dir.join("x.ckpt"), dir.join("y.ckpt"));
+        Checkpoint::save(&p1, &mk(5.0)).unwrap();
+        Checkpoint::save(&p2, &mk(5.0)).unwrap();
+        assert!(compare_checkpoints(&p1, &p2).unwrap().bitwise_identical());
+        Checkpoint::save(&p2, &mk(5.0000005)).unwrap();
+        assert!(!compare_checkpoints(&p1, &p2).unwrap().bitwise_identical());
+    }
+}

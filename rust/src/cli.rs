@@ -1,0 +1,370 @@
+//! The `easyscale` command-line interface — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   train            elastic training on simulated GPUs over real AOT artifacts
+//!   plan             inspect the waste-model planner (paper Eq. 1)
+//!   trace            run the Fig. 14/15 trace experiment
+//!   serving          run the Fig. 16 serving-colocation experiment
+//!   bitwise-compare  diff two checkpoints with the profiling tool
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::exec::devices::DeviceType;
+use crate::exec::executor::{ExecutorSpec, Placement};
+use crate::metrics::MetricSink;
+use crate::model::workload::Workload;
+use crate::runtime::Engine;
+use crate::sched::plan::{enumerate_configs, GpuVector, JobSpec};
+use crate::sim::serving::{run_serving_sim, ServingSimConfig};
+use crate::sim::simulator::{ElasticSim, SchedulerKind};
+use crate::sim::trace::gen_trace;
+use crate::train::{Determinism, TrainConfig, Trainer};
+use crate::util::argparse::Args;
+
+pub const USAGE: &str = "easyscale — accuracy-consistent elastic training (EasyScale reproduction)
+
+USAGE: easyscale <subcommand> [options]
+
+SUBCOMMANDS
+  train             train the transformer LM elastically over AOT artifacts
+    --artifacts DIR   artifacts root (default: artifacts)
+    --preset NAME     tiny|small|m100 (default: small)
+    --steps N         global mini-batches (default: 300)
+    --max-p N         logical workers / EasyScaleThreads (default: 4)
+    --gpus SPEC       e.g. 'v100:2' or 'v100:1,p100:2' (default: v100:2)
+    --determinism L   none|d0|d1|d0+d2|d1+d2 (default: d1)
+    --lr F            learning rate (default: 0.05)
+    --seed N          job seed (default: 42)
+    --schedule S      elastic schedule 'step:spec;step:spec' e.g. '100:v100:1'
+    --log-every N     print loss every N steps (default: 10)
+    --eval-every N    held-out eval every N steps (0 = off)
+    --loss-csv PATH   write the loss curve as CSV
+    --checkpoint P    write a final checkpoint
+  plan              print planner configurations for a workload
+    --workload NAME   Table-1 model (default: Bert)
+    --max-p N         (default: 8)  --gpus SPEC (default: v100:1,t4:1)
+    --d2              plan with hardware-agnostic kernels
+  trace             Fig. 14/15 trace experiment
+    --jobs N --interarrival S --seed N --scale F --out CSV
+  serving           Fig. 16 serving-colocation experiment
+    --out CSV
+  bitwise-compare A B   compare two checkpoints bit by bit
+";
+
+pub fn main_with(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(&argv, &["d2", "help"]).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.flag("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("serving") => cmd_serving(&args),
+        Some("bitwise-compare") => cmd_bitwise(&args),
+        other => {
+            println!("{USAGE}");
+            if let Some(o) = other {
+                bail!("unknown subcommand '{o}'");
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Parse 'v100:2,p100:1' into GPU counts.
+pub fn parse_gpus(spec: &str) -> Result<Vec<(DeviceType, usize)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (ty, n) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("bad gpu spec '{part}' (want type:count)"))?;
+        let dev = DeviceType::parse(ty)?;
+        let n: usize = n.parse().with_context(|| format!("bad count in '{part}'"))?;
+        out.push((dev, n));
+    }
+    if out.is_empty() {
+        bail!("empty gpu spec");
+    }
+    Ok(out)
+}
+
+/// Round-robin maxP EST ranks over the listed GPUs.
+pub fn placement_from_spec(spec: &str, max_p: usize) -> Result<Placement> {
+    let gpus = parse_gpus(spec)?;
+    let mut devices = Vec::new();
+    for (dev, n) in gpus {
+        for _ in 0..n {
+            devices.push(dev);
+        }
+    }
+    if devices.len() > max_p {
+        bail!("more GPUs ({}) than ESTs ({max_p})", devices.len());
+    }
+    let mut executors: Vec<ExecutorSpec> = devices
+        .into_iter()
+        .map(|device| ExecutorSpec { device, est_ranks: Vec::new() })
+        .collect();
+    for r in 0..max_p {
+        let n = executors.len();
+        executors[r % n].est_ranks.push(r);
+    }
+    Ok(Placement { executors })
+}
+
+fn gpu_vector(spec: &str) -> Result<GpuVector> {
+    let mut v = [0usize; 3];
+    for (dev, n) in parse_gpus(spec)? {
+        v[dev.index()] += n;
+    }
+    Ok(v)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let preset = args.str_or("preset", "small");
+    let steps = args.usize_or("steps", 300)? as u64;
+    let max_p = args.usize_or("max-p", 4)?;
+    let det = Determinism::parse(&args.str_or("determinism", "d1"))?;
+    let lr = args.f64_or("lr", 0.05)? as f32;
+    let seed = args.u64_or("seed", 42)?;
+    let log_every = args.usize_or("log-every", 10)? as u64;
+    let eval_every = args.usize_or("eval-every", 0)? as u64;
+
+    let engine = Engine::open(&artifacts, &preset)?;
+    crate::info!("train", "preset={} params={} maxP={} det={}",
+        preset, engine.manifest.model.n_params, max_p, det);
+
+    let placement = placement_from_spec(&args.str_or("gpus", "v100:2"), max_p)?;
+    let cfg = TrainConfig { seed, max_p, lr, determinism: det, ..TrainConfig::new(max_p) };
+    let mut trainer = Trainer::new(&engine, cfg, placement)?;
+
+    // elastic schedule: "100:v100:1;200:v100:1,p100:2"
+    let mut schedule: Vec<(u64, String)> = Vec::new();
+    if let Some(s) = args.get("schedule") {
+        for item in s.split(';') {
+            let (step, spec) = item
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad schedule item '{item}'"))?;
+            schedule.push((step.parse()?, spec.to_string()));
+        }
+        schedule.sort_by_key(|s| s.0);
+    }
+
+    let mut sink = MetricSink::new();
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        if let Some(pos) = schedule.iter().position(|(s, _)| *s == step) {
+            let (_, spec) = schedule.remove(pos);
+            let p = placement_from_spec(&spec, max_p)?;
+            crate::info!("train", "step {step}: reconfiguring to {spec}");
+            trainer.reconfigure(p)?;
+        }
+        let loss = trainer.step(&engine)?;
+        sink.push("train_loss", step as f64, loss as f64);
+        if log_every > 0 && step % log_every == 0 {
+            crate::info!("train", "step {step:5} loss {loss:.4}");
+        }
+        if eval_every > 0 && step > 0 && step % eval_every == 0 {
+            let ev = trainer.eval(&engine)?;
+            sink.push("eval_loss", step as f64, ev as f64);
+            crate::info!("train", "step {step:5} EVAL loss {ev:.4}");
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let final_loss = trainer.loss_history.last().copied().unwrap_or(f32::NAN);
+    let h = trainer.corpus.entropy_rate();
+    println!(
+        "trained {steps} steps in {dt:.1}s ({:.2} steps/s) | first loss {:.4} -> final {:.4} | corpus entropy floor {h:.4} | fingerprint {:016x}",
+        steps as f64 / dt,
+        trainer.loss_history.first().copied().unwrap_or(f32::NAN),
+        final_loss,
+        trainer.param_fingerprint(),
+    );
+    if let Some(csv) = args.get("loss-csv") {
+        sink.write_csv(Path::new(csv))?;
+        println!("loss curve written to {csv}");
+    }
+    if let Some(ck) = args.get("checkpoint") {
+        trainer.checkpoint(Path::new(ck))?;
+        println!("checkpoint written to {ck}");
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let name = args.str_or("workload", "Bert");
+    let workload = Workload::by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload '{name}'"))?;
+    let max_p = args.usize_or("max-p", 8)?;
+    let nums = gpu_vector(&args.str_or("gpus", "v100:1,t4:1"))?;
+    let mut job = JobSpec::new(workload, max_p);
+    job.d2 = args.flag("d2");
+    let configs = enumerate_configs(&job, nums);
+    println!(
+        "planner: workload={name} maxP={max_p} gpus=[V100:{} P100:{} T4:{}] d2={}",
+        nums[0], nums[1], nums[2], job.d2
+    );
+    println!("{:>30} | {:>10} | {:>10} | {:>10}", "<nums/executors/threads>", "waste", "waste%", "steps/s");
+    for cfg in configs.iter().take(args.usize_or("top", 10)?) {
+        println!(
+            "{:>30} | {:>10.3} | {:>9.1}% | {:>10.3}",
+            format!("{:?}/{:?}/{:?}", cfg.nums, cfg.executors, cfg.threads),
+            cfg.waste,
+            cfg.waste_norm,
+            cfg.step_rate
+        );
+    }
+    if configs.is_empty() {
+        println!("(no feasible configuration under the waste threshold)");
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let n = args.usize_or("jobs", 160)?;
+    let inter = args.f64_or("interarrival", 60.0)?;
+    let seed = args.u64_or("seed", 11)?;
+    let scale = args.f64_or("scale", 1.0)?;
+    let mut trace = gen_trace(seed, n, inter);
+    for j in trace.iter_mut() {
+        j.duration_s *= scale;
+    }
+    println!("trace: {n} jobs, mean interarrival {inter}s, duration scale {scale}");
+    println!("{:>16} | {:>12} | {:>12} | {:>10} | {:>10}", "scheduler", "avg JCT (s)", "makespan (s)", "reconfigs", "mean GPUs");
+    let mut results = Vec::new();
+    for kind in [
+        SchedulerKind::YarnCs,
+        SchedulerKind::EasyScaleHomo,
+        SchedulerKind::EasyScaleHeter,
+    ] {
+        let out = ElasticSim::new(kind).run(&trace);
+        println!(
+            "{:>16} | {:>12.1} | {:>12.1} | {:>10} | {:>10.1}",
+            kind.name(),
+            out.avg_jct_s(),
+            out.makespan_s,
+            out.reconfigs,
+            out.alloc_series.time_weighted_mean()
+        );
+        results.push(out);
+    }
+    let yarn = &results[0];
+    for r in &results[1..] {
+        println!(
+            "{}: JCT speedup {:.1}x, makespan speedup {:.1}x vs YARN-CS",
+            r.kind.name(),
+            yarn.avg_jct_s() / r.avg_jct_s(),
+            yarn.makespan_s / r.makespan_s
+        );
+    }
+    if let Some(csv) = args.get("out") {
+        let mut sink = MetricSink::new();
+        for r in &results {
+            for &(x, y) in &r.alloc_series.points {
+                sink.push(&r.alloc_series.name, x, y);
+            }
+        }
+        sink.write_csv(Path::new(csv))?;
+        println!("allocated-GPU series written to {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_serving(args: &Args) -> Result<()> {
+    let out = run_serving_sim(&ServingSimConfig::default());
+    println!("serving colocation (3,200-GPU cluster, 2 simulated days):");
+    println!(
+        "  GPU allocation ratio: {:.1}% -> {:.1}% (+{:.1} points)",
+        out.day_alloc_ratio[0],
+        out.day_alloc_ratio[1],
+        out.day_alloc_ratio[1] - out.day_alloc_ratio[0]
+    );
+    println!(
+        "  avg SM utilization:   {:.1}% -> {:.1}% (+{:.1}% relative)",
+        out.day_sm_util[0],
+        out.day_sm_util[1],
+        100.0 * (out.day_sm_util[1] - out.day_sm_util[0]) / out.day_sm_util[0]
+    );
+    println!(
+        "  preemptions: {} | scale-in avg {:.1}s max {:.1}s | failed jobs: {}",
+        out.preemptions, out.avg_scale_in_s, out.max_scale_in_s, out.failed_jobs
+    );
+    if let Some(csv) = args.get("out") {
+        let mut sink = MetricSink::new();
+        for s in [&out.serving_alloc, &out.training_alloc, &out.alloc_ratio, &out.sm_util] {
+            for &(x, y) in &s.points {
+                sink.push(&s.name, x, y);
+            }
+        }
+        sink.write_csv(Path::new(csv))?;
+        println!("series written to {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_bitwise(args: &Args) -> Result<()> {
+    let pos = args.positional();
+    if pos.len() != 2 {
+        bail!("usage: easyscale bitwise-compare <a.ckpt> <b.ckpt>");
+    }
+    let report = crate::bitwise::compare_checkpoints(Path::new(&pos[0]), Path::new(&pos[1]))?;
+    println!("{}", report.summary());
+    for t in report.tensors.iter().filter(|t| !t.identical()).take(20) {
+        println!(
+            "  {}: {}/{} elements differ, max |d| = {:e}, first idx {}",
+            t.name,
+            t.n_bit_diffs,
+            t.n_elems,
+            t.max_abs_diff,
+            t.first_diff_idx.unwrap_or(0)
+        );
+    }
+    if !report.bitwise_identical() {
+        std::process::exit(2);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_gpu_specs() {
+        let g = parse_gpus("v100:2,p100:1").unwrap();
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0], (DeviceType::V100, 2));
+        assert!(parse_gpus("h100:1").is_err());
+        assert!(parse_gpus("").is_err());
+        assert!(parse_gpus("v100").is_err());
+    }
+
+    #[test]
+    fn placement_round_robins() {
+        let p = placement_from_spec("v100:1,t4:1", 5).unwrap();
+        p.validate().unwrap();
+        assert_eq!(p.n_gpus(), 2);
+        assert_eq!(p.executors[0].est_ranks, vec![0, 2, 4]);
+        assert_eq!(p.executors[1].est_ranks, vec![1, 3]);
+        assert!(placement_from_spec("v100:8", 4).is_err());
+    }
+
+    #[test]
+    fn gpu_vector_aggregates() {
+        assert_eq!(gpu_vector("v100:1,t4:2,v100:1").unwrap(), [2, 0, 2]);
+    }
+
+    #[test]
+    fn unknown_subcommand_errors() {
+        assert!(main_with(vec!["frobnicate".into()]).is_err());
+        assert!(main_with(vec!["--help".into()]).is_ok());
+    }
+}

@@ -1,0 +1,202 @@
+//! Gradient buckets (paper §3.3, communication level).
+//!
+//! PyTorch DDP groups gradient tensors into communication buckets. The
+//! initial mapping follows the *reversed topological order* of the DAG
+//! (i.e. reversed parameter order — gradients become ready back-to-front)
+//! with a byte-size cap. DDP then *rebuilds* the mapping at the end of the
+//! first mini-batch from the order gradients actually arrived — which after
+//! an elastic restart can differ, changing chunk boundaries and therefore
+//! ring summation order. D1 records the plan in the checkpoint and disables
+//! reconstruction.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+pub const DEFAULT_BUCKET_BYTES: usize = 25 << 20; // PyTorch DDP default 25MB
+
+/// A bucket plan: an ordered partition of parameter indices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BucketPlan {
+    pub buckets: Vec<Vec<usize>>,
+    pub cap_bytes: usize,
+}
+
+impl BucketPlan {
+    /// Build the initial plan from reversed parameter order with a byte cap
+    /// (f32 elements). Every parameter lands in exactly one bucket; a
+    /// single oversized tensor gets its own bucket.
+    pub fn build(param_sizes: &[usize], cap_bytes: usize) -> BucketPlan {
+        let mut buckets = Vec::new();
+        let mut cur: Vec<usize> = Vec::new();
+        let mut cur_bytes = 0usize;
+        for p in (0..param_sizes.len()).rev() {
+            let b = 4 * param_sizes[p];
+            if !cur.is_empty() && cur_bytes + b > cap_bytes {
+                buckets.push(std::mem::take(&mut cur));
+                cur_bytes = 0;
+            }
+            cur.push(p);
+            cur_bytes += b;
+        }
+        if !cur.is_empty() {
+            buckets.push(cur);
+        }
+        BucketPlan { buckets, cap_bytes }
+    }
+
+    /// Emulate DDP's post-restart reconstruction: the arrival order of
+    /// gradients after a rebuild is perturbed (communication channels were
+    /// re-created), re-partitioning with the same cap but a shuffled order.
+    /// This is what happens *without* D1.
+    pub fn rebuilt_in_arrival_order(&self, restart_nonce: u64) -> BucketPlan {
+        let n: usize = self.buckets.iter().map(|b| b.len()).sum();
+        let mut order: Vec<usize> = (0..n).rev().collect();
+        // a restart-dependent perturbation of gradient arrival order
+        let mut rng = SplitMix64::derive(restart_nonce, &[0xB0C4]);
+        // local swaps: arrival order changes are local (ready-time jitter)
+        for i in 0..order.len().saturating_sub(1) {
+            if rng.next_f64() < 0.5 {
+                order.swap(i, i + 1);
+            }
+        }
+        // re-partition into buckets of (roughly) the original mean width
+        let mut buckets = Vec::new();
+        let mut cur = Vec::new();
+        for (i, p) in order.into_iter().enumerate() {
+            cur.push(p);
+            // keep roughly the original mean bucket width
+            let width = (n + self.buckets.len() - 1) / self.buckets.len().max(1);
+            if cur.len() >= width || i == n - 1 {
+                buckets.push(std::mem::take(&mut cur));
+            }
+        }
+        BucketPlan { buckets, cap_bytes: self.cap_bytes }
+    }
+
+    /// Serialize for the checkpoint "extra state".
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cap_bytes", Json::num(self.cap_bytes as f64)),
+            (
+                "buckets",
+                Json::arr(self.buckets.iter().map(|b| {
+                    Json::arr(b.iter().map(|&p| Json::num(p as f64)))
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<BucketPlan> {
+        let cap_bytes = j
+            .get("cap_bytes")
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("bucket plan missing cap_bytes"))?;
+        let mut buckets = Vec::new();
+        let Some(arr) = j.get("buckets").as_arr() else {
+            bail!("bucket plan missing buckets");
+        };
+        for b in arr {
+            let Some(items) = b.as_arr() else { bail!("bad bucket") };
+            buckets.push(
+                items
+                    .iter()
+                    .map(|i| i.as_usize().ok_or_else(|| anyhow::anyhow!("bad index")))
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+        Ok(BucketPlan { buckets, cap_bytes })
+    }
+
+    /// Validity: an ordered partition of 0..n.
+    pub fn validate(&self, n_params: usize) -> Result<()> {
+        let mut seen = vec![false; n_params];
+        for b in &self.buckets {
+            for &p in b {
+                if p >= n_params {
+                    bail!("bucket refers to param {p} >= {n_params}");
+                }
+                if seen[p] {
+                    bail!("param {p} in two buckets");
+                }
+                seen[p] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            bail!("some params missing from bucket plan");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, gen};
+
+    #[test]
+    fn builds_reversed_order_partition() {
+        let sizes = [10usize, 20, 30, 40];
+        let plan = BucketPlan::build(&sizes, 4 * 60);
+        plan.validate(4).unwrap();
+        // first bucket starts from the LAST parameter (reversed topo order)
+        assert_eq!(plan.buckets[0][0], 3);
+        let flat: Vec<usize> = plan.buckets.iter().flatten().copied().collect();
+        assert_eq!(flat, vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn byte_cap_respected() {
+        let sizes = [100usize; 10];
+        let plan = BucketPlan::build(&sizes, 4 * 250);
+        plan.validate(10).unwrap();
+        for b in &plan.buckets {
+            let bytes: usize = b.iter().map(|&p| 4 * sizes[p]).sum();
+            assert!(bytes <= 4 * 250 || b.len() == 1);
+        }
+        assert!(plan.buckets.len() >= 5);
+    }
+
+    #[test]
+    fn oversized_tensor_gets_own_bucket() {
+        let sizes = [10usize, 1000, 10];
+        let plan = BucketPlan::build(&sizes, 4 * 50);
+        plan.validate(3).unwrap();
+        let big = plan.buckets.iter().find(|b| b.contains(&1)).unwrap();
+        assert_eq!(big.len(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let plan = BucketPlan::build(&[5, 6, 7, 8, 9], 4 * 12);
+        let j = plan.to_json();
+        let back = BucketPlan::from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn rebuild_changes_layout_but_stays_valid() {
+        let sizes = [50usize; 8];
+        let plan = BucketPlan::build(&sizes, 4 * 100);
+        let rebuilt = plan.rebuilt_in_arrival_order(1);
+        rebuilt.validate(8).unwrap();
+        assert_ne!(plan.buckets, rebuilt.buckets);
+        // different nonce -> (very likely) different layout
+        let rebuilt2 = plan.rebuilt_in_arrival_order(2);
+        rebuilt2.validate(8).unwrap();
+    }
+
+    #[test]
+    fn prop_build_always_valid_partition() {
+        check("bucket-partition", 50, |rng| {
+            let n = gen::usize_in(rng, 1, 60);
+            let sizes: Vec<usize> = (0..n).map(|_| gen::usize_in(rng, 1, 10_000)).collect();
+            let cap = gen::usize_in(rng, 4, 1 << 16);
+            let plan = BucketPlan::build(&sizes, cap);
+            plan.validate(n).map_err(|e| e.to_string())?;
+            let rebuilt = plan.rebuilt_in_arrival_order(rng.next_u64());
+            rebuilt.validate(n).map_err(|e| e.to_string())
+        });
+    }
+}

@@ -1,0 +1,238 @@
+//! ElasticDDP — the communication layer (paper §3.3, communication level).
+//!
+//! Gradient synchronization in DDP is: flatten gradients into *buckets*
+//! (built from the reversed topological parameter order with a byte cap),
+//! then ring-allreduce each bucket. Ring allreduce sums each chunk in a
+//! rank-rotation order, so the bitwise result depends on (a) the bucket
+//! composition (chunk boundaries) and (b) the rank count and order. Elastic
+//! restarts perturb both — that is precisely the paper's communication-level
+//! non-determinism.
+//!
+//! EasyScale's D1 treatment, implemented here:
+//! * virtual communication ranks: the ring always spans `maxP` EST ranks,
+//!   whatever the physical placement;
+//! * the bucket plan is recorded in the checkpoint and reused on restart
+//!   (`BucketPlan` serializes to JSON);
+//! * bucket reconstruction after the first resumed mini-batch is disabled.
+
+pub mod bucket;
+pub mod ring;
+
+pub use bucket::BucketPlan;
+pub use ring::{ring_allreduce, RING_CHUNK_ALIGN};
+
+use crate::est::StagedGrads;
+
+/// Deterministic gradient aggregation over staged per-EST gradients.
+///
+/// `plan` gives the bucket layout; staged gradients are flattened per
+/// bucket in *virtual-rank* order, ring-reduced, averaged by `1/maxP`, and
+/// scattered back to per-parameter buffers (manifest order).
+pub fn aggregate_virtual(
+    plan: &BucketPlan,
+    staged: &[StagedGrads],
+    param_sizes: &[usize],
+    max_p: usize,
+) -> Vec<Vec<f32>> {
+    assert_eq!(staged.len(), max_p, "need one staged grad set per EST");
+    // order by virtual rank — placement/arrival order must not matter
+    let mut by_rank: Vec<&StagedGrads> = staged.iter().collect();
+    by_rank.sort_by_key(|s| s.virtual_rank);
+    let scale = 1.0f32 / max_p as f32;
+
+    let mut out: Vec<Vec<f32>> = param_sizes.iter().map(|&s| vec![0.0; s]).collect();
+    let mut flat: Vec<Vec<f32>> = Vec::with_capacity(max_p);
+    for bucket in &plan.buckets {
+        let bucket_len: usize = bucket.iter().map(|&p| param_sizes[p]).sum();
+        flat.clear();
+        for s in &by_rank {
+            let mut buf = Vec::with_capacity(bucket_len);
+            for &p in bucket {
+                buf.extend_from_slice(&s.grads[p]);
+            }
+            flat.push(buf);
+        }
+        let reduced = ring_allreduce(&flat);
+        // scatter back (averaged)
+        let mut off = 0;
+        for &p in bucket {
+            let n = param_sizes[p];
+            for i in 0..n {
+                out[p][i] = reduced[off + i] * scale;
+            }
+            off += n;
+        }
+    }
+    out
+}
+
+/// The *physical* aggregation that existing elastic frameworks do
+/// (TorchElastic-style): each executor locally accumulates its ESTs'
+/// gradients in hosting order, then a ring spans the physical executors.
+/// Bitwise-faithful to why elasticity breaks reproducibility: the result
+/// depends on the placement `groups`.
+pub fn aggregate_physical(
+    plan: &BucketPlan,
+    staged: &[StagedGrads],
+    param_sizes: &[usize],
+    groups: &[Vec<usize>], // per-executor lists of virtual ranks, hosting order
+) -> Vec<Vec<f32>> {
+    let total: usize = groups.iter().map(|g| g.len()).sum();
+    assert_eq!(total, staged.len());
+    let scale = 1.0f32 / staged.len() as f32;
+    let find = |rank: usize| staged.iter().find(|s| s.virtual_rank == rank).unwrap();
+
+    let mut out: Vec<Vec<f32>> = param_sizes.iter().map(|&s| vec![0.0; s]).collect();
+    for bucket in &plan.buckets {
+        let bucket_len: usize = bucket.iter().map(|&p| param_sizes[p]).sum();
+        // local accumulation per executor (sequential adds in hosting order)
+        let mut locals: Vec<Vec<f32>> = Vec::with_capacity(groups.len());
+        for g in groups {
+            let mut acc = vec![0.0f32; bucket_len];
+            for &rank in g {
+                let s = find(rank);
+                let mut off = 0;
+                for &p in bucket {
+                    for (i, v) in s.grads[p].iter().enumerate() {
+                        acc[off + i] += *v;
+                    }
+                    off += param_sizes[p];
+                }
+            }
+            locals.push(acc);
+        }
+        let reduced = if locals.len() == 1 {
+            locals.pop().unwrap()
+        } else {
+            ring_allreduce(&locals)
+        };
+        let mut off = 0;
+        for &p in bucket {
+            let n = param_sizes[p];
+            for i in 0..n {
+                out[p][i] = reduced[off + i] * scale;
+            }
+            off += n;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, gen};
+
+    fn staged(rank: usize, grads: Vec<Vec<f32>>) -> StagedGrads {
+        StagedGrads { virtual_rank: rank, loss: 0.0, grads }
+    }
+
+    fn random_staged(
+        rng: &mut crate::util::rng::SplitMix64,
+        sizes: &[usize],
+        max_p: usize,
+    ) -> Vec<StagedGrads> {
+        (0..max_p)
+            .map(|r| {
+                staged(
+                    r,
+                    sizes.iter().map(|&s| gen::vec_f32(rng, s, 1.0)).collect(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn virtual_aggregation_ignores_arrival_order() {
+        let sizes = [7usize, 33, 5];
+        let plan = BucketPlan::build(&sizes, 64 * 4);
+        let mut rng = crate::util::rng::SplitMix64::new(1);
+        let mut s = random_staged(&mut rng, &sizes, 4);
+        let a = aggregate_virtual(&plan, &s, &sizes, 4);
+        s.reverse(); // arrival order reversed (e.g. different placement)
+        let b = aggregate_virtual(&plan, &s, &sizes, 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.iter().zip(y).all(|(u, v)| u.to_bits() == v.to_bits()));
+        }
+    }
+
+    #[test]
+    fn physical_aggregation_depends_on_placement() {
+        let sizes = [257usize, 129];
+        let plan = BucketPlan::build(&sizes, 1 << 20);
+        let mut rng = crate::util::rng::SplitMix64::new(2);
+        let s = random_staged(&mut rng, &sizes, 4);
+        // 4 executors x 1 EST (DDP on 4 GPUs)
+        let a = aggregate_physical(&plan, &s, &sizes, &[vec![0], vec![1], vec![2], vec![3]]);
+        // 2 executors x 2 ESTs (elastic scale-in)
+        let b = aggregate_physical(&plan, &s, &sizes, &[vec![0, 1], vec![2, 3]]);
+        let differs = a
+            .iter()
+            .zip(&b)
+            .any(|(x, y)| x.iter().zip(y).any(|(u, v)| u.to_bits() != v.to_bits()));
+        assert!(differs, "physical aggregation should depend on placement");
+        // but both are numerically the same mean
+        for (x, y) in a.iter().zip(&b) {
+            for (u, v) in x.iter().zip(y) {
+                assert!((u - v).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn virtual_matches_ddp_fixed_dop() {
+        // EasyScale's bitwise-equality claim: virtual aggregation over maxP
+        // ESTs == physical aggregation when placement is 1 EST per GPU
+        // (that *is* DDP with maxP ranks).
+        let sizes = [64usize, 100, 3];
+        let plan = BucketPlan::build(&sizes, 256 * 4);
+        let mut rng = crate::util::rng::SplitMix64::new(3);
+        let s = random_staged(&mut rng, &sizes, 3);
+        let ddp = aggregate_physical(&plan, &s, &sizes, &[vec![0], vec![1], vec![2]]);
+        let es = aggregate_virtual(&plan, &s, &sizes, 3);
+        for (x, y) in ddp.iter().zip(&es) {
+            assert!(x.iter().zip(y).all(|(u, v)| u.to_bits() == v.to_bits()));
+        }
+    }
+
+    #[test]
+    fn prop_mean_is_correct_numerically() {
+        check("aggregate-mean", 20, |rng| {
+            let np = gen::usize_in(rng, 1, 5);
+            let sizes: Vec<usize> = (0..np).map(|_| gen::usize_in(rng, 1, 50)).collect();
+            let max_p = gen::usize_in(rng, 1, 6);
+            let plan = BucketPlan::build(&sizes, gen::usize_in(rng, 16, 1 << 12));
+            let s = random_staged(rng, &sizes, max_p);
+            let got = aggregate_virtual(&plan, &s, &sizes, max_p);
+            for (p, &size) in sizes.iter().enumerate() {
+                for i in 0..size {
+                    let want: f32 =
+                        s.iter().map(|st| st.grads[p][i]).sum::<f32>() / max_p as f32;
+                    if (got[p][i] - want).abs() > 1e-4 {
+                        return Err(format!("param {p}[{i}]: {} vs {want}", got[p][i]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bucket_plan_change_changes_bits() {
+        // The D0-vs-D1 mechanism: a different (rebuilt) bucket layout gives
+        // bitwise-different aggregated gradients.
+        let sizes = [300usize, 301, 302, 303];
+        let mut rng = crate::util::rng::SplitMix64::new(4);
+        let s = random_staged(&mut rng, &sizes, 4);
+        let plan1 = BucketPlan::build(&sizes, 2 * 301 * 4);
+        let plan2 = plan1.rebuilt_in_arrival_order(99);
+        assert_ne!(plan1.buckets, plan2.buckets);
+        let a = aggregate_virtual(&plan1, &s, &sizes, 4);
+        let b = aggregate_virtual(&plan2, &s, &sizes, 4);
+        let differs = a
+            .iter()
+            .zip(&b)
+            .any(|(x, y)| x.iter().zip(y).any(|(u, v)| u.to_bits() != v.to_bits()));
+        assert!(differs);
+    }
+}

@@ -1,0 +1,157 @@
+//! Ring-allreduce summation-order simulator.
+//!
+//! NCCL's ring allreduce reduce-scatters a buffer in `n` chunks: chunk `c`
+//! starts at rank `c` and accumulates hop by hop, ending fully reduced at
+//! rank `(c + n - 1) mod n`. The *sum order* of chunk `c` is therefore the
+//! rank rotation `c, c+1, ..., c+n-1 (mod n)` — and float addition is not
+//! associative, so the bitwise result depends on the chunk boundaries and
+//! on `n`. This function reproduces exactly that order (which is the
+//! accuracy-relevant behaviour; wire transfer is irrelevant to bits).
+
+/// NCCL aligns chunk boundaries; we use element alignment of 1 for
+/// generality and document the knob.
+pub const RING_CHUNK_ALIGN: usize = 1;
+
+/// Sum `bufs` (one equal-length buffer per rank) in ring order.
+/// Returns the reduced buffer (what every rank holds after all-gather).
+pub fn ring_allreduce(bufs: &[Vec<f32>]) -> Vec<f32> {
+    let n = bufs.len();
+    assert!(n > 0);
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "rank buffers must match");
+    if n == 1 {
+        return bufs[0].clone();
+    }
+    let mut out = vec![0.0f32; len];
+    // chunk c covers [c*base + min(c, rem), ...): balanced split like NCCL
+    let base = len / n;
+    let rem = len % n;
+    let chunk_bounds = |c: usize| -> (usize, usize) {
+        let start = c * base + c.min(rem);
+        let width = base + usize::from(c < rem);
+        (start, start + width)
+    };
+    for c in 0..n {
+        let (lo, hi) = chunk_bounds(c);
+        if lo >= hi {
+            continue;
+        }
+        // accumulate in rotation order starting at rank c
+        let first = c % n;
+        out[lo..hi].copy_from_slice(&bufs[first][lo..hi]);
+        for hop in 1..n {
+            let r = (c + hop) % n;
+            let src = &bufs[r][lo..hi];
+            for (o, s) in out[lo..hi].iter_mut().zip(src) {
+                *o += *s;
+            }
+        }
+    }
+    out
+}
+
+/// Naive in-order summation (rank 0 + rank 1 + ...) — what a tree/direct
+/// reduction would produce; used by tests to show ring != naive bitwise.
+pub fn naive_sum(bufs: &[Vec<f32>]) -> Vec<f32> {
+    let len = bufs[0].len();
+    let mut out = vec![0.0f32; len];
+    for b in bufs {
+        for (o, s) in out.iter_mut().zip(b) {
+            *o += *s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, gen};
+
+    fn rand_bufs(rng: &mut crate::util::rng::SplitMix64, n: usize, len: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|_| gen::vec_f32(rng, len, 1.0)).collect()
+    }
+
+    #[test]
+    fn single_rank_identity() {
+        let b = vec![vec![1.0f32, 2.0, 3.0]];
+        assert_eq!(ring_allreduce(&b), b[0]);
+    }
+
+    #[test]
+    fn matches_naive_numerically() {
+        let mut rng = crate::util::rng::SplitMix64::new(1);
+        let bufs = rand_bufs(&mut rng, 5, 997);
+        let ring = ring_allreduce(&bufs);
+        let naive = naive_sum(&bufs);
+        for (a, b) in ring.iter().zip(&naive) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn ring_differs_from_naive_bitwise() {
+        let mut rng = crate::util::rng::SplitMix64::new(2);
+        let bufs = rand_bufs(&mut rng, 4, 4096);
+        let ring = ring_allreduce(&bufs);
+        let naive = naive_sum(&bufs);
+        let differs = ring
+            .iter()
+            .zip(&naive)
+            .any(|(a, b)| a.to_bits() != b.to_bits());
+        assert!(differs, "ring order should differ from naive order in bits");
+    }
+
+    #[test]
+    fn rank_count_changes_bits() {
+        // The core elastic-training hazard: reducing the same data over a
+        // different world size gives different bits.
+        let mut rng = crate::util::rng::SplitMix64::new(3);
+        let bufs4 = rand_bufs(&mut rng, 4, 1024);
+        // fold the 4 buffers into 2 (pre-accumulated pairs), then ring
+        let pair = |a: &[f32], b: &[f32]| -> Vec<f32> {
+            a.iter().zip(b).map(|(x, y)| x + y).collect()
+        };
+        let bufs2 = vec![pair(&bufs4[0], &bufs4[1]), pair(&bufs4[2], &bufs4[3])];
+        let r4 = ring_allreduce(&bufs4);
+        let r2 = ring_allreduce(&bufs2);
+        let differs = r4.iter().zip(&r2).any(|(a, b)| a.to_bits() != b.to_bits());
+        assert!(differs);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = crate::util::rng::SplitMix64::new(4);
+        let bufs = rand_bufs(&mut rng, 7, 333);
+        let a = ring_allreduce(&bufs);
+        let b = ring_allreduce(&bufs);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn uneven_chunks_cover_everything() {
+        // len < n and len not divisible by n
+        let bufs = vec![vec![1.0f32; 3]; 5];
+        let out = ring_allreduce(&bufs);
+        assert_eq!(out, vec![5.0f32; 3]);
+        let bufs = vec![vec![2.0f32; 10]; 3];
+        assert_eq!(ring_allreduce(&bufs), vec![6.0f32; 10]);
+    }
+
+    #[test]
+    fn prop_sum_correct_any_shape() {
+        check("ring-sum", 40, |rng| {
+            let n = gen::usize_in(rng, 1, 9);
+            let len = gen::usize_in(rng, 1, 300);
+            let bufs = rand_bufs(rng, n, len);
+            let ring = ring_allreduce(&bufs);
+            let naive = naive_sum(&bufs);
+            for (i, (a, b)) in ring.iter().zip(&naive).enumerate() {
+                if (a - b).abs() > 1e-3 {
+                    return Err(format!("elem {i}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,22 @@
+//! Deterministic data pipeline (paper §3.2 "Optimization" + Fig. 7).
+//!
+//! Three pieces:
+//! * [`sampler`] — the distributed data sampler: a seeded per-epoch
+//!   Fisher–Yates permutation addressed by (step, virtual rank, slot), so
+//!   the sample an EST sees is a pure function of training progress and its
+//!   *virtual* identity, never of placement.
+//! * [`corpus`] — the synthetic byte-level corpus (substitution for the
+//!   paper's ImageNet/SQuAD datasets): a noisy-bigram process, learnable
+//!   (loss falls below ln |V| toward the bigram entropy) and a pure
+//!   function of the sample index.
+//! * [`loader`] — shared data workers: one worker pool per executor shared
+//!   by all its ESTs, with a queuing buffer recording per-item RNG states
+//!   for not-yet-consumed mini-batches (the checkpointed "extra state").
+
+pub mod corpus;
+pub mod loader;
+pub mod sampler;
+
+pub use corpus::SyntheticCorpus;
+pub use loader::SharedDataWorkers;
+pub use sampler::DeterministicSampler;

@@ -1,0 +1,86 @@
+//! EasyScaleThread (EST) — the paper's core abstraction (§3.2).
+//!
+//! An EST is a *logical* data-parallel training worker, decoupled from the
+//! GPU it happens to execute on. A job asks for `maxP` workers; EasyScale
+//! materializes `maxP` ESTs and time-slices them over however many
+//! executors exist right now. Context switching happens at mini-batch
+//! boundaries and the context is deliberately tiny: temporal tensors and
+//! activations die with the fwd/bwd pass; parameters and optimizer state
+//! are *shared* between ESTs of an executor (identical at mini-batch ends);
+//! only the gradients (staged to host DRAM) and a few RNG/progress integers
+//! are per-EST.
+
+use crate::util::rng::{dropout_key, SplitMix64};
+
+/// The per-EST context — everything that must survive a context switch or
+/// travel in a checkpoint. Note what's *not* here: no parameters, no
+/// optimizer state, no activations (paper §3.2 "Execution").
+#[derive(Debug, Clone, PartialEq)]
+pub struct EstContext {
+    /// Virtual communication rank (fixed for the job's lifetime — the D1
+    /// treatment assigns communication identity to the EST, not the GPU).
+    pub virtual_rank: usize,
+    /// Mini-batches completed by this EST.
+    pub step: u64,
+    /// Data-augmentation RNG stream state (advanced via the shared data
+    /// workers' queuing buffer).
+    pub aug_rng_state: u64,
+}
+
+impl EstContext {
+    pub fn new(seed: u64, virtual_rank: usize) -> Self {
+        EstContext {
+            virtual_rank,
+            step: 0,
+            aug_rng_state: SplitMix64::derive(seed, &[0xE57, virtual_rank as u64]).state(),
+        }
+    }
+
+    /// Dropout key for this EST at its current step — a pure function of
+    /// (job seed, virtual rank, step): placement-independent by
+    /// construction.
+    pub fn dropout_key(&self, seed: u64) -> [u32; 2] {
+        dropout_key(seed, self.virtual_rank, self.step)
+    }
+}
+
+/// Gradients staged to host DRAM while other ESTs compute (paper §3.2:
+/// "migrate the gradients to host DRAM when context switch and overlap it
+/// with the computation of the next EasyScaleThread").
+#[derive(Debug, Clone)]
+pub struct StagedGrads {
+    pub virtual_rank: usize,
+    pub loss: f32,
+    /// Flat per-parameter gradient buffers, manifest order.
+    pub grads: Vec<Vec<f32>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_is_placement_free() {
+        // Same (seed, rank) -> identical context, wherever it is created.
+        let a = EstContext::new(42, 3);
+        let b = EstContext::new(42, 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dropout_key_depends_on_rank_and_step() {
+        let mut a = EstContext::new(1, 0);
+        let b = EstContext::new(1, 1);
+        assert_ne!(a.dropout_key(1), b.dropout_key(1));
+        let k0 = a.dropout_key(1);
+        a.step += 1;
+        assert_ne!(k0, a.dropout_key(1));
+    }
+
+    #[test]
+    fn distinct_ranks_distinct_aug_streams() {
+        let a = EstContext::new(5, 0);
+        let b = EstContext::new(5, 1);
+        assert_ne!(a.aug_rng_state, b.aug_rng_state);
+    }
+}

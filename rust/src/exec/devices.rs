@@ -1,0 +1,106 @@
+//! Simulated heterogeneous GPU device types.
+//!
+//! Substitution (DESIGN.md §4): we have no physical GPUs, so a "device
+//! type" is (a) which *kernel-variant artifact* an executor loads — which
+//! reproduces, mechanically, how cuBLAS/cuDNN algorithm selection differs
+//! across GPU architectures and breaks bitwise equality — and (b) a
+//! capability/memory profile consumed by the schedulers and the simulator.
+
+use anyhow::{bail, Result};
+
+/// The paper's evaluation fleet: V100 (32 GB), P100 (16 GB), T4 (16 GB).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DeviceType {
+    V100,
+    P100,
+    T4,
+}
+
+pub const DEVICE_TYPES: [DeviceType; 3] = [DeviceType::V100, DeviceType::P100, DeviceType::T4];
+
+impl DeviceType {
+    pub fn index(self) -> usize {
+        match self {
+            DeviceType::V100 => 0,
+            DeviceType::P100 => 1,
+            DeviceType::T4 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceType::V100 => "V100",
+            DeviceType::P100 => "P100",
+            DeviceType::T4 => "T4",
+        }
+    }
+
+    pub fn memory_gb(self) -> f64 {
+        match self {
+            DeviceType::V100 => 32.0,
+            DeviceType::P100 => 16.0,
+            DeviceType::T4 => 16.0,
+        }
+    }
+
+    /// CUDA context footprint per executor process (paper §3.1: ~750 MB).
+    pub fn cuda_context_gb(self) -> f64 {
+        0.75
+    }
+
+    /// The kernel-variant artifact this device's "vendor libraries" select
+    /// when D2 is off. With D2 on, every device uses "det".
+    pub fn kernel_variant(self, d2: bool) -> &'static str {
+        if d2 {
+            return "det";
+        }
+        match self {
+            DeviceType::V100 => "v100",
+            DeviceType::P100 => "p100",
+            DeviceType::T4 => "t4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DeviceType> {
+        match s.to_ascii_lowercase().as_str() {
+            "v100" => Ok(DeviceType::V100),
+            "p100" => Ok(DeviceType::P100),
+            "t4" => Ok(DeviceType::T4),
+            other => bail!("unknown device type '{other}' (v100|p100|t4)"),
+        }
+    }
+}
+
+impl std::fmt::Display for DeviceType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for d in DEVICE_TYPES {
+            assert_eq!(DeviceType::parse(d.name()).unwrap(), d);
+        }
+        assert!(DeviceType::parse("a100").is_err());
+    }
+
+    #[test]
+    fn variants_follow_d2() {
+        assert_eq!(DeviceType::V100.kernel_variant(false), "v100");
+        assert_eq!(DeviceType::T4.kernel_variant(false), "t4");
+        for d in DEVICE_TYPES {
+            assert_eq!(d.kernel_variant(true), "det");
+        }
+    }
+
+    #[test]
+    fn memory_profile() {
+        assert_eq!(DeviceType::V100.memory_gb(), 32.0);
+        assert_eq!(DeviceType::P100.memory_gb(), 16.0);
+    }
+}

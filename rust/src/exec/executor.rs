@@ -1,0 +1,225 @@
+//! The per-GPU executor: one CUDA context (PJRT client in our substrate),
+//! time-slicing its assigned EasyScaleThreads at mini-batch boundaries
+//! (paper §3.2, Fig. 6).
+
+use anyhow::Result;
+
+use crate::data::{DeterministicSampler, SharedDataWorkers, SyntheticCorpus};
+use crate::est::{EstContext, StagedGrads};
+use crate::runtime::client::ParamBuffers;
+use crate::runtime::Engine;
+use crate::util::rng::dropout_key;
+
+use super::devices::DeviceType;
+
+/// Which workers the job currently runs where. The unit of elastic
+/// reconfiguration: ESTs move between executors, nothing else changes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub executors: Vec<ExecutorSpec>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutorSpec {
+    pub device: DeviceType,
+    /// Virtual ranks hosted, in hosting order.
+    pub est_ranks: Vec<usize>,
+}
+
+impl Placement {
+    /// `n_gpus` homogeneous devices, `max_p` ESTs distributed round-robin —
+    /// with n_gpus == max_p this *is* DDP's fixed-DoP placement.
+    pub fn homogeneous(device: DeviceType, n_gpus: usize, max_p: usize) -> Placement {
+        assert!(n_gpus > 0 && max_p >= n_gpus);
+        let mut executors: Vec<ExecutorSpec> = (0..n_gpus)
+            .map(|_| ExecutorSpec { device, est_ranks: Vec::new() })
+            .collect();
+        for r in 0..max_p {
+            executors[r % n_gpus].est_ranks.push(r);
+        }
+        Placement { executors }
+    }
+
+    /// Heterogeneous placement from (device, n_ests) pairs; ranks assigned
+    /// in order.
+    pub fn heterogeneous(spec: &[(DeviceType, usize)]) -> Placement {
+        let mut executors = Vec::new();
+        let mut next = 0usize;
+        for &(device, n) in spec {
+            let est_ranks = (next..next + n).collect();
+            next += n;
+            executors.push(ExecutorSpec { device, est_ranks });
+        }
+        Placement { executors }
+    }
+
+    pub fn max_p(&self) -> usize {
+        self.executors.iter().map(|e| e.est_ranks.len()).sum()
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.executors.len()
+    }
+
+    /// Ranks must form a partition of 0..max_p.
+    pub fn validate(&self) -> Result<()> {
+        let max_p = self.max_p();
+        let mut seen = vec![false; max_p];
+        for e in &self.executors {
+            if e.est_ranks.is_empty() {
+                anyhow::bail!("executor with no ESTs");
+            }
+            for &r in &e.est_ranks {
+                if r >= max_p || seen[r] {
+                    anyhow::bail!("bad rank {r}");
+                }
+                seen[r] = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-executor rank groups (hosting order) — the physical-aggregation
+    /// topology of naive elastic frameworks.
+    pub fn groups(&self) -> Vec<Vec<usize>> {
+        self.executors.iter().map(|e| e.est_ranks.clone()).collect()
+    }
+}
+
+/// How dropout keys are derived: EasyScale keys by *virtual* rank (D0
+/// treatment); naive frameworks key by the worker's physical slot, which
+/// changes under re-placement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KeyMode {
+    Virtual,
+    Physical,
+}
+
+/// Timing breakdown of one executor mini-batch — consumed by the Fig. 13
+/// context-switch-overhead bench.
+#[derive(Debug, Clone, Default)]
+pub struct ExecTiming {
+    /// fwd/bwd seconds per EST, hosting order.
+    pub compute_s: Vec<f64>,
+    /// gradient D2H staging seconds per EST.
+    pub stage_s: Vec<f64>,
+}
+
+/// One executor. Owns no model state: parameters/optimizer state live with
+/// the trainer (shared per the paper — only ONE replica per executor, and
+/// at mini-batch boundaries all executors hold identical values).
+#[derive(Debug, Clone)]
+pub struct Executor {
+    pub spec: ExecutorSpec,
+    /// Physical slot of this executor within the placement.
+    pub slot: usize,
+}
+
+impl Executor {
+    /// Run one global mini-batch's worth of this executor's ESTs, staging
+    /// each EST's gradients to host DRAM (the `StagedGrads` return).
+    ///
+    /// `d2` picks the kernel-variant artifact; `key_mode` the dropout-key
+    /// identity; augmentation consumes committed data-worker states.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_minibatch(
+        &self,
+        engine: &Engine,
+        params: &ParamBuffers,
+        contexts: &mut [EstContext],
+        sampler: &mut DeterministicSampler,
+        corpus: &SyntheticCorpus,
+        data: &mut SharedDataWorkers,
+        seed: u64,
+        step: u64,
+        d2: bool,
+        key_mode: KeyMode,
+        aug_rate: f64,
+        timing: Option<&mut ExecTiming>,
+    ) -> Result<Vec<StagedGrads>> {
+        let variant = self.spec.device.kernel_variant(d2);
+        let mut staged = Vec::with_capacity(self.spec.est_ranks.len());
+        let mut t = timing;
+        for (pos, &rank) in self.spec.est_ranks.iter().enumerate() {
+            let ctx = &mut contexts[rank];
+            debug_assert_eq!(ctx.virtual_rank, rank);
+            let indices = sampler.microbatch(step, rank);
+            let mut tokens = corpus.batch(&indices);
+            let item = data.consume(step, rank);
+            if aug_rate > 0.0 {
+                SharedDataWorkers::augment(&item, &mut tokens, corpus.vocab_size, aug_rate);
+            }
+            let key = match key_mode {
+                KeyMode::Virtual => ctx.dropout_key(seed),
+                // physical identity: (executor slot, position in executor)
+                KeyMode::Physical => {
+                    dropout_key(seed, self.slot * 1024 + pos, step)
+                }
+            };
+            let t0 = std::time::Instant::now();
+            let out = engine.fwd_bwd_buffered(variant, params, &tokens, key)?;
+            let compute = t0.elapsed().as_secs_f64();
+            // gradient "D2H" staging: in our substrate fwd_bwd already
+            // returns host buffers; the move into StagedGrads is the stage.
+            let t1 = std::time::Instant::now();
+            let sg = StagedGrads { virtual_rank: rank, loss: out.loss, grads: out.grads };
+            let stage = t1.elapsed().as_secs_f64();
+            if let Some(t) = t.as_deref_mut() {
+                t.compute_s.push(compute);
+                t.stage_s.push(stage);
+            }
+            staged.push(sg);
+            ctx.step = step + 1;
+        }
+        Ok(staged)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_placement_round_robin() {
+        let p = Placement::homogeneous(DeviceType::V100, 2, 4);
+        p.validate().unwrap();
+        assert_eq!(p.executors[0].est_ranks, vec![0, 2]);
+        assert_eq!(p.executors[1].est_ranks, vec![1, 3]);
+        assert_eq!(p.max_p(), 4);
+        assert_eq!(p.n_gpus(), 2);
+    }
+
+    #[test]
+    fn ddp_placement_one_each() {
+        let p = Placement::homogeneous(DeviceType::V100, 4, 4);
+        p.validate().unwrap();
+        for (i, e) in p.executors.iter().enumerate() {
+            assert_eq!(e.est_ranks, vec![i]);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_placement() {
+        let p = Placement::heterogeneous(&[
+            (DeviceType::V100, 2),
+            (DeviceType::P100, 1),
+            (DeviceType::P100, 1),
+        ]);
+        p.validate().unwrap();
+        assert_eq!(p.max_p(), 4);
+        assert_eq!(p.executors[0].est_ranks, vec![0, 1]);
+        assert_eq!(p.executors[2].est_ranks, vec![3]);
+    }
+
+    #[test]
+    fn invalid_placements_rejected() {
+        let p = Placement {
+            executors: vec![ExecutorSpec { device: DeviceType::T4, est_ranks: vec![0, 0] }],
+        };
+        assert!(p.validate().is_err());
+        let p = Placement {
+            executors: vec![ExecutorSpec { device: DeviceType::T4, est_ranks: vec![] }],
+        };
+        assert!(p.validate().is_err());
+    }
+}

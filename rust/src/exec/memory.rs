@@ -1,0 +1,115 @@
+//! GPU memory accounting (MU model) — drives the Fig. 12 comparison
+//! (EasyScaleThread vs worker packing) and the scheduler's MU planning.
+//!
+//! EasyScale: one executor = one CUDA context; parameters/optimizer state
+//! are shared by all its ESTs; activations belong to the single EST
+//! computing right now; per-EST gradients are staged to *host* DRAM. So
+//! device memory is constant in the number of ESTs.
+//!
+//! Worker packing (Gandiva-style): each packed worker is a full process
+//! with its own CUDA context, parameter replica, optimizer state and
+//! activations — memory grows linearly and OOMs.
+
+/// Memory model of one training workload on one GPU (all GB).
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryModel {
+    pub cuda_context_gb: f64,
+    pub params_gb: f64,
+    pub optimizer_gb: f64,
+    pub activations_gb: f64,
+    pub gradients_gb: f64,
+}
+
+impl MemoryModel {
+    /// From a parameter count (f32, SGD-momentum: 1 slot) and an activation
+    /// estimate at the configured microbatch.
+    pub fn from_params(n_params: usize, activations_gb: f64) -> MemoryModel {
+        let gb = |bytes: f64| bytes / (1024.0 * 1024.0 * 1024.0);
+        let params_gb = gb(4.0 * n_params as f64);
+        MemoryModel {
+            cuda_context_gb: 0.75,
+            params_gb,
+            optimizer_gb: params_gb,   // momentum slot
+            gradients_gb: params_gb,   // transient, freed after staging
+            activations_gb,
+        }
+    }
+
+    /// MU: peak device memory of ONE EasyScale executor, independent of how
+    /// many ESTs it hosts (gradients are staged out, components reused).
+    pub fn easyscale_executor_gb(&self, _n_ests: usize) -> f64 {
+        self.cuda_context_gb
+            + self.params_gb
+            + self.optimizer_gb
+            + self.activations_gb
+            + self.gradients_gb
+    }
+
+    /// Peak device memory of `n` packed workers: everything replicated.
+    pub fn packing_gb(&self, n_workers: usize) -> f64 {
+        n_workers as f64
+            * (self.cuda_context_gb
+                + self.params_gb
+                + self.optimizer_gb
+                + self.activations_gb
+                + self.gradients_gb)
+    }
+
+    /// Does a configuration fit a device?
+    pub fn fits(&self, total_gb: f64, device_gb: f64) -> bool {
+        total_gb <= device_gb
+    }
+
+    /// Max packed workers before OOM on a device.
+    pub fn packing_limit(&self, device_gb: f64) -> usize {
+        let per = self.packing_gb(1);
+        if per <= 0.0 {
+            return 0;
+        }
+        (device_gb / per).floor() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resnet_like() -> MemoryModel {
+        // ~25M params, ~5.5GB activations at batch 32 (paper's ResNet50
+        // setting that OOMs after 8 packed workers on a 32GB V100... the
+        // batch-512 ShuffleNet OOMs after 2)
+        MemoryModel {
+            cuda_context_gb: 0.75,
+            params_gb: 0.1,
+            optimizer_gb: 0.1,
+            gradients_gb: 0.1,
+            activations_gb: 2.95,
+        }
+    }
+
+    #[test]
+    fn easyscale_memory_constant_in_ests() {
+        let m = resnet_like();
+        let one = m.easyscale_executor_gb(1);
+        for n in [2, 4, 8, 16] {
+            assert_eq!(m.easyscale_executor_gb(n), one);
+        }
+    }
+
+    #[test]
+    fn packing_memory_linear_and_ooms() {
+        let m = resnet_like();
+        assert!(m.packing_gb(2) > 1.9 * m.packing_gb(1));
+        let limit = m.packing_limit(32.0);
+        assert!(m.packing_gb(limit) <= 32.0);
+        assert!(m.packing_gb(limit + 1) > 32.0);
+        assert_eq!(limit, 8, "resnet-like should OOM after 8 workers on 32GB");
+    }
+
+    #[test]
+    fn from_params_scales() {
+        let m = MemoryModel::from_params(3_450_368, 0.5);
+        assert!(m.params_gb > 0.01 && m.params_gb < 0.02);
+        assert_eq!(m.params_gb, m.optimizer_gb);
+    }
+}

@@ -1,0 +1,9 @@
+//! Executors: the per-GPU runtime that time-slices EasyScaleThreads.
+
+pub mod devices;
+pub mod executor;
+pub mod memory;
+
+pub use devices::DeviceType;
+pub use executor::{Executor, Placement};
+pub use memory::MemoryModel;

@@ -1,0 +1,37 @@
+//! # EasyScale — accuracy-consistent elastic training (reproduction)
+//!
+//! A from-scratch reproduction of *"EasyScale: Accuracy-consistent Elastic
+//! Training for Deep Learning"* (cs.DC 2022) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 1** (build-time Python): Pallas kernels — a fixed-schedule
+//!   deterministic matmul (the D2 hardware-agnostic kernel) and a fused
+//!   SGD-momentum update.
+//! * **Layer 2** (build-time Python): the JAX transformer fwd/bwd graph,
+//!   AOT-lowered to HLO text artifacts (`make artifacts`).
+//! * **Layer 3** (this crate): the EasyScale coordinator — EasyScaleThreads,
+//!   ElasticDDP (deterministic bucket/ring aggregation), elastic executors,
+//!   on-demand checkpointing, the intra-job *waste*-model planner
+//!   (paper Eq. 1), the inter-job cluster scheduler (paper Algorithm 1),
+//!   and a discrete-event heterogeneous-cluster simulator for the paper's
+//!   trace and production experiments.
+//!
+//! Python never runs on the request path: the binary loads `artifacts/` via
+//! the PJRT CPU client (`xla` crate) and is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod util;
+pub mod runtime;
+pub mod model;
+pub mod data;
+pub mod est;
+pub mod comm;
+pub mod exec;
+pub mod train;
+pub mod sched;
+pub mod sim;
+pub mod bitwise;
+pub mod metrics;
+pub mod cli;

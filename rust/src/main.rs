@@ -1,0 +1,9 @@
+//! Leader entrypoint: `easyscale <subcommand>`. See `cli::USAGE`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = easyscale::cli::main_with(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,130 @@
+//! Metrics: counters, time series, and CSV sinks for loss curves,
+//! GPU-allocation timelines and the benches' paper-style outputs.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// A named time series of (x, y) points (step/loss, time/GPUs, ...).
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Series {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn last(&self) -> Option<(f64, f64)> {
+        self.points.last().copied()
+    }
+
+    /// Mean of y values.
+    pub fn mean_y(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|p| p.1).sum::<f64>() / self.points.len() as f64
+    }
+
+    /// Time-weighted average for step series (y held until next x).
+    pub fn time_weighted_mean(&self) -> f64 {
+        if self.points.len() < 2 {
+            return self.points.first().map(|p| p.1).unwrap_or(0.0);
+        }
+        let mut acc = 0.0;
+        let mut span = 0.0;
+        for w in self.points.windows(2) {
+            let dt = w[1].0 - w[0].0;
+            acc += w[0].1 * dt;
+            span += dt;
+        }
+        if span == 0.0 { self.points[0].1 } else { acc / span }
+    }
+}
+
+/// A bundle of series, writable as one CSV (long format).
+#[derive(Debug, Default)]
+pub struct MetricSink {
+    pub series: BTreeMap<String, Series>,
+    pub counters: BTreeMap<String, u64>,
+}
+
+impl MetricSink {
+    pub fn new() -> MetricSink {
+        MetricSink::default()
+    }
+
+    pub fn push(&mut self, name: &str, x: f64, y: f64) {
+        self.series
+            .entry(name.to_string())
+            .or_insert_with(|| Series::new(name))
+            .push(x, y);
+    }
+
+    pub fn incr(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Write all series as `series,x,y` rows.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "series,x,y")?;
+        for s in self.series.values() {
+            for (x, y) in &s.points {
+                writeln!(f, "{},{},{}", s.name, x, y)?;
+            }
+        }
+        f.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_stats() {
+        let mut s = Series::new("loss");
+        s.push(0.0, 4.0);
+        s.push(1.0, 2.0);
+        s.push(3.0, 1.0);
+        assert_eq!(s.mean_y(), 7.0 / 3.0);
+        // time-weighted: 4*1 + 2*2 over span 3
+        assert!((s.time_weighted_mean() - 8.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.last(), Some((3.0, 1.0)));
+    }
+
+    #[test]
+    fn sink_counters_and_csv() {
+        let mut m = MetricSink::new();
+        m.incr("preemptions", 2);
+        m.incr("preemptions", 1);
+        assert_eq!(m.counter("preemptions"), 3);
+        m.push("gpus", 0.0, 4.0);
+        m.push("gpus", 10.0, 2.0);
+        let path = std::env::temp_dir().join("easyscale_metrics_test.csv");
+        m.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("series,x,y"));
+        assert!(text.contains("gpus,0,4"));
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        let s = Series::new("x");
+        assert_eq!(s.mean_y(), 0.0);
+        assert_eq!(s.time_weighted_mean(), 0.0);
+        assert_eq!(s.last(), None);
+    }
+}

@@ -1,0 +1,6 @@
+//! Model-side metadata: the paper's Table-1 workload profiles and
+//! GPU-capability tables consumed by the schedulers and the simulator.
+
+pub mod workload;
+
+pub use workload::{Workload, WorkloadProfile, WORKLOADS};

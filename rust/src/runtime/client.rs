@@ -1,0 +1,303 @@
+//! The PJRT execution engine: compile-once / execute-many over the AOT
+//! artifacts.
+//!
+//! Executables are cached per HLO file, so elastic reconfigurations (which
+//! re-distribute EasyScaleThreads, not computations) never recompile; only
+//! a *device-type* change pulls a different kernel-variant artifact in —
+//! exactly the paper's "one compiled executable per model variant".
+//!
+//! Threading note: the training loop is single-threaded and time-slices
+//! ESTs exactly like a real GPU executor does (one CUDA context, one EST
+//! computing at a time — paper §3.2); the PJRT CPU client parallelizes
+//! *inside* an execution. Wall-clock parallelism across simulated GPUs is
+//! modeled in `sim/` where it belongs.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::Manifest;
+
+/// Result of one EST microbatch fwd/bwd execution.
+#[derive(Debug, Clone)]
+pub struct FwdBwdOut {
+    pub loss: f32,
+    /// One flat f32 buffer per parameter, manifest order.
+    pub grads: Vec<Vec<f32>>,
+}
+
+/// Device-resident parameter set, uploaded once per mini-batch and shared
+/// by all ESTs of all executors (see `Engine::upload_params`).
+pub struct ParamBuffers {
+    bufs: Vec<xla::PjRtBuffer>,
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<PathBuf, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    /// Counters for tests/benches: number of HLO compilations performed.
+    pub compile_count: RefCell<usize>,
+}
+
+impl Engine {
+    /// Create an engine over a preset directory (e.g. `artifacts/tiny`).
+    pub fn new(preset_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(preset_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_count: RefCell::new(0),
+        })
+    }
+
+    /// Convenience: `artifacts_root/preset`.
+    pub fn open(artifacts_root: &Path, preset: &str) -> Result<Engine> {
+        Engine::new(&artifacts_root.join(preset))
+    }
+
+    fn executable(&self, path: &Path) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?,
+        );
+        *self.compile_count.borrow_mut() += 1;
+        self.cache.borrow_mut().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (used at executor startup so compilation
+    /// never lands inside the measured hot loop).
+    pub fn warmup(&self, variant: &str) -> Result<()> {
+        let path = self.variant_path(variant)?;
+        self.executable(&path)?;
+        self.executable(&self.manifest.opt_update_file.clone())?;
+        Ok(())
+    }
+
+    pub fn variant_path(&self, variant: &str) -> Result<PathBuf> {
+        self.manifest
+            .fwd_bwd_variants
+            .get(variant)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown kernel variant '{variant}'"))
+    }
+
+    /// Execute an artifact over device input buffers and decompose the
+    /// tuple result.
+    ///
+    /// Inputs go through `buffer_from_host_buffer` + `execute_b` rather
+    /// than `execute::<Literal>`: the vendored crate's literal-execute path
+    /// `release()`s the input device buffers it creates and never frees
+    /// them (~full parameter set leaked per step); owning the buffers on
+    /// the Rust side fixes that and skips one host-side copy.
+    fn run(&self, path: &Path, args: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(path)?;
+        let outs = exe.execute_b::<xla::PjRtBuffer>(args)?;
+        let lit = outs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("executable returned no outputs"))?
+            .to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    fn buf_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+    }
+
+    /// Upload the full parameter set once; the returned handle is reused by
+    /// every EST's fwd/bwd within the mini-batch (parameters are *shared*
+    /// between ESTs — paper §3.2 — so one device copy serves them all).
+    pub fn upload_params(&self, params: &[Vec<f32>]) -> Result<ParamBuffers> {
+        let m = &self.manifest;
+        anyhow::ensure!(params.len() == m.params.len(), "param arity mismatch");
+        let mut bufs = Vec::with_capacity(params.len());
+        for (p, info) in params.iter().zip(&m.params) {
+            bufs.push(self.buf_f32(p, &info.shape)?);
+        }
+        Ok(ParamBuffers { bufs })
+    }
+
+    /// fwd/bwd against pre-uploaded parameters (the hot-loop form: one
+    /// parameter upload per mini-batch instead of one per EST).
+    pub fn fwd_bwd_buffered(
+        &self,
+        variant: &str,
+        params: &ParamBuffers,
+        tokens: &[i32],
+        rng: [u32; 2],
+    ) -> Result<FwdBwdOut> {
+        let m = &self.manifest;
+        let b = m.model.batch_per_est;
+        let s = m.model.seq_len + 1;
+        if tokens.len() != b * s {
+            bail!("expected {}x{} tokens, got {}", b, s, tokens.len());
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = params.bufs.iter().collect();
+        let tok_buf = self.client.buffer_from_host_buffer(tokens, &[b, s], None)?;
+        let rng_buf = self.client.buffer_from_host_buffer(&rng, &[2], None)?;
+        args.push(&tok_buf);
+        args.push(&rng_buf);
+        let path = self.variant_path(variant)?;
+        let exe = self.executable(&path)?;
+        let outs = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        let lit = outs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("executable returned no outputs"))?
+            .to_literal_sync()?;
+        let outs = lit.to_tuple()?;
+        if outs.len() != 1 + m.params.len() {
+            bail!("fwd_bwd returned {} outputs, expected {}", outs.len(), 1 + m.params.len());
+        }
+        let loss = outs[0].get_first_element::<f32>()?;
+        let grads = outs[1..]
+            .iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(FwdBwdOut { loss, grads })
+    }
+
+    /// One EST microbatch: fwd/bwd with the given kernel variant.
+    ///
+    /// `params`: flat f32 per tensor (manifest order); `tokens`: flat i32 of
+    /// shape [batch_per_est, seq_len+1]; `rng`: the u32[2] dropout key
+    /// derived from (seed, virtual rank, step).
+    pub fn fwd_bwd(
+        &self,
+        variant: &str,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        rng: [u32; 2],
+    ) -> Result<FwdBwdOut> {
+        let m = &self.manifest;
+        if params.len() != m.params.len() {
+            bail!("expected {} param tensors, got {}", m.params.len(), params.len());
+        }
+        let b = m.model.batch_per_est;
+        let s = m.model.seq_len + 1;
+        if tokens.len() != b * s {
+            bail!("expected {}x{} tokens, got {}", b, s, tokens.len());
+        }
+        let mut args = Vec::with_capacity(params.len() + 2);
+        for (p, info) in params.iter().zip(&m.params) {
+            args.push(self.buf_f32(p, &info.shape)?);
+        }
+        args.push(self.client.buffer_from_host_buffer(tokens, &[b, s], None)?);
+        args.push(self.client.buffer_from_host_buffer(&rng, &[2], None)?);
+
+        let path = self.variant_path(variant)?;
+        let outs = self.run(&path, &args)?;
+        if outs.len() != 1 + m.params.len() {
+            bail!("fwd_bwd returned {} outputs, expected {}", outs.len(), 1 + m.params.len());
+        }
+        let loss = outs[0].get_first_element::<f32>()?;
+        let grads = outs[1..]
+            .iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(FwdBwdOut { loss, grads })
+    }
+
+    /// Fused SGD-momentum update over all parameters (the Pallas Layer-1
+    /// kernel). Returns (new_params, new_momenta).
+    pub fn opt_update(
+        &self,
+        params: &[Vec<f32>],
+        momenta: &[Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        let m = &self.manifest;
+        let n = m.params.len();
+        if params.len() != n || momenta.len() != n || grads.len() != n {
+            bail!("opt_update arity mismatch");
+        }
+        let mut args = Vec::with_capacity(3 * n + 1);
+        for set in [params, momenta, grads] {
+            for (p, info) in set.iter().zip(&m.params) {
+                args.push(self.buf_f32(p, &info.shape)?);
+            }
+        }
+        args.push(self.buf_f32(&[lr], &[])?);
+        let outs = self.run(&self.manifest.opt_update_file.clone(), &args)?;
+        if outs.len() != 2 * n {
+            bail!("opt_update returned {} outputs, expected {}", outs.len(), 2 * n);
+        }
+        let mut new_params = Vec::with_capacity(n);
+        let mut new_momenta = Vec::with_capacity(n);
+        for (i, l) in outs.iter().enumerate() {
+            let v = l.to_vec::<f32>()?;
+            if i < n {
+                new_params.push(v);
+            } else {
+                new_momenta.push(v);
+            }
+        }
+        Ok((new_params, new_momenta))
+    }
+
+    /// Dropout-free validation loss on one batch.
+    pub fn eval_loss(&self, params: &[Vec<f32>], tokens: &[i32]) -> Result<f32> {
+        let m = &self.manifest;
+        let b = m.model.batch_per_est;
+        let s = m.model.seq_len + 1;
+        if tokens.len() != b * s {
+            bail!("expected {}x{} tokens, got {}", b, s, tokens.len());
+        }
+        let mut args = Vec::with_capacity(m.params.len() + 1);
+        for (p, info) in params.iter().zip(&m.params) {
+            args.push(self.buf_f32(p, &info.shape)?);
+        }
+        args.push(self.client.buffer_from_host_buffer(tokens, &[b, s], None)?);
+        let outs = self.run(&self.manifest.eval_loss_file.clone(), &args)?;
+        Ok(outs[0].get_first_element::<f32>()?)
+    }
+
+    pub fn compiled_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        let Some(dir) = tiny_dir() else { return };
+        let eng = Engine::new(&dir).unwrap();
+        assert!(eng.variant_path("a100").is_err());
+        assert!(eng.variant_path("det").is_ok());
+    }
+
+    #[test]
+    fn fwd_bwd_shape_validation() {
+        let Some(dir) = tiny_dir() else { return };
+        let eng = Engine::new(&dir).unwrap();
+        let params = eng.manifest.load_init_params().unwrap();
+        // wrong token count
+        assert!(eng.fwd_bwd("v100", &params, &[0i32; 3], [0, 0]).is_err());
+        // wrong param arity
+        assert!(eng.fwd_bwd("v100", &params[1..], &[0i32; 130], [0, 0]).is_err());
+    }
+}

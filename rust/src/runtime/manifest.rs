@@ -1,0 +1,245 @@
+//! Artifact manifest: the contract between the build-time Python layer and
+//! the run-time Rust layer. Parsed from `artifacts/<preset>/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One named tensor in an artifact signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32" | "u32"
+}
+
+impl TensorSig {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One model parameter (manifest order == artifact order == bucket order
+/// source; see `comm::bucket`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+}
+
+/// Input/output signature of one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Model hyper-parameters baked into the artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub preset: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub batch_per_est: usize,
+    pub momentum: f64,
+    pub init_seed: u64,
+    pub n_params: usize,
+}
+
+/// The parsed manifest plus resolved file paths.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub params: Vec<ParamInfo>,
+    pub fwd_bwd: ArtifactSig,
+    /// kernel variant name -> HLO file path ("det", "v100", "p100", "t4")
+    pub fwd_bwd_variants: BTreeMap<String, PathBuf>,
+    pub opt_update: ArtifactSig,
+    pub opt_update_file: PathBuf,
+    pub eval_loss: ArtifactSig,
+    pub eval_loss_file: PathBuf,
+    pub init_params_file: PathBuf,
+}
+
+fn parse_sig(j: &Json) -> Result<ArtifactSig> {
+    let tensors = |key: &str| -> Result<Vec<TensorSig>> {
+        j.req_arr(key)?
+            .iter()
+            .map(|t| {
+                Ok(TensorSig {
+                    name: t.req_str("name")?.to_string(),
+                    shape: t
+                        .req_arr("shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("bad dim"))
+                        .collect::<Result<_>>()?,
+                    dtype: t.req_str("dtype")?.to_string(),
+                })
+            })
+            .collect()
+    };
+    Ok(ArtifactSig { inputs: tensors("inputs")?, outputs: tensors("outputs")? })
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json` (a preset directory, e.g. `artifacts/tiny`).
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        let m = j.get("model");
+        let model = ModelMeta {
+            preset: j.req_str("preset")?.to_string(),
+            vocab_size: m.req_usize("vocab_size")?,
+            d_model: m.req_usize("d_model")?,
+            n_layers: m.req_usize("n_layers")?,
+            seq_len: m.req_usize("seq_len")?,
+            batch_per_est: m.req_usize("batch_per_est")?,
+            momentum: m.req_f64("momentum")?,
+            init_seed: m.req_usize("init_seed")? as u64,
+            n_params: m.req_usize("n_params")?,
+        };
+
+        let params: Vec<ParamInfo> = j
+            .req_arr("params")?
+            .iter()
+            .map(|p| {
+                Ok(ParamInfo {
+                    name: p.req_str("name")?.to_string(),
+                    shape: p
+                        .req_arr("shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("bad dim"))
+                        .collect::<Result<_>>()?,
+                    size: p.req_usize("size")?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        if params.is_empty() {
+            bail!("manifest has no params");
+        }
+        let total: usize = params.iter().map(|p| p.size).sum();
+        if total != model.n_params {
+            bail!("param sizes sum {total} != n_params {}", model.n_params);
+        }
+
+        let arts = j.get("artifacts");
+        let fwd = arts.get("fwd_bwd");
+        let mut fwd_bwd_variants = BTreeMap::new();
+        if let Some(vars) = fwd.get("variants").as_obj() {
+            for (k, v) in vars {
+                fwd_bwd_variants.insert(
+                    k.clone(),
+                    dir.join(v.as_str().context("variant path not a string")?),
+                );
+            }
+        }
+        if fwd_bwd_variants.is_empty() {
+            bail!("manifest lists no fwd_bwd variants");
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            params,
+            fwd_bwd: parse_sig(fwd)?,
+            fwd_bwd_variants,
+            opt_update: parse_sig(arts.get("opt_update"))?,
+            opt_update_file: dir.join(arts.get("opt_update").req_str("file")?),
+            eval_loss: parse_sig(arts.get("eval_loss"))?,
+            eval_loss_file: dir.join(arts.get("eval_loss").req_str("file")?),
+            init_params_file: dir.join(j.req_str("init_params")?),
+        })
+    }
+
+    /// Load the deterministic initial parameters (raw f32 LE, manifest
+    /// order) as one flat host vector per parameter.
+    pub fn load_init_params(&self) -> Result<Vec<Vec<f32>>> {
+        let bytes = std::fs::read(&self.init_params_file)
+            .with_context(|| format!("reading {}", self.init_params_file.display()))?;
+        if bytes.len() != 4 * self.model.n_params {
+            bail!(
+                "init_params.bin is {} bytes, expected {}",
+                bytes.len(),
+                4 * self.model.n_params
+            );
+        }
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0usize;
+        for p in &self.params {
+            let mut v = Vec::with_capacity(p.size);
+            for i in 0..p.size {
+                let b = &bytes[off + 4 * i..off + 4 * i + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += 4 * p.size;
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Total parameter bytes (f32).
+    pub fn param_bytes(&self) -> usize {
+        4 * self.model.n_params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/tiny not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.preset, "tiny");
+        assert_eq!(m.params.len(), 5 + 12 * m.model.n_layers);
+        assert_eq!(m.params[0].name, "embed");
+        assert!(m.fwd_bwd_variants.contains_key("det"));
+        assert!(m.fwd_bwd_variants.contains_key("t4"));
+        // fwd_bwd: params + tokens + rng in; loss + grads out
+        assert_eq!(m.fwd_bwd.inputs.len(), m.params.len() + 2);
+        assert_eq!(m.fwd_bwd.outputs.len(), m.params.len() + 1);
+        assert_eq!(m.opt_update.inputs.len(), 3 * m.params.len() + 1);
+        assert_eq!(m.opt_update.outputs.len(), 2 * m.params.len());
+    }
+
+    #[test]
+    fn loads_init_params() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/tiny not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let ps = m.load_init_params().unwrap();
+        assert_eq!(ps.len(), m.params.len());
+        for (p, info) in ps.iter().zip(&m.params) {
+            assert_eq!(p.len(), info.size, "{}", info.name);
+            assert!(p.iter().all(|x| x.is_finite()), "{}", info.name);
+        }
+        // LN scales are exactly 1.0 at init
+        let lnf = m.params.iter().position(|p| p.name == "lnf_scale").unwrap();
+        assert!(ps[lnf].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`) and execute them from the Layer-3 hot path.
+//!
+//! The interchange format is HLO *text*: the image's xla_extension 0.5.1
+//! rejects jax>=0.5 serialized `HloModuleProto`s (64-bit instruction ids);
+//! the text parser reassigns ids and round-trips cleanly.
+//!
+//! One compiled executable per artifact file; executables are cached in the
+//! [`client::Engine`] so elastic reconfigurations never recompile.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{Engine, FwdBwdOut};
+pub use manifest::{ArtifactSig, Manifest, ParamInfo, TensorSig};
+pub use tensor::{dims_i64, literal_f32, literal_i32, literal_u32};

@@ -1,0 +1,68 @@
+//! Host-tensor <-> `xla::Literal` conversions.
+
+use anyhow::Result;
+
+pub fn dims_i64(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|&d| d as i64).collect()
+}
+
+/// Build an f32 literal of the given shape from a flat host slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 && shape[0] == data.len() {
+        return Ok(lit);
+    }
+    Ok(lit.reshape(&dims_i64(shape))?)
+}
+
+/// Build an i32 literal of the given shape from a flat host slice.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 && shape[0] == data.len() {
+        return Ok(lit);
+    }
+    Ok(lit.reshape(&dims_i64(shape))?)
+}
+
+/// Build a u32 literal of the given shape from a flat host slice.
+pub fn literal_u32(data: &[u32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 && shape[0] == data.len() {
+        return Ok(lit);
+    }
+    Ok(lit.reshape(&dims_i64(shape))?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = literal_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let lit = literal_f32(&[7.5], &[]).unwrap();
+        assert_eq!(lit.element_count(), 1);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 7.5);
+    }
+
+    #[test]
+    fn i32_and_u32() {
+        let lit = literal_i32(&[1, -2, 3, 4], &[4]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, -2, 3, 4]);
+        let lit = literal_u32(&[5, 6], &[2]).unwrap();
+        assert_eq!(lit.to_vec::<u32>().unwrap(), vec![5, 6]);
+    }
+
+    #[test]
+    fn dims_helper() {
+        assert_eq!(dims_i64(&[2, 3, 4]), vec![2i64, 3, 4]);
+        assert!(dims_i64(&[]).is_empty());
+    }
+}

@@ -1,0 +1,240 @@
+//! AIMaster — the intra-job scheduler (paper §3.4.2, Fig. 9).
+//!
+//! Per job it (a) picks the top-1 EST allocation for the GPUs it currently
+//! holds, and (b) proposes scale-outs: for each device type with available
+//! GPUs it evaluates "+1 GPU" configurations and submits the top-K as
+//! *proposals* (speedup-per-GPU annotated) to the cluster scheduler.
+//! Capabilities C_i come from runtime profiling statistics; before first
+//! execution they are initialized from historical data (the Table-1
+//! profiles play that role here), and the estimator can be corrected by
+//! observed throughput (`observe`). If a reconfiguration makes things
+//! slower, the job falls back to its previous resources (`should_fallback`).
+
+use crate::exec::devices::DEVICE_TYPES;
+
+use super::plan::{best_config, GpuVector, JobSpec, PlanConfig};
+
+/// A scale-out proposal: "give me `add` more GPUs; my throughput rises by
+/// `speedup` mini-batches/s, i.e. `speedup_per_gpu` per GPU added".
+#[derive(Debug, Clone)]
+pub struct Proposal {
+    pub job_id: usize,
+    pub add: GpuVector,
+    pub config: PlanConfig,
+    pub speedup: f64,
+    pub speedup_per_gpu: f64,
+}
+
+impl Proposal {
+    pub fn n_new_gpus(&self) -> usize {
+        self.add.iter().sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AiMaster {
+    pub job_id: usize,
+    pub job: JobSpec,
+    /// GPUs currently held.
+    pub held: GpuVector,
+    /// Profiling correction factor applied to estimated step rates
+    /// (observed/estimated, exponentially smoothed).
+    pub calib: f64,
+    /// throughput (steps/s) under the previous configuration, for fallback
+    pub prev_rate: Option<f64>,
+    /// restrict proposals to homogeneous GPUs (EasyScale_homo mode, or a
+    /// conv-heavy model that failed the D2 eligibility scan)
+    pub homogeneous_only: bool,
+}
+
+impl AiMaster {
+    pub fn new(job_id: usize, job: JobSpec) -> AiMaster {
+        let homogeneous_only = !job.workload.hetero_eligible();
+        AiMaster { job_id, job, held: [0, 0, 0], calib: 1.0, prev_rate: None, homogeneous_only }
+    }
+
+    /// Top-1 configuration under current GPUs (None when holding nothing).
+    pub fn plan_current(&self) -> Option<PlanConfig> {
+        best_config(&self.job, self.held)
+    }
+
+    /// Estimated global-step rate right now (calibrated).
+    pub fn current_rate(&self) -> f64 {
+        self.plan_current().map(|c| c.step_rate * self.calib).unwrap_or(0.0)
+    }
+
+    fn allowed_add(&self, i: usize) -> bool {
+        if !self.homogeneous_only {
+            return true;
+        }
+        // homogeneous mode: may only grow the type it already uses (or any
+        // single type when idle)
+        let used: Vec<usize> =
+            (0..3).filter(|&t| self.held[t] > 0).collect();
+        used.is_empty() || used == vec![i]
+    }
+
+    /// Scale-out proposals (top-K by speedup-per-GPU). `available` caps the
+    /// search to GPUs that are actually free.
+    ///
+    /// The search starts from "+1 GPU" (the paper's incremental step) but
+    /// also evaluates larger grants of the same type: integer CU assignment
+    /// plateaus — e.g. 8 ESTs on 4 or on 5 GPUs both run 2 ESTs deep, so a
+    /// single extra GPU often buys nothing while +4 halves the step time.
+    /// A proposal is the *jump to the next useful configuration*, annotated
+    /// with its average per-GPU speedup for Algorithm 1.
+    pub fn proposals(&self, available: GpuVector, k: usize) -> Vec<Proposal> {
+        let base_rate = self.current_rate();
+        let mut out: Vec<Proposal> = Vec::new();
+        for (i, _) in DEVICE_TYPES.iter().enumerate() {
+            if available[i] == 0 || !self.allowed_add(i) {
+                continue;
+            }
+            let max_add = available[i].min(self.job.max_p); // > maxP GPUs never helps
+            let mut best_for_type: Option<Proposal> = None;
+            for add_n in 1..=max_add {
+                let mut nums = self.held;
+                nums[i] += add_n;
+                let Some(cfg) = best_config(&self.job, nums) else { continue };
+                let speedup = (cfg.step_rate * self.calib - base_rate).max(0.0);
+                // only meaningful improvements (avoids reconfig churn)
+                if speedup <= 1e-12 || (base_rate > 0.0 && speedup < 0.03 * base_rate) {
+                    continue;
+                }
+                let per_gpu = speedup / add_n as f64;
+                let better = best_for_type
+                    .as_ref()
+                    .map(|b| per_gpu > b.speedup_per_gpu * 1.0001)
+                    .unwrap_or(true);
+                if better {
+                    let mut add = [0, 0, 0];
+                    add[i] = add_n;
+                    best_for_type = Some(Proposal {
+                        job_id: self.job_id,
+                        add,
+                        speedup_per_gpu: per_gpu,
+                        speedup,
+                        config: cfg,
+                    });
+                }
+            }
+            if let Some(p) = best_for_type {
+                out.push(p);
+            }
+        }
+        out.sort_by(|a, b| {
+            b.speedup_per_gpu
+                .partial_cmp(&a.speedup_per_gpu)
+                .unwrap()
+                .then(b.n_new_gpus().cmp(&a.n_new_gpus()))
+        });
+        out.truncate(k);
+        out
+    }
+
+    /// Feed an observed throughput back into the estimator (paper: "uses
+    /// the runtime execution statistics of jobs").
+    pub fn observe(&mut self, observed_rate: f64) {
+        if let Some(cfg) = self.plan_current() {
+            if cfg.step_rate > 0.0 && observed_rate > 0.0 {
+                let ratio = observed_rate / cfg.step_rate;
+                self.calib = 0.7 * self.calib + 0.3 * ratio;
+            }
+        }
+    }
+
+    /// Paper: "Once the performance slowdown is observed after
+    /// reconfiguration, we fall back to using previous resources."
+    pub fn should_fallback(&self, observed_rate: f64) -> bool {
+        matches!(self.prev_rate, Some(prev) if observed_rate < 0.95 * prev)
+    }
+
+    pub fn grant(&mut self, add: GpuVector) {
+        self.prev_rate = Some(self.current_rate());
+        for i in 0..3 {
+            self.held[i] += add[i];
+        }
+    }
+
+    pub fn revoke(&mut self, sub: GpuVector) {
+        for i in 0..3 {
+            self.held[i] = self.held[i].saturating_sub(sub[i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::workload::Workload;
+
+    fn master(w: Workload, max_p: usize) -> AiMaster {
+        AiMaster::new(0, JobSpec::new(w, max_p))
+    }
+
+    #[test]
+    fn proposals_only_for_available_types() {
+        let mut m = master(Workload::Bert, 8);
+        m.held = [1, 0, 0];
+        let props = m.proposals([0, 2, 0], 3);
+        assert!(props.iter().all(|p| p.add == [0, 1, 0]));
+        assert!(!props.is_empty());
+    }
+
+    #[test]
+    fn proposals_sorted_by_speedup_per_gpu() {
+        let mut m = master(Workload::Bert, 8);
+        m.held = [1, 0, 0];
+        let props = m.proposals([4, 4, 4], 3);
+        for w in props.windows(2) {
+            assert!(w[0].speedup_per_gpu >= w[1].speedup_per_gpu);
+        }
+        // a V100 helps Bert more than a T4
+        assert_eq!(props[0].add, [1, 0, 0]);
+    }
+
+    #[test]
+    fn saturated_job_stops_proposing() {
+        // maxP=2 on 2 GPUs: a third GPU cannot add a CU -> no proposals
+        // (or zero-speedup ones filtered).
+        let mut m = master(Workload::Bert, 2);
+        m.held = [2, 0, 0];
+        let props = m.proposals([4, 4, 4], 3);
+        assert!(props.is_empty(), "{props:?}");
+    }
+
+    #[test]
+    fn homogeneous_mode_sticks_to_one_type() {
+        let mut m = master(Workload::ResNet50, 8); // conv-heavy -> homo only
+        assert!(m.homogeneous_only);
+        m.held = [0, 2, 0];
+        let props = m.proposals([4, 4, 4], 5);
+        assert!(
+            props.iter().all(|p| p.add[0] == 0 && p.add[2] == 0 && p.add[1] > 0),
+            "{props:?}"
+        );
+    }
+
+    #[test]
+    fn observe_calibrates_and_fallback_triggers() {
+        let mut m = master(Workload::Bert, 4);
+        m.held = [1, 0, 0];
+        let est = m.plan_current().unwrap().step_rate;
+        m.observe(est * 0.5); // we're half as fast as estimated
+        assert!(m.calib < 1.0);
+        m.grant([1, 0, 0]);
+        assert!(m.should_fallback(m.prev_rate.unwrap() * 0.5));
+        assert!(!m.should_fallback(m.prev_rate.unwrap() * 1.2));
+    }
+
+    #[test]
+    fn grant_revoke_bookkeeping() {
+        let mut m = master(Workload::NeuMf, 4);
+        m.grant([2, 1, 0]);
+        assert_eq!(m.held, [2, 1, 0]);
+        m.revoke([1, 0, 0]);
+        assert_eq!(m.held, [1, 1, 0]);
+        m.revoke([5, 5, 5]);
+        assert_eq!(m.held, [0, 0, 0]);
+    }
+}

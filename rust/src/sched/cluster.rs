@@ -1,0 +1,144 @@
+//! Inter-job cluster scheduler — paper Algorithm 1.
+//!
+//! Responds to AIMaster proposals: sort by (average speedup-per-GPU desc,
+//! then more GPUs first), greedily approve while free GPUs remain. Elastic
+//! jobs use *spare* GPUs; when owners return, the scheduler preempts
+//! elastic allocations and tries to re-grant the same GPUs later (handled
+//! by the simulator's preemption events).
+
+use super::aimaster::Proposal;
+use super::plan::GpuVector;
+
+#[derive(Debug, Clone, Default)]
+pub struct ClusterScheduler {
+    /// free GPUs per type
+    pub available: GpuVector,
+}
+
+impl ClusterScheduler {
+    pub fn new(available: GpuVector) -> ClusterScheduler {
+        ClusterScheduler { available }
+    }
+
+    pub fn total_available(&self) -> usize {
+        self.available.iter().sum()
+    }
+
+    fn satisfies(&self, add: &GpuVector) -> bool {
+        (0..3).all(|i| self.available[i] >= add[i])
+    }
+
+    /// Algorithm 1: returns the approved proposals, updating availability.
+    pub fn schedule(&mut self, mut proposals: Vec<Proposal>) -> Vec<Proposal> {
+        proposals.sort_by(|a, b| {
+            b.speedup_per_gpu
+                .partial_cmp(&a.speedup_per_gpu)
+                .unwrap()
+                .then(b.n_new_gpus().cmp(&a.n_new_gpus()))
+        });
+        let mut approved: Vec<Proposal> = Vec::new();
+        let mut idx = 0;
+        while self.total_available() > 0 && idx < proposals.len() {
+            let p = &proposals[idx];
+            // at most one approval per job per round: a job's proposals are
+            // alternatives evaluated against its *current* allocation, not
+            // stackable increments.
+            let already = approved.iter().any(|a| a.job_id == p.job_id);
+            if !already && self.satisfies(&p.add) {
+                for i in 0..3 {
+                    self.available[i] -= p.add[i];
+                }
+                approved.push(proposals[idx].clone());
+            }
+            idx += 1;
+        }
+        approved
+    }
+
+    pub fn release(&mut self, gpus: GpuVector) {
+        for i in 0..3 {
+            self.available[i] += gpus[i];
+        }
+    }
+
+    /// Take GPUs back for a high-priority owner (preemption). Returns what
+    /// was actually free to take; the rest must be revoked from jobs by the
+    /// caller.
+    pub fn reserve(&mut self, want: GpuVector) -> GpuVector {
+        let mut got = [0, 0, 0];
+        for i in 0..3 {
+            got[i] = want[i].min(self.available[i]);
+            self.available[i] -= got[i];
+        }
+        got
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::plan::{best_config, JobSpec};
+    use crate::model::workload::Workload;
+
+    fn proposal(job_id: usize, add: GpuVector, speedup_per_gpu: f64) -> Proposal {
+        let job = JobSpec::new(Workload::Bert, 8);
+        let config = best_config(&job, [1, 0, 0]).unwrap();
+        Proposal {
+            job_id,
+            add,
+            config,
+            speedup: speedup_per_gpu * add.iter().sum::<usize>() as f64,
+            speedup_per_gpu,
+        }
+    }
+
+    #[test]
+    fn approves_highest_speedup_first() {
+        let mut cs = ClusterScheduler::new([1, 0, 0]);
+        let approved = cs.schedule(vec![
+            proposal(0, [1, 0, 0], 0.5),
+            proposal(1, [1, 0, 0], 1.5),
+        ]);
+        assert_eq!(approved.len(), 1);
+        assert_eq!(approved[0].job_id, 1);
+        assert_eq!(cs.available, [0, 0, 0]);
+    }
+
+    #[test]
+    fn ties_prefer_more_gpus() {
+        let mut cs = ClusterScheduler::new([4, 0, 0]);
+        let approved = cs.schedule(vec![
+            proposal(0, [1, 0, 0], 1.0),
+            proposal(1, [2, 0, 0], 1.0),
+        ]);
+        assert_eq!(approved[0].job_id, 1, "equal speedup: more GPUs first");
+    }
+
+    #[test]
+    fn skips_unsatisfiable_continues_with_rest() {
+        let mut cs = ClusterScheduler::new([0, 1, 0]);
+        let approved = cs.schedule(vec![
+            proposal(0, [1, 0, 0], 2.0), // wants V100, none free
+            proposal(1, [0, 1, 0], 1.0),
+        ]);
+        assert_eq!(approved.len(), 1);
+        assert_eq!(approved[0].job_id, 1);
+    }
+
+    #[test]
+    fn reserve_and_release_roundtrip() {
+        let mut cs = ClusterScheduler::new([2, 2, 2]);
+        let got = cs.reserve([3, 1, 0]);
+        assert_eq!(got, [2, 1, 0]);
+        assert_eq!(cs.available, [0, 1, 2]);
+        cs.release([2, 1, 0]);
+        assert_eq!(cs.available, [2, 2, 2]);
+    }
+
+    #[test]
+    fn empty_cluster_approves_nothing() {
+        let mut cs = ClusterScheduler::new([0, 0, 0]);
+        let approved = cs.schedule(vec![proposal(0, [1, 0, 0], 1.0)]);
+        assert!(approved.is_empty());
+    }
+}

@@ -1,0 +1,11 @@
+//! Scheduling (paper §3.4): the heterogeneity-aware EST planner (the
+//! *waste* analytical model, Eq. 1a–1e), the per-job intra-job scheduler
+//! (AIMaster) and the inter-job cluster scheduler (Algorithm 1).
+
+pub mod aimaster;
+pub mod cluster;
+pub mod plan;
+
+pub use aimaster::{AiMaster, Proposal};
+pub use cluster::ClusterScheduler;
+pub use plan::{best_config, enumerate_configs, GpuVector, JobSpec, PlanConfig};

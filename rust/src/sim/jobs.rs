@@ -1,0 +1,160 @@
+//! Simulated DLT jobs: progress accounting under piecewise-constant rates.
+
+use crate::sched::plan::{GpuVector, JobSpec};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobState {
+    /// waiting in queue (YARN-CS: for a gang; EasyScale: for any GPU)
+    Waiting,
+    Running,
+    Done { finish: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct SimJob {
+    pub id: usize,
+    pub spec: JobSpec,
+    pub arrival: f64,
+    /// total global mini-batches to run
+    pub total_steps: f64,
+    pub state: JobState,
+    /// mini-batches completed
+    pub progress: f64,
+    /// current step rate (global mini-batches/s); 0 while waiting/paused
+    pub rate: f64,
+    /// sim time of the last progress integration
+    pub last_update: f64,
+    /// GPUs currently held per type
+    pub held: GpuVector,
+    /// time before which the job makes no progress (reconfiguration /
+    /// restart penalty)
+    pub paused_until: f64,
+    /// bookkeeping for Fig. 15 and fallback logic
+    pub reconfig_count: u64,
+    pub preempt_count: u64,
+}
+
+impl SimJob {
+    pub fn new(id: usize, spec: JobSpec, arrival: f64, total_steps: f64) -> SimJob {
+        SimJob {
+            id,
+            spec,
+            arrival,
+            total_steps,
+            state: JobState::Waiting,
+            progress: 0.0,
+            rate: 0.0,
+            last_update: arrival,
+            held: [0, 0, 0],
+            paused_until: arrival,
+            reconfig_count: 0,
+            preempt_count: 0,
+        }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.held.iter().sum()
+    }
+
+    /// Integrate progress up to `now`.
+    pub fn advance(&mut self, now: f64) {
+        if self.state == JobState::Running && self.rate > 0.0 {
+            let from = self.last_update.max(self.paused_until);
+            if now > from {
+                self.progress += self.rate * (now - from);
+            }
+        }
+        self.last_update = now;
+    }
+
+    /// Time at which the job will finish at the current rate (infinity if
+    /// paused forever / zero rate).
+    pub fn eta(&self) -> f64 {
+        if self.state != JobState::Running || self.rate <= 0.0 {
+            return f64::INFINITY;
+        }
+        let start = self.last_update.max(self.paused_until);
+        let remaining = (self.total_steps - self.progress).max(0.0);
+        start + remaining / self.rate
+    }
+
+    /// Apply a new rate from `now` on, charging a reconfiguration penalty.
+    pub fn set_rate(&mut self, now: f64, rate: f64, reconfig_penalty_s: f64) {
+        self.advance(now);
+        if (rate - self.rate).abs() > 1e-12 && self.rate > 0.0 {
+            self.reconfig_count += 1;
+        }
+        if reconfig_penalty_s > 0.0 {
+            self.paused_until = now + reconfig_penalty_s;
+        }
+        self.rate = rate;
+    }
+
+    pub fn finished(&self) -> bool {
+        self.progress >= self.total_steps - 1e-9
+    }
+
+    pub fn jct(&self) -> Option<f64> {
+        match self.state {
+            JobState::Done { finish } => Some(finish - self.arrival),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::workload::Workload;
+
+    fn job() -> SimJob {
+        SimJob::new(0, JobSpec::new(Workload::Bert, 4), 10.0, 100.0)
+    }
+
+    #[test]
+    fn progress_integrates_linearly() {
+        let mut j = job();
+        j.state = JobState::Running;
+        j.set_rate(10.0, 2.0, 0.0);
+        j.advance(30.0);
+        assert!((j.progress - 40.0).abs() < 1e-9);
+        assert!((j.eta() - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pause_penalty_delays_progress() {
+        let mut j = job();
+        j.state = JobState::Running;
+        j.set_rate(10.0, 1.0, 5.0); // paused until t=15
+        j.advance(15.0);
+        assert_eq!(j.progress, 0.0);
+        j.advance(25.0);
+        assert!((j.progress - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn waiting_jobs_make_no_progress() {
+        let mut j = job();
+        j.advance(1000.0);
+        assert_eq!(j.progress, 0.0);
+        assert_eq!(j.eta(), f64::INFINITY);
+    }
+
+    #[test]
+    fn reconfig_counted_on_rate_change() {
+        let mut j = job();
+        j.state = JobState::Running;
+        j.set_rate(10.0, 1.0, 0.0);
+        assert_eq!(j.reconfig_count, 0, "first start is not a reconfig");
+        j.set_rate(20.0, 2.0, 30.0);
+        assert_eq!(j.reconfig_count, 1);
+    }
+
+    #[test]
+    fn jct_only_when_done() {
+        let mut j = job();
+        assert_eq!(j.jct(), None);
+        j.state = JobState::Done { finish: 110.0 };
+        assert_eq!(j.jct(), Some(100.0));
+    }
+}

@@ -1,0 +1,17 @@
+//! Discrete-event cluster simulator — the substitute for the paper's
+//! 64-GPU Kubernetes testbed (trace experiment, Fig. 14/15) and the 3,000+
+//! GPU production serving cluster (Fig. 16). See DESIGN.md §4: these are
+//! *scheduling* results; they depend on job/cluster dynamics and per-type
+//! capability ratios, which the simulator reproduces, not on CUDA.
+
+pub mod engine;
+pub mod jobs;
+pub mod serving;
+pub mod simulator;
+pub mod trace;
+pub mod yarn;
+
+pub use engine::EventQueue;
+pub use jobs::{JobState, SimJob};
+pub use simulator::{ElasticSim, SchedulerKind, SimOutcome};
+pub use trace::{gen_trace, TraceJob};

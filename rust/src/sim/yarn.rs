@@ -1,0 +1,52 @@
+//! YARN-CS baseline (paper §5.2): Apache YARN's capacity scheduler as used
+//! in Microsoft Philly — strict FIFO, gang scheduling, fixed DoP, and
+//! same-type GPU allocation for every job. No elasticity: a job waits until
+//! `maxP` GPUs of one type are simultaneously free, holds them to the end.
+
+use crate::exec::devices::DEVICE_TYPES;
+use crate::sched::plan::GpuVector;
+
+use super::jobs::SimJob;
+
+/// Try to place a gang of `max_p` GPUs of a single type. Prefers the
+/// fastest type (V100 -> P100 -> T4), like operators' default queues.
+pub fn place_gang(free: &GpuVector, max_p: usize) -> Option<(usize, GpuVector)> {
+    for (i, _) in DEVICE_TYPES.iter().enumerate() {
+        if free[i] >= max_p {
+            let mut take = [0, 0, 0];
+            take[i] = max_p;
+            return Some((i, take));
+        }
+    }
+    None
+}
+
+/// Fixed-DoP step rate: one worker per GPU, so the global mini-batch takes
+/// 1/C_i seconds.
+pub fn gang_rate(job: &SimJob, type_idx: usize) -> f64 {
+    job.spec.capability(DEVICE_TYPES[type_idx])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::workload::Workload;
+    use crate::sched::plan::JobSpec;
+
+    #[test]
+    fn prefers_fastest_type_with_capacity() {
+        let free = [4, 8, 8];
+        assert_eq!(place_gang(&free, 4).unwrap().0, 0);
+        assert_eq!(place_gang(&free, 6).unwrap().0, 1);
+        assert_eq!(place_gang(&free, 8).unwrap().1, [0, 8, 0]);
+        assert!(place_gang(&free, 16).is_none());
+    }
+
+    #[test]
+    fn gang_rate_is_per_type_capability() {
+        let job = SimJob::new(0, JobSpec::new(Workload::ResNet50, 4), 0.0, 10.0);
+        let v = gang_rate(&job, 0);
+        let t = gang_rate(&job, 2);
+        assert!((v / t - 2.45).abs() < 0.01);
+    }
+}

@@ -1,0 +1,219 @@
+//! On-demand checkpointing (paper §3.2 "Reconfiguration", §4).
+//!
+//! The checkpoint persists the *minimal and necessary* state: deep learning
+//! parameters and optimizer state (one replica — shared by all ESTs at
+//! mini-batch boundaries), the EST contexts (a few integers each), and the
+//! extra states needed for accuracy-consistency: training progress, the
+//! gradient-bucket plan (D1), and the data-worker queuing buffer (D0).
+//!
+//! Format (custom; serde unavailable):
+//!   magic "ESCK1\n" | u64 LE header length | JSON header | raw f32 LE
+//!   params (manifest order) | raw f32 LE momenta. The JSON header is
+//!   deterministic (sorted keys), so identical states produce identical
+//!   bytes — checkpoint round-trips are bitwise.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::BucketPlan;
+use crate::data::loader::WorkItem;
+use crate::est::EstContext;
+use crate::train::trainer::TrainState;
+use crate::util::json::Json;
+
+const MAGIC: &[u8] = b"ESCK1\n";
+
+#[derive(Debug)]
+pub struct Checkpoint;
+
+impl Checkpoint {
+    pub fn save(path: &Path, state: &TrainState) -> Result<()> {
+        let header = Json::obj(vec![
+            ("step", Json::num(state.step as f64)),
+            ("restart_count", Json::num(state.restart_count as f64)),
+            (
+                "param_sizes",
+                Json::arr(state.params.iter().map(|p| Json::num(p.len() as f64))),
+            ),
+            ("bucket_plan", state.bucket_plan.to_json()),
+            (
+                "est_contexts",
+                Json::arr(state.est_contexts.iter().map(|c| {
+                    Json::obj(vec![
+                        ("virtual_rank", Json::num(c.virtual_rank as f64)),
+                        ("step", Json::num(c.step as f64)),
+                        ("aug_rng_state", Json::str(format!("{:016x}", c.aug_rng_state))),
+                    ])
+                })),
+            ),
+            (
+                "data_items",
+                Json::arr(state.data_items.iter().map(|w| {
+                    Json::obj(vec![
+                        ("step", Json::num(w.step as f64)),
+                        ("rank", Json::num(w.rank as f64)),
+                        ("rng_state", Json::str(format!("{:016x}", w.rng_state))),
+                    ])
+                })),
+            ),
+        ])
+        .dump();
+
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating checkpoint {}", path.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for set in [&state.params, &state.momenta] {
+            for p in set {
+                // bulk write per tensor
+                let bytes: Vec<u8> = p.iter().flat_map(|v| v.to_le_bytes()).collect();
+                f.write_all(&bytes)?;
+            }
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<TrainState> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening checkpoint {}", path.display()))?,
+        );
+        let mut magic = [0u8; 6];
+        f.read_exact(&mut magic)?;
+        if magic != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let mut len = [0u8; 8];
+        f.read_exact(&mut len)?;
+        let mut header = vec![0u8; u64::from_le_bytes(len) as usize];
+        f.read_exact(&mut header)?;
+        let j = Json::parse(std::str::from_utf8(&header)?)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        let step = j.req_usize("step")? as u64;
+        let restart_count = j.req_usize("restart_count")? as u64;
+        let sizes: Vec<usize> = j
+            .req_arr("param_sizes")?
+            .iter()
+            .map(|s| s.as_usize().context("bad size"))
+            .collect::<Result<_>>()?;
+        let bucket_plan = BucketPlan::from_json(j.get("bucket_plan"))?;
+
+        let hex = |s: &str| -> Result<u64> {
+            u64::from_str_radix(s, 16).context("bad hex state")
+        };
+        let est_contexts: Vec<EstContext> = j
+            .req_arr("est_contexts")?
+            .iter()
+            .map(|c| {
+                Ok(EstContext {
+                    virtual_rank: c.req_usize("virtual_rank")?,
+                    step: c.req_usize("step")? as u64,
+                    aug_rng_state: hex(c.req_str("aug_rng_state")?)?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let data_items: Vec<WorkItem> = j
+            .req_arr("data_items")?
+            .iter()
+            .map(|w| {
+                Ok(WorkItem {
+                    step: w.req_usize("step")? as u64,
+                    rank: w.req_usize("rank")?,
+                    rng_state: hex(w.req_str("rng_state")?)?,
+                })
+            })
+            .collect::<Result<_>>()?;
+
+        let mut read_set = |sizes: &[usize]| -> Result<Vec<Vec<f32>>> {
+            let mut out = Vec::with_capacity(sizes.len());
+            for &n in sizes {
+                let mut bytes = vec![0u8; 4 * n];
+                f.read_exact(&mut bytes)?;
+                out.push(
+                    bytes
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect(),
+                );
+            }
+            Ok(out)
+        };
+        let params = read_set(&sizes)?;
+        let momenta = read_set(&sizes)?;
+
+        Ok(TrainState {
+            step,
+            restart_count,
+            params,
+            momenta,
+            est_contexts,
+            bucket_plan,
+            data_items,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state() -> TrainState {
+        TrainState {
+            step: 17,
+            restart_count: 2,
+            params: vec![vec![1.5f32, -2.25, 0.0], vec![f32::MIN_POSITIVE; 5]],
+            momenta: vec![vec![0.1f32, 0.2, 0.3], vec![-0.5; 5]],
+            est_contexts: vec![EstContext::new(9, 0), EstContext::new(9, 1)],
+            bucket_plan: BucketPlan::build(&[3, 5], 1024),
+            data_items: vec![WorkItem { step: 17, rank: 1, rng_state: 0xDEAD_BEEF }],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise() {
+        let dir = std::env::temp_dir().join("easyscale_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        let state = sample_state();
+        Checkpoint::save(&path, &state).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.step, state.step);
+        assert_eq!(loaded.restart_count, state.restart_count);
+        assert_eq!(loaded.bucket_plan, state.bucket_plan);
+        assert_eq!(loaded.est_contexts, state.est_contexts);
+        assert_eq!(loaded.data_items, state.data_items);
+        for (a, b) in state.params.iter().zip(&loaded.params) {
+            assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+        for (a, b) in state.momenta.iter().zip(&loaded.momenta) {
+            assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+    }
+
+    #[test]
+    fn save_is_byte_deterministic() {
+        let dir = std::env::temp_dir().join("easyscale_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (p1, p2) = (dir.join("b1.ckpt"), dir.join("b2.ckpt"));
+        let state = sample_state();
+        Checkpoint::save(&p1, &state).unwrap();
+        Checkpoint::save(&p2, &state).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("easyscale_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+}

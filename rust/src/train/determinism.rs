@@ -1,0 +1,111 @@
+//! Determinism levels (paper §3.3).
+//!
+//! * **D0 — fixed-DoP determinism**: fixed seeds; RNG states of data-loading
+//!   workers and ESTs recorded in contexts; deterministic kernel *behaviour*
+//!   within a device type (no best-fit autotuning).
+//! * **D1 — elasticity determinism** (implies the D0 treatments at the
+//!   communication level): virtual communication ranks; the gradient-bucket
+//!   plan is checkpointed and restored; post-restart bucket reconstruction
+//!   disabled.
+//! * **D2 — heterogeneity determinism**: hardware-agnostic kernels — every
+//!   device type loads the `det` kernel-variant artifact (the Pallas
+//!   fixed-schedule kernel) instead of its vendor variant.
+//!
+//! `none` emulates existing elastic frameworks (TorchElastic-style): seeds
+//! still fixed for comparability, but worker identity is *physical*, so
+//! dropout keys and the allreduce topology follow placement.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Determinism {
+    pub d0: bool,
+    pub d1: bool,
+    pub d2: bool,
+}
+
+impl Determinism {
+    pub const NONE: Determinism = Determinism { d0: false, d1: false, d2: false };
+    pub const D0: Determinism = Determinism { d0: true, d1: false, d2: false };
+    pub const D1: Determinism = Determinism { d0: true, d1: true, d2: false };
+    pub const D0_D2: Determinism = Determinism { d0: true, d1: false, d2: true };
+    pub const D1_D2: Determinism = Determinism { d0: true, d1: true, d2: true };
+
+    /// Default in EasyScale: D0+D1 on (negligible overhead, paper §3.3);
+    /// D2 decided per-model by `auto_d2`.
+    pub fn default_policy() -> Determinism {
+        Determinism::D1
+    }
+
+    pub fn parse(s: &str) -> Result<Determinism> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "none" => Determinism::NONE,
+            "d0" => Determinism::D0,
+            "d1" => Determinism::D1,
+            "d0+d2" | "d0d2" => Determinism::D0_D2,
+            "d1+d2" | "d1d2" | "full" => Determinism::D1_D2,
+            other => bail!("unknown determinism level '{other}' (none|d0|d1|d0+d2|d1+d2)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match (self.d0, self.d1, self.d2) {
+            (false, _, _) => "none",
+            (true, false, false) => "D0",
+            (true, true, false) => "D1",
+            (true, false, true) => "D0+D2",
+            (true, true, true) => "D1+D2",
+        }
+    }
+
+    /// Paper §3.3 "Determining level of determinism": scan the model for
+    /// operators demanding hardware-specific kernels (convolutions); if
+    /// none, enable D2 and allow heterogeneous GPUs, otherwise restrict to
+    /// homogeneous GPUs. Our transformer LM has no conv ops, so artifacts
+    /// carry `conv_heavy = false`; Table-1 CV profiles carry true.
+    pub fn auto_d2(base: Determinism, conv_heavy: bool) -> Determinism {
+        Determinism { d2: !conv_heavy, ..base }
+    }
+}
+
+impl std::fmt::Display for Determinism {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_levels() {
+        assert_eq!(Determinism::parse("none").unwrap(), Determinism::NONE);
+        assert_eq!(Determinism::parse("d0").unwrap(), Determinism::D0);
+        assert_eq!(Determinism::parse("D1").unwrap(), Determinism::D1);
+        assert_eq!(Determinism::parse("d0+d2").unwrap(), Determinism::D0_D2);
+        assert_eq!(Determinism::parse("d1+d2").unwrap(), Determinism::D1_D2);
+        assert!(Determinism::parse("d3").is_err());
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for d in [
+            Determinism::NONE,
+            Determinism::D0,
+            Determinism::D1,
+            Determinism::D0_D2,
+            Determinism::D1_D2,
+        ] {
+            assert_eq!(Determinism::parse(d.name()).unwrap(), d);
+        }
+    }
+
+    #[test]
+    fn auto_d2_policy() {
+        let d = Determinism::auto_d2(Determinism::D1, false);
+        assert!(d.d2, "attention model gets D2");
+        let d = Determinism::auto_d2(Determinism::D1, true);
+        assert!(!d.d2, "conv model stays homogeneous instead");
+    }
+}

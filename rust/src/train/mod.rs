@@ -1,0 +1,10 @@
+//! The training coordinator: determinism levels, the elastic trainer and
+//! on-demand checkpointing.
+
+pub mod checkpoint;
+pub mod determinism;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use determinism::Determinism;
+pub use trainer::{TrainConfig, Trainer};

@@ -1,0 +1,321 @@
+//! The elastic trainer — EasyScale's data-parallel training flow, followed
+//! strictly (paper §3.1–3.3).
+//!
+//! One global mini-batch =
+//!   every EST runs fwd/bwd on its microbatch (time-sliced per executor,
+//!   gradients staged to host DRAM) → ElasticDDP aggregation (virtual-rank
+//!   ring over recorded buckets) → one fused optimizer step.
+//!
+//! Elastic reconfiguration = on-demand checkpoint → re-placement →
+//! restore. With D1 the model bits never notice; with lower levels the
+//! paper's failure modes reproduce mechanically (see `determinism.rs`).
+//!
+//! Threading: executors are iterated sequentially (they time-slice a single
+//! PJRT CPU device; the simulator models wall-clock parallelism). The order
+//! of iteration must not affect results under D1 — tested.
+
+use anyhow::Result;
+
+use crate::comm::{aggregate_physical, aggregate_virtual, BucketPlan};
+use crate::data::{DeterministicSampler, SharedDataWorkers, SyntheticCorpus};
+use crate::est::{EstContext, StagedGrads};
+use crate::exec::executor::{ExecTiming, Executor, KeyMode, Placement};
+use crate::runtime::Engine;
+use crate::train::determinism::Determinism;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub seed: u64,
+    /// Number of logical workers (EasyScaleThreads). Hyper-parameters are
+    /// chosen against maxP exactly as on fixed GPUs (paper §3.2).
+    pub max_p: usize,
+    pub lr: f32,
+    pub dataset_size: usize,
+    pub determinism: Determinism,
+    pub bucket_cap_bytes: usize,
+    /// Data-augmentation jitter rate (the crop/rotate analogue).
+    pub aug_rate: f64,
+    /// Run nonce: with D0 off, "seeds" effectively vary per run/restart —
+    /// this models the unfixed-seed world without actually reading the
+    /// clock (tests stay controllable).
+    pub run_nonce: u64,
+}
+
+impl TrainConfig {
+    pub fn new(max_p: usize) -> TrainConfig {
+        TrainConfig {
+            seed: 42,
+            max_p,
+            lr: 0.05,
+            dataset_size: 8192,
+            determinism: Determinism::default_policy(),
+            bucket_cap_bytes: crate::comm::bucket::DEFAULT_BUCKET_BYTES,
+            aug_rate: 0.02,
+            run_nonce: 0,
+        }
+    }
+}
+
+/// Everything that defines the training computation's future — i.e. the
+/// checkpointable state (paper §3.2 "Reconfiguration").
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub step: u64,
+    pub restart_count: u64,
+    pub params: Vec<Vec<f32>>,
+    pub momenta: Vec<Vec<f32>>,
+    pub est_contexts: Vec<EstContext>,
+    pub bucket_plan: BucketPlan,
+    /// pending data-worker items (the queuing-buffer extra state)
+    pub data_items: Vec<crate::data::loader::WorkItem>,
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub placement: Placement,
+    pub state: TrainState,
+    sampler: DeterministicSampler,
+    pub corpus: SyntheticCorpus,
+    data: SharedDataWorkers,
+    /// mean training loss per completed step
+    pub loss_history: Vec<f32>,
+    /// timing of the last mini-batch per executor (for benches)
+    pub last_timing: Vec<ExecTiming>,
+}
+
+impl Trainer {
+    /// Build a fresh job: initial parameters from the artifact, zero
+    /// momentum, EST contexts for maxP virtual ranks.
+    pub fn new(engine: &Engine, cfg: TrainConfig, placement: Placement) -> Result<Trainer> {
+        placement.validate()?;
+        anyhow::ensure!(placement.max_p() == cfg.max_p, "placement hosts {} ESTs, cfg.max_p = {}",
+            placement.max_p(), cfg.max_p);
+        let params = engine.manifest.load_init_params()?;
+        let momenta: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let seed = cfg.effective_seed();
+        let est_contexts: Vec<EstContext> =
+            (0..cfg.max_p).map(|r| EstContext::new(seed, r)).collect();
+        let sizes: Vec<usize> = engine.manifest.params.iter().map(|p| p.size).collect();
+        let bucket_plan = BucketPlan::build(&sizes, cfg.bucket_cap_bytes);
+        let m = &engine.manifest.model;
+        let sampler =
+            DeterministicSampler::new(seed, cfg.dataset_size, cfg.max_p, m.batch_per_est);
+        let corpus = SyntheticCorpus::new(seed ^ 0xC0, m.vocab_size, m.seq_len);
+        let ranks: Vec<usize> = (0..cfg.max_p).collect();
+        let mut data = SharedDataWorkers::new(seed, &ranks, 4, 2);
+        data.prefill(0, &ranks);
+        Ok(Trainer {
+            cfg,
+            placement,
+            state: TrainState {
+                step: 0,
+                restart_count: 0,
+                params,
+                momenta,
+                est_contexts,
+                bucket_plan,
+                data_items: Vec::new(),
+            },
+            sampler,
+            corpus,
+            data,
+            loss_history: Vec::new(),
+            last_timing: Vec::new(),
+        })
+    }
+
+    fn key_mode(&self) -> KeyMode {
+        if self.cfg.determinism.d0 { KeyMode::Virtual } else { KeyMode::Physical }
+    }
+
+    /// One global mini-batch across all executors and ESTs.
+    pub fn step(&mut self, engine: &Engine) -> Result<f32> {
+        let step = self.state.step;
+        let ranks: Vec<usize> = (0..self.cfg.max_p).collect();
+        self.data.prefill(step, &ranks);
+        let seed = self.cfg.effective_seed();
+
+        let key_mode = self.key_mode();
+        let d2 = self.cfg.determinism.d2;
+        let aug_rate = self.cfg.aug_rate;
+        let executors = self.placement.executors.clone();
+        // one device upload of the shared parameters per mini-batch; every
+        // EST of every executor reuses it (paper: parameters are shared and
+        // reused across EasyScaleThread switches)
+        let param_bufs = engine.upload_params(&self.state.params)?;
+        let mut staged: Vec<StagedGrads> = Vec::with_capacity(self.cfg.max_p);
+        self.last_timing.clear();
+        for (slot, spec) in executors.iter().enumerate() {
+            let executor = Executor { spec: spec.clone(), slot };
+            let mut timing = ExecTiming::default();
+            let got = executor.run_minibatch(
+                engine,
+                &param_bufs,
+                &mut self.state.est_contexts,
+                &mut self.sampler,
+                &self.corpus,
+                &mut self.data,
+                seed,
+                step,
+                d2,
+                key_mode,
+                aug_rate,
+                Some(&mut timing),
+            )?;
+            self.last_timing.push(timing);
+            staged.extend(got);
+        }
+
+        let sizes: Vec<usize> =
+            engine.manifest.params.iter().map(|p| p.size).collect();
+        // EasyScale (D0/D1): ring over maxP virtual ranks, placement-free.
+        // none: physical topology — what naive elastic frameworks do.
+        let grads = if self.cfg.determinism.d0 {
+            aggregate_virtual(&self.state.bucket_plan, &staged, &sizes, self.cfg.max_p)
+        } else {
+            aggregate_physical(
+                &self.state.bucket_plan,
+                &staged,
+                &sizes,
+                &self.placement.groups(),
+            )
+        };
+
+        let (params, momenta) =
+            engine.opt_update(&self.state.params, &self.state.momenta, &grads, self.cfg.lr)?;
+        self.state.params = params;
+        self.state.momenta = momenta;
+        self.state.step += 1;
+
+        // deterministic loss reduction: by virtual rank order
+        let mut by_rank = staged;
+        by_rank.sort_by_key(|s| s.virtual_rank);
+        let loss = by_rank.iter().map(|s| s.loss).sum::<f32>() / by_rank.len() as f32;
+        self.loss_history.push(loss);
+        Ok(loss)
+    }
+
+    /// Run `n` mini-batches.
+    pub fn run(&mut self, engine: &Engine, n: u64) -> Result<()> {
+        for _ in 0..n {
+            self.step(engine)?;
+        }
+        Ok(())
+    }
+
+    /// Elastic reconfiguration (paper §3.2 "Reconfiguration"): on-demand
+    /// checkpoint of the minimal state, re-placement, restore. With D1 the
+    /// bucket plan travels in the checkpoint; without it, DDP's bucket
+    /// reconstruction kicks in on the resumed run (bits drift). Without D0
+    /// even the data/dropout identities follow the new physical layout.
+    pub fn reconfigure(&mut self, new_placement: Placement) -> Result<()> {
+        new_placement.validate()?;
+        anyhow::ensure!(
+            new_placement.max_p() == self.cfg.max_p,
+            "reconfiguration must preserve maxP ESTs"
+        );
+        self.state.restart_count += 1;
+        let restart = self.state.restart_count;
+
+        if !self.cfg.determinism.d1 {
+            // communication channels rebuilt -> buckets reconstructed from
+            // post-restart gradient arrival order (paper: the D0 failure).
+            self.state.bucket_plan = self
+                .state
+                .bucket_plan
+                .rebuilt_in_arrival_order(restart ^ new_placement.n_gpus() as u64);
+        }
+        if self.cfg.determinism.d0 {
+            // data-worker queue states are part of the on-demand checkpoint
+            let items = self.data.checkpoint_states();
+            let ranks: Vec<usize> = (0..self.cfg.max_p).collect();
+            self.data = SharedDataWorkers::new(self.cfg.effective_seed(), &ranks, 4, 2);
+            self.data.restore(items);
+        } else {
+            // unfixed world: prefetched batches are lost, streams reseeded
+            let ranks: Vec<usize> = (0..self.cfg.max_p).collect();
+            self.data = SharedDataWorkers::new(
+                self.cfg.effective_seed() ^ restart,
+                &ranks,
+                4,
+                2,
+            );
+            self.data.prefill(self.state.step, &ranks);
+        }
+        self.placement = new_placement;
+        Ok(())
+    }
+
+    /// On-demand checkpoint to disk (paper §3.2): fills the queuing-buffer
+    /// extra state and persists everything `resume` needs.
+    pub fn checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        self.state.data_items = self.data.checkpoint_states();
+        crate::train::Checkpoint::save(path, &self.state)
+    }
+
+    /// Rebuild a trainer from a checkpoint under a (possibly different)
+    /// placement — the restart half of elastic reconfiguration. Applies the
+    /// same determinism semantics as `reconfigure`: D1 restores the bucket
+    /// plan from the checkpoint; lower levels suffer DDP's bucket
+    /// reconstruction; D0 restores data-worker queue states.
+    pub fn resume(
+        engine: &Engine,
+        cfg: TrainConfig,
+        placement: Placement,
+        path: &std::path::Path,
+    ) -> Result<Trainer> {
+        let state = crate::train::Checkpoint::load(path)?;
+        let mut t = Trainer::new(engine, cfg, placement)?;
+        t.state = state;
+        t.state.restart_count += 1;
+        let restart = t.state.restart_count;
+        if !t.cfg.determinism.d1 {
+            t.state.bucket_plan = t
+                .state
+                .bucket_plan
+                .rebuilt_in_arrival_order(restart ^ t.placement.n_gpus() as u64);
+        }
+        let ranks: Vec<usize> = (0..t.cfg.max_p).collect();
+        if t.cfg.determinism.d0 {
+            t.data = SharedDataWorkers::new(t.cfg.effective_seed(), &ranks, 4, 2);
+            t.data.restore(t.state.data_items.clone());
+        } else {
+            t.data =
+                SharedDataWorkers::new(t.cfg.effective_seed() ^ restart, &ranks, 4, 2);
+            t.data.prefill(t.state.step, &ranks);
+        }
+        Ok(t)
+    }
+
+    /// Held-out validation loss (fixed batch outside the training range).
+    pub fn eval(&self, engine: &Engine) -> Result<f32> {
+        let idx: Vec<u64> = (0..engine.manifest.model.batch_per_est)
+            .map(|i| (1u64 << 40) + i as u64)
+            .collect();
+        let tokens = self.corpus.batch(&idx);
+        engine.eval_loss(&self.state.params, &tokens)
+    }
+
+    /// Bitwise fingerprint of the model parameters (the paper's
+    /// "bitwise-identical models" check, cheap form).
+    pub fn param_fingerprint(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64; // FNV-1a
+        for p in &self.state.params {
+            for v in p {
+                h ^= v.to_bits() as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        h
+    }
+}
+
+impl TrainConfig {
+    pub fn effective_seed(&self) -> u64 {
+        if self.determinism.d0 {
+            self.seed
+        } else {
+            self.seed ^ self.run_nonce
+        }
+    }
+}

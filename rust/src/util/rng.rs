@@ -1,0 +1,213 @@
+//! Deterministic counter-based PRNGs — the D0 treatment's foundation.
+//!
+//! Every random decision in the system (data-order shuffles, dropout keys,
+//! synthetic corpus generation, simulator noise) derives from *explicit*
+//! (seed, purpose, counter) tuples, never from global mutable state or the
+//! wall clock. This is what lets EasyScaleThread contexts capture "the RNG
+//! state" as a few integers (paper §3.3, D0).
+
+/// SplitMix64: tiny, high-quality 64-bit mixer. Used both as a stream RNG
+/// and as the key-derivation hash.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    /// Derive an independent stream from (seed, tags...) — the counter-based
+    /// analogue of `jax.random.fold_in`.
+    pub fn derive(seed: u64, tags: &[u64]) -> Self {
+        let mut s = SplitMix64::new(seed ^ 0x9e37_79b9_7f4a_7c15);
+        let mut acc = s.next_u64();
+        for &t in tags {
+            let mut m = SplitMix64::new(acc ^ t.wrapping_mul(0xbf58_476d_1ce4_e5b9));
+            acc = m.next_u64();
+        }
+        s.state = acc;
+        s
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, bound) without modulo bias (Lemire reduction).
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Standard normal via Box–Muller (deterministic, branch-stable).
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// In-place Fisher–Yates shuffle — the deterministic epoch shuffle of
+    /// the data sampler.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        let n = items.len();
+        for i in (1..n).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            items.swap(i, j);
+        }
+    }
+
+    /// Expose/restore the raw state — recorded into EasyScaleThread contexts
+    /// and data-worker queue entries at checkpoint time.
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+    pub fn from_state(state: u64) -> Self {
+        SplitMix64 { state }
+    }
+}
+
+/// Derive the u32[2] dropout key fed to the fwd_bwd artifact:
+/// a pure function of (job seed, EST *virtual* rank, global step).
+/// Placement-independence of this derivation is the D0/D1 contract.
+pub fn dropout_key(seed: u64, virtual_rank: usize, step: u64) -> [u32; 2] {
+    let mut r = SplitMix64::derive(seed, &[0xd20, virtual_rank as u64, step]);
+    [r.next_u32(), r.next_u32()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = SplitMix64::new(7);
+        let mut b = SplitMix64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn derive_independent_of_call_order() {
+        let k1 = SplitMix64::derive(42, &[1, 2]).next_u64();
+        let k2 = SplitMix64::derive(42, &[1, 2]).next_u64();
+        let k3 = SplitMix64::derive(42, &[2, 1]).next_u64();
+        assert_eq!(k1, k2);
+        assert_ne!(k1, k3, "tag order must matter");
+    }
+
+    #[test]
+    fn next_below_in_range_and_unbiased_smoke() {
+        let mut r = SplitMix64::new(3);
+        let mut counts = [0usize; 10];
+        for _ in 0..10_000 {
+            let v = r.next_below(10) as usize;
+            assert!(v < 10);
+            counts[v] += 1;
+        }
+        for &c in &counts {
+            assert!((700..1300).contains(&c), "count {c} out of range");
+        }
+    }
+
+    #[test]
+    fn floats_in_unit_interval() {
+        let mut r = SplitMix64::new(11);
+        for _ in 0..1000 {
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+            let g = r.next_f32();
+            assert!((0.0..1.0).contains(&g));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation_and_deterministic() {
+        let mut v1: Vec<u32> = (0..100).collect();
+        let mut v2: Vec<u32> = (0..100).collect();
+        SplitMix64::derive(9, &[0]).shuffle(&mut v1);
+        SplitMix64::derive(9, &[0]).shuffle(&mut v2);
+        assert_eq!(v1, v2);
+        let mut sorted = v1.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v1, (0..100).collect::<Vec<_>>(), "shuffle should move things");
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        let mut r = SplitMix64::new(5);
+        r.next_u64();
+        let saved = r.state();
+        let next = r.next_u64();
+        let mut restored = SplitMix64::from_state(saved);
+        assert_eq!(restored.next_u64(), next);
+    }
+
+    #[test]
+    fn dropout_key_contract() {
+        assert_eq!(dropout_key(1, 2, 3), dropout_key(1, 2, 3));
+        assert_ne!(dropout_key(1, 2, 3), dropout_key(1, 2, 4));
+        assert_ne!(dropout_key(1, 2, 3), dropout_key(1, 3, 3));
+        assert_ne!(dropout_key(2, 2, 3), dropout_key(1, 2, 3));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(17);
+        let n = 20_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.next_normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+}

@@ -1,0 +1,150 @@
+//! Integration tests across the scheduling stack: the waste model (Eq. 1),
+//! AIMaster proposals and the inter-job scheduler (Algorithm 1) working
+//! together on paper-like scenarios.
+
+use easyscale::model::workload::{Workload, WORKLOADS};
+use easyscale::sched::aimaster::AiMaster;
+use easyscale::sched::cluster::ClusterScheduler;
+use easyscale::sched::plan::{best_config, best_config_any, enumerate_configs, evaluate, JobSpec};
+use easyscale::util::propcheck::{check, gen};
+
+#[test]
+fn paper_example_one_v100_one_p100_two_t4() {
+    // Paper §3.4's running example: ResNet50 on 1 V100 + 1 P100 + 2 T4.
+    // The planner must load the V100 heaviest and the T4s lightest.
+    let job = JobSpec::new(Workload::ResNet50, 8);
+    let cfg = best_config(&job, [1, 1, 2]).expect("feasible");
+    let v = cfg.threads[0] * cfg.executors[0];
+    let t = cfg.threads[2] * cfg.executors[2];
+    assert!(v >= t, "V100 ({v}) should carry at least as many ESTs as a T4 ({t})");
+    assert!(cfg.cu_capacity() >= 8);
+    // balanced allocation beats naive 2-2-2-2 even split
+    let even = evaluate(&job, [1, 1, 2], [1, 1, 1], [2, 2, 2]).unwrap();
+    assert!(cfg.step_rate >= even.step_rate);
+}
+
+#[test]
+fn proposals_then_algorithm1_converge_to_fleet_capacity() {
+    // Three jobs contending for 8 free V100s through Algorithm 1.
+    let mut cs = ClusterScheduler::new([8, 0, 0]);
+    let mut masters: Vec<AiMaster> = vec![
+        AiMaster::new(0, JobSpec::new(Workload::Bert, 8)),
+        AiMaster::new(1, JobSpec::new(Workload::NeuMf, 4)),
+        AiMaster::new(2, JobSpec::new(Workload::SwinTransformer, 2)),
+    ];
+    // seed each with one GPU
+    for m in masters.iter_mut() {
+        cs.reserve([1, 0, 0]);
+        m.grant([1, 0, 0]);
+    }
+    loop {
+        let mut proposals = Vec::new();
+        for m in &masters {
+            proposals.extend(m.proposals(cs.available, 3));
+        }
+        let approved = cs.schedule(proposals);
+        if approved.is_empty() {
+            break;
+        }
+        for p in approved {
+            masters[p.job_id].grant(p.add);
+        }
+    }
+    let total_held: usize = masters.iter().map(|m| m.held[0]).sum();
+    assert!(total_held <= 8);
+    assert!(total_held >= 7, "fleet should be (nearly) fully allocated, got {total_held}");
+    // nobody exceeds their maxP in GPUs
+    for m in &masters {
+        assert!(m.held[0] <= m.job.max_p);
+    }
+}
+
+#[test]
+fn conv_models_never_propose_heterogeneous() {
+    for w in WORKLOADS {
+        let mut m = AiMaster::new(0, JobSpec::new(w, 8));
+        m.held = [1, 0, 0];
+        let props = m.proposals([4, 4, 4], 10);
+        if !w.hetero_eligible() {
+            assert!(
+                props.iter().all(|p| p.add[1] == 0 && p.add[2] == 0),
+                "{} is conv-heavy and must stay homogeneous",
+                w.profile().name
+            );
+        }
+    }
+}
+
+#[test]
+fn waste_threshold_rules_out_absurd_configs() {
+    // 4 GPUs for maxP=1: three GPUs would idle -> all such configs must be
+    // filtered by the 30% waste-norm threshold.
+    let job = JobSpec::new(Workload::Bert, 1);
+    assert!(best_config(&job, [4, 0, 0]).is_none());
+    // but the unthresholded planner still rates what a job holds
+    assert!(best_config_any(&job, [4, 0, 0]).is_some());
+}
+
+#[test]
+fn prop_step_rate_monotone_in_gpus() {
+    // More GPUs of the same type never make the *unthresholded* best rate
+    // worse.
+    check("rate-monotone", 40, |rng| {
+        let w = *gen::pick(rng, &WORKLOADS);
+        let job = JobSpec::new(w, gen::usize_in(rng, 1, 12));
+        let base = gen::usize_in(rng, 1, 4);
+        let r1 = best_config_any(&job, [base, 0, 0]).map(|c| c.step_rate).unwrap_or(0.0);
+        let r2 = best_config_any(&job, [base + 1, 0, 0]).map(|c| c.step_rate).unwrap_or(0.0);
+        if r2 + 1e-9 < r1 {
+            return Err(format!("rate fell from {r1} to {r2} with an extra GPU"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_enumerate_respects_threshold_and_sorting() {
+    check("enumerate-sorted", 30, |rng| {
+        let w = *gen::pick(rng, &WORKLOADS);
+        let job = JobSpec::new(w, gen::usize_in(rng, 1, 10));
+        let nums = [
+            gen::usize_in(rng, 0, 3),
+            gen::usize_in(rng, 0, 3),
+            gen::usize_in(rng, 0, 3),
+        ];
+        let configs = enumerate_configs(&job, nums);
+        for c in &configs {
+            if c.waste_norm > 30.0 + 1e-9 {
+                return Err(format!("config above threshold: {}", c.waste_norm));
+            }
+        }
+        for w in configs.windows(2) {
+            if w[0].perf + 1e-9 < w[1].perf {
+                return Err("not sorted by perf".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn d2_reduces_capability_for_conv_models_in_plans() {
+    let mut job = JobSpec::new(Workload::ResNet50, 4);
+    let fast = best_config_any(&job, [4, 0, 0]).unwrap();
+    job.d2 = true;
+    let slow = best_config_any(&job, [4, 0, 0]).unwrap();
+    assert!(slow.step_rate < fast.step_rate / 2.0, "D2 must slow conv models");
+}
+
+#[test]
+fn multi_executor_appears_for_recommendation_models() {
+    // NeuMF under-utilizes the GPU; with few GPUs and many ESTs the top
+    // configs should use multiple executors per GPU (§3.4.1).
+    let job = JobSpec::new(Workload::NeuMf, 8);
+    let cfg = best_config(&job, [1, 0, 0]).unwrap();
+    assert!(cfg.executors[0] >= 2, "expected multi-executor, got {:?}", cfg.executors);
+    // and a saturated model must not
+    let job = JobSpec::new(Workload::Vgg19, 8);
+    let cfg = best_config(&job, [1, 0, 0]).unwrap();
+    assert_eq!(cfg.executors[0], 1);
+}

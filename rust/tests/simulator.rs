@@ -1,0 +1,108 @@
+//! Integration tests for the cluster simulator: the Fig. 14/15/16 claims
+//! at reduced scale, plus cross-cutting invariants (capacity, work
+//! conservation, determinism).
+
+use easyscale::sim::serving::{run_serving_sim, ServingSimConfig};
+use easyscale::sim::simulator::{ElasticSim, SchedulerKind};
+use easyscale::sim::trace::{gen_trace, TraceJob};
+
+fn paper_like_trace(n: usize) -> Vec<TraceJob> {
+    // scale durations AND interarrivals by 1/4: same contention factor as
+    // the full fig14 bench, four times faster to simulate.
+    let mut t = gen_trace(11, n, 225.0);
+    for j in t.iter_mut() {
+        j.duration_s /= 4.0;
+    }
+    t
+}
+
+#[test]
+fn fig14_shape_holds_at_scale() {
+    let trace = paper_like_trace(120);
+    let yarn = ElasticSim::new(SchedulerKind::YarnCs).run(&trace);
+    let homo = ElasticSim::new(SchedulerKind::EasyScaleHomo).run(&trace);
+    let heter = ElasticSim::new(SchedulerKind::EasyScaleHeter).run(&trace);
+
+    let jct_homo = yarn.avg_jct_s() / homo.avg_jct_s();
+    let jct_heter = yarn.avg_jct_s() / heter.avg_jct_s();
+    let ms_homo = yarn.makespan_s / homo.makespan_s;
+    let ms_heter = yarn.makespan_s / heter.makespan_s;
+    // paper: 8.3x/13.2x JCT, 2.5x/2.8x makespan. Our simulator reproduces
+    // the ordering and a clear multiple; exact factors are trace-specific.
+    assert!(jct_homo > 2.0, "homo JCT speedup only {jct_homo:.2}x");
+    assert!(jct_heter > 2.0, "heter JCT speedup only {jct_heter:.2}x");
+    assert!(ms_homo > 1.1, "homo makespan speedup only {ms_homo:.2}x");
+    assert!(ms_heter > 1.1, "heter makespan speedup only {ms_heter:.2}x");
+}
+
+#[test]
+fn fig15_heter_uses_more_of_the_fleet() {
+    let trace = paper_like_trace(120);
+    let homo = ElasticSim::new(SchedulerKind::EasyScaleHomo).run(&trace);
+    let heter = ElasticSim::new(SchedulerKind::EasyScaleHeter).run(&trace);
+    let yarn = ElasticSim::new(SchedulerKind::YarnCs).run(&trace);
+    // heter's allocation tracks homo's closely (the paper shows a clearly
+    // higher curve; our sharing-heavy sim keeps both near fleet capacity —
+    // note heter can also *finish sooner*, lowering its time average).
+    assert!(
+        heter.alloc_series.time_weighted_mean()
+            >= homo.alloc_series.time_weighted_mean() * 0.9
+    );
+    assert!(
+        homo.alloc_series.time_weighted_mean()
+            > yarn.alloc_series.time_weighted_mean(),
+        "elasticity must raise fleet usage"
+    );
+}
+
+#[test]
+fn all_jobs_complete_and_work_is_conserved() {
+    let trace = paper_like_trace(80);
+    for kind in [
+        SchedulerKind::YarnCs,
+        SchedulerKind::EasyScaleHomo,
+        SchedulerKind::EasyScaleHeter,
+    ] {
+        let out = ElasticSim::new(kind).run(&trace);
+        assert_eq!(out.jcts.len(), trace.len(), "{}", kind.name());
+        for (j, &jct) in trace.iter().zip(&out.jcts) {
+            assert!(jct > 0.0, "{}: job {} zero JCT", kind.name(), j.id);
+            // no job can beat its ideal fixed-DoP runtime by much more than
+            // the planner could (ESTs never exceed maxP)
+            assert!(
+                jct > j.duration_s * 0.45,
+                "{}: job {} finished impossibly fast ({jct} vs {})",
+                kind.name(),
+                j.id,
+                j.duration_s
+            );
+        }
+    }
+}
+
+#[test]
+fn fig16_headline_statistics() {
+    let out = run_serving_sim(&ServingSimConfig::default());
+    // allocation ratio improves by double-digit points (paper: +17.1%)
+    let d_alloc = out.day_alloc_ratio[1] - out.day_alloc_ratio[0];
+    assert!(d_alloc > 10.0, "alloc ratio delta {d_alloc}");
+    // relative SM utilization improvement at least ~50% (paper: +62.1%)
+    let rel = (out.day_sm_util[1] - out.day_sm_util[0]) / out.day_sm_util[0];
+    assert!(rel > 0.5, "relative util improvement {rel}");
+    // hundreds-ish preemptions a day, none fatal, scale-in in seconds
+    assert!(out.preemptions >= 50 && out.preemptions <= 2000);
+    assert_eq!(out.failed_jobs, 0);
+    assert!(out.max_scale_in_s <= 5.0);
+}
+
+#[test]
+fn simulator_is_deterministic_end_to_end() {
+    let trace = paper_like_trace(60);
+    for kind in [SchedulerKind::EasyScaleHeter, SchedulerKind::YarnCs] {
+        let a = ElasticSim::new(kind).run(&trace);
+        let b = ElasticSim::new(kind).run(&trace);
+        assert_eq!(a.avg_jct_s(), b.avg_jct_s());
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.alloc_series.points, b.alloc_series.points);
+    }
+}
