@@ -1,4 +1,4 @@
-//! §Perf probe (EXPERIMENTS.md §Perf): per-step time breakdown of the
+//! Perf probe (DESIGN.md §3, timing semantics): per-step time breakdown of the
 //! training hot loop — fwd/bwd XLA compute vs gradient staging vs
 //! aggregation + optimizer + parameter upload.
 //!

@@ -1,30 +1,39 @@
-//! Fig. 11: the overhead of enforcing determinism.
+//! Fig. 11: the overhead of enforcing determinism — plus the parallel
+//! executor-runtime scaling record.
 //!
-//! Two parts:
-//!  (a) REAL measurement on our transformer artifacts: per-step time of
-//!      each device's vendor kernel variant vs the D2 hardware-agnostic
-//!      (Pallas) kernel, normalized per "GPU type" — the D1 column is the
-//!      same executable plus bucket bookkeeping, so ~0%.
+//! Three parts:
+//!  (a) REAL measurement on the engine (artifacts if built, the native
+//!      reference model otherwise): per-step time of each device's vendor
+//!      kernel variant vs the D2 hardware-agnostic kernel — the D1 column
+//!      is the same executable plus bucket bookkeeping, so ~0%.
 //!  (b) The Table-1 workload cost model (anchored to the paper's reported
 //!      ratios) for all 8 models x 3 GPU types.
+//!  (c) Sequential vs thread-per-executor throughput at 1/2/4/8 executors
+//!      (maxP = 8), with a bitwise cross-check, recorded to
+//!      `BENCH_parallel.json` so future PRs have a perf trajectory.
 //!
 //!     cargo bench --bench fig11_overhead
 
 use std::path::PathBuf;
+use std::time::Instant;
 
-use easyscale::exec::DeviceType;
+use easyscale::exec::{DeviceType, Placement, RunMode};
 use easyscale::model::workload::WORKLOADS;
 use easyscale::runtime::Engine;
+use easyscale::train::{Determinism, TrainConfig, Trainer};
 use easyscale::util::bench::{time_it, Table};
+use easyscale::util::json::Json;
 use easyscale::util::rng::dropout_key;
 
 fn main() {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !root.join("tiny/manifest.json").exists() {
-        eprintln!("SKIP fig11: run `make artifacts` first");
-        return;
-    }
-    let engine = Engine::open(&root, "tiny").unwrap();
+    let engine = match Engine::open(&root, "tiny") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP fig11: no engine available ({e:#})");
+            return;
+        }
+    };
     let params = engine.manifest.load_init_params().unwrap();
     let m = &engine.manifest.model;
     let mut rng = easyscale::util::rng::SplitMix64::new(1);
@@ -33,7 +42,7 @@ fn main() {
         .collect();
     let key = dropout_key(0, 0, 0);
 
-    println!("== Fig. 11(a): measured fwd/bwd time per kernel variant (tiny preset, CPU PJRT) ==");
+    println!("== Fig. 11(a): measured fwd/bwd time per kernel variant (preset '{}') ==", m.preset);
     let mut table = Table::new(&["variant (role)", "mean ms", "norm vs own vendor kernel"]);
     let mut base = std::collections::BTreeMap::new();
     for (variant, role) in [
@@ -56,7 +65,7 @@ fn main() {
     table.print();
     let vendor_mean = (base["v100"] + base["p100"] + base["t4"]) / 3.0;
     println!(
-        "D2 (det/Pallas interpret) vs mean vendor variant: {:.2}x  — structural cost of the\n\
+        "D2 (det kernel) vs mean vendor variant: {:.2}x  — structural cost of the\n\
          fixed-schedule kernel; on the transformer this stays small (paper: <1% for\n\
          attention models, 236% for conv models that lose cuDNN).",
         base["det"] / vendor_mean
@@ -79,4 +88,71 @@ fn main() {
     println!();
     println!("paper: NeuMF/Bert/Electra/Swin pay <1%; ShuffleNet/ResNet50/VGG19/YOLOv3");
     println!("pay ~236% on average for D2, so EasyScale schedules them homogeneous-only.");
+    println!();
+
+    // (c) thread-per-executor scaling: sequential vs parallel steps/s
+    let max_p = 8usize;
+    let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "== Fig. 11(c): parallel executor runtime, maxP={max_p}, host threads={host_threads} =="
+    );
+    let mut table =
+        Table::new(&["executors", "sequential steps/s", "parallel steps/s", "speedup", "bitwise"]);
+    let mut rows = Vec::new();
+    for n_exec in [1usize, 2, 4, 8] {
+        let run = |mode: RunMode| {
+            let cfg = TrainConfig {
+                determinism: Determinism::D1,
+                aug_rate: 0.0,
+                run_mode: mode,
+                ..TrainConfig::new(max_p)
+            };
+            let mut t = Trainer::new(
+                &engine,
+                cfg,
+                Placement::homogeneous(DeviceType::V100, n_exec, max_p),
+            )
+            .unwrap();
+            t.run(&engine, 2).unwrap(); // warmup
+            let iters = 12u64;
+            let t0 = Instant::now();
+            t.run(&engine, iters).unwrap();
+            (iters as f64 / t0.elapsed().as_secs_f64(), t.param_fingerprint())
+        };
+        let (seq_rate, seq_fp) = run(RunMode::Sequential);
+        let (par_rate, par_fp) = run(RunMode::parallel());
+        let speedup = par_rate / seq_rate;
+        let bitwise = seq_fp == par_fp;
+        table.row(&[
+            format!("{n_exec}"),
+            format!("{seq_rate:.2}"),
+            format!("{par_rate:.2}"),
+            format!("{speedup:.2}x"),
+            format!("{}", if bitwise { "identical" } else { "DRIFT!" }),
+        ]);
+        assert!(bitwise, "parallel runtime drifted from sequential at {n_exec} executors");
+        rows.push(Json::obj(vec![
+            ("executors", Json::num(n_exec as f64)),
+            ("seq_steps_per_s", Json::num(seq_rate)),
+            ("par_steps_per_s", Json::num(par_rate)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+    table.print();
+
+    // Under the pjrt feature RunMode::Parallel executes sequentially (the
+    // PJRT client is not Sync), so tag the record with the backend to keep
+    // the perf trajectory comparable across builds.
+    let backend = if cfg!(feature = "pjrt") { "pjrt-sequential" } else { "native-parallel" };
+    let record = Json::obj(vec![
+        ("bench", Json::str("fig11_parallel_runtime")),
+        ("backend", Json::str(backend)),
+        ("preset", Json::str(m.preset.clone())),
+        ("max_p", Json::num(max_p as f64)),
+        ("host_threads", Json::num(host_threads as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_parallel.json");
+    std::fs::write(&out, record.dump() + "\n").unwrap();
+    println!("parallel-runtime record written to {}", out.display());
 }

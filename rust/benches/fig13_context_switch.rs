@@ -19,12 +19,15 @@ use easyscale::train::{Determinism, TrainConfig, Trainer};
 use easyscale::util::bench::Table;
 
 fn main() {
+    // artifacts when built, the native reference engine otherwise
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !root.join("tiny/manifest.json").exists() {
-        eprintln!("SKIP fig13: run `make artifacts` first");
-        return;
-    }
-    let engine = Engine::open(&root, "tiny").unwrap();
+    let engine = match Engine::open(&root, "tiny") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP fig13: no engine available ({e:#})");
+            return;
+        }
+    };
 
     // (a)+(b): run 8 ESTs on one executor, collect per-EST timings.
     let cfg = TrainConfig {

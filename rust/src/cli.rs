@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::exec::devices::DeviceType;
 use crate::exec::executor::{ExecutorSpec, Placement};
+use crate::exec::pool::RunMode;
 use crate::metrics::MetricSink;
 use crate::model::workload::Workload;
 use crate::runtime::Engine;
@@ -28,9 +29,9 @@ pub const USAGE: &str = "easyscale — accuracy-consistent elastic training (Eas
 USAGE: easyscale <subcommand> [options]
 
 SUBCOMMANDS
-  train             train the transformer LM elastically over AOT artifacts
+  train             train the LM elastically (AOT artifacts or native engine)
     --artifacts DIR   artifacts root (default: artifacts)
-    --preset NAME     tiny|small|m100 (default: small)
+    --preset NAME     tiny|small (synthetic), or any built artifacts/ preset (default: small)
     --steps N         global mini-batches (default: 300)
     --max-p N         logical workers / EasyScaleThreads (default: 4)
     --gpus SPEC       e.g. 'v100:2' or 'v100:1,p100:2' (default: v100:2)
@@ -38,6 +39,8 @@ SUBCOMMANDS
     --lr F            learning rate (default: 0.05)
     --seed N          job seed (default: 42)
     --schedule S      elastic schedule 'step:spec;step:spec' e.g. '100:v100:1'
+    --sequential      run executors sequentially (bitwise reference mode)
+    --threads N       cap concurrent executor threads (default 0 = one per executor)
     --log-every N     print loss every N steps (default: 10)
     --eval-every N    held-out eval every N steps (0 = off)
     --loss-csv PATH   write the loss curve as CSV
@@ -54,7 +57,8 @@ SUBCOMMANDS
 ";
 
 pub fn main_with(argv: Vec<String>) -> Result<()> {
-    let args = Args::parse(&argv, &["d2", "help"]).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let args =
+        Args::parse(&argv, &["d2", "help", "sequential"]).map_err(|e| anyhow::anyhow!("{e}"))?;
     if args.flag("help") {
         println!("{USAGE}");
         return Ok(());
@@ -138,12 +142,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     let log_every = args.usize_or("log-every", 10)? as u64;
     let eval_every = args.usize_or("eval-every", 0)? as u64;
 
+    let run_mode = if args.flag("sequential") {
+        RunMode::Sequential
+    } else {
+        RunMode::Parallel { max_threads: args.usize_or("threads", 0)? }
+    };
+
     let engine = Engine::open(&artifacts, &preset)?;
-    crate::info!("train", "preset={} params={} maxP={} det={}",
-        preset, engine.manifest.model.n_params, max_p, det);
+    crate::info!("train", "preset={} params={} maxP={} det={} mode={:?}",
+        preset, engine.manifest.model.n_params, max_p, det, run_mode);
 
     let placement = placement_from_spec(&args.str_or("gpus", "v100:2"), max_p)?;
-    let cfg = TrainConfig { seed, max_p, lr, determinism: det, ..TrainConfig::new(max_p) };
+    let cfg =
+        TrainConfig { seed, max_p, lr, determinism: det, run_mode, ..TrainConfig::new(max_p) };
     let mut trainer = Trainer::new(&engine, cfg, placement)?;
 
     // elastic schedule: "100:v100:1;200:v100:1,p100:2"
@@ -187,6 +198,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.loss_history.first().copied().unwrap_or(f32::NAN),
         final_loss,
         trainer.param_fingerprint(),
+    );
+    println!(
+        "executor wall-clock (last step): {:.2} ms critical path vs {:.2} ms serial sum ({:.2}x concurrency)",
+        trainer.last_step_wall_s * 1e3,
+        trainer.last_step_serial_s * 1e3,
+        trainer.last_step_serial_s / trainer.last_step_wall_s.max(1e-12),
     );
     if let Some(csv) = args.get("loss-csv") {
         sink.write_csv(Path::new(csv))?;

@@ -16,18 +16,23 @@
 //! * bucket reconstruction after the first resumed mini-batch is disabled.
 
 pub mod bucket;
+pub mod reduce;
 pub mod ring;
 
 pub use bucket::BucketPlan;
+pub use reduce::{pairwise_tree_sum, SlotTable};
 pub use ring::{ring_allreduce, RING_CHUNK_ALIGN};
 
 use crate::est::StagedGrads;
+use reduce::{flatten_bucket, scatter_bucket};
 
 /// Deterministic gradient aggregation over staged per-EST gradients.
 ///
 /// `plan` gives the bucket layout; staged gradients are flattened per
 /// bucket in *virtual-rank* order, ring-reduced, averaged by `1/maxP`, and
-/// scattered back to per-parameter buffers (manifest order).
+/// scattered back to per-parameter buffers (manifest order). The caller
+/// may hand `staged` in any order — including parallel-executor completion
+/// order — the rank sort makes arrival order structurally irrelevant.
 pub fn aggregate_virtual(
     plan: &BucketPlan,
     staged: &[StagedGrads],
@@ -41,36 +46,22 @@ pub fn aggregate_virtual(
     let scale = 1.0f32 / max_p as f32;
 
     let mut out: Vec<Vec<f32>> = param_sizes.iter().map(|&s| vec![0.0; s]).collect();
-    let mut flat: Vec<Vec<f32>> = Vec::with_capacity(max_p);
     for bucket in &plan.buckets {
-        let bucket_len: usize = bucket.iter().map(|&p| param_sizes[p]).sum();
-        flat.clear();
-        for s in &by_rank {
-            let mut buf = Vec::with_capacity(bucket_len);
-            for &p in bucket {
-                buf.extend_from_slice(&s.grads[p]);
-            }
-            flat.push(buf);
-        }
+        let flat: Vec<Vec<f32>> = by_rank
+            .iter()
+            .map(|s| flatten_bucket(bucket, &s.grads, param_sizes))
+            .collect();
         let reduced = ring_allreduce(&flat);
-        // scatter back (averaged)
-        let mut off = 0;
-        for &p in bucket {
-            let n = param_sizes[p];
-            for i in 0..n {
-                out[p][i] = reduced[off + i] * scale;
-            }
-            off += n;
-        }
+        scatter_bucket(bucket, &reduced, scale, param_sizes, &mut out);
     }
     out
 }
 
 /// The *physical* aggregation that existing elastic frameworks do
 /// (TorchElastic-style): each executor locally accumulates its ESTs'
-/// gradients in hosting order, then a ring spans the physical executors.
-/// Bitwise-faithful to why elasticity breaks reproducibility: the result
-/// depends on the placement `groups`.
+/// gradients (fixed pairwise tree in hosting order), then a ring spans the
+/// physical executors. Bitwise-faithful to why elasticity breaks
+/// reproducibility: the result depends on the placement `groups`.
 pub fn aggregate_physical(
     plan: &BucketPlan,
     staged: &[StagedGrads],
@@ -84,36 +75,20 @@ pub fn aggregate_physical(
 
     let mut out: Vec<Vec<f32>> = param_sizes.iter().map(|&s| vec![0.0; s]).collect();
     for bucket in &plan.buckets {
-        let bucket_len: usize = bucket.iter().map(|&p| param_sizes[p]).sum();
-        // local accumulation per executor (sequential adds in hosting order)
-        let mut locals: Vec<Vec<f32>> = Vec::with_capacity(groups.len());
-        for g in groups {
-            let mut acc = vec![0.0f32; bucket_len];
-            for &rank in g {
-                let s = find(rank);
-                let mut off = 0;
-                for &p in bucket {
-                    for (i, v) in s.grads[p].iter().enumerate() {
-                        acc[off + i] += *v;
-                    }
-                    off += param_sizes[p];
-                }
-            }
-            locals.push(acc);
-        }
-        let reduced = if locals.len() == 1 {
-            locals.pop().unwrap()
-        } else {
-            ring_allreduce(&locals)
-        };
-        let mut off = 0;
-        for &p in bucket {
-            let n = param_sizes[p];
-            for i in 0..n {
-                out[p][i] = reduced[off + i] * scale;
-            }
-            off += n;
-        }
+        // local accumulation per executor (pairwise tree in hosting order)
+        let locals: Vec<Vec<f32>> = groups
+            .iter()
+            .map(|g| {
+                let members: Vec<Vec<f32>> = g
+                    .iter()
+                    .map(|&rank| flatten_bucket(bucket, &find(rank).grads, param_sizes))
+                    .collect();
+                pairwise_tree_sum(&members)
+            })
+            .collect();
+        let reduced =
+            if locals.len() == 1 { locals.into_iter().next().unwrap() } else { ring_allreduce(&locals) };
+        scatter_bucket(bucket, &reduced, scale, param_sizes, &mut out);
     }
     out
 }

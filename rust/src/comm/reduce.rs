@@ -1,0 +1,198 @@
+//! Deterministic reduction machinery shared by `aggregate_virtual` /
+//! `aggregate_physical` and the parallel executor runtime.
+//!
+//! The parallel pool (`exec::pool`) delivers each executor's staged
+//! gradients in *completion* order — whichever OS thread finishes first.
+//! Bitwise consistency requires that aggregation never observes that
+//! order, so results are first placed into a [`SlotTable`] indexed by
+//! virtual rank and only then reduced in fixed virtual-rank order. The
+//! bucket flatten/scatter helpers and the fixed-shape pairwise tree used
+//! for per-executor local accumulation live here too.
+
+use anyhow::{bail, Result};
+
+use crate::est::StagedGrads;
+
+/// Virtual-rank-indexed collection of staged gradients. Insertion order is
+/// arbitrary (thread completion order); iteration order is always virtual
+/// rank 0..maxP.
+#[derive(Debug)]
+pub struct SlotTable {
+    slots: Vec<Option<StagedGrads>>,
+}
+
+impl SlotTable {
+    pub fn new(max_p: usize) -> SlotTable {
+        SlotTable { slots: (0..max_p).map(|_| None).collect() }
+    }
+
+    /// Place one EST's result into its rank slot. Rejects out-of-range
+    /// ranks and duplicates — either would mean the placement handed the
+    /// same virtual rank to two executors.
+    pub fn insert(&mut self, sg: StagedGrads) -> Result<()> {
+        let r = sg.virtual_rank;
+        if r >= self.slots.len() {
+            bail!("staged gradients for rank {r} >= maxP {}", self.slots.len());
+        }
+        if self.slots[r].is_some() {
+            bail!("duplicate staged gradients for virtual rank {r}");
+        }
+        self.slots[r] = Some(sg);
+        Ok(())
+    }
+
+    pub fn filled(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.slots.iter().all(|s| s.is_some())
+    }
+
+    /// All results in virtual-rank order; errors if any rank is missing.
+    pub fn into_ranked(self) -> Result<Vec<StagedGrads>> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for (r, slot) in self.slots.into_iter().enumerate() {
+            match slot {
+                Some(sg) => out.push(sg),
+                None => bail!("no staged gradients arrived for virtual rank {r}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Fixed-shape balanced pairwise-tree sum: level k adds neighbours 2i and
+/// 2i+1. The tree shape depends only on the buffer *count*, never on
+/// arrival order, so it is a deterministic building block for local
+/// (within-executor) accumulation.
+pub fn pairwise_tree_sum(bufs: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!bufs.is_empty(), "pairwise_tree_sum over zero buffers");
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "buffer lengths must match");
+    if bufs.len() == 1 {
+        return bufs[0].clone();
+    }
+    // first level reads the borrowed inputs; later levels consume owned sums
+    let mut level: Vec<Vec<f32>> = bufs
+        .chunks(2)
+        .map(|pair| match pair {
+            [a, b] => a.iter().zip(b.iter()).map(|(x, y)| x + y).collect(),
+            [a] => a.clone(),
+            _ => unreachable!("chunks(2) yields 1 or 2 elements"),
+        })
+        .collect();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(a.iter().zip(&b).map(|(x, y)| x + y).collect()),
+                None => next.push(a),
+            }
+        }
+        level = next;
+    }
+    level.pop().unwrap()
+}
+
+/// Flatten one rank's gradients for a bucket (bucket order) into a single
+/// contiguous buffer.
+pub fn flatten_bucket(bucket: &[usize], grads: &[Vec<f32>], param_sizes: &[usize]) -> Vec<f32> {
+    let bucket_len: usize = bucket.iter().map(|&p| param_sizes[p]).sum();
+    let mut buf = Vec::with_capacity(bucket_len);
+    for &p in bucket {
+        buf.extend_from_slice(&grads[p]);
+    }
+    buf
+}
+
+/// Scatter a reduced bucket buffer back to per-parameter output tensors,
+/// applying the averaging `scale`.
+pub fn scatter_bucket(
+    bucket: &[usize],
+    reduced: &[f32],
+    scale: f32,
+    param_sizes: &[usize],
+    out: &mut [Vec<f32>],
+) {
+    let mut off = 0;
+    for &p in bucket {
+        let n = param_sizes[p];
+        for i in 0..n {
+            out[p][i] = reduced[off + i] * scale;
+        }
+        off += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::gen;
+    use crate::util::rng::SplitMix64;
+
+    fn sg(rank: usize, grads: Vec<Vec<f32>>) -> StagedGrads {
+        StagedGrads { virtual_rank: rank, loss: rank as f32, grads }
+    }
+
+    #[test]
+    fn slot_table_orders_by_rank_not_arrival() {
+        let mut t = SlotTable::new(3);
+        t.insert(sg(2, vec![vec![2.0]])).unwrap();
+        t.insert(sg(0, vec![vec![0.0]])).unwrap();
+        assert!(!t.is_complete());
+        t.insert(sg(1, vec![vec![1.0]])).unwrap();
+        assert!(t.is_complete());
+        let ranked = t.into_ranked().unwrap();
+        let ranks: Vec<usize> = ranked.iter().map(|s| s.virtual_rank).collect();
+        assert_eq!(ranks, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn slot_table_rejects_duplicates_and_overflow() {
+        let mut t = SlotTable::new(2);
+        t.insert(sg(0, vec![])).unwrap();
+        assert!(t.insert(sg(0, vec![])).is_err());
+        assert!(t.insert(sg(2, vec![])).is_err());
+        assert_eq!(t.filled(), 1);
+        assert!(t.into_ranked().is_err(), "missing rank 1 must error");
+    }
+
+    #[test]
+    fn tree_sum_matches_naive_numerically_and_is_deterministic() {
+        let mut rng = SplitMix64::new(5);
+        for n in [1usize, 2, 3, 5, 8] {
+            let bufs: Vec<Vec<f32>> =
+                (0..n).map(|_| gen::vec_f32(&mut rng, 257, 1.0)).collect();
+            let a = pairwise_tree_sum(&bufs);
+            let b = pairwise_tree_sum(&bufs);
+            assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+            let naive = crate::comm::ring::naive_sum(&bufs);
+            for (x, y) in a.iter().zip(&naive) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_of_one_is_identity_bitwise() {
+        let b = vec![vec![1.0f32, -0.0, 3.5]];
+        let out = pairwise_tree_sum(&b);
+        assert!(out.iter().zip(&b[0]).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn flatten_scatter_roundtrip() {
+        let sizes = [2usize, 3, 1];
+        let grads = vec![vec![1.0f32, 2.0], vec![3.0, 4.0, 5.0], vec![6.0]];
+        let bucket = vec![2usize, 0, 1];
+        let flat = flatten_bucket(&bucket, &grads, &sizes);
+        assert_eq!(flat, vec![6.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let mut out: Vec<Vec<f32>> = sizes.iter().map(|&s| vec![0.0; s]).collect();
+        scatter_bucket(&bucket, &flat, 0.5, &sizes, &mut out);
+        assert_eq!(out[0], vec![0.5, 1.0]);
+        assert_eq!(out[1], vec![1.5, 2.0, 2.5]);
+        assert_eq!(out[2], vec![3.0]);
+    }
+}

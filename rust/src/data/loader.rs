@@ -5,20 +5,25 @@
 //! multiplexing 16 ESTs × 8 workers would spawn 128 processes. EasyScale
 //! instead shares one pool per executor: the distributed sampler enqueues
 //! (mini-batch, EST) work items *with their RNG state*, idle workers pull
-//! items in order, augment, and commit the state back. Because loaders
-//! prefetch ahead of training, the buffer holds the states of all produced-
-//! but-unconsumed mini-batches — exactly the "extra state" the on-demand
+//! items, augment, and commit the state back. Because loaders prefetch
+//! ahead of training, the buffer holds the states of all produced-but-
+//! unconsumed mini-batches — exactly the "extra state" the on-demand
 //! checkpoint must persist for D0 (data-augmentation RNG continuity).
 //!
-//! The per-item RNG state is derived counter-style from (job seed, virtual
-//! rank, step) — the D0 treatment: worker state is a pure function of
-//! training progress and EST identity, never of which pool produced it, so
-//! a restored queue continues bit-exactly on any placement.
+//! Concurrency: items live in **per-EST queues keyed by virtual rank**,
+//! not one interleaved production queue. Each parallel executor worker
+//! owns a pool covering exactly its hosted ranks, so pools touched from
+//! different executor threads are disjoint by construction and consumption
+//! order across ranks can never leak into the stream. The per-item RNG
+//! state is derived counter-style from (job seed, virtual rank, step) —
+//! the D0 treatment: worker state is a pure function of training progress
+//! and EST identity, never of which pool produced it, so a restored queue
+//! continues bit-exactly on any placement.
 //!
 //! Our augmentation is a byte-level token jitter (the LM analogue of image
 //! crop/rotate): each sample consumes the item's committed `aug_rng` state.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::util::rng::SplitMix64;
 
@@ -31,17 +36,23 @@ pub struct WorkItem {
     pub rng_state: u64,
 }
 
+/// Per-rank production state: the queue of produced-but-unconsumed items
+/// plus the next step to produce for this rank.
+#[derive(Debug, Clone, Default)]
+struct RankQueue {
+    items: VecDeque<WorkItem>,
+    next_step: Option<u64>,
+}
+
 /// A pool of `n_workers` loader workers shared by all ESTs of an executor.
 #[derive(Debug, Clone)]
 pub struct SharedDataWorkers {
     pub seed: u64,
     pub n_workers: usize,
-    /// produced-but-unconsumed items, in production order
-    queue: VecDeque<WorkItem>,
-    /// next step to produce (None until the first prefill / after restore
-    /// of an empty queue)
-    next_step: Option<u64>,
-    /// prefetch depth in mini-batches
+    /// per-EST queues keyed by virtual rank (created lazily on first
+    /// prefill/restore of a rank)
+    queues: BTreeMap<usize, RankQueue>,
+    /// prefetch depth in mini-batches per rank
     pub prefetch: usize,
     /// simulated per-worker launch cost, used by the Fig. 13 bench
     pub launch_cost_ms: f64,
@@ -54,43 +65,49 @@ impl SharedDataWorkers {
         SharedDataWorkers {
             seed,
             n_workers,
-            queue: VecDeque::new(),
-            next_step: None,
+            queues: BTreeMap::new(),
             prefetch,
             launch_cost_ms: 180.0, // ~PyTorch loader-process spawn cost
         }
     }
 
-    fn item_state(&self, rank: usize, step: u64) -> u64 {
-        SplitMix64::derive(self.seed, &[0x10AD, rank as u64, step]).state()
+    fn item_state(seed: u64, rank: usize, step: u64) -> u64 {
+        SplitMix64::derive(seed, &[0x10AD, rank as u64, step]).state()
     }
 
     /// Produce work items ahead of training for the given ranks, up to the
-    /// prefetch depth, in (step, rank) order — the order data workers pull.
+    /// prefetch depth per rank.
     pub fn prefill(&mut self, from_step: u64, ranks: &[usize]) {
-        let mut next = self.next_step.unwrap_or(from_step);
-        while self.queue.len() < self.prefetch * ranks.len() {
-            for &r in ranks {
-                self.queue.push_back(WorkItem {
+        let seed = self.seed;
+        let prefetch = self.prefetch;
+        for &r in ranks {
+            let q = self.queues.entry(r).or_default();
+            let mut next = q.next_step.unwrap_or(from_step);
+            while q.items.len() < prefetch {
+                q.items.push_back(WorkItem {
                     step: next,
                     rank: r,
-                    rng_state: self.item_state(r, next),
+                    rng_state: Self::item_state(seed, r, next),
                 });
+                next += 1;
             }
-            next += 1;
+            q.next_step = Some(next);
         }
-        self.next_step = Some(next);
     }
 
     /// Consume the item for (step, rank); panics if training ever runs past
     /// the prefetched horizon (a bug, not a runtime condition).
     pub fn consume(&mut self, step: u64, rank: usize) -> WorkItem {
-        let pos = self
-            .queue
+        let q = self
+            .queues
+            .get_mut(&rank)
+            .unwrap_or_else(|| panic!("no data queue for rank {rank}"));
+        let pos = q
+            .items
             .iter()
-            .position(|w| w.step == step && w.rank == rank)
+            .position(|w| w.step == step)
             .unwrap_or_else(|| panic!("no prefetched item for step {step} rank {rank}"));
-        self.queue.remove(pos).unwrap()
+        q.items.remove(pos).unwrap()
     }
 
     /// Apply token-jitter augmentation using the item's committed RNG state
@@ -105,16 +122,30 @@ impl SharedDataWorkers {
     }
 
     /// The queued (unconsumed) states — persisted by on-demand checkpoint.
+    /// Deterministic order: (step, rank) ascending, i.e. production order.
     pub fn checkpoint_states(&self) -> Vec<WorkItem> {
-        self.queue.iter().cloned().collect()
+        let mut out: Vec<WorkItem> =
+            self.queues.values().flat_map(|q| q.items.iter().cloned()).collect();
+        out.sort_by_key(|w| (w.step, w.rank));
+        out
     }
 
     /// Restore after an elastic restart: overlay the checkpointed queue
     /// (items keep their original RNG states) and continue production
-    /// right after the last prefetched step.
+    /// right after each rank's last prefetched step. Items for ranks this
+    /// pool does not end up serving are simply never consumed from it, so
+    /// callers re-distributing ranks across pools should pre-filter.
     pub fn restore(&mut self, items: Vec<WorkItem>) {
-        self.next_step = items.iter().map(|w| w.step + 1).max();
-        self.queue = items.into();
+        self.queues.clear();
+        for w in items {
+            let q = self.queues.entry(w.rank).or_default();
+            let next = w.step + 1;
+            q.next_step = Some(q.next_step.map_or(next, |n| n.max(next)));
+            q.items.push_back(w);
+        }
+        for q in self.queues.values_mut() {
+            q.items.make_contiguous().sort_by_key(|w| w.step);
+        }
     }
 
     /// Launch-time model for the Fig. 13 §data-worker-sharing bench: shared
@@ -127,7 +158,7 @@ impl SharedDataWorkers {
     }
 
     pub fn queued(&self) -> usize {
-        self.queue.len()
+        self.queues.values().map(|q| q.items.len()).sum()
     }
 }
 
@@ -163,6 +194,25 @@ mod tests {
     }
 
     #[test]
+    fn split_pools_match_one_shared_pool() {
+        // The parallel-runtime property: two per-executor pools hosting
+        // disjoint rank sets produce exactly the items one combined pool
+        // would — rank streams are independent by construction.
+        let mut whole = SharedDataWorkers::new(4, &[0, 1, 2, 3], 2, 3);
+        whole.prefill(0, &[0, 1, 2, 3]);
+        let mut left = SharedDataWorkers::new(4, &[0, 2], 2, 3);
+        let mut right = SharedDataWorkers::new(4, &[1, 3], 2, 3);
+        left.prefill(0, &[0, 2]);
+        right.prefill(0, &[1, 3]);
+        for step in 0..3 {
+            assert_eq!(whole.consume(step, 0), left.consume(step, 0));
+            assert_eq!(whole.consume(step, 2), left.consume(step, 2));
+            assert_eq!(whole.consume(step, 1), right.consume(step, 1));
+            assert_eq!(whole.consume(step, 3), right.consume(step, 3));
+        }
+    }
+
+    #[test]
     fn states_survive_checkpoint_restore_and_continue_identically() {
         let ranks = [0, 1];
         let mut w = SharedDataWorkers::new(3, &ranks, 2, 3);
@@ -189,6 +239,16 @@ mod tests {
         w.restore(Vec::new());
         w.prefill(7, &ranks);
         assert_eq!(w.consume(7, 0).step, 7);
+    }
+
+    #[test]
+    fn checkpoint_order_is_deterministic_production_order() {
+        let ranks = [1, 0];
+        let mut w = SharedDataWorkers::new(6, &ranks, 1, 2);
+        w.prefill(0, &ranks);
+        let saved = w.checkpoint_states();
+        let keys: Vec<(u64, usize)> = saved.iter().map(|i| (i.step, i.rank)).collect();
+        assert_eq!(keys, vec![(0, 0), (0, 1), (1, 0), (1, 1)]);
     }
 
     #[test]

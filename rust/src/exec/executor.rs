@@ -1,14 +1,9 @@
-//! The per-GPU executor: one CUDA context (PJRT client in our substrate),
-//! time-slicing its assigned EasyScaleThreads at mini-batch boundaries
-//! (paper §3.2, Fig. 6).
+//! Placement and executor descriptors: which EasyScaleThreads run where
+//! (paper §3.2, Fig. 6). The runnable per-executor worker that time-slices
+//! the ESTs lives in [`super::pool`] — it owns its EST contexts and runs on
+//! its own OS thread under the parallel runtime.
 
 use anyhow::Result;
-
-use crate::data::{DeterministicSampler, SharedDataWorkers, SyntheticCorpus};
-use crate::est::{EstContext, StagedGrads};
-use crate::runtime::client::ParamBuffers;
-use crate::runtime::Engine;
-use crate::util::rng::dropout_key;
 
 use super::devices::DeviceType;
 
@@ -103,76 +98,6 @@ pub struct ExecTiming {
     pub compute_s: Vec<f64>,
     /// gradient D2H staging seconds per EST.
     pub stage_s: Vec<f64>,
-}
-
-/// One executor. Owns no model state: parameters/optimizer state live with
-/// the trainer (shared per the paper — only ONE replica per executor, and
-/// at mini-batch boundaries all executors hold identical values).
-#[derive(Debug, Clone)]
-pub struct Executor {
-    pub spec: ExecutorSpec,
-    /// Physical slot of this executor within the placement.
-    pub slot: usize,
-}
-
-impl Executor {
-    /// Run one global mini-batch's worth of this executor's ESTs, staging
-    /// each EST's gradients to host DRAM (the `StagedGrads` return).
-    ///
-    /// `d2` picks the kernel-variant artifact; `key_mode` the dropout-key
-    /// identity; augmentation consumes committed data-worker states.
-    #[allow(clippy::too_many_arguments)]
-    pub fn run_minibatch(
-        &self,
-        engine: &Engine,
-        params: &ParamBuffers,
-        contexts: &mut [EstContext],
-        sampler: &mut DeterministicSampler,
-        corpus: &SyntheticCorpus,
-        data: &mut SharedDataWorkers,
-        seed: u64,
-        step: u64,
-        d2: bool,
-        key_mode: KeyMode,
-        aug_rate: f64,
-        timing: Option<&mut ExecTiming>,
-    ) -> Result<Vec<StagedGrads>> {
-        let variant = self.spec.device.kernel_variant(d2);
-        let mut staged = Vec::with_capacity(self.spec.est_ranks.len());
-        let mut t = timing;
-        for (pos, &rank) in self.spec.est_ranks.iter().enumerate() {
-            let ctx = &mut contexts[rank];
-            debug_assert_eq!(ctx.virtual_rank, rank);
-            let indices = sampler.microbatch(step, rank);
-            let mut tokens = corpus.batch(&indices);
-            let item = data.consume(step, rank);
-            if aug_rate > 0.0 {
-                SharedDataWorkers::augment(&item, &mut tokens, corpus.vocab_size, aug_rate);
-            }
-            let key = match key_mode {
-                KeyMode::Virtual => ctx.dropout_key(seed),
-                // physical identity: (executor slot, position in executor)
-                KeyMode::Physical => {
-                    dropout_key(seed, self.slot * 1024 + pos, step)
-                }
-            };
-            let t0 = std::time::Instant::now();
-            let out = engine.fwd_bwd_buffered(variant, params, &tokens, key)?;
-            let compute = t0.elapsed().as_secs_f64();
-            // gradient "D2H" staging: in our substrate fwd_bwd already
-            // returns host buffers; the move into StagedGrads is the stage.
-            let t1 = std::time::Instant::now();
-            let sg = StagedGrads { virtual_rank: rank, loss: out.loss, grads: out.grads };
-            let stage = t1.elapsed().as_secs_f64();
-            if let Some(t) = t.as_deref_mut() {
-                t.compute_s.push(compute);
-                t.stage_s.push(stage);
-            }
-            staged.push(sg);
-            ctx.step = step + 1;
-        }
-        Ok(staged)
-    }
 }
 
 #[cfg(test)]

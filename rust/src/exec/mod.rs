@@ -1,9 +1,12 @@
-//! Executors: the per-GPU runtime that time-slices EasyScaleThreads.
+//! Executors: the per-GPU runtime that time-slices EasyScaleThreads, and
+//! the thread-per-executor pool that runs executors concurrently.
 
 pub mod devices;
 pub mod executor;
 pub mod memory;
+pub mod pool;
 
 pub use devices::DeviceType;
-pub use executor::{Executor, Placement};
+pub use executor::{ExecTiming, ExecutorSpec, KeyMode, Placement};
 pub use memory::MemoryModel;
+pub use pool::{ExecutorOutput, ExecutorWorker, RunMode, StepInputs};

@@ -1,0 +1,315 @@
+//! The parallel executor runtime: one OS thread per executor, a
+//! channel-based step barrier, and completion-order result collection.
+//!
+//! The paper's executor is a per-GPU process that time-slices its
+//! EasyScaleThreads; different executors run *concurrently* on different
+//! GPUs. This module reproduces that concurrency on the CPU substrate:
+//! each [`ExecutorWorker`] is a `Send`-able unit owning everything one
+//! executor mutates during a mini-batch — its EST contexts, its data-worker
+//! pool (per-EST queues for exactly its hosted ranks), its sampler clone —
+//! so workers share nothing mutable and can run on scoped threads against
+//! a shared `&Engine`.
+//!
+//! Determinism contract: every EST's computation is a pure function of
+//! (job seed, virtual rank, step, kernel variant), and results are handed
+//! back through a channel in whatever order threads finish. The trainer
+//! re-indexes them into a virtual-rank [`crate::comm::SlotTable`] before
+//! aggregation, so the bitwise result is independent of thread scheduling —
+//! `RunMode::Parallel` and `RunMode::Sequential` produce identical digests
+//! (asserted in `tests/consistency.rs`).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::data::{DeterministicSampler, SharedDataWorkers, SyntheticCorpus};
+use crate::est::{EstContext, StagedGrads};
+use crate::runtime::{Engine, ParamBuffers};
+use crate::util::rng::dropout_key;
+
+use super::executor::{ExecTiming, ExecutorSpec, KeyMode};
+
+/// How the trainer drives its executors for each global mini-batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunMode {
+    /// One executor after another on the calling thread — the bitwise
+    /// reference (`--sequential`).
+    Sequential,
+    /// One OS thread per executor. `max_threads == 0` means unbounded
+    /// (every executor gets a thread); otherwise executors run in waves of
+    /// at most `max_threads` concurrent threads (`--threads N`).
+    Parallel { max_threads: usize },
+}
+
+impl RunMode {
+    pub fn parallel() -> RunMode {
+        RunMode::Parallel { max_threads: 0 }
+    }
+}
+
+impl Default for RunMode {
+    fn default() -> RunMode {
+        RunMode::parallel()
+    }
+}
+
+/// Everything a worker needs to run one global mini-batch — shared,
+/// immutable, and (in the native backend) `Sync`.
+pub struct StepInputs<'a> {
+    pub engine: &'a Engine,
+    /// Parameters uploaded once per mini-batch, shared by all ESTs of all
+    /// executors (paper §3.2).
+    pub params: &'a ParamBuffers,
+    pub corpus: &'a SyntheticCorpus,
+    pub seed: u64,
+    pub step: u64,
+    pub d2: bool,
+    pub key_mode: KeyMode,
+    pub aug_rate: f64,
+}
+
+/// One executor's mini-batch result, tagged with its physical slot.
+pub struct ExecutorOutput {
+    pub slot: usize,
+    /// Per-EST staged gradients in hosting order.
+    pub staged: Vec<StagedGrads>,
+    pub timing: ExecTiming,
+    /// Wall-clock of this executor's whole mini-batch. Under the parallel
+    /// runtime the *step* wall-clock is the max of these over executors,
+    /// not the sum — the quantity the `sim`/planner waste model (Eq. 1b)
+    /// calls `f_overload`.
+    pub wall_s: f64,
+}
+
+/// A `Send`-able per-executor worker: owns its EST contexts and all
+/// per-executor mutable state, mirrors the paper's one-process-per-GPU
+/// executor.
+#[derive(Debug, Clone)]
+pub struct ExecutorWorker {
+    pub spec: ExecutorSpec,
+    /// Physical slot of this executor within the placement.
+    pub slot: usize,
+    /// Contexts of the hosted ESTs, hosting order.
+    pub contexts: Vec<EstContext>,
+    /// Private sampler clone — a pure function of (seed, step, rank, slot),
+    /// so clones held by different workers agree bit-for-bit.
+    pub sampler: DeterministicSampler,
+    /// This executor's shared data-worker pool (its ranks only).
+    pub data: SharedDataWorkers,
+}
+
+impl ExecutorWorker {
+    /// Run one global mini-batch's worth of this executor's ESTs,
+    /// time-slicing them at mini-batch boundaries and staging each EST's
+    /// gradients to host DRAM (the `StagedGrads` return).
+    pub fn run_minibatch(&mut self, inp: &StepInputs<'_>) -> Result<ExecutorOutput> {
+        let t_start = Instant::now();
+        let variant = self.spec.device.kernel_variant(inp.d2);
+        self.data.prefill(inp.step, &self.spec.est_ranks);
+        let mut timing = ExecTiming::default();
+        let mut staged = Vec::with_capacity(self.contexts.len());
+        for (pos, ctx) in self.contexts.iter_mut().enumerate() {
+            let rank = ctx.virtual_rank;
+            debug_assert_eq!(rank, self.spec.est_ranks[pos]);
+            let indices = self.sampler.microbatch(inp.step, rank);
+            let mut tokens = inp.corpus.batch(&indices);
+            let item = self.data.consume(inp.step, rank);
+            if inp.aug_rate > 0.0 {
+                SharedDataWorkers::augment(
+                    &item,
+                    &mut tokens,
+                    inp.corpus.vocab_size,
+                    inp.aug_rate,
+                );
+            }
+            let key = match inp.key_mode {
+                KeyMode::Virtual => ctx.dropout_key(inp.seed),
+                // physical identity: (executor slot, position in executor)
+                KeyMode::Physical => dropout_key(inp.seed, self.slot * 1024 + pos, inp.step),
+            };
+            let t0 = Instant::now();
+            let out = inp.engine.fwd_bwd_buffered(variant, inp.params, &tokens, key)?;
+            let compute = t0.elapsed().as_secs_f64();
+            // gradient "D2H" staging: in our substrate fwd_bwd already
+            // returns host buffers; the move into StagedGrads is the stage.
+            let t1 = Instant::now();
+            let sg = StagedGrads { virtual_rank: rank, loss: out.loss, grads: out.grads };
+            let stage = t1.elapsed().as_secs_f64();
+            timing.compute_s.push(compute);
+            timing.stage_s.push(stage);
+            staged.push(sg);
+            ctx.step = inp.step + 1;
+        }
+        Ok(ExecutorOutput {
+            slot: self.slot,
+            staged,
+            timing,
+            wall_s: t_start.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Drive all executors through one global mini-batch. Returns the
+/// executor outputs in **completion order** (parallel) or slot order
+/// (sequential) — callers must not rely on the order; the trainer
+/// re-indexes by virtual rank.
+pub fn run_step(
+    workers: &mut [ExecutorWorker],
+    inp: &StepInputs<'_>,
+    mode: RunMode,
+) -> Result<Vec<ExecutorOutput>> {
+    match mode {
+        RunMode::Sequential => workers.iter_mut().map(|w| w.run_minibatch(inp)).collect(),
+        RunMode::Parallel { max_threads } => run_parallel(workers, inp, max_threads),
+    }
+}
+
+/// Thread-per-executor execution over scoped threads. The mpsc channel is
+/// the step barrier: the scope joins every worker thread, then results are
+/// drained in completion order.
+#[cfg(not(feature = "pjrt"))]
+fn run_parallel(
+    workers: &mut [ExecutorWorker],
+    inp: &StepInputs<'_>,
+    max_threads: usize,
+) -> Result<Vec<ExecutorOutput>> {
+    if workers.len() <= 1 {
+        return workers.iter_mut().map(|w| w.run_minibatch(inp)).collect();
+    }
+    let wave = if max_threads == 0 { workers.len() } else { max_threads.max(1) };
+    let mut outs = Vec::with_capacity(workers.len());
+    for chunk in workers.chunks_mut(wave) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::scope(|s| {
+            for w in chunk.iter_mut() {
+                let tx = tx.clone();
+                s.spawn(move || {
+                    let _ = tx.send(w.run_minibatch(inp));
+                });
+            }
+        });
+        drop(tx);
+        for r in rx.iter() {
+            outs.push(r?);
+        }
+    }
+    Ok(outs)
+}
+
+/// The PJRT client is not `Sync` (single CUDA-context semantics), so under
+/// the `pjrt` feature executors always time-slice sequentially; the CPU
+/// client parallelizes *inside* each execution instead.
+#[cfg(feature = "pjrt")]
+fn run_parallel(
+    workers: &mut [ExecutorWorker],
+    inp: &StepInputs<'_>,
+    _max_threads: usize,
+) -> Result<Vec<ExecutorOutput>> {
+    workers.iter_mut().map(|w| w.run_minibatch(inp)).collect()
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+    use crate::exec::devices::DeviceType;
+    use crate::exec::executor::Placement;
+
+    fn mk_workers(engine: &Engine, n_exec: usize, max_p: usize) -> Vec<ExecutorWorker> {
+        let placement = Placement::homogeneous(DeviceType::V100, n_exec, max_p);
+        let m = &engine.manifest.model;
+        placement
+            .executors
+            .iter()
+            .enumerate()
+            .map(|(slot, spec)| ExecutorWorker {
+                spec: spec.clone(),
+                slot,
+                contexts: spec.est_ranks.iter().map(|&r| EstContext::new(42, r)).collect(),
+                sampler: DeterministicSampler::new(42, 1024, max_p, m.batch_per_est),
+                data: SharedDataWorkers::new(42, &spec.est_ranks, 4, 2),
+            })
+            .collect()
+    }
+
+    fn staged_bits(outs: &[ExecutorOutput]) -> Vec<(usize, Vec<u32>)> {
+        let mut per_rank: Vec<(usize, Vec<u32>)> = outs
+            .iter()
+            .flat_map(|o| o.staged.iter())
+            .map(|s| {
+                (
+                    s.virtual_rank,
+                    s.grads.iter().flat_map(|g| g.iter().map(|v| v.to_bits())).collect(),
+                )
+            })
+            .collect();
+        per_rank.sort_by_key(|(r, _)| *r);
+        per_rank
+    }
+
+    #[test]
+    fn parallel_and_sequential_stage_identical_bits() {
+        let engine = Engine::synthetic("tiny").unwrap();
+        let params = engine.manifest.load_init_params().unwrap();
+        let corpus = SyntheticCorpus::new(
+            1,
+            engine.manifest.model.vocab_size,
+            engine.manifest.model.seq_len,
+        );
+        let bufs = engine.upload_params(&params).unwrap();
+        let inp = StepInputs {
+            engine: &engine,
+            params: &bufs,
+            corpus: &corpus,
+            seed: 42,
+            step: 0,
+            d2: false,
+            key_mode: KeyMode::Virtual,
+            aug_rate: 0.02,
+        };
+        let mut seq_workers = mk_workers(&engine, 4, 4);
+        let seq = run_step(&mut seq_workers, &inp, RunMode::Sequential).unwrap();
+        let mut par_workers = mk_workers(&engine, 4, 4);
+        let par = run_step(&mut par_workers, &inp, RunMode::parallel()).unwrap();
+        assert_eq!(staged_bits(&seq), staged_bits(&par));
+        // capped waves agree too
+        let mut wave_workers = mk_workers(&engine, 4, 4);
+        let wave =
+            run_step(&mut wave_workers, &inp, RunMode::Parallel { max_threads: 2 }).unwrap();
+        assert_eq!(staged_bits(&seq), staged_bits(&wave));
+    }
+
+    #[test]
+    fn every_rank_reports_exactly_once() {
+        let engine = Engine::synthetic("tiny").unwrap();
+        let params = engine.manifest.load_init_params().unwrap();
+        let corpus = SyntheticCorpus::new(
+            1,
+            engine.manifest.model.vocab_size,
+            engine.manifest.model.seq_len,
+        );
+        let bufs = engine.upload_params(&params).unwrap();
+        let inp = StepInputs {
+            engine: &engine,
+            params: &bufs,
+            corpus: &corpus,
+            seed: 7,
+            step: 3,
+            d2: true,
+            key_mode: KeyMode::Virtual,
+            aug_rate: 0.0,
+        };
+        let mut workers = mk_workers(&engine, 3, 8);
+        // steps 0..3 were never consumed; prefill starts at the step given
+        for w in workers.iter_mut() {
+            w.data.prefill(3, &w.spec.est_ranks.clone());
+        }
+        let outs = run_step(&mut workers, &inp, RunMode::parallel()).unwrap();
+        let mut table = crate::comm::SlotTable::new(8);
+        for o in outs {
+            for s in o.staged {
+                table.insert(s).unwrap();
+            }
+        }
+        assert!(table.is_complete());
+    }
+}

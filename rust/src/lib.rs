@@ -16,11 +16,16 @@
 //!   and a discrete-event heterogeneous-cluster simulator for the paper's
 //!   trace and production experiments.
 //!
-//! Python never runs on the request path: the binary loads `artifacts/` via
-//! the PJRT CPU client (`xla` crate) and is self-contained afterwards.
+//! Python never runs on the request path: with `--features pjrt` the
+//! binary loads `artifacts/` via the PJRT CPU client (`xla` crate); the
+//! default build uses the pure-Rust native reference engine
+//! ([`runtime::native`]) and needs no artifacts at all. Executors run on
+//! the thread-per-executor pool ([`exec::pool`]) with bitwise-identical
+//! results to the sequential reference loop.
 //!
-//! See `DESIGN.md` for the system inventory and the per-figure experiment
-//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` (in this directory) for the system inventory, the
+//! engine-backend contract, the parallel-runtime design, and the
+//! per-figure experiment index.
 
 pub mod util;
 pub mod runtime;

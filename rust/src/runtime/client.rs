@@ -19,14 +19,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::manifest::Manifest;
-
-/// Result of one EST microbatch fwd/bwd execution.
-#[derive(Debug, Clone)]
-pub struct FwdBwdOut {
-    pub loss: f32,
-    /// One flat f32 buffer per parameter, manifest order.
-    pub grads: Vec<Vec<f32>>,
-}
+use super::FwdBwdOut;
 
 /// Device-resident parameter set, uploaded once per mini-batch and shared
 /// by all ESTs of all executors (see `Engine::upload_params`).
@@ -270,6 +263,12 @@ impl Engine {
 
     pub fn compiled_executables(&self) -> usize {
         self.cache.borrow().len()
+    }
+
+    /// Number of HLO compilations performed (API parity with the native
+    /// backend's `compile_count`).
+    pub fn compile_count(&self) -> usize {
+        *self.compile_count.borrow()
     }
 }
 

@@ -66,6 +66,11 @@ pub struct Manifest {
     pub eval_loss: ArtifactSig,
     pub eval_loss_file: PathBuf,
     pub init_params_file: PathBuf,
+    /// `Some(seed)` for in-memory synthetic manifests (native backend, no
+    /// `artifacts/` on disk): initial parameters are generated
+    /// deterministically from this seed instead of read from
+    /// `init_params_file`.
+    pub synthetic_seed: Option<u64>,
 }
 
 fn parse_sig(j: &Json) -> Result<ArtifactSig> {
@@ -157,12 +162,111 @@ impl Manifest {
             eval_loss: parse_sig(arts.get("eval_loss"))?,
             eval_loss_file: dir.join(arts.get("eval_loss").req_str("file")?),
             init_params_file: dir.join(j.req_str("init_params")?),
+            synthetic_seed: None,
+        })
+    }
+
+    /// Fabricate an in-memory manifest for the native reference model:
+    /// a bilinear LM with `embed [V,D]`, `head_w [D,V]`, `head_b [V]`.
+    /// Presets mirror the artifact presets in spirit ("tiny" for tests,
+    /// "small" for examples); no files are read or written.
+    pub fn synthetic(preset: &str) -> Result<Manifest> {
+        let (vocab_size, d_model, seq_len, batch_per_est) = match preset {
+            "tiny" => (128usize, 32usize, 32usize, 4usize),
+            "small" => (256, 64, 64, 8),
+            other => bail!("unknown synthetic preset '{other}' (tiny|small)"),
+        };
+        let params = vec![
+            ParamInfo {
+                name: "embed".to_string(),
+                shape: vec![vocab_size, d_model],
+                size: vocab_size * d_model,
+            },
+            ParamInfo {
+                name: "head_w".to_string(),
+                shape: vec![d_model, vocab_size],
+                size: d_model * vocab_size,
+            },
+            ParamInfo { name: "head_b".to_string(), shape: vec![vocab_size], size: vocab_size },
+        ];
+        let n_params: usize = params.iter().map(|p| p.size).sum();
+        let model = ModelMeta {
+            preset: preset.to_string(),
+            vocab_size,
+            d_model,
+            n_layers: 1,
+            seq_len,
+            batch_per_est,
+            momentum: 0.9,
+            init_seed: 7,
+            n_params,
+        };
+        let sig_of = |ins: Vec<TensorSig>, outs: Vec<TensorSig>| ArtifactSig {
+            inputs: ins,
+            outputs: outs,
+        };
+        let param_sigs = |prefix: &str| -> Vec<TensorSig> {
+            params
+                .iter()
+                .map(|p| TensorSig {
+                    name: format!("{prefix}{}", p.name),
+                    shape: p.shape.clone(),
+                    dtype: "f32".to_string(),
+                })
+                .collect()
+        };
+        let tokens_sig = TensorSig {
+            name: "tokens".to_string(),
+            shape: vec![batch_per_est, seq_len + 1],
+            dtype: "i32".to_string(),
+        };
+        let rng_sig =
+            TensorSig { name: "rng".to_string(), shape: vec![2], dtype: "u32".to_string() };
+        let loss_sig = TensorSig { name: "loss".to_string(), shape: vec![], dtype: "f32".to_string() };
+
+        let mut fwd_in = param_sigs("");
+        fwd_in.push(tokens_sig.clone());
+        fwd_in.push(rng_sig);
+        let mut fwd_out = vec![loss_sig.clone()];
+        fwd_out.extend(param_sigs("d_"));
+
+        let mut opt_in = param_sigs("");
+        opt_in.extend(param_sigs("m_"));
+        opt_in.extend(param_sigs("g_"));
+        opt_in.push(TensorSig { name: "lr".to_string(), shape: vec![], dtype: "f32".to_string() });
+        let mut opt_out = param_sigs("new_");
+        opt_out.extend(param_sigs("newm_"));
+
+        let mut eval_in = param_sigs("");
+        eval_in.push(tokens_sig);
+
+        let dir = PathBuf::from(format!("<synthetic:{preset}>"));
+        let variants: BTreeMap<String, PathBuf> = ["det", "v100", "p100", "t4"]
+            .iter()
+            .map(|v| (v.to_string(), dir.join(format!("fwd_bwd.{v}.native"))))
+            .collect();
+        Ok(Manifest {
+            model,
+            params,
+            fwd_bwd: sig_of(fwd_in, fwd_out),
+            fwd_bwd_variants: variants,
+            opt_update: sig_of(opt_in, opt_out),
+            opt_update_file: dir.join("opt_update.native"),
+            eval_loss: sig_of(eval_in, vec![loss_sig]),
+            eval_loss_file: dir.join("eval_loss.native"),
+            init_params_file: dir.join("init_params.native"),
+            dir,
+            synthetic_seed: Some(0xEA57),
         })
     }
 
     /// Load the deterministic initial parameters (raw f32 LE, manifest
-    /// order) as one flat host vector per parameter.
+    /// order) as one flat host vector per parameter. Synthetic manifests
+    /// generate them from `synthetic_seed` instead of reading a file.
     pub fn load_init_params(&self) -> Result<Vec<Vec<f32>>> {
+        if let Some(seed) = self.synthetic_seed {
+            return Ok(self.generate_init_params(seed));
+        }
         let bytes = std::fs::read(&self.init_params_file)
             .with_context(|| format!("reading {}", self.init_params_file.display()))?;
         if bytes.len() != 4 * self.model.n_params {
@@ -184,6 +288,31 @@ impl Manifest {
             out.push(v);
         }
         Ok(out)
+    }
+
+    /// Deterministic init for synthetic manifests, keyed per tensor name:
+    /// `embed` ~ N(0,1) (so logit variance is O(1) and gradients are not
+    /// vanishing at init), `head_w` ~ N(0, 0.25/d_model) (keeps the init
+    /// loss within a whisker of ln|V|), biases and everything else zero.
+    fn generate_init_params(&self, seed: u64) -> Vec<Vec<f32>> {
+        use crate::util::rng::SplitMix64;
+        let head_std = 0.5 / (self.model.d_model as f64).sqrt();
+        self.params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let std = match p.name.as_str() {
+                    "embed" => 1.0,
+                    "head_w" => head_std,
+                    _ => 0.0,
+                };
+                if std == 0.0 {
+                    return vec![0.0f32; p.size];
+                }
+                let mut rng = SplitMix64::derive(seed ^ self.model.init_seed, &[0x1417, i as u64]);
+                (0..p.size).map(|_| (rng.next_normal() * std) as f32).collect()
+            })
+            .collect()
     }
 
     /// Total parameter bytes (f32).
@@ -241,5 +370,43 @@ mod tests {
     #[test]
     fn missing_manifest_errors() {
         assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn synthetic_manifest_is_consistent() {
+        let m = Manifest::synthetic("tiny").unwrap();
+        assert_eq!(m.model.preset, "tiny");
+        let total: usize = m.params.iter().map(|p| p.size).sum();
+        assert_eq!(total, m.model.n_params);
+        for p in &m.params {
+            assert_eq!(p.shape.iter().product::<usize>(), p.size, "{}", p.name);
+        }
+        for v in ["det", "v100", "p100", "t4"] {
+            assert!(m.fwd_bwd_variants.contains_key(v), "missing variant {v}");
+        }
+        assert_eq!(m.fwd_bwd.inputs.len(), m.params.len() + 2);
+        assert_eq!(m.fwd_bwd.outputs.len(), m.params.len() + 1);
+        assert_eq!(m.opt_update.inputs.len(), 3 * m.params.len() + 1);
+        assert_eq!(m.opt_update.outputs.len(), 2 * m.params.len());
+        assert!(Manifest::synthetic("m100").is_err());
+    }
+
+    #[test]
+    fn synthetic_init_params_deterministic_and_scaled() {
+        let m = Manifest::synthetic("tiny").unwrap();
+        let a = m.load_init_params().unwrap();
+        let b = m.load_init_params().unwrap();
+        assert_eq!(a.len(), m.params.len());
+        for ((x, y), info) in a.iter().zip(&b).zip(&m.params) {
+            assert_eq!(x.len(), info.size);
+            assert!(x.iter().zip(y).all(|(u, v)| u.to_bits() == v.to_bits()));
+            assert!(x.iter().all(|v| v.is_finite()));
+        }
+        // head bias starts at zero; embed has unit-ish variance
+        let bias = &a[2];
+        assert!(bias.iter().all(|&v| v == 0.0));
+        let var: f32 =
+            a[0].iter().map(|v| v * v).sum::<f32>() / a[0].len() as f32;
+        assert!((0.5..2.0).contains(&var), "embed variance {var}");
     }
 }

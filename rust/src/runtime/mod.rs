@@ -1,17 +1,47 @@
-//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT-lowered by
-//! `python/compile/aot.py`) and execute them from the Layer-3 hot path.
+//! The execution runtime behind the Layer-3 coordinator.
 //!
-//! The interchange format is HLO *text*: the image's xla_extension 0.5.1
-//! rejects jax>=0.5 serialized `HloModuleProto`s (64-bit instruction ids);
-//! the text parser reassigns ids and round-trips cleanly.
+//! Two interchangeable backends expose the same `Engine` API:
 //!
-//! One compiled executable per artifact file; executables are cached in the
-//! [`client::Engine`] so elastic reconfigurations never recompile.
+//! * **native** (default): a pure-Rust deterministic reference model — a
+//!   bilinear embedding→head language model with per-"GPU-type" kernel
+//!   variants that differ only in float summation order (the same mechanism
+//!   by which cuBLAS/cuDNN algorithm selection breaks bitwise equality
+//!   across architectures). It needs no artifacts: `Engine::synthetic`
+//!   fabricates a manifest and deterministic init parameters in memory, and
+//!   `Engine::open` falls back to it when `artifacts/` is absent. Crucially
+//!   it is `Send + Sync`, which is what lets the executor pool
+//!   ([`crate::exec::pool`]) run one OS thread per executor.
+//! * **pjrt** (feature `pjrt`): load `artifacts/*.hlo.txt` (AOT-lowered by
+//!   `python/compile/aot.py`) and execute them via the PJRT CPU client.
+//!   The interchange format is HLO *text*: the image's xla_extension 0.5.1
+//!   rejects jax>=0.5 serialized `HloModuleProto`s (64-bit instruction
+//!   ids); the text parser reassigns ids and round-trips cleanly. One
+//!   compiled executable per artifact file, cached so elastic
+//!   reconfigurations never recompile. The PJRT client is not `Sync`, so
+//!   this backend always runs executors sequentially (the client
+//!   parallelizes *inside* an execution).
 
-pub mod client;
 pub mod manifest;
+pub mod native;
+
+#[cfg(feature = "pjrt")]
+pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod tensor;
 
-pub use client::{Engine, FwdBwdOut};
+/// Result of one EST microbatch fwd/bwd execution (backend-independent).
+#[derive(Debug, Clone)]
+pub struct FwdBwdOut {
+    pub loss: f32,
+    /// One flat f32 buffer per parameter, manifest order.
+    pub grads: Vec<Vec<f32>>,
+}
+
+#[cfg(feature = "pjrt")]
+pub use client::{Engine, ParamBuffers};
+#[cfg(not(feature = "pjrt"))]
+pub use native::{Engine, ParamBuffers};
+
 pub use manifest::{ArtifactSig, Manifest, ParamInfo, TensorSig};
+#[cfg(feature = "pjrt")]
 pub use tensor::{dims_i64, literal_f32, literal_i32, literal_u32};

@@ -1,0 +1,506 @@
+//! The native reference engine: a pure-Rust, bitwise-deterministic
+//! substitute for the PJRT/HLO backend (which needs the vendored `xla`
+//! crate and `make artifacts`; see the `pjrt` feature).
+//!
+//! The model is a bilinear language model: `logits = dropout(embed[tok]) ·
+//! head_w + head_b`, trained with softmax cross-entropy on next-token
+//! targets and fused SGD-momentum. Small, but it reproduces every property
+//! the EasyScale experiments need from the real artifacts:
+//!
+//! * **bitwise determinism per kernel variant** — the computation is a pure
+//!   function of (params, tokens, rng key, variant);
+//! * **kernel-variant divergence** — the variants "det"/"v100"/"p100"/"t4"
+//!   differ only in float *summation order* (accumulation chunk width),
+//!   exactly the mechanism by which cuBLAS/cuDNN algorithm selection makes
+//!   different GPU architectures bitwise-divergent while staying
+//!   numerically close (paper §3.3, the D2 hazard);
+//! * **dropout keyed by a u32[2] counter key**, so EST identity (virtual or
+//!   physical) flows into the bits;
+//! * **`Send + Sync`** — unlike the PJRT client, the native engine can be
+//!   shared by the thread-per-executor pool (`exec::pool`), which is what
+//!   the parallel runtime runs on.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::Manifest;
+use super::FwdBwdOut;
+use crate::util::rng::SplitMix64;
+
+const DROPOUT_RATE: f64 = 0.1;
+const INV_KEEP: f32 = 1.0 / 0.9;
+
+/// Indices of the native model's tensors within the manifest param list.
+#[derive(Debug, Clone, Copy)]
+struct NativeLayout {
+    embed: usize,
+    head_w: usize,
+    head_b: usize,
+}
+
+impl NativeLayout {
+    fn from_manifest(m: &Manifest) -> Result<NativeLayout> {
+        let find = |name: &str| {
+            m.params
+                .iter()
+                .position(|p| p.name == name)
+                .ok_or_else(|| anyhow!("native backend: manifest has no '{name}' tensor"))
+        };
+        let layout =
+            NativeLayout { embed: find("embed")?, head_w: find("head_w")?, head_b: find("head_b")? };
+        let (v, d) = (m.model.vocab_size, m.model.d_model);
+        let expect = [(layout.embed, vec![v, d]), (layout.head_w, vec![d, v]), (layout.head_b, vec![v])];
+        for (idx, shape) in expect {
+            if m.params[idx].shape != shape {
+                bail!(
+                    "native backend supports only the synthetic bilinear layout; \
+                     tensor '{}' has shape {:?} (expected {:?}). These artifacts were \
+                     built for the PJRT backend — rebuild with `--features pjrt`.",
+                    m.params[idx].name,
+                    m.params[idx].shape,
+                    shape
+                );
+            }
+        }
+        if m.params.len() != 3 {
+            bail!(
+                "native backend supports only the 3-tensor synthetic layout \
+                 ({} tensors in manifest); rebuild with `--features pjrt`",
+                m.params.len()
+            );
+        }
+        Ok(layout)
+    }
+}
+
+/// Device-resident parameter set. In the native substrate "device" memory
+/// is host memory; the single upload per mini-batch shared by all ESTs is
+/// preserved so the hot-loop shape matches the PJRT backend.
+pub struct ParamBuffers {
+    bufs: Vec<Vec<f32>>,
+}
+
+pub struct Engine {
+    pub manifest: Manifest,
+    layout: NativeLayout,
+    /// Variants "compiled" (first-used) so far — mirrors the PJRT
+    /// executable cache for the compile-once tests/benches.
+    compiled: Mutex<BTreeSet<String>>,
+}
+
+impl Engine {
+    /// Create an engine over a preset directory (e.g. `artifacts/tiny`).
+    /// The manifest must describe the native bilinear layout; transformer
+    /// artifact manifests require the `pjrt` feature.
+    pub fn new(preset_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(preset_dir)?;
+        let layout = NativeLayout::from_manifest(&manifest)?;
+        Ok(Engine { manifest, layout, compiled: Mutex::new(BTreeSet::new()) })
+    }
+
+    /// An engine over a fabricated in-memory manifest — no files needed.
+    pub fn synthetic(preset: &str) -> Result<Engine> {
+        let manifest = Manifest::synthetic(preset)?;
+        let layout = NativeLayout::from_manifest(&manifest)?;
+        Ok(Engine { manifest, layout, compiled: Mutex::new(BTreeSet::new()) })
+    }
+
+    /// Convenience: `artifacts_root/preset` when built, otherwise the
+    /// synthetic manifest of the same preset name.
+    pub fn open(artifacts_root: &Path, preset: &str) -> Result<Engine> {
+        let dir = artifacts_root.join(preset);
+        if dir.join("manifest.json").exists() {
+            Engine::new(&dir)
+        } else {
+            Engine::synthetic(preset)
+        }
+    }
+
+    pub fn variant_path(&self, variant: &str) -> Result<PathBuf> {
+        self.manifest
+            .fwd_bwd_variants
+            .get(variant)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown kernel variant '{variant}'"))
+    }
+
+    /// Accumulation chunk width of a kernel variant: 0 = plain sequential
+    /// (the D2 fixed-schedule kernel), otherwise the per-"architecture"
+    /// tiling that makes vendor variants bitwise-distinct.
+    fn variant_chunk(&self, variant: &str) -> Result<usize> {
+        self.variant_path(variant)?; // validate against the manifest
+        Ok(match variant {
+            "det" => 0,
+            "v100" => 16,
+            "p100" => 8,
+            "t4" => 4,
+            _ => 0,
+        })
+    }
+
+    fn mark_compiled(&self, name: &str) {
+        self.compiled.lock().unwrap().insert(name.to_string());
+    }
+
+    /// Pre-"compile" an artifact (API parity with the PJRT engine).
+    pub fn warmup(&self, variant: &str) -> Result<()> {
+        self.variant_path(variant)?;
+        self.mark_compiled(variant);
+        self.mark_compiled("opt_update");
+        Ok(())
+    }
+
+    /// Number of distinct executables materialized so far.
+    pub fn compiled_executables(&self) -> usize {
+        self.compiled.lock().unwrap().len()
+    }
+
+    /// Number of compilations performed (== cache size: compile-once).
+    pub fn compile_count(&self) -> usize {
+        self.compiled_executables()
+    }
+
+    fn check_tokens(&self, tokens: &[i32]) -> Result<()> {
+        let m = &self.manifest.model;
+        let want = m.batch_per_est * (m.seq_len + 1);
+        if tokens.len() != want {
+            bail!("expected {}x{} tokens, got {}", m.batch_per_est, m.seq_len + 1, tokens.len());
+        }
+        if let Some(&t) = tokens.iter().find(|&&t| t < 0 || t as usize >= m.vocab_size) {
+            bail!("token {t} outside vocab 0..{}", m.vocab_size);
+        }
+        Ok(())
+    }
+
+    fn check_params(&self, params: &[Vec<f32>]) -> Result<()> {
+        let m = &self.manifest;
+        if params.len() != m.params.len() {
+            bail!("expected {} param tensors, got {}", m.params.len(), params.len());
+        }
+        for (p, info) in params.iter().zip(&m.params) {
+            if p.len() != info.size {
+                bail!("param '{}' has {} elements, expected {}", info.name, p.len(), info.size);
+            }
+        }
+        Ok(())
+    }
+
+    /// Upload the full parameter set once per mini-batch; every EST of
+    /// every executor reuses the handle (parameters are *shared* between
+    /// ESTs — paper §3.2).
+    pub fn upload_params(&self, params: &[Vec<f32>]) -> Result<ParamBuffers> {
+        self.check_params(params)?;
+        Ok(ParamBuffers { bufs: params.to_vec() })
+    }
+
+    /// fwd/bwd against pre-uploaded parameters (the hot-loop form).
+    pub fn fwd_bwd_buffered(
+        &self,
+        variant: &str,
+        params: &ParamBuffers,
+        tokens: &[i32],
+        rng: [u32; 2],
+    ) -> Result<FwdBwdOut> {
+        let chunk = self.variant_chunk(variant)?;
+        self.mark_compiled(variant);
+        self.check_tokens(tokens)?;
+        Ok(self.fwd_bwd_impl(chunk, &params.bufs, tokens, Some(rng), true))
+    }
+
+    /// One EST microbatch: fwd/bwd with the given kernel variant.
+    pub fn fwd_bwd(
+        &self,
+        variant: &str,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        rng: [u32; 2],
+    ) -> Result<FwdBwdOut> {
+        self.check_params(params)?;
+        let chunk = self.variant_chunk(variant)?;
+        self.mark_compiled(variant);
+        self.check_tokens(tokens)?;
+        Ok(self.fwd_bwd_impl(chunk, params, tokens, Some(rng), true))
+    }
+
+    /// Dropout-free validation loss on one batch (D2 summation order).
+    pub fn eval_loss(&self, params: &[Vec<f32>], tokens: &[i32]) -> Result<f32> {
+        self.check_params(params)?;
+        self.check_tokens(tokens)?;
+        self.mark_compiled("eval_loss");
+        Ok(self.fwd_bwd_impl(0, params, tokens, None, false).loss)
+    }
+
+    /// Fused SGD-momentum update over all parameters:
+    /// `m' = momentum·m + g`, `p' = p − lr·m'`. Elementwise, so bitwise
+    /// identical regardless of kernel variant or placement.
+    pub fn opt_update(
+        &self,
+        params: &[Vec<f32>],
+        momenta: &[Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        let n = self.manifest.params.len();
+        if params.len() != n || momenta.len() != n || grads.len() != n {
+            bail!("opt_update arity mismatch");
+        }
+        self.mark_compiled("opt_update");
+        let mu = self.manifest.model.momentum as f32;
+        let mut new_params = Vec::with_capacity(n);
+        let mut new_momenta = Vec::with_capacity(n);
+        for ((p, m), g) in params.iter().zip(momenta).zip(grads) {
+            if p.len() != m.len() || p.len() != g.len() {
+                bail!("opt_update tensor length mismatch");
+            }
+            let mut np = Vec::with_capacity(p.len());
+            let mut nm = Vec::with_capacity(p.len());
+            for i in 0..p.len() {
+                let v = mu * m[i] + g[i];
+                nm.push(v);
+                np.push(p[i] - lr * v);
+            }
+            new_params.push(np);
+            new_momenta.push(nm);
+        }
+        Ok((new_params, new_momenta))
+    }
+
+    /// The model math. `chunk` selects the summation order (kernel
+    /// variant); `dropout` is the u32[2] key (None = eval path);
+    /// `with_grads` skips the backward pass for eval.
+    fn fwd_bwd_impl(
+        &self,
+        chunk: usize,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        dropout: Option<[u32; 2]>,
+        with_grads: bool,
+    ) -> FwdBwdOut {
+        let m = &self.manifest.model;
+        let (v_sz, d) = (m.vocab_size, m.d_model);
+        let (b, s) = (m.batch_per_est, m.seq_len);
+        let embed = &params[self.layout.embed];
+        let head_w = &params[self.layout.head_w];
+        let head_b = &params[self.layout.head_b];
+
+        let (mut g_embed, mut g_w, mut g_b) = if with_grads {
+            (vec![0.0f32; embed.len()], vec![0.0f32; head_w.len()], vec![0.0f32; head_b.len()])
+        } else {
+            (Vec::new(), Vec::new(), Vec::new())
+        };
+
+        let n_tok = b * s;
+        let inv_n = 1.0f32 / n_tok as f32;
+        let key = dropout.map(|k| ((k[0] as u64) << 32) | k[1] as u64);
+        let mut e = vec![0.0f32; d];
+        let mut mask = vec![1.0f32; d];
+        let mut z = vec![0.0f32; v_sz];
+        let mut p = vec![0.0f32; v_sz];
+        let mut dz = vec![0.0f32; v_sz];
+        let mut loss_sum = 0.0f32;
+
+        for bi in 0..b {
+            for si in 0..s {
+                let idx = bi * (s + 1) + si;
+                let tok = tokens[idx] as usize;
+                let tgt = tokens[idx + 1] as usize;
+
+                for dd in 0..d {
+                    e[dd] = embed[tok * d + dd];
+                }
+                if let Some(key) = key {
+                    let mut r = SplitMix64::derive(key, &[0xD0, (bi * s + si) as u64]);
+                    for dd in 0..d {
+                        mask[dd] = if r.next_f64() < DROPOUT_RATE { 0.0 } else { INV_KEEP };
+                        e[dd] *= mask[dd];
+                    }
+                }
+
+                for (u, zu) in z.iter_mut().enumerate() {
+                    *zu = head_b[u] + ordered_sum(d, chunk, |dd| e[dd] * head_w[dd * v_sz + u]);
+                }
+                let zmax = z.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+                let zsum = ordered_sum(v_sz, chunk, |u| (z[u] - zmax).exp());
+                for (u, pu) in p.iter_mut().enumerate() {
+                    *pu = (z[u] - zmax).exp() / zsum;
+                }
+                loss_sum += -(z[tgt] - zmax - zsum.ln());
+
+                if with_grads {
+                    for u in 0..v_sz {
+                        let onehot = if u == tgt { 1.0 } else { 0.0 };
+                        dz[u] = (p[u] - onehot) * inv_n;
+                    }
+                    for u in 0..v_sz {
+                        g_b[u] += dz[u];
+                    }
+                    for dd in 0..d {
+                        let ed = e[dd];
+                        if ed != 0.0 {
+                            let row = &mut g_w[dd * v_sz..(dd + 1) * v_sz];
+                            for (ru, &dzu) in row.iter_mut().zip(dz.iter()) {
+                                *ru += ed * dzu;
+                            }
+                        }
+                        if mask[dd] != 0.0 {
+                            let de = ordered_sum(v_sz, chunk, |u| dz[u] * head_w[dd * v_sz + u]);
+                            g_embed[tok * d + dd] += de * mask[dd];
+                        }
+                    }
+                }
+            }
+        }
+
+        let grads = if with_grads {
+            let mut out: Vec<Vec<f32>> = vec![Vec::new(); params.len()];
+            out[self.layout.embed] = g_embed;
+            out[self.layout.head_w] = g_w;
+            out[self.layout.head_b] = g_b;
+            out
+        } else {
+            Vec::new()
+        };
+        FwdBwdOut { loss: loss_sum * inv_n, grads }
+    }
+}
+
+/// Sum `f(0..n)` with a fixed chunked accumulation order. `chunk == 0`
+/// (or >= n) is the plain sequential order; otherwise partial sums of
+/// `chunk` consecutive terms are folded left-to-right. Different chunk
+/// widths give bitwise-different, numerically-close results — the
+/// kernel-variant mechanism.
+#[inline]
+fn ordered_sum<F: Fn(usize) -> f32>(n: usize, chunk: usize, f: F) -> f32 {
+    if chunk == 0 || chunk >= n {
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            acc += f(i);
+        }
+        return acc;
+    }
+    let mut acc = 0.0f32;
+    let mut i = 0;
+    while i < n {
+        let hi = (i + chunk).min(n);
+        let mut part = 0.0f32;
+        for j in i..hi {
+            part += f(j);
+        }
+        acc += part;
+        i = hi;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::dropout_key;
+
+    fn engine() -> Engine {
+        Engine::synthetic("tiny").unwrap()
+    }
+
+    fn some_tokens(eng: &Engine, seed: u64) -> Vec<i32> {
+        let m = &eng.manifest.model;
+        let mut rng = SplitMix64::new(seed);
+        (0..m.batch_per_est * (m.seq_len + 1))
+            .map(|_| rng.next_below(m.vocab_size as u64) as i32)
+            .collect()
+    }
+
+    #[test]
+    fn engine_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
+        assert_send_sync::<ParamBuffers>();
+    }
+
+    #[test]
+    fn ordered_sum_chunk_orders_differ_but_agree() {
+        let mut rng = SplitMix64::new(1);
+        let xs: Vec<f32> = (0..64).map(|_| rng.next_f32() - 0.5).collect();
+        let seq = ordered_sum(xs.len(), 0, |i| xs[i]);
+        let c4 = ordered_sum(xs.len(), 4, |i| xs[i]);
+        let c8 = ordered_sum(xs.len(), 8, |i| xs[i]);
+        assert!((seq - c4).abs() < 1e-4);
+        assert!((seq - c8).abs() < 1e-4);
+        // full-width chunk equals the sequential order exactly
+        let full = ordered_sum(xs.len(), 64, |i| xs[i]);
+        assert_eq!(seq.to_bits(), full.to_bits());
+    }
+
+    #[test]
+    fn variants_are_deterministic_and_distinct() {
+        let eng = engine();
+        let params = eng.manifest.load_init_params().unwrap();
+        let tokens = some_tokens(&eng, 2);
+        let key = dropout_key(7, 1, 3);
+        let a = eng.fwd_bwd("p100", &params, &tokens, key).unwrap();
+        let b = eng.fwd_bwd("p100", &params, &tokens, key).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        let c = eng.fwd_bwd("t4", &params, &tokens, key).unwrap();
+        assert!((a.loss - c.loss).abs() < 1e-3, "{} vs {}", a.loss, c.loss);
+        let differs = a
+            .grads
+            .iter()
+            .zip(&c.grads)
+            .any(|(x, y)| x.iter().zip(y).any(|(u, v)| u.to_bits() != v.to_bits()));
+        assert!(differs, "p100 and t4 must be bitwise distinct");
+        assert!(eng.fwd_bwd("a100", &params, &tokens, key).is_err());
+    }
+
+    #[test]
+    fn init_loss_near_ln_vocab_and_grads_nonzero() {
+        let eng = engine();
+        let params = eng.manifest.load_init_params().unwrap();
+        let tokens = some_tokens(&eng, 3);
+        let out = eng.fwd_bwd("det", &params, &tokens, dropout_key(0, 0, 0)).unwrap();
+        let ln_v = (eng.manifest.model.vocab_size as f32).ln();
+        assert!((out.loss - ln_v).abs() < 0.7, "loss {} vs ln|V| {}", out.loss, ln_v);
+        let nonzero: usize = out
+            .grads
+            .iter()
+            .map(|g| g.iter().filter(|v| **v != 0.0).count())
+            .sum();
+        assert!(nonzero > 100, "gradients should be populated, got {nonzero} nonzero");
+    }
+
+    #[test]
+    fn opt_update_is_sgd_momentum() {
+        let eng = engine();
+        let params = eng.manifest.load_init_params().unwrap();
+        let momenta: Vec<Vec<f32>> = params.iter().map(|p| vec![0.25; p.len()]).collect();
+        let grads: Vec<Vec<f32>> = params.iter().map(|p| vec![0.5; p.len()]).collect();
+        let (np, nm) = eng.opt_update(&params, &momenta, &grads, 0.1).unwrap();
+        // m' = 0.9*0.25 + 0.5 = 0.725, p' = p - 0.0725
+        for ((p0, p1), m1) in params.iter().zip(&np).zip(&nm) {
+            for i in 0..p0.len() {
+                assert!((m1[i] - 0.725).abs() < 1e-6);
+                assert!((p1[i] - (p0[i] - 0.0725)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn shape_and_vocab_validation() {
+        let eng = engine();
+        let params = eng.manifest.load_init_params().unwrap();
+        assert!(eng.fwd_bwd("det", &params, &[0i32; 3], [0, 0]).is_err());
+        assert!(eng.fwd_bwd("det", &params[1..], &some_tokens(&eng, 1), [0, 0]).is_err());
+        let mut bad = some_tokens(&eng, 1);
+        bad[0] = eng.manifest.model.vocab_size as i32; // out of vocab
+        assert!(eng.fwd_bwd("det", &params, &bad, [0, 0]).is_err());
+    }
+
+    #[test]
+    fn open_falls_back_to_synthetic() {
+        let eng = Engine::open(Path::new("/nonexistent-artifacts"), "tiny").unwrap();
+        assert_eq!(eng.manifest.model.preset, "tiny");
+        assert!(eng.manifest.synthetic_seed.is_some());
+        assert!(Engine::open(Path::new("/nonexistent-artifacts"), "m100").is_err());
+    }
+}

@@ -108,6 +108,9 @@ pub fn evaluate(
     executors: [usize; 3],
     threads: [usize; 3],
 ) -> Option<PlanConfig> {
+    if job.max_p == 0 {
+        return None; // a job with no ESTs has no meaningful configuration
+    }
     let profile = job.workload.profile();
     let mu = job.memory_gb();
     let mut cu_capacity = 0usize;
@@ -378,6 +381,79 @@ mod tests {
         // cannot host 4 ESTs on... actually any GPU can host all ESTs
         // time-sliced; but a zero-thread config is rejected:
         assert!(evaluate(&job, [1, 0, 0], [1, 0, 0], [0, 0, 0]).is_none());
+    }
+
+    /// Pin the weighted-(1c) deviation noted in the module doc: with the
+    /// `N_i` weighting, the algebra collapses to
+    /// `waste == Σ N_i·MC_i − maxP/f_overload`, i.e.
+    /// `perf == maxP · step_rate` — useful capacity is exactly the global
+    /// step rate times the EST count. The paper's unweighted (1c) does not
+    /// balance (1e); this identity is why we implement the weighted form.
+    #[test]
+    fn weighted_waste_identity_perf_is_maxp_times_step_rate() {
+        check("plan-weighted-1c", 40, |rng| {
+            let w = *gen::pick(rng, &crate::model::workload::WORKLOADS);
+            let job = JobSpec::new(w, gen::usize_in(rng, 1, 16));
+            let nums =
+                [gen::usize_in(rng, 0, 3), gen::usize_in(rng, 0, 3), gen::usize_in(rng, 0, 3)];
+            for cfg in enumerate_configs(&job, nums).into_iter().take(30) {
+                let want = job.max_p as f64 * cfg.step_rate;
+                if (cfg.perf - want).abs() > 1e-6 * want.max(1.0) {
+                    return Err(format!("perf {} != maxP*step_rate {}", cfg.perf, want));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Degenerate inputs from the module-doc audit: a zero-EST job is
+    /// rejected outright, and axes of unused device types (N_i = 0) are
+    /// ignored no matter what executor/thread counts are passed for them.
+    #[test]
+    fn degenerate_zero_maxp_and_unused_type_axes() {
+        let zero = JobSpec { max_p: 0, ..bert_job(1) };
+        assert!(evaluate(&zero, [4, 0, 0], [1, 0, 0], [1, 0, 0]).is_none());
+        assert!(best_config(&zero, [4, 0, 0]).is_none());
+
+        let job = bert_job(4);
+        let a = evaluate(&job, [2, 0, 0], [1, 0, 0], [2, 0, 0]).unwrap();
+        // junk in the unused P100/T4 axes must not change the evaluation
+        let b = evaluate(&job, [2, 0, 0], [1, 7, 9], [2, 3, 5]).unwrap();
+        assert_eq!(a.waste.to_bits(), b.waste.to_bits());
+        assert_eq!(a.perf.to_bits(), b.perf.to_bits());
+        assert_eq!(a.step_rate.to_bits(), b.step_rate.to_bits());
+        assert_eq!(a.cu_capacity(), b.cu_capacity());
+    }
+
+    /// maxP < Σ N_i (more GPUs than ESTs): every used GPU must still host
+    /// at least one EST, so capacity exceeds maxP and the surplus counts as
+    /// waste — but the configuration stays feasible and the step rate is
+    /// still the overload bound.
+    #[test]
+    fn more_gpus_than_ests_is_feasible_with_surplus_waste() {
+        let job = bert_job(2);
+        let cfg = evaluate(&job, [3, 0, 0], [1, 0, 0], [1, 0, 0]).unwrap();
+        assert_eq!(cfg.cu_capacity(), 3);
+        assert!(cfg.waste > 0.0, "surplus CUs must register as waste");
+        assert!((cfg.perf - job.max_p as f64 * cfg.step_rate).abs() < 1e-9);
+    }
+
+    /// The executor wall-clock model behind `step_rate`: a global
+    /// mini-batch costs the **max** over concurrent executors of
+    /// `MA_i / MC_i` (Eq. 1b), never the sum — GPUs run in parallel. The
+    /// parallel trainer (`exec::pool`) realizes the same semantics in
+    /// wall-clock.
+    #[test]
+    fn step_time_is_max_not_sum_over_executors() {
+        let job = JobSpec::new(Workload::ResNet50, 4);
+        // 1 V100 (C=7.35) with 3 ESTs + 1 T4 (C=3.0) with 1 EST
+        let cfg = evaluate(&job, [1, 0, 1], [1, 0, 1], [3, 0, 1]).unwrap();
+        let t_v100 = 3.0 / job.capability(DeviceType::V100);
+        let t_t4 = 1.0 / job.capability(DeviceType::T4);
+        let max_t = t_v100.max(t_t4);
+        let sum_t = t_v100 + t_t4;
+        assert!((1.0 / cfg.step_rate - max_t).abs() < 1e-9, "step time must be the max");
+        assert!(1.0 / cfg.step_rate < sum_t, "… and never the serial sum");
     }
 
     #[test]

@@ -421,7 +421,7 @@ mod tests {
             yarn.avg_jct_s()
         );
         // heter matches or beats homo (the paper shows a clear win; in our
-        // sharing-heavy sim the gap is small — see EXPERIMENTS.md)
+        // sharing-heavy sim the gap is small — see DESIGN.md §4)
         assert!(heter.avg_jct_s() <= homo.avg_jct_s() * 1.05, "heter far worse than homo");
         assert!(homo.makespan_s < yarn.makespan_s);
         assert!(heter.makespan_s <= homo.makespan_s * 1.05);

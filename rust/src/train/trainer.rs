@@ -2,24 +2,31 @@
 //! strictly (paper §3.1–3.3).
 //!
 //! One global mini-batch =
-//!   every EST runs fwd/bwd on its microbatch (time-sliced per executor,
-//!   gradients staged to host DRAM) → ElasticDDP aggregation (virtual-rank
-//!   ring over recorded buckets) → one fused optimizer step.
+//!   every executor runs its ESTs' fwd/bwd (time-sliced within the
+//!   executor, gradients staged to host DRAM) → ElasticDDP aggregation
+//!   (virtual-rank ring over recorded buckets) → one fused optimizer step.
 //!
 //! Elastic reconfiguration = on-demand checkpoint → re-placement →
 //! restore. With D1 the model bits never notice; with lower levels the
 //! paper's failure modes reproduce mechanically (see `determinism.rs`).
 //!
-//! Threading: executors are iterated sequentially (they time-slice a single
-//! PJRT CPU device; the simulator models wall-clock parallelism). The order
-//! of iteration must not affect results under D1 — tested.
+//! Threading: executors run **concurrently, one OS thread each**
+//! (`exec::pool`), exactly like the paper's per-GPU executor processes.
+//! Staged gradients arrive in thread-completion order and are re-indexed
+//! into a virtual-rank slot table before aggregation, so under D1 the
+//! parallel runtime is bitwise identical to `RunMode::Sequential` — tested
+//! in `tests/consistency.rs`. Per-step wall-clock is therefore the *max*
+//! over concurrent executors (`last_step_wall_s`), not the sum
+//! (`last_step_serial_s`); the planner's Eq. 1b models the same quantity.
 
 use anyhow::Result;
 
-use crate::comm::{aggregate_physical, aggregate_virtual, BucketPlan};
+use crate::comm::{aggregate_physical, aggregate_virtual, BucketPlan, SlotTable};
+use crate::data::loader::WorkItem;
 use crate::data::{DeterministicSampler, SharedDataWorkers, SyntheticCorpus};
-use crate::est::{EstContext, StagedGrads};
-use crate::exec::executor::{ExecTiming, Executor, KeyMode, Placement};
+use crate::est::EstContext;
+use crate::exec::executor::{ExecTiming, KeyMode, Placement};
+use crate::exec::pool::{self, ExecutorWorker, RunMode, StepInputs};
 use crate::runtime::Engine;
 use crate::train::determinism::Determinism;
 
@@ -39,6 +46,10 @@ pub struct TrainConfig {
     /// this models the unfixed-seed world without actually reading the
     /// clock (tests stay controllable).
     pub run_nonce: u64,
+    /// How executors are driven each mini-batch: one OS thread per
+    /// executor (default) or the sequential reference loop. Must not and
+    /// does not affect results — the bitwise tests pin it.
+    pub run_mode: RunMode,
 }
 
 impl TrainConfig {
@@ -52,6 +63,7 @@ impl TrainConfig {
             bucket_cap_bytes: crate::comm::bucket::DEFAULT_BUCKET_BYTES,
             aug_rate: 0.02,
             run_nonce: 0,
+            run_mode: RunMode::parallel(),
         }
     }
 }
@@ -70,17 +82,33 @@ pub struct TrainState {
     pub data_items: Vec<crate::data::loader::WorkItem>,
 }
 
+/// How a freshly-built worker's data pool starts: produce ahead from a
+/// step, or overlay restored queue items (D0 on-demand checkpoint).
+enum DataInit {
+    Prefill(u64),
+    Restore(Vec<WorkItem>),
+}
+
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub placement: Placement,
     pub state: TrainState,
-    sampler: DeterministicSampler,
     pub corpus: SyntheticCorpus,
-    data: SharedDataWorkers,
+    /// One Send-able worker per executor; owns the executor's EST contexts
+    /// and data queues. Rebuilt on (re)placement; contexts sync back into
+    /// `state` after every step.
+    workers: Vec<ExecutorWorker>,
+    /// microbatch size per EST, from the engine manifest
+    batch_per_est: usize,
     /// mean training loss per completed step
     pub loss_history: Vec<f32>,
-    /// timing of the last mini-batch per executor (for benches)
+    /// timing of the last mini-batch per executor slot (for benches)
     pub last_timing: Vec<ExecTiming>,
+    /// executor-phase wall-clock of the last step: max over concurrent
+    /// executors — the parallel critical path
+    pub last_step_wall_s: f64,
+    /// sum of per-executor wall-clocks — what a sequential loop would pay
+    pub last_step_serial_s: f64,
 }
 
 impl Trainer {
@@ -98,13 +126,8 @@ impl Trainer {
         let sizes: Vec<usize> = engine.manifest.params.iter().map(|p| p.size).collect();
         let bucket_plan = BucketPlan::build(&sizes, cfg.bucket_cap_bytes);
         let m = &engine.manifest.model;
-        let sampler =
-            DeterministicSampler::new(seed, cfg.dataset_size, cfg.max_p, m.batch_per_est);
         let corpus = SyntheticCorpus::new(seed ^ 0xC0, m.vocab_size, m.seq_len);
-        let ranks: Vec<usize> = (0..cfg.max_p).collect();
-        let mut data = SharedDataWorkers::new(seed, &ranks, 4, 2);
-        data.prefill(0, &ranks);
-        Ok(Trainer {
+        let mut t = Trainer {
             cfg,
             placement,
             state: TrainState {
@@ -116,55 +139,109 @@ impl Trainer {
                 bucket_plan,
                 data_items: Vec::new(),
             },
-            sampler,
             corpus,
-            data,
+            workers: Vec::new(),
+            batch_per_est: m.batch_per_est,
             loss_history: Vec::new(),
             last_timing: Vec::new(),
-        })
+            last_step_wall_s: 0.0,
+            last_step_serial_s: 0.0,
+        };
+        let data_seed = t.cfg.effective_seed();
+        t.rebuild_workers(data_seed, DataInit::Prefill(0));
+        Ok(t)
     }
 
     fn key_mode(&self) -> KeyMode {
         if self.cfg.determinism.d0 { KeyMode::Virtual } else { KeyMode::Physical }
     }
 
-    /// One global mini-batch across all executors and ESTs.
+    /// (Re)build the per-executor workers from the current placement and
+    /// checkpointable state. `data_seed`/`init` carry the determinism-level
+    /// semantics of the data-worker queues across restarts.
+    fn rebuild_workers(&mut self, data_seed: u64, init: DataInit) {
+        let seed = self.cfg.effective_seed();
+        let mut workers = Vec::with_capacity(self.placement.executors.len());
+        for (slot, spec) in self.placement.executors.iter().enumerate() {
+            let contexts: Vec<EstContext> = spec
+                .est_ranks
+                .iter()
+                .map(|&r| self.state.est_contexts[r].clone())
+                .collect();
+            let mut data = SharedDataWorkers::new(data_seed, &spec.est_ranks, 4, 2);
+            match &init {
+                DataInit::Prefill(from_step) => data.prefill(*from_step, &spec.est_ranks),
+                DataInit::Restore(items) => {
+                    let mine: Vec<WorkItem> = items
+                        .iter()
+                        .filter(|w| spec.est_ranks.contains(&w.rank))
+                        .cloned()
+                        .collect();
+                    data.restore(mine);
+                }
+            }
+            workers.push(ExecutorWorker {
+                spec: spec.clone(),
+                slot,
+                contexts,
+                sampler: DeterministicSampler::new(
+                    seed,
+                    self.cfg.dataset_size,
+                    self.cfg.max_p,
+                    self.batch_per_est,
+                ),
+                data,
+            });
+        }
+        self.workers = workers;
+    }
+
+    /// All workers' pending data-worker items, in deterministic
+    /// (step, rank) production order — the checkpoint "extra state".
+    fn checkpoint_data_items(&self) -> Vec<WorkItem> {
+        let mut out: Vec<WorkItem> =
+            self.workers.iter().flat_map(|w| w.data.checkpoint_states()).collect();
+        out.sort_by_key(|w| (w.step, w.rank));
+        out
+    }
+
+    /// One global mini-batch across all executors and ESTs: submit the
+    /// step to the executor pool, collect staged gradients in completion
+    /// order, re-index by virtual rank, aggregate, apply the fused update.
     pub fn step(&mut self, engine: &Engine) -> Result<f32> {
         let step = self.state.step;
-        let ranks: Vec<usize> = (0..self.cfg.max_p).collect();
-        self.data.prefill(step, &ranks);
         let seed = self.cfg.effective_seed();
-
-        let key_mode = self.key_mode();
-        let d2 = self.cfg.determinism.d2;
-        let aug_rate = self.cfg.aug_rate;
-        let executors = self.placement.executors.clone();
         // one device upload of the shared parameters per mini-batch; every
         // EST of every executor reuses it (paper: parameters are shared and
         // reused across EasyScaleThread switches)
         let param_bufs = engine.upload_params(&self.state.params)?;
-        let mut staged: Vec<StagedGrads> = Vec::with_capacity(self.cfg.max_p);
-        self.last_timing.clear();
-        for (slot, spec) in executors.iter().enumerate() {
-            let executor = Executor { spec: spec.clone(), slot };
-            let mut timing = ExecTiming::default();
-            let got = executor.run_minibatch(
-                engine,
-                &param_bufs,
-                &mut self.state.est_contexts,
-                &mut self.sampler,
-                &self.corpus,
-                &mut self.data,
-                seed,
-                step,
-                d2,
-                key_mode,
-                aug_rate,
-                Some(&mut timing),
-            )?;
-            self.last_timing.push(timing);
-            staged.extend(got);
+        let inp = StepInputs {
+            engine,
+            params: &param_bufs,
+            corpus: &self.corpus,
+            seed,
+            step,
+            d2: self.cfg.determinism.d2,
+            key_mode: self.key_mode(),
+            aug_rate: self.cfg.aug_rate,
+        };
+        let outs = pool::run_step(&mut self.workers, &inp, self.cfg.run_mode)?;
+
+        let n_exec = self.placement.executors.len();
+        self.last_timing = vec![ExecTiming::default(); n_exec];
+        self.last_step_wall_s = 0.0;
+        self.last_step_serial_s = 0.0;
+        let mut table = SlotTable::new(self.cfg.max_p);
+        for out in outs {
+            self.last_step_serial_s += out.wall_s;
+            self.last_step_wall_s = self.last_step_wall_s.max(out.wall_s);
+            self.last_timing[out.slot] = out.timing;
+            for sg in out.staged {
+                table.insert(sg)?;
+            }
         }
+        // virtual-rank order from here on: thread completion order is gone
+        let staged = table.into_ranked()?;
 
         let sizes: Vec<usize> =
             engine.manifest.params.iter().map(|p| p.size).collect();
@@ -187,10 +264,15 @@ impl Trainer {
         self.state.momenta = momenta;
         self.state.step += 1;
 
+        // sync EST contexts back into the checkpointable state
+        for w in &self.workers {
+            for c in &w.contexts {
+                self.state.est_contexts[c.virtual_rank] = c.clone();
+            }
+        }
+
         // deterministic loss reduction: by virtual rank order
-        let mut by_rank = staged;
-        by_rank.sort_by_key(|s| s.virtual_rank);
-        let loss = by_rank.iter().map(|s| s.loss).sum::<f32>() / by_rank.len() as f32;
+        let loss = staged.iter().map(|s| s.loss).sum::<f32>() / staged.len() as f32;
         self.loss_history.push(loss);
         Ok(loss)
     }
@@ -225,31 +307,22 @@ impl Trainer {
                 .bucket_plan
                 .rebuilt_in_arrival_order(restart ^ new_placement.n_gpus() as u64);
         }
-        if self.cfg.determinism.d0 {
+        let (data_seed, init) = if self.cfg.determinism.d0 {
             // data-worker queue states are part of the on-demand checkpoint
-            let items = self.data.checkpoint_states();
-            let ranks: Vec<usize> = (0..self.cfg.max_p).collect();
-            self.data = SharedDataWorkers::new(self.cfg.effective_seed(), &ranks, 4, 2);
-            self.data.restore(items);
+            (self.cfg.effective_seed(), DataInit::Restore(self.checkpoint_data_items()))
         } else {
             // unfixed world: prefetched batches are lost, streams reseeded
-            let ranks: Vec<usize> = (0..self.cfg.max_p).collect();
-            self.data = SharedDataWorkers::new(
-                self.cfg.effective_seed() ^ restart,
-                &ranks,
-                4,
-                2,
-            );
-            self.data.prefill(self.state.step, &ranks);
-        }
+            (self.cfg.effective_seed() ^ restart, DataInit::Prefill(self.state.step))
+        };
         self.placement = new_placement;
+        self.rebuild_workers(data_seed, init);
         Ok(())
     }
 
     /// On-demand checkpoint to disk (paper §3.2): fills the queuing-buffer
     /// extra state and persists everything `resume` needs.
     pub fn checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
-        self.state.data_items = self.data.checkpoint_states();
+        self.state.data_items = self.checkpoint_data_items();
         crate::train::Checkpoint::save(path, &self.state)
     }
 
@@ -275,15 +348,12 @@ impl Trainer {
                 .bucket_plan
                 .rebuilt_in_arrival_order(restart ^ t.placement.n_gpus() as u64);
         }
-        let ranks: Vec<usize> = (0..t.cfg.max_p).collect();
-        if t.cfg.determinism.d0 {
-            t.data = SharedDataWorkers::new(t.cfg.effective_seed(), &ranks, 4, 2);
-            t.data.restore(t.state.data_items.clone());
+        let (data_seed, init) = if t.cfg.determinism.d0 {
+            (t.cfg.effective_seed(), DataInit::Restore(t.state.data_items.clone()))
         } else {
-            t.data =
-                SharedDataWorkers::new(t.cfg.effective_seed() ^ restart, &ranks, 4, 2);
-            t.data.prefill(t.state.step, &ranks);
-        }
+            (t.cfg.effective_seed() ^ restart, DataInit::Prefill(t.state.step))
+        };
+        t.rebuild_workers(data_seed, init);
         Ok(t)
     }
 

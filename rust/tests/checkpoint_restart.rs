@@ -6,10 +6,18 @@
 use std::path::PathBuf;
 
 use easyscale::bitwise::compare_checkpoints;
-use easyscale::exec::{DeviceType, Placement};
+use easyscale::exec::{DeviceType, Placement, RunMode};
 use easyscale::runtime::Engine;
 use easyscale::train::{Determinism, TrainConfig, Trainer};
 
+/// Native build: the synthetic engine always runs. PJRT build: needs the
+/// AOT artifacts on disk, skips loudly otherwise.
+#[cfg(not(feature = "pjrt"))]
+fn tiny() -> Option<Engine> {
+    Some(Engine::synthetic("tiny").unwrap())
+}
+
+#[cfg(feature = "pjrt")]
 fn tiny() -> Option<Engine> {
     let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
     if !d.join("manifest.json").exists() {
@@ -17,6 +25,19 @@ fn tiny() -> Option<Engine> {
         return None;
     }
     Some(Engine::new(&d).unwrap())
+}
+
+/// A fresh engine "process": under pjrt, reload the artifacts; native,
+/// re-fabricate the synthetic manifest.
+fn fresh_engine() -> Engine {
+    #[cfg(feature = "pjrt")]
+    {
+        Engine::new(&PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny")).unwrap()
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        Engine::synthetic("tiny").unwrap()
+    }
 }
 
 fn tmp(name: &str) -> PathBuf {
@@ -46,10 +67,7 @@ fn resume_reproduces_uninterrupted_run_bitwise() {
     first.checkpoint(&ckpt).unwrap();
     drop(first);
 
-    let engine2 = Engine::new(
-        &PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny"),
-    )
-    .unwrap();
+    let engine2 = fresh_engine();
     let mut resumed =
         Trainer::resume(&engine2, cfg, Placement::homogeneous(V, 2, 4), &ckpt).unwrap();
     assert_eq!(resumed.state.step, 4);
@@ -104,6 +122,50 @@ fn d0_resume_drifts_but_d1_resume_does_not() {
         } else {
             assert_ne!(resumed.param_fingerprint(), full.param_fingerprint(), "{det}");
         }
+    }
+}
+
+/// Elastic reconfiguration under the *parallel* runtime: checkpoint a
+/// parallel run, resume it under different placements AND different
+/// executor-thread counts (sequential, capped, unbounded), and require a
+/// bitwise-identical parameter digest to the uninterrupted sequential run.
+#[test]
+fn resume_across_thread_counts_is_bitwise_identical() {
+    let Some(engine) = tiny() else { return };
+    // D1+D2 so the heterogeneous resume placement keeps the det kernel
+    let cfg = |mode: RunMode| TrainConfig {
+        determinism: Determinism::D1_D2,
+        run_mode: mode,
+        ..TrainConfig::new(4)
+    };
+
+    // uninterrupted sequential reference
+    let mut full =
+        Trainer::new(&engine, cfg(RunMode::Sequential), Placement::homogeneous(V, 4, 4)).unwrap();
+    full.run(&engine, 8).unwrap();
+
+    // parallel run, checkpointed mid-training
+    let ckpt = tmp("threads.ckpt");
+    let mut first =
+        Trainer::new(&engine, cfg(RunMode::parallel()), Placement::homogeneous(V, 4, 4)).unwrap();
+    first.run(&engine, 4).unwrap();
+    first.checkpoint(&ckpt).unwrap();
+    drop(first);
+
+    let resumes = [
+        (RunMode::Sequential, Placement::homogeneous(V, 2, 4)),
+        (RunMode::Parallel { max_threads: 2 }, Placement::homogeneous(V, 3, 4)),
+        (RunMode::parallel(), Placement::heterogeneous(&[(V, 2), (DeviceType::P100, 1), (DeviceType::P100, 1)])),
+    ];
+    for (mode, placement) in resumes {
+        let engine2 = fresh_engine();
+        let mut resumed = Trainer::resume(&engine2, cfg(mode), placement, &ckpt).unwrap();
+        resumed.run(&engine2, 4).unwrap();
+        assert_eq!(
+            resumed.param_fingerprint(),
+            full.param_fingerprint(),
+            "resume under {mode:?} must be bitwise-invisible"
+        );
     }
 }
 

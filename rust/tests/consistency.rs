@@ -8,14 +8,20 @@
 //! Stage layout mirrors the paper: stage0 = 4 "V100", stage1 = 2 "V100"
 //! (elasticity), stage2 = 1 "V100" + 2 "P100" (heterogeneity).
 
-use std::path::PathBuf;
-
-use easyscale::exec::{DeviceType, Placement};
+use easyscale::exec::{DeviceType, Placement, RunMode};
 use easyscale::runtime::Engine;
 use easyscale::train::{Determinism, TrainConfig, Trainer};
 
+/// Native build: the synthetic engine always runs. PJRT build: needs the
+/// AOT artifacts on disk, skips loudly otherwise.
+#[cfg(not(feature = "pjrt"))]
 fn tiny() -> Option<Engine> {
-    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    Some(Engine::synthetic("tiny").unwrap())
+}
+
+#[cfg(feature = "pjrt")]
+fn tiny() -> Option<Engine> {
+    let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
     if !d.join("manifest.json").exists() {
         eprintln!("SKIP: artifacts/tiny not built (run `make artifacts`)");
         return None;
@@ -153,6 +159,60 @@ fn naive_elastic_frameworks_depend_on_gpu_count() {
         t.param_fingerprint()
     };
     assert_ne!(mk(4), mk(2), "physical aggregation must depend on placement");
+}
+
+/// The tentpole property: the thread-per-executor runtime must be bitwise
+/// identical to the sequential reference loop — thread completion order
+/// must never reach the bits. Homogeneous and heterogeneous placements,
+/// several thread caps.
+#[test]
+fn parallel_runtime_matches_sequential_bitwise() {
+    let Some(engine) = tiny() else { return };
+    let placements = [
+        Placement::homogeneous(V, 2, 4),
+        Placement::homogeneous(V, 4, 4),
+        Placement::heterogeneous(&[(V, 2), (P, 1), (P, 1)]),
+    ];
+    for placement in placements {
+        let run = |mode: RunMode| {
+            let tc = TrainConfig { run_mode: mode, ..cfg(Determinism::D1_D2) };
+            let mut t = Trainer::new(&engine, tc, placement.clone()).unwrap();
+            t.run(&engine, 5).unwrap();
+            (t.param_fingerprint(), t.loss_history.clone())
+        };
+        let (seq_fp, seq_loss) = run(RunMode::Sequential);
+        for mode in [RunMode::parallel(), RunMode::Parallel { max_threads: 2 }] {
+            let (par_fp, par_loss) = run(mode);
+            assert_eq!(par_fp, seq_fp, "{placement:?} under {mode:?} drifted");
+            for (a, b) in par_loss.iter().zip(&seq_loss) {
+                assert_eq!(a.to_bits(), b.to_bits(), "loss curve drifted under {mode:?}");
+            }
+        }
+    }
+}
+
+/// Parallel execution composed with mid-training elastic reconfiguration:
+/// scale 4 GPUs -> 2 -> heterogeneous, all on the parallel runtime, and
+/// compare against the fully sequential version of the same schedule.
+#[test]
+fn parallel_runtime_survives_reconfiguration_bitwise() {
+    let Some(engine) = tiny() else { return };
+    let staged = |mode: RunMode| {
+        let tc = TrainConfig { run_mode: mode, ..cfg(Determinism::D1_D2) };
+        let mut t = Trainer::new(&engine, tc, Placement::homogeneous(V, 4, 4)).unwrap();
+        t.run(&engine, 3).unwrap();
+        t.reconfigure(Placement::homogeneous(V, 2, 4)).unwrap();
+        t.run(&engine, 3).unwrap();
+        t.reconfigure(Placement::heterogeneous(&[(V, 2), (P, 1), (P, 1)])).unwrap();
+        t.run(&engine, 3).unwrap();
+        t.param_fingerprint()
+    };
+    let seq = staged(RunMode::Sequential);
+    let par = staged(RunMode::parallel());
+    assert_eq!(par, seq, "parallel elastic schedule must match sequential bit for bit");
+    // and both equal straight DDP on fixed GPUs (the paper's claim)
+    let (ddp, _) = run_ddp(&engine, Determinism::D1_D2, 9);
+    assert_eq!(par, ddp);
 }
 
 #[test]
