@@ -6,22 +6,31 @@
 //!   trace            run the Fig. 14/15 trace experiment
 //!   serving          run the Fig. 16 serving-colocation experiment
 //!   bitwise-compare  diff two checkpoints with the profiling tool
+//!
+//! `train` is a thin adapter over the elastic session API
+//! ([`crate::train::SessionBuilder`]): flags parse into a [`TrainConfig`],
+//! an initial [`Placement`], and a [`ResourceDirector`]
+//! (`--director static|aimaster`), and control passes to
+//! [`crate::train::ElasticSession::run`]. Everything the CLI can do, a
+//! library user can do through the same builder.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
-use crate::exec::devices::DeviceType;
-use crate::exec::executor::{ExecutorSpec, Placement};
+use crate::exec::executor::Placement;
 use crate::exec::pool::RunMode;
 use crate::metrics::MetricSink;
 use crate::model::workload::Workload;
 use crate::runtime::Engine;
-use crate::sched::plan::{enumerate_configs, GpuVector, JobSpec};
+use crate::sched::director::{
+    parse_gpu_vector, AiMasterDirector, ResourceDirector, StaticScheduleDirector,
+};
+use crate::sched::plan::{enumerate_configs, JobSpec};
 use crate::sim::serving::{run_serving_sim, ServingSimConfig};
-use crate::sim::simulator::{ElasticSim, SchedulerKind};
+use crate::sim::simulator::{rate_scale_from_observation, ElasticSim, SchedulerKind};
 use crate::sim::trace::gen_trace;
-use crate::train::{Determinism, TrainConfig, Trainer};
+use crate::train::{Determinism, SessionBuilder, TrainConfig};
 use crate::util::argparse::Args;
 
 pub const USAGE: &str = "easyscale — accuracy-consistent elastic training (EasyScale reproduction)
@@ -34,11 +43,15 @@ SUBCOMMANDS
     --preset NAME     tiny|small (synthetic), or any built artifacts/ preset (default: small)
     --steps N         global mini-batches (default: 300)
     --max-p N         logical workers / EasyScaleThreads (default: 4)
-    --gpus SPEC       e.g. 'v100:2' or 'v100:1,p100:2' (default: v100:2)
+    --gpus SPEC       initial placement, e.g. 'v100:2' or 'v100:1,p100:2' (default: v100:2)
     --determinism L   none|d0|d1|d0+d2|d1+d2 (default: d1)
     --lr F            learning rate (default: 0.05)
     --seed N          job seed (default: 42)
-    --schedule S      elastic schedule 'step:spec;step:spec' e.g. '100:v100:1'
+    --director D      static|aimaster — who drives elasticity (default: static)
+    --schedule S      [static] 'step:spec;step:spec' e.g. '100:v100:1'
+    --avail SPEC      [aimaster] free GPUs beyond --gpus (default: v100:2)
+    --workload NAME   [aimaster] Table-1 profile bootstrapping the planner (default: Bert)
+    --decide-every N  [aimaster] steps between scheduling decisions (default: 20)
     --sequential      run executors sequentially (bitwise reference mode)
     --threads N       cap concurrent executor threads (default 0 = one per executor)
     --log-every N     print loss every N steps (default: 10)
@@ -51,6 +64,7 @@ SUBCOMMANDS
     --d2              plan with hardware-agnostic kernels
   trace             Fig. 14/15 trace experiment
     --jobs N --interarrival S --seed N --scale F --out CSV
+    --rate-scale F    calibrate sim step rates from a real run (default: 1.0)
   serving           Fig. 16 serving-colocation experiment
     --out CSV
   bitwise-compare A B   compare two checkpoints bit by bit
@@ -79,56 +93,14 @@ pub fn main_with(argv: Vec<String>) -> Result<()> {
     }
 }
 
-/// Parse 'v100:2,p100:1' into GPU counts.
-pub fn parse_gpus(spec: &str) -> Result<Vec<(DeviceType, usize)>> {
-    let mut out = Vec::new();
-    for part in spec.split(',') {
-        let part = part.trim();
-        if part.is_empty() {
-            continue;
-        }
-        let (ty, n) = part
-            .split_once(':')
-            .ok_or_else(|| anyhow::anyhow!("bad gpu spec '{part}' (want type:count)"))?;
-        let dev = DeviceType::parse(ty)?;
-        let n: usize = n.parse().with_context(|| format!("bad count in '{part}'"))?;
-        out.push((dev, n));
-    }
-    if out.is_empty() {
-        bail!("empty gpu spec");
-    }
-    Ok(out)
-}
+/// Parse 'v100:2,p100:1' into GPU counts (re-exported for compatibility;
+/// lives with the device model in [`crate::exec::devices`]).
+pub use crate::exec::devices::parse_gpus;
 
-/// Round-robin maxP EST ranks over the listed GPUs.
+/// Round-robin maxP EST ranks over the listed GPUs (thin alias of
+/// [`Placement::from_spec`], kept for callers of the old CLI helper).
 pub fn placement_from_spec(spec: &str, max_p: usize) -> Result<Placement> {
-    let gpus = parse_gpus(spec)?;
-    let mut devices = Vec::new();
-    for (dev, n) in gpus {
-        for _ in 0..n {
-            devices.push(dev);
-        }
-    }
-    if devices.len() > max_p {
-        bail!("more GPUs ({}) than ESTs ({max_p})", devices.len());
-    }
-    let mut executors: Vec<ExecutorSpec> = devices
-        .into_iter()
-        .map(|device| ExecutorSpec { device, est_ranks: Vec::new() })
-        .collect();
-    for r in 0..max_p {
-        let n = executors.len();
-        executors[r % n].est_ranks.push(r);
-    }
-    Ok(Placement { executors })
-}
-
-fn gpu_vector(spec: &str) -> Result<GpuVector> {
-    let mut v = [0usize; 3];
-    for (dev, n) in parse_gpus(spec)? {
-        v[dev.index()] += n;
-    }
-    Ok(v)
+    Placement::from_spec(spec, max_p)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -143,6 +115,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let eval_every = args.usize_or("eval-every", 0)? as u64;
 
     let run_mode = if args.flag("sequential") {
+        if args.get("threads").is_some() {
+            bail!("--threads only applies to the parallel runtime (drop --sequential)");
+        }
         RunMode::Sequential
     } else {
         RunMode::Parallel { max_threads: args.usize_or("threads", 0)? }
@@ -155,62 +130,91 @@ fn cmd_train(args: &Args) -> Result<()> {
     let placement = placement_from_spec(&args.str_or("gpus", "v100:2"), max_p)?;
     let cfg =
         TrainConfig { seed, max_p, lr, determinism: det, run_mode, ..TrainConfig::new(max_p) };
-    let mut trainer = Trainer::new(&engine, cfg, placement)?;
 
-    // elastic schedule: "100:v100:1;200:v100:1,p100:2"
-    let mut schedule: Vec<(u64, String)> = Vec::new();
-    if let Some(s) = args.get("schedule") {
-        for item in s.split(';') {
-            let (step, spec) = item
-                .split_once(':')
-                .ok_or_else(|| anyhow::anyhow!("bad schedule item '{item}'"))?;
-            schedule.push((step.parse()?, spec.to_string()));
+    // who drives elasticity: a fixed --schedule, or the AIMaster Fig. 9
+    // loop planning against --avail free GPUs
+    let director_kind = args.str_or("director", "static");
+    let mut aimaster_spec: Option<JobSpec> = None;
+    let director: Box<dyn ResourceDirector> = match director_kind.as_str() {
+        "static" => {
+            for f in ["avail", "workload", "decide-every"] {
+                if args.get(f).is_some() {
+                    bail!("--{f} only applies to --director aimaster");
+                }
+            }
+            Box::new(StaticScheduleDirector::parse(
+                &args.str_or("schedule", ""),
+                max_p,
+                steps,
+            )?)
         }
-        schedule.sort_by_key(|s| s.0);
-    }
+        "aimaster" => {
+            if args.get("schedule").is_some() {
+                bail!("--schedule only applies to --director static");
+            }
+            let name = args.str_or("workload", "Bert");
+            let workload = Workload::by_name(&name)
+                .ok_or_else(|| anyhow::anyhow!("unknown workload '{name}'"))?;
+            let avail = parse_gpu_vector(&args.str_or("avail", "v100:2"))?;
+            let decide_every = args.usize_or("decide-every", 20)? as u64;
+            let d = AiMasterDirector::new(workload, det, &placement, avail, decide_every);
+            aimaster_spec = Some(d.job_spec().clone());
+            Box::new(d)
+        }
+        other => bail!("unknown director '{other}' (static|aimaster)"),
+    };
 
-    let mut sink = MetricSink::new();
-    let t0 = std::time::Instant::now();
-    for step in 0..steps {
-        if let Some(pos) = schedule.iter().position(|(s, _)| *s == step) {
-            let (_, spec) = schedule.remove(pos);
-            let p = placement_from_spec(&spec, max_p)?;
-            crate::info!("train", "step {step}: reconfiguring to {spec}");
-            trainer.reconfigure(p)?;
-        }
-        let loss = trainer.step(&engine)?;
-        sink.push("train_loss", step as f64, loss as f64);
-        if log_every > 0 && step % log_every == 0 {
-            crate::info!("train", "step {step:5} loss {loss:.4}");
-        }
-        if eval_every > 0 && step > 0 && step % eval_every == 0 {
-            let ev = trainer.eval(&engine)?;
-            sink.push("eval_loss", step as f64, ev as f64);
-            crate::info!("train", "step {step:5} EVAL loss {ev:.4}");
-        }
+    let final_ckpt = args.get("checkpoint");
+    let mut builder = SessionBuilder::new(&engine, cfg, placement)
+        .steps(steps)
+        .eval_every(eval_every)
+        .log_every(log_every)
+        .director(director);
+    if let Some(ck) = final_ckpt {
+        builder = builder.final_checkpoint(PathBuf::from(ck));
     }
-    let dt = t0.elapsed().as_secs_f64();
-    let final_loss = trainer.loss_history.last().copied().unwrap_or(f32::NAN);
-    let h = trainer.corpus.entropy_rate();
+    let mut session = builder.build()?;
+    let report = session.run()?;
+
+    let h = session.trainer.corpus.entropy_rate();
     println!(
-        "trained {steps} steps in {dt:.1}s ({:.2} steps/s) | first loss {:.4} -> final {:.4} | corpus entropy floor {h:.4} | fingerprint {:016x}",
-        steps as f64 / dt,
-        trainer.loss_history.first().copied().unwrap_or(f32::NAN),
-        final_loss,
-        trainer.param_fingerprint(),
+        "trained {} steps in {:.1}s ({:.2} steps/s) | first loss {:.4} -> final {:.4} \
+         | corpus entropy floor {h:.4} | fingerprint {:016x}",
+        report.steps_run,
+        report.wall_s,
+        report.observed_rate,
+        report.first_loss,
+        report.final_loss,
+        report.fingerprint,
     );
     println!(
-        "executor wall-clock (last step): {:.2} ms critical path vs {:.2} ms serial sum ({:.2}x concurrency)",
-        trainer.last_step_wall_s * 1e3,
-        trainer.last_step_serial_s * 1e3,
-        trainer.last_step_serial_s / trainer.last_step_wall_s.max(1e-12),
+        "director {}: {} reconfiguration(s) | executor wall-clock (last step): \
+         {:.2} ms critical path vs {:.2} ms serial sum ({:.2}x concurrency)",
+        session.director_name(),
+        report.reconfigs,
+        session.trainer.last_step_wall_s * 1e3,
+        session.trainer.last_step_serial_s * 1e3,
+        session.trainer.last_step_serial_s / session.trainer.last_step_wall_s.max(1e-12),
     );
+    // calibrate on the last mini-batch's executor-phase rate under the
+    // GPUs the master actually holds: the whole-run average would fold in
+    // the slow pre-scale-out phase and bias the scale low. held_gpus (not
+    // placement.device_counts) stays correct for multi-executor-per-GPU
+    // plans.
+    if let (Some(spec), Some(nums)) = (aimaster_spec, session.director().held_gpus()) {
+        let rate = session.trainer.last_step_rate();
+        if let Some(scale) = rate_scale_from_observation(&spec, nums, rate) {
+            println!(
+                "sim calibration: observed {rate:.2} steps/s on {nums:?} \
+                 -> `easyscale trace --rate-scale {scale:.4}`"
+            );
+        }
+    }
     if let Some(csv) = args.get("loss-csv") {
-        sink.write_csv(Path::new(csv))?;
+        session.sink.write_csv(Path::new(csv))?;
         println!("loss curve written to {csv}");
     }
-    if let Some(ck) = args.get("checkpoint") {
-        trainer.checkpoint(Path::new(ck))?;
+    if let Some(ck) = final_ckpt {
         println!("checkpoint written to {ck}");
     }
     Ok(())
@@ -221,7 +225,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let workload = Workload::by_name(&name)
         .ok_or_else(|| anyhow::anyhow!("unknown workload '{name}'"))?;
     let max_p = args.usize_or("max-p", 8)?;
-    let nums = gpu_vector(&args.str_or("gpus", "v100:1,t4:1"))?;
+    let nums = parse_gpu_vector(&args.str_or("gpus", "v100:1,t4:1"))?;
     let mut job = JobSpec::new(workload, max_p);
     job.d2 = args.flag("d2");
     let configs = enumerate_configs(&job, nums);
@@ -250,11 +254,17 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let inter = args.f64_or("interarrival", 60.0)?;
     let seed = args.u64_or("seed", 11)?;
     let scale = args.f64_or("scale", 1.0)?;
+    let rate_scale = args.f64_or("rate-scale", 1.0)?;
+    if !rate_scale.is_finite() || rate_scale <= 0.0 {
+        bail!("--rate-scale must be a positive finite number");
+    }
     let mut trace = gen_trace(seed, n, inter);
     for j in trace.iter_mut() {
         j.duration_s *= scale;
     }
-    println!("trace: {n} jobs, mean interarrival {inter}s, duration scale {scale}");
+    println!(
+        "trace: {n} jobs, mean interarrival {inter}s, duration scale {scale}, rate scale {rate_scale}"
+    );
     println!("{:>16} | {:>12} | {:>12} | {:>10} | {:>10}", "scheduler", "avg JCT (s)", "makespan (s)", "reconfigs", "mean GPUs");
     let mut results = Vec::new();
     for kind in [
@@ -262,7 +272,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
         SchedulerKind::EasyScaleHomo,
         SchedulerKind::EasyScaleHeter,
     ] {
-        let out = ElasticSim::new(kind).run(&trace);
+        let out = ElasticSim::new(kind).with_rate_scale(rate_scale).run(&trace);
         println!(
             "{:>16} | {:>12.1} | {:>12.1} | {:>10} | {:>10.1}",
             kind.name(),
@@ -353,6 +363,11 @@ fn cmd_bitwise(args: &Args) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::devices::DeviceType;
+
+    fn argv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
 
     #[test]
     fn parse_gpu_specs() {
@@ -362,6 +377,10 @@ mod tests {
         assert!(parse_gpus("h100:1").is_err());
         assert!(parse_gpus("").is_err());
         assert!(parse_gpus("v100").is_err());
+        // whitespace and empty parts are tolerated; an all-empty spec is not
+        assert_eq!(parse_gpus(" v100:1 , ,t4:3 ").unwrap().len(), 2);
+        assert!(parse_gpus(" , ,").is_err());
+        assert!(parse_gpus("v100:two").is_err());
     }
 
     #[test]
@@ -371,17 +390,52 @@ mod tests {
         assert_eq!(p.n_gpus(), 2);
         assert_eq!(p.executors[0].est_ranks, vec![0, 2, 4]);
         assert_eq!(p.executors[1].est_ranks, vec![1, 3]);
-        assert!(placement_from_spec("v100:8", 4).is_err());
+        assert!(placement_from_spec("v100:8", 4).is_err(), "more GPUs than ESTs");
+        assert!(placement_from_spec("", 4).is_err());
+        assert!(placement_from_spec("v100:0", 4).is_err(), "zero GPUs");
     }
 
     #[test]
     fn gpu_vector_aggregates() {
-        assert_eq!(gpu_vector("v100:1,t4:2,v100:1").unwrap(), [2, 0, 2]);
+        assert_eq!(parse_gpu_vector("v100:1,t4:2,v100:1").unwrap(), [2, 0, 2]);
     }
 
     #[test]
     fn unknown_subcommand_errors() {
         assert!(main_with(vec!["frobnicate".into()]).is_err());
         assert!(main_with(vec!["--help".into()]).is_ok());
+    }
+
+    #[test]
+    fn train_rejects_bad_director_flags() {
+        assert!(main_with(argv(&[
+            "train", "--preset", "tiny", "--steps", "2", "--director", "nope"
+        ]))
+        .is_err());
+        // --schedule belongs to the static director
+        assert!(main_with(argv(&[
+            "train", "--preset", "tiny", "--steps", "2", "--director", "aimaster",
+            "--schedule", "1:v100:1"
+        ]))
+        .is_err());
+    }
+
+    /// End-to-end smoke over the session API: a static schedule with two
+    /// same-step entries (both must apply) and an AIMaster-directed run.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn train_smoke_static_and_aimaster() {
+        assert!(main_with(argv(&[
+            "train", "--preset", "tiny", "--steps", "6", "--max-p", "4",
+            "--gpus", "v100:2", "--schedule", "2:v100:1;2:v100:2;99:v100:1",
+            "--log-every", "0", "--sequential",
+        ]))
+        .is_ok());
+        assert!(main_with(argv(&[
+            "train", "--preset", "tiny", "--steps", "8", "--max-p", "4",
+            "--gpus", "v100:1", "--director", "aimaster", "--avail", "v100:3",
+            "--decide-every", "2", "--log-every", "0", "--sequential",
+        ]))
+        .is_ok());
     }
 }

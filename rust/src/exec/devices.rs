@@ -77,6 +77,29 @@ impl std::fmt::Display for DeviceType {
     }
 }
 
+/// Parse `'v100:2,p100:1'` into per-type GPU counts. Empty parts between
+/// commas are tolerated; an entirely empty spec is an error.
+pub fn parse_gpus(spec: &str) -> Result<Vec<(DeviceType, usize)>> {
+    use anyhow::Context;
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (ty, n) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("bad gpu spec '{part}' (want type:count)"))?;
+        let dev = DeviceType::parse(ty.trim())?;
+        let n: usize = n.trim().parse().with_context(|| format!("bad count in '{part}'"))?;
+        out.push((dev, n));
+    }
+    if out.is_empty() {
+        bail!("empty gpu spec");
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -48,8 +48,48 @@ impl Placement {
         Placement { executors }
     }
 
+    /// Parse `'v100:2,p100:1'` and round-robin `max_p` EST ranks over the
+    /// listed GPUs — the CLI's `--gpus` lowering.
+    pub fn from_spec(spec: &str, max_p: usize) -> Result<Placement> {
+        let mut devices = Vec::new();
+        for (dev, n) in super::devices::parse_gpus(spec)? {
+            for _ in 0..n {
+                devices.push(dev);
+            }
+        }
+        if devices.is_empty() {
+            anyhow::bail!("gpu spec '{spec}' lists zero GPUs");
+        }
+        if devices.len() > max_p {
+            anyhow::bail!("more GPUs ({}) than ESTs ({max_p})", devices.len());
+        }
+        let mut executors: Vec<ExecutorSpec> = devices
+            .into_iter()
+            .map(|device| ExecutorSpec { device, est_ranks: Vec::new() })
+            .collect();
+        let n = executors.len();
+        for r in 0..max_p {
+            executors[r % n].est_ranks.push(r);
+        }
+        Ok(Placement { executors })
+    }
+
     pub fn max_p(&self) -> usize {
         self.executors.iter().map(|e| e.est_ranks.len()).sum()
+    }
+
+    /// Executors held per device type, indexed like the planner's
+    /// `GpuVector`. Equals GPUs held for one-executor-per-GPU placements
+    /// (everything `from_spec`/`homogeneous`/`heterogeneous` build); a
+    /// multi-executor-per-GPU plan lowers to several executors per device,
+    /// so GPU accounting must then come from the planner side (e.g.
+    /// `ResourceDirector::held_gpus`), not from the placement.
+    pub fn device_counts(&self) -> [usize; 3] {
+        let mut v = [0usize; 3];
+        for e in &self.executors {
+            v[e.device.index()] += 1;
+        }
+        v
     }
 
     pub fn n_gpus(&self) -> usize {
@@ -134,6 +174,29 @@ mod tests {
         assert_eq!(p.max_p(), 4);
         assert_eq!(p.executors[0].est_ranks, vec![0, 1]);
         assert_eq!(p.executors[2].est_ranks, vec![3]);
+    }
+
+    #[test]
+    fn from_spec_round_robins_and_counts_devices() {
+        let p = Placement::from_spec("v100:1,t4:1", 5).unwrap();
+        p.validate().unwrap();
+        assert_eq!(p.executors[0].est_ranks, vec![0, 2, 4]);
+        assert_eq!(p.executors[1].est_ranks, vec![1, 3]);
+        assert_eq!(p.device_counts(), [1, 0, 1]);
+        assert_eq!(Placement::homogeneous(DeviceType::P100, 3, 6).device_counts(), [0, 3, 0]);
+    }
+
+    #[test]
+    fn from_spec_rejects_degenerate_specs() {
+        assert!(Placement::from_spec("", 4).is_err());
+        assert!(Placement::from_spec("   ", 4).is_err());
+        assert!(Placement::from_spec("v100:0", 4).is_err(), "zero GPUs must not panic");
+        assert!(Placement::from_spec("v100:0,t4:0", 4).is_err());
+        assert!(Placement::from_spec("v100:8", 4).is_err(), "more GPUs than ESTs");
+        assert!(Placement::from_spec("h100:1", 4).is_err());
+        // whitespace around parts and separators is tolerated
+        let p = Placement::from_spec("  v100:1 ,  p100:1  ", 2).unwrap();
+        assert_eq!(p.device_counts(), [1, 1, 0]);
     }
 
     #[test]

@@ -16,6 +16,16 @@
 //!   and a discrete-event heterogeneous-cluster simulator for the paper's
 //!   trace and production experiments.
 //!
+//! Jobs are driven through the **elastic session API**: a
+//! [`train::SessionBuilder`] wires an engine, a [`train::TrainConfig`] and
+//! an initial [`exec::Placement`] to a [`sched::ResourceDirector`] — the
+//! control plane that is consulted between mini-batches and answers with
+//! typed [`sched::ElasticEvent`]s (reconfigure/checkpoint/eval/stop).
+//! [`sched::AiMasterDirector`] closes the paper's Fig. 9 loop against a
+//! real trainer: observed throughput calibrates the waste model, scale-out
+//! proposals are planned over free GPUs, and slowdowns fall back. The CLI's
+//! `train` subcommand is a thin adapter over this builder.
+//!
 //! Python never runs on the request path: with `--features pjrt` the
 //! binary loads `artifacts/` via the PJRT CPU client (`xla` crate); the
 //! default build uses the pure-Rust native reference engine

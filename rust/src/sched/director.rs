@@ -1,0 +1,628 @@
+//! Resource directors — the job-control side of the elastic session API.
+//!
+//! A [`ResourceDirector`] is consulted by [`crate::train::ElasticSession`]
+//! between global mini-batches and answers with a stream of typed
+//! [`ElasticEvent`]s: reconfigure onto a new placement, checkpoint, eval,
+//! stop, or just continue. This is the seam the paper's §3.2 decoupling
+//! claim describes: the training procedure (the `Trainer`) never knows *why*
+//! its resources change, and the scheduling policy never touches model
+//! state.
+//!
+//! Three directors ship:
+//!
+//! * [`StaticScheduleDirector`] — a fixed `step -> placement` schedule (the
+//!   CLI's `--schedule` string). Same-step entries all apply, in order;
+//!   entries beyond the step budget are warned about at parse time.
+//! * [`AiMasterDirector`] — the paper's intra-job scheduler loop (§3.4.2,
+//!   Fig. 9) driving a *real* trainer: observed throughput feeds
+//!   [`AiMaster::observe`], scale-out proposals are evaluated against a
+//!   [`GpuVector`] availability model, the chosen [`PlanConfig`] is lowered
+//!   to a concrete [`Placement`], and a post-reconfiguration slowdown
+//!   triggers [`AiMaster::should_fallback`] back to the previous resources.
+//! * [`ScriptedDirector`] — an explicit `(step, event)` script, for tests
+//!   and fault-injection scenarios.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::exec::devices::{parse_gpus, DeviceType, DEVICE_TYPES};
+use crate::exec::executor::{ExecutorSpec, Placement};
+use crate::model::workload::Workload;
+use crate::train::determinism::Determinism;
+
+use super::aimaster::AiMaster;
+use super::plan::{GpuVector, JobSpec, PlanConfig};
+
+/// What a director can ask the session to do before the next mini-batch.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ElasticEvent {
+    /// No resource action; run the next mini-batch as placed.
+    Continue,
+    /// Elastic reconfiguration onto a new placement (on-demand checkpoint →
+    /// re-placement → restore, paper §3.2).
+    Reconfigure(Placement),
+    /// Write an on-demand checkpoint to the given path.
+    Checkpoint(PathBuf),
+    /// Run a held-out evaluation pass.
+    Eval,
+    /// End the session before the step budget is exhausted.
+    Stop,
+}
+
+/// What the session tells a director about the job between mini-batches.
+#[derive(Debug)]
+pub struct StepObservation<'a> {
+    /// Global step about to run (== mini-batches completed so far).
+    pub step: u64,
+    /// The session's step budget (absolute global-step target).
+    pub steps_total: u64,
+    /// Training loss of the previous mini-batch (NaN before the first).
+    pub loss: f32,
+    /// Executor-phase wall-clock of the previous mini-batch, seconds
+    /// (0 before the first) — the observed `1/step_rate`.
+    pub wall_s: f64,
+    /// Current placement of the job.
+    pub placement: &'a Placement,
+    /// Reconfigurations applied so far in this session.
+    pub reconfigs: u64,
+}
+
+/// The intra-job control plane: consulted between every two mini-batches,
+/// returns the events to apply before the next one runs.
+pub trait ResourceDirector {
+    fn name(&self) -> &'static str;
+
+    /// Decide what happens before step `obs.step` runs. Events apply in
+    /// returned order; an empty vector means [`ElasticEvent::Continue`].
+    fn direct(&mut self, obs: &StepObservation<'_>) -> Vec<ElasticEvent>;
+
+    /// GPUs per device type this director believes the job holds, when it
+    /// tracks an allocation (directors that merely replay placements
+    /// return `None`). Unlike [`Placement::device_counts`], this stays
+    /// correct for multi-executor-per-GPU configurations.
+    fn held_gpus(&self) -> Option<GpuVector> {
+        None
+    }
+}
+
+/// Lower a planner configuration (Eq. 1's `<nums, executors, threads>`) to
+/// a concrete placement: one executor per (GPU, executor) pair, EST ranks
+/// round-robined across executors up to each executor's per-type EST share.
+/// Surplus CU capacity (the over-provisioning term of Eq. 1c) leaves
+/// trailing executors empty; those are dropped from the placement.
+pub fn placement_from_config(config: &PlanConfig, max_p: usize) -> Result<Placement> {
+    let mut caps: Vec<(DeviceType, usize)> = Vec::new();
+    for (i, dev) in DEVICE_TYPES.iter().enumerate() {
+        for _ in 0..config.nums[i] * config.executors[i] {
+            caps.push((*dev, config.threads[i]));
+        }
+    }
+    let total: usize = caps.iter().map(|c| c.1).sum();
+    ensure!(
+        total >= max_p,
+        "configuration hosts {total} CUs, cannot place {max_p} ESTs"
+    );
+    let mut ranks: Vec<Vec<usize>> = vec![Vec::new(); caps.len()];
+    let mut next = 0usize;
+    while next < max_p {
+        let before = next;
+        for (j, &(_, cap)) in caps.iter().enumerate() {
+            if next < max_p && ranks[j].len() < cap {
+                ranks[j].push(next);
+                next += 1;
+            }
+        }
+        ensure!(next > before, "no executor can host EST rank {next}");
+    }
+    let executors: Vec<ExecutorSpec> = caps
+        .iter()
+        .zip(ranks)
+        .filter(|(_, r)| !r.is_empty())
+        .map(|(&(device, _), est_ranks)| ExecutorSpec { device, est_ranks })
+        .collect();
+    let placement = Placement { executors };
+    placement.validate()?;
+    Ok(placement)
+}
+
+/// A fixed elastic schedule: reconfigure at the listed steps. Subsumes the
+/// CLI's `--schedule 'step:spec;step:spec'` string.
+pub struct StaticScheduleDirector {
+    /// Sorted by step (stable, so same-step entries keep their written
+    /// order) and consumed from the front.
+    entries: VecDeque<(u64, Placement)>,
+}
+
+impl StaticScheduleDirector {
+    /// No reconfigurations — the fixed-placement session.
+    pub fn empty() -> StaticScheduleDirector {
+        StaticScheduleDirector { entries: VecDeque::new() }
+    }
+
+    pub fn new(mut entries: Vec<(u64, Placement)>) -> StaticScheduleDirector {
+        entries.sort_by_key(|e| e.0);
+        StaticScheduleDirector { entries: entries.into() }
+    }
+
+    /// Parse `'100:v100:1;200:v100:1,p100:2'`. All entries at the same step
+    /// apply, in written order; entries at or beyond `total_steps` can
+    /// never fire and are warned about (they used to be silently dropped).
+    pub fn parse(spec: &str, max_p: usize, total_steps: u64) -> Result<StaticScheduleDirector> {
+        let mut entries = Vec::new();
+        for item in spec.split(';') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (step, pspec) = item
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad schedule item '{item}' (want step:gpuspec)"))?;
+            let step: u64 = step
+                .trim()
+                .parse()
+                .with_context(|| format!("bad step in schedule item '{item}'"))?;
+            if step >= total_steps {
+                crate::warnlog!(
+                    "schedule",
+                    "entry '{item}' is unreachable: step {step} >= --steps {total_steps}"
+                );
+            }
+            entries.push((step, Placement::from_spec(pspec, max_p)?));
+        }
+        Ok(StaticScheduleDirector::new(entries))
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+impl ResourceDirector for StaticScheduleDirector {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn direct(&mut self, obs: &StepObservation<'_>) -> Vec<ElasticEvent> {
+        // past-due entries (a session resumed beyond them): the schedule's
+        // semantics is "placement in effect at step S = last entry <= S",
+        // so the latest one still applies and only superseded ones drop
+        let mut past_due: Option<(u64, Placement)> = None;
+        let mut out = Vec::new();
+        while self.entries.front().is_some_and(|e| e.0 <= obs.step) {
+            let (step, placement) = self.entries.pop_front().unwrap();
+            if step < obs.step {
+                past_due = Some((step, placement));
+            } else {
+                out.push(ElasticEvent::Reconfigure(placement));
+            }
+        }
+        // a same-step entry supersedes any past-due one — applying both
+        // would run two back-to-back reconfigurations
+        if out.is_empty() {
+            if let Some((step, placement)) = past_due {
+                crate::info!(
+                    "schedule",
+                    "applying past-due schedule entry from step {step} (session is at {})",
+                    obs.step
+                );
+                out.push(ElasticEvent::Reconfigure(placement));
+            }
+        }
+        if out.is_empty() {
+            out.push(ElasticEvent::Continue);
+        }
+        out
+    }
+}
+
+/// The paper's Fig. 9 loop against a *real* trainer: observe throughput,
+/// calibrate the waste-model estimator, grow through scale-out proposals
+/// when free GPUs allow, and fall back when a reconfiguration slowed the
+/// job down.
+///
+/// Capabilities are initialized from the historical Table-1 profile of
+/// `workload` (the paper's "historical data" bootstrap) and corrected by
+/// the observed step rate through [`AiMaster::observe`]; the absolute
+/// profile scale therefore does not need to match the substrate.
+pub struct AiMasterDirector {
+    master: AiMaster,
+    /// Free GPUs in the cluster beyond what the job currently holds.
+    available: GpuVector,
+    /// Decision cadence in steps (also the throughput-observation window).
+    decide_every: u64,
+    max_p: usize,
+    /// Set on the first consultation — a resumed session starts at step
+    /// > 0, and anchoring here keeps the first observation window
+    /// `decide_every` steps long instead of firing almost immediately.
+    start_step: Option<u64>,
+    last_decision_step: u64,
+    window_wall_s: f64,
+    window_steps: u64,
+    /// Placement and grant of the most recent reconfiguration, kept until
+    /// the next decision point for the fallback check.
+    prev_placement: Option<Placement>,
+    last_add: Option<GpuVector>,
+    check_fallback: bool,
+    /// Device types whose grants were reverted by fallback, with the step
+    /// each ban expires. Banning the *type* (not just the exact grant
+    /// vector) stops re-proposing a differently-sized grant of the same
+    /// kind right after a slowdown; the cooldown (not a permanent ban)
+    /// still lets scale-out retry later instead of freezing forever.
+    banned_types: Vec<(usize, u64)>,
+}
+
+impl AiMasterDirector {
+    /// `initial` is the placement the session starts on (its GPUs count as
+    /// held); `available` is what else the cluster could grant. Without D2
+    /// the director restricts itself to homogeneous grants: heterogeneous
+    /// GPUs select different vendor kernels and would break the bitwise
+    /// guarantee (paper §3.3) — exactly the eligibility rule AIMaster
+    /// applies per-model.
+    pub fn new(
+        workload: Workload,
+        determinism: Determinism,
+        initial: &Placement,
+        available: GpuVector,
+        decide_every: u64,
+    ) -> AiMasterDirector {
+        let max_p = initial.max_p();
+        let mut spec = JobSpec::new(workload, max_p);
+        spec.d2 = determinism.d2;
+        let mut master = AiMaster::new(0, spec);
+        if !determinism.d2 {
+            master.homogeneous_only = true;
+        }
+        master.grant(initial.device_counts());
+        // the seed allocation is not a reconfiguration: nothing to fall
+        // back to
+        master.prev_rate = None;
+        AiMasterDirector {
+            master,
+            available,
+            decide_every: decide_every.max(1),
+            max_p,
+            start_step: None,
+            last_decision_step: 0,
+            window_wall_s: 0.0,
+            window_steps: 0,
+            prev_placement: None,
+            last_add: None,
+            check_fallback: false,
+            banned_types: Vec::new(),
+        }
+    }
+
+    /// The job spec the master plans with (workload profile, maxP, D2).
+    pub fn job_spec(&self) -> &JobSpec {
+        &self.master.job
+    }
+
+    /// GPUs the master believes the job holds.
+    pub fn held(&self) -> GpuVector {
+        self.master.held
+    }
+
+    /// Estimator correction factor (observed/estimated, smoothed).
+    pub fn calibration(&self) -> f64 {
+        self.master.calib
+    }
+}
+
+impl ResourceDirector for AiMasterDirector {
+    fn name(&self) -> &'static str {
+        "aimaster"
+    }
+
+    fn held_gpus(&self) -> Option<GpuVector> {
+        Some(self.master.held)
+    }
+
+    fn direct(&mut self, obs: &StepObservation<'_>) -> Vec<ElasticEvent> {
+        if self.start_step.is_none() {
+            self.start_step = Some(obs.step);
+            self.last_decision_step = obs.step;
+        }
+        // gate on wall_s, not step: a freshly resumed session reports
+        // step > 0 with no measured mini-batch yet, and counting that
+        // phantom step would inflate the first observed rate
+        if obs.wall_s > 0.0 {
+            self.window_wall_s += obs.wall_s;
+            self.window_steps += 1;
+        }
+        let due = obs.step > 0
+            && obs.step - self.last_decision_step >= self.decide_every
+            && self.window_steps > 0
+            && self.window_wall_s > 0.0;
+        if !due {
+            return vec![ElasticEvent::Continue];
+        }
+        let observed_rate = self.window_steps as f64 / self.window_wall_s;
+        self.window_wall_s = 0.0;
+        self.window_steps = 0;
+        self.last_decision_step = obs.step;
+        self.master.observe(observed_rate);
+        self.banned_types.retain(|&(_, until)| until > obs.step);
+
+        // Fig. 9: "once the performance slowdown is observed after
+        // reconfiguration, we fall back to using previous resources".
+        if std::mem::take(&mut self.check_fallback) && self.master.should_fallback(observed_rate) {
+            if let (Some(prev), Some(add)) = (self.prev_placement.take(), self.last_add.take()) {
+                crate::warnlog!(
+                    "aimaster",
+                    "step {}: {observed_rate:.2} steps/s after reconfiguration — falling back",
+                    obs.step
+                );
+                self.master.revoke(add);
+                let until = obs.step + 4 * self.decide_every;
+                for i in 0..3 {
+                    self.available[i] += add[i];
+                    if add[i] > 0 {
+                        self.banned_types.push((i, until));
+                    }
+                }
+                return vec![ElasticEvent::Reconfigure(prev)];
+            }
+        }
+        self.prev_placement = None;
+        self.last_add = None;
+
+        let proposal = self
+            .master
+            .proposals(self.available, 3)
+            .into_iter()
+            .find(|p| {
+                !self.banned_types.iter().any(|&(ty, _)| p.add[ty] > 0)
+            });
+        let Some(p) = proposal else {
+            return vec![ElasticEvent::Continue];
+        };
+        match placement_from_config(&p.config, self.max_p) {
+            Ok(placement) => {
+                crate::info!(
+                    "aimaster",
+                    "step {}: observed {observed_rate:.2} steps/s, granting +{:?} GPUs \
+                     (est. {:.2} -> {:.2} steps/s) -> {} executors",
+                    obs.step,
+                    p.add,
+                    self.master.current_rate(),
+                    p.config.step_rate * self.master.calib,
+                    placement.n_gpus()
+                );
+                self.master.grant(p.add);
+                // fallback baseline: the throughput we actually measured on
+                // the pre-grant configuration, not grant()'s half-calibrated
+                // analytic estimate — on a substrate whose clock differs
+                // from the Table-1 profile the estimate would make
+                // should_fallback fire always (or never)
+                self.master.prev_rate = Some(observed_rate);
+                for i in 0..3 {
+                    self.available[i] = self.available[i].saturating_sub(p.add[i]);
+                }
+                self.prev_placement = Some(obs.placement.clone());
+                self.last_add = Some(p.add);
+                self.check_fallback = true;
+                vec![ElasticEvent::Reconfigure(placement)]
+            }
+            Err(e) => {
+                crate::warnlog!("aimaster", "proposal could not be placed: {e}");
+                vec![ElasticEvent::Continue]
+            }
+        }
+    }
+}
+
+/// An explicit `(step, event)` script — deterministic director for tests
+/// and fault-injection scenarios.
+pub struct ScriptedDirector {
+    entries: VecDeque<(u64, ElasticEvent)>,
+}
+
+impl ScriptedDirector {
+    pub fn new(mut entries: Vec<(u64, ElasticEvent)>) -> ScriptedDirector {
+        entries.sort_by_key(|e| e.0);
+        ScriptedDirector { entries: entries.into() }
+    }
+}
+
+impl ResourceDirector for ScriptedDirector {
+    fn name(&self) -> &'static str {
+        "scripted"
+    }
+
+    fn direct(&mut self, obs: &StepObservation<'_>) -> Vec<ElasticEvent> {
+        let mut out = Vec::new();
+        while self.entries.front().is_some_and(|e| e.0 <= obs.step) {
+            out.push(self.entries.pop_front().unwrap().1);
+        }
+        if out.is_empty() {
+            out.push(ElasticEvent::Continue);
+        }
+        out
+    }
+}
+
+/// Parse `'v100:2,t4:1'` into the planner's per-type GPU counts.
+pub fn parse_gpu_vector(spec: &str) -> Result<GpuVector> {
+    let mut v: GpuVector = [0, 0, 0];
+    for (dev, n) in parse_gpus(spec)? {
+        v[dev.index()] += n;
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::plan::best_config;
+
+    fn obs(step: u64, wall_s: f64, placement: &Placement) -> StepObservation<'_> {
+        StepObservation {
+            step,
+            steps_total: 100,
+            loss: f32::NAN,
+            wall_s,
+            placement,
+            reconfigs: 0,
+        }
+    }
+
+    const V: DeviceType = DeviceType::V100;
+
+    #[test]
+    fn static_schedule_applies_same_step_entries_in_order() {
+        let p1 = Placement::homogeneous(V, 1, 4);
+        let p2 = Placement::homogeneous(V, 2, 4);
+        let p4 = Placement::homogeneous(V, 4, 4);
+        let mut d = StaticScheduleDirector::new(vec![
+            (5, p1.clone()),
+            (3, p4.clone()),
+            (5, p2.clone()),
+        ]);
+        let home = Placement::homogeneous(V, 4, 4);
+        assert_eq!(d.direct(&obs(0, 0.0, &home)), vec![ElasticEvent::Continue]);
+        assert_eq!(
+            d.direct(&obs(3, 0.1, &home)),
+            vec![ElasticEvent::Reconfigure(p4)]
+        );
+        // both step-5 entries fire, in the order they were written
+        assert_eq!(
+            d.direct(&obs(5, 0.1, &home)),
+            vec![ElasticEvent::Reconfigure(p1), ElasticEvent::Reconfigure(p2)]
+        );
+        assert_eq!(d.remaining(), 0);
+    }
+
+    #[test]
+    fn static_schedule_applies_latest_past_due_entry_on_resume() {
+        let p2 = Placement::homogeneous(V, 2, 4);
+        let p3 = Placement::homogeneous(V, 3, 4);
+        let mut d = StaticScheduleDirector::new(vec![(1, p2), (3, p3.clone())]);
+        let home = Placement::homogeneous(V, 4, 4);
+        // a session resuming at step 7 lands on the last past-due entry;
+        // the superseded step-1 entry is dropped
+        assert_eq!(d.direct(&obs(7, 0.0, &home)), vec![ElasticEvent::Reconfigure(p3)]);
+        assert_eq!(d.remaining(), 0);
+    }
+
+    #[test]
+    fn static_schedule_parses_and_flags_unreachable() {
+        let d = StaticScheduleDirector::parse("2:v100:1;2:v100:2;99:v100:4", 4, 10).unwrap();
+        // the unreachable entry still parses (warned, not dropped)
+        assert_eq!(d.remaining(), 3);
+        assert!(StaticScheduleDirector::parse("nonsense", 4, 10).is_err());
+        assert!(StaticScheduleDirector::parse("1:h100:1", 4, 10).is_err());
+        assert_eq!(StaticScheduleDirector::parse("", 4, 10).unwrap().remaining(), 0);
+    }
+
+    #[test]
+    fn scripted_director_drains_in_step_order() {
+        let p = Placement::homogeneous(V, 2, 4);
+        let mut d = ScriptedDirector::new(vec![
+            (4, ElasticEvent::Stop),
+            (2, ElasticEvent::Eval),
+            (2, ElasticEvent::Reconfigure(p.clone())),
+        ]);
+        let home = Placement::homogeneous(V, 4, 4);
+        assert_eq!(d.direct(&obs(0, 0.0, &home)), vec![ElasticEvent::Continue]);
+        assert_eq!(
+            d.direct(&obs(2, 0.1, &home)),
+            vec![ElasticEvent::Eval, ElasticEvent::Reconfigure(p)]
+        );
+        // skipped steps still deliver pending events
+        assert_eq!(d.direct(&obs(7, 0.1, &home)), vec![ElasticEvent::Stop]);
+    }
+
+    #[test]
+    fn placement_from_config_round_robins_and_drops_surplus() {
+        let job = JobSpec::new(Workload::Bert, 4);
+        let cfg = best_config(&job, [2, 0, 0]).unwrap();
+        let p = placement_from_config(&cfg, 4).unwrap();
+        assert_eq!(p, Placement::homogeneous(V, 2, 4));
+
+        // 3 GPUs hosting 2 ESTs: capacity 3 > maxP 2, one executor dropped
+        let job2 = JobSpec::new(Workload::Bert, 2);
+        let cfg2 = crate::sched::plan::evaluate(&job2, [3, 0, 0], [1, 0, 0], [1, 0, 0]).unwrap();
+        let p2 = placement_from_config(&cfg2, 2).unwrap();
+        assert_eq!(p2.n_gpus(), 2);
+        p2.validate().unwrap();
+
+        // a config that cannot host maxP is rejected
+        assert!(placement_from_config(&cfg2, 9).is_err());
+    }
+
+    #[test]
+    fn aimaster_director_grows_then_falls_back_on_slowdown() {
+        // Bert, maxP=4, starting on 2 V100 with 2 more free. D1 (no D2)
+        // -> homogeneous proposals only.
+        let start = Placement::homogeneous(V, 2, 4);
+        let mut d = AiMasterDirector::new(Workload::Bert, Determinism::D1, &start, [2, 0, 2], 2);
+        assert_eq!(d.held(), [2, 0, 0]);
+
+        // analytic rate of <2 V100, 2 ESTs each> so calib stays ~1
+        let rate = best_config(d.job_spec(), [2, 0, 0]).unwrap().step_rate;
+        let w = 1.0 / rate;
+        assert_eq!(d.direct(&obs(0, 0.0, &start)), vec![ElasticEvent::Continue]);
+        assert_eq!(d.direct(&obs(1, w, &start)), vec![ElasticEvent::Continue]);
+        // decision point: +2 V100 halves the step time -> reconfigure
+        let evs = d.direct(&obs(2, w, &start));
+        let grown = match &evs[..] {
+            [ElasticEvent::Reconfigure(p)] => p.clone(),
+            other => panic!("expected grow reconfiguration, got {other:?}"),
+        };
+        assert_eq!(grown.n_gpus(), 4);
+        assert_eq!(d.held(), [4, 0, 0]);
+
+        // the new configuration is observed *slower* -> fallback
+        assert_eq!(d.direct(&obs(3, 1.0, &grown)), vec![ElasticEvent::Continue]);
+        let evs = d.direct(&obs(4, 1.0, &grown));
+        match &evs[..] {
+            [ElasticEvent::Reconfigure(p)] => assert_eq!(*p, start, "must revert"),
+            other => panic!("expected fallback reconfiguration, got {other:?}"),
+        }
+        assert_eq!(d.held(), [2, 0, 0]);
+
+        // the reverted grant is banned: no ping-pong
+        assert_eq!(d.direct(&obs(5, w, &start)), vec![ElasticEvent::Continue]);
+        assert_eq!(d.direct(&obs(6, w, &start)), vec![ElasticEvent::Continue]);
+    }
+
+    #[test]
+    fn aimaster_director_stays_homogeneous_without_d2() {
+        let start = Placement::homogeneous(V, 1, 4);
+        let mut d = AiMasterDirector::new(Workload::Bert, Determinism::D1, &start, [0, 0, 4], 1);
+        // only T4s are free; without D2 the director must not take them
+        let w = 0.1;
+        for step in 0..6u64 {
+            let evs = d.direct(&obs(step, if step == 0 { 0.0 } else { w }, &start));
+            assert_eq!(evs, vec![ElasticEvent::Continue], "step {step}");
+        }
+        assert_eq!(d.held(), [1, 0, 0]);
+
+        // with D2 on, the same situation scales onto the T4s
+        let mut d2 = AiMasterDirector::new(
+            Workload::Bert,
+            Determinism::D1_D2,
+            &start,
+            [0, 0, 4],
+            1,
+        );
+        let mut reconfigured = false;
+        for step in 0..6u64 {
+            let evs = d2.direct(&obs(step, if step == 0 { 0.0 } else { w }, &start));
+            if matches!(evs[..], [ElasticEvent::Reconfigure(_)]) {
+                reconfigured = true;
+                break;
+            }
+        }
+        assert!(reconfigured, "D2 job should scale onto free T4s");
+        assert!(d2.held()[2] > 0);
+    }
+
+    #[test]
+    fn parse_gpu_vector_aggregates_types() {
+        assert_eq!(parse_gpu_vector("v100:1,t4:2,v100:1").unwrap(), [2, 0, 2]);
+        assert!(parse_gpu_vector("").is_err());
+    }
+}

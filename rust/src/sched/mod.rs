@@ -1,11 +1,18 @@
 //! Scheduling (paper §3.4): the heterogeneity-aware EST planner (the
 //! *waste* analytical model, Eq. 1a–1e), the per-job intra-job scheduler
-//! (AIMaster) and the inter-job cluster scheduler (Algorithm 1).
+//! (AIMaster), the inter-job cluster scheduler (Algorithm 1), and the
+//! resource directors that drive a real [`crate::train::ElasticSession`]
+//! from scheduling decisions.
 
 pub mod aimaster;
 pub mod cluster;
+pub mod director;
 pub mod plan;
 
 pub use aimaster::{AiMaster, Proposal};
 pub use cluster::ClusterScheduler;
+pub use director::{
+    parse_gpu_vector, placement_from_config, AiMasterDirector, ElasticEvent, ResourceDirector,
+    ScriptedDirector, StaticScheduleDirector, StepObservation,
+};
 pub use plan::{best_config, enumerate_configs, GpuVector, JobSpec, PlanConfig};

@@ -105,12 +105,53 @@ pub struct ElasticSim {
     pub kind: SchedulerKind,
     /// checkpoint + restart cost charged when a job's allocation changes
     pub reconfig_penalty_s: f64,
+    /// Multiplier applied to every analytic per-job step rate. 1.0 keeps
+    /// the Table-1 profile clock; [`rate_scale_from_observation`] derives a
+    /// value from a real [`crate::train::ElasticSession`] run so the
+    /// simulated clock follows measured throughput instead.
+    pub rate_scale: f64,
+}
+
+/// Calibrate the simulator's analytic step rates from a real run: a
+/// measured steps/s of an elastic session over the analytic rate of the
+/// same workload/allocation. Pass a steady-state rate under the final
+/// allocation (e.g. [`crate::train::Trainer::last_step_rate`], what
+/// `easyscale train --director aimaster` prints) — a whole-run average
+/// folds in the slower pre-scale-out phase and biases the scale low.
+/// Multiplying every simulated rate by the returned scale makes the sim's
+/// per-job clock match the substrate the session actually ran on (None
+/// when either rate is degenerate).
+pub fn rate_scale_from_observation(
+    spec: &crate::sched::plan::JobSpec,
+    nums: GpuVector,
+    observed_rate: f64,
+) -> Option<f64> {
+    if observed_rate <= 0.0 || !observed_rate.is_finite() {
+        return None;
+    }
+    let analytic = best_config_any(spec, nums)?.step_rate;
+    if analytic <= 0.0 {
+        return None;
+    }
+    Some(observed_rate / analytic)
 }
 
 impl ElasticSim {
     pub fn new(kind: SchedulerKind) -> ElasticSim {
         // paper trace cluster: 32 V100 + 16 P100 + 16 T4
-        ElasticSim { fleet: [32, 16, 16], kind, reconfig_penalty_s: 5.0 }
+        ElasticSim { fleet: [32, 16, 16], kind, reconfig_penalty_s: 5.0, rate_scale: 1.0 }
+    }
+
+    /// Source the per-job step-rate clock from a measured scale (see
+    /// [`rate_scale_from_observation`]). A non-positive or non-finite
+    /// scale would stall every simulated job, so it is a caller bug.
+    pub fn with_rate_scale(mut self, scale: f64) -> ElasticSim {
+        assert!(
+            scale.is_finite() && scale > 0.0,
+            "rate_scale must be positive and finite, got {scale}"
+        );
+        self.rate_scale = scale;
+        self
     }
 
     pub fn run(&self, trace: &[TraceJob]) -> SimOutcome {
@@ -239,7 +280,7 @@ impl ElasticSim {
                             let j = &mut jobs[id];
                             j.held = take;
                             j.state = JobState::Running;
-                            let r = gang_rate(j, ty);
+                            let r = gang_rate(j, ty) * self.rate_scale;
                             j.set_rate(now, r, 0.0);
                         }
                         None => break, // FIFO: later jobs must wait
@@ -349,7 +390,7 @@ impl ElasticSim {
                         continue;
                     }
                     let rate = best_config_any(&j.spec, j.held)
-                        .map(|c| c.step_rate)
+                        .map(|c| c.step_rate * self.rate_scale)
                         .unwrap_or(0.0);
                     debug_assert!(
                         rate > 0.0 || j.n_gpus() == 0,
@@ -451,6 +492,39 @@ mod tests {
                 assert!(used <= 64.0, "{}: {used} GPUs used", kind.name());
             }
         }
+    }
+
+    #[test]
+    fn rate_scale_speeds_up_the_simulated_clock() {
+        // A 2x measured-throughput calibration must strictly shorten JCTs
+        // (not exactly halve them: reconfig penalties stay in seconds).
+        let trace = small_trace();
+        for kind in [SchedulerKind::YarnCs, SchedulerKind::EasyScaleHeter] {
+            let base = ElasticSim::new(kind).run(&trace);
+            let fast = ElasticSim::new(kind).with_rate_scale(2.0).run(&trace);
+            assert!(
+                fast.avg_jct_s() < base.avg_jct_s(),
+                "{}: {} !< {}",
+                kind.name(),
+                fast.avg_jct_s(),
+                base.avg_jct_s()
+            );
+            assert!(fast.makespan_s < base.makespan_s, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn rate_scale_from_observation_matches_analytic_ratio() {
+        use crate::model::workload::Workload;
+        use crate::sched::plan::JobSpec;
+        let spec = JobSpec::new(Workload::Bert, 4);
+        let nums = [2, 0, 0];
+        let analytic = best_config_any(&spec, nums).unwrap().step_rate;
+        let scale = rate_scale_from_observation(&spec, nums, 3.0 * analytic).unwrap();
+        assert!((scale - 3.0).abs() < 1e-9);
+        assert!(rate_scale_from_observation(&spec, nums, 0.0).is_none());
+        assert!(rate_scale_from_observation(&spec, nums, f64::INFINITY).is_none());
+        assert!(rate_scale_from_observation(&spec, [0, 0, 0], 1.0).is_none());
     }
 
     #[test]

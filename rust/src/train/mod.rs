@@ -1,10 +1,13 @@
-//! The training coordinator: determinism levels, the elastic trainer and
-//! on-demand checkpointing.
+//! The training coordinator: determinism levels, the elastic trainer,
+//! on-demand checkpointing, and the elastic session — the event-driven
+//! driver that steps a job under a [`crate::sched::ResourceDirector`].
 
 pub mod checkpoint;
 pub mod determinism;
+pub mod session;
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
 pub use determinism::Determinism;
+pub use session::{ElasticSession, SessionBuilder, SessionReport};
 pub use trainer::{TrainConfig, Trainer};

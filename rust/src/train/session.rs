@@ -1,0 +1,340 @@
+//! The elastic session — the programmable job driver that replaces the old
+//! imperative CLI training loop.
+//!
+//! An [`ElasticSession`] owns the [`Trainer`], a reference to the
+//! [`Engine`], the [`MetricSink`], and the eval/checkpoint/log cadences.
+//! Between every two global mini-batches it hands a [`StepObservation`]
+//! (observed throughput, loss, current placement) to its
+//! [`ResourceDirector`] and applies the returned [`ElasticEvent`]s — this
+//! is the paper's §3.2 decoupling as an API: resource elasticity lives
+//! entirely in the director, the training procedure never branches on it,
+//! and under D1 any director-driven run is bitwise identical to the
+//! fixed-placement sequential reference (`tests/session.rs`).
+//!
+//! ```text
+//!   SessionBuilder ──build()──> ElasticSession
+//!        loop (while step < steps && !stopped):
+//!            obs    = {step, loss, wall_s, placement, ...}
+//!            events = director.direct(&obs)          // control plane
+//!            apply: Reconfigure | Checkpoint | Eval | Stop | Continue
+//!            loss   = trainer.step(engine)           // data plane
+//!            sink  += train_loss / eval_loss / gpus
+//! ```
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::exec::executor::Placement;
+use crate::metrics::MetricSink;
+use crate::runtime::Engine;
+use crate::sched::director::{
+    ElasticEvent, ResourceDirector, StaticScheduleDirector, StepObservation,
+};
+use crate::train::{TrainConfig, Trainer};
+
+/// What a finished (or stopped) session reports back.
+#[derive(Debug, Clone)]
+pub struct SessionReport {
+    /// Mini-batches run by this session (excludes resumed-from progress).
+    pub steps_run: u64,
+    /// Global step the trainer ended on.
+    pub final_step: u64,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    /// Bitwise parameter fingerprint — the paper's consistency check.
+    pub fingerprint: u64,
+    /// Director-driven reconfigurations applied.
+    pub reconfigs: u64,
+    /// Evaluation passes run (cadence + director events).
+    pub evals: u64,
+    /// End-to-end wall-clock of `run()`, seconds.
+    pub wall_s: f64,
+    /// Observed end-to-end throughput of the whole session, global steps
+    /// per second (includes reconfigurations, evals and checkpoints). For
+    /// calibrating the trace simulator
+    /// ([`crate::sim::simulator::rate_scale_from_observation`]) prefer the
+    /// steady-state [`Trainer::last_step_rate`] under the final
+    /// allocation — this average folds in the slower scale-out history.
+    pub observed_rate: f64,
+    /// True when the director issued [`ElasticEvent::Stop`].
+    pub stopped_early: bool,
+}
+
+/// Builder for [`ElasticSession`]. Construction is the only place the
+/// session's policy knobs exist; the running session is driven solely by
+/// its director.
+pub struct SessionBuilder<'e> {
+    engine: &'e Engine,
+    cfg: TrainConfig,
+    placement: Placement,
+    steps: u64,
+    eval_every: u64,
+    checkpoint_every: u64,
+    checkpoint_dir: Option<PathBuf>,
+    final_checkpoint: Option<PathBuf>,
+    log_every: u64,
+    director: Box<dyn ResourceDirector>,
+    resume_from: Option<PathBuf>,
+}
+
+impl<'e> SessionBuilder<'e> {
+    /// A session over `engine`, starting from `placement`. Defaults: 100
+    /// steps, no eval/checkpoint cadence, log every 10, and the empty
+    /// [`StaticScheduleDirector`] (a fixed-placement run).
+    pub fn new(engine: &'e Engine, cfg: TrainConfig, placement: Placement) -> SessionBuilder<'e> {
+        SessionBuilder {
+            engine,
+            cfg,
+            placement,
+            steps: 100,
+            eval_every: 0,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            final_checkpoint: None,
+            log_every: 10,
+            director: Box::new(StaticScheduleDirector::empty()),
+            resume_from: None,
+        }
+    }
+
+    /// Absolute global-step target: the session runs until the trainer's
+    /// step counter reaches it (a resumed job continues where it left off).
+    pub fn steps(mut self, steps: u64) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    /// Held-out eval after every `n` steps (0 = off).
+    pub fn eval_every(mut self, n: u64) -> Self {
+        self.eval_every = n;
+        self
+    }
+
+    /// Periodic on-demand checkpoints: every `n` completed steps (0 = off),
+    /// written as `dir/step<N>.ckpt`.
+    pub fn checkpoint_every(mut self, n: u64, dir: PathBuf) -> Self {
+        self.checkpoint_every = n;
+        self.checkpoint_dir = Some(dir);
+        self
+    }
+
+    /// Write a final checkpoint here when the session ends.
+    pub fn final_checkpoint(mut self, path: PathBuf) -> Self {
+        self.final_checkpoint = Some(path);
+        self
+    }
+
+    /// Loss-log cadence (0 = silent).
+    pub fn log_every(mut self, n: u64) -> Self {
+        self.log_every = n;
+        self
+    }
+
+    pub fn director(mut self, director: Box<dyn ResourceDirector>) -> Self {
+        self.director = director;
+        self
+    }
+
+    /// Resume the trainer from an on-demand checkpoint instead of fresh
+    /// initialization (the restart half of elastic reconfiguration).
+    pub fn resume_from(mut self, path: PathBuf) -> Self {
+        self.resume_from = Some(path);
+        self
+    }
+
+    pub fn build(self) -> Result<ElasticSession<'e>> {
+        let SessionBuilder {
+            engine,
+            cfg,
+            placement,
+            steps,
+            eval_every,
+            checkpoint_every,
+            checkpoint_dir,
+            final_checkpoint,
+            log_every,
+            director,
+            resume_from,
+        } = self;
+        let trainer = match resume_from {
+            Some(path) => Trainer::resume(engine, cfg, placement, &path)?,
+            None => Trainer::new(engine, cfg, placement)?,
+        };
+        Ok(ElasticSession {
+            engine,
+            trainer,
+            director,
+            sink: MetricSink::new(),
+            steps,
+            eval_every,
+            checkpoint_every,
+            checkpoint_dir,
+            final_checkpoint,
+            log_every,
+            reconfigs: 0,
+            evals: 0,
+            stopped: false,
+        })
+    }
+}
+
+/// A running elastic job: trainer + director + metrics under one driver.
+pub struct ElasticSession<'e> {
+    engine: &'e Engine,
+    pub trainer: Trainer,
+    director: Box<dyn ResourceDirector>,
+    pub sink: MetricSink,
+    steps: u64,
+    eval_every: u64,
+    checkpoint_every: u64,
+    checkpoint_dir: Option<PathBuf>,
+    final_checkpoint: Option<PathBuf>,
+    log_every: u64,
+    reconfigs: u64,
+    evals: u64,
+    stopped: bool,
+}
+
+impl<'e> ElasticSession<'e> {
+    /// Consult the director, apply its events, then run one global
+    /// mini-batch. Returns the training loss, or `None` when the session
+    /// ended (step budget reached or director said stop) without stepping.
+    pub fn step_once(&mut self) -> Result<Option<f32>> {
+        if self.stopped || self.trainer.state.step >= self.steps {
+            return Ok(None);
+        }
+        let step = self.trainer.state.step;
+        let events = {
+            let obs = StepObservation {
+                step,
+                steps_total: self.steps,
+                loss: self.trainer.loss_history.last().copied().unwrap_or(f32::NAN),
+                wall_s: self.trainer.last_step_wall_s,
+                placement: &self.trainer.placement,
+                reconfigs: self.reconfigs,
+            };
+            self.director.direct(&obs)
+        };
+        for ev in events {
+            self.apply(ev)?;
+            if self.stopped {
+                // events ordered after a Stop are void — applying e.g. a
+                // Reconfigure would rebuild workers for a job that never
+                // steps again
+                return Ok(None);
+            }
+        }
+        let loss = self.trainer.step(self.engine)?;
+        self.sink.push("train_loss", step as f64, loss as f64);
+        if self.log_every > 0 && step % self.log_every == 0 {
+            crate::info!("session", "step {step:5} loss {loss:.4}");
+        }
+        if self.eval_every > 0 && step > 0 && step % self.eval_every == 0 {
+            // labeled with the just-completed step's index, aligned with
+            // the train_loss series (and the pre-session CLI's CSV rows)
+            self.run_eval(step)?;
+        }
+        let completed = self.trainer.state.step;
+        if self.checkpoint_every > 0 && completed % self.checkpoint_every == 0 {
+            if let Some(dir) = self.checkpoint_dir.clone() {
+                self.apply(ElasticEvent::Checkpoint(dir.join(format!("step{completed}.ckpt"))))?;
+            }
+        }
+        Ok(Some(loss))
+    }
+
+    /// Drive the session to its step budget (or a director stop), then
+    /// write the final checkpoint if one was configured.
+    pub fn run(&mut self) -> Result<SessionReport> {
+        let t0 = Instant::now();
+        let start_step = self.trainer.state.step;
+        let losses_before = self.trainer.loss_history.len();
+        while self.step_once()?.is_some() {}
+        if let Some(path) = self.final_checkpoint.clone() {
+            self.trainer.checkpoint(&path)?;
+            crate::info!("session", "final checkpoint written to {}", path.display());
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let steps_run = self.trainer.state.step - start_step;
+        let session_losses = &self.trainer.loss_history[losses_before..];
+        Ok(SessionReport {
+            steps_run,
+            final_step: self.trainer.state.step,
+            first_loss: session_losses.first().copied().unwrap_or(f32::NAN),
+            final_loss: session_losses.last().copied().unwrap_or(f32::NAN),
+            fingerprint: self.trainer.param_fingerprint(),
+            reconfigs: self.reconfigs,
+            evals: self.evals,
+            wall_s,
+            observed_rate: if wall_s > 0.0 { steps_run as f64 / wall_s } else { 0.0 },
+            stopped_early: self.stopped,
+        })
+    }
+
+    fn apply(&mut self, event: ElasticEvent) -> Result<()> {
+        match event {
+            ElasticEvent::Continue => {}
+            ElasticEvent::Reconfigure(placement) => {
+                let step = self.trainer.state.step;
+                crate::info!(
+                    "session",
+                    "step {step}: reconfiguring to {} executor(s) {:?}",
+                    placement.n_gpus(),
+                    placement.device_counts()
+                );
+                self.trainer.reconfigure(placement)?;
+                self.reconfigs += 1;
+                self.sink.push("gpus", step as f64, self.trainer.placement.n_gpus() as f64);
+            }
+            ElasticEvent::Checkpoint(path) => {
+                self.trainer.checkpoint(&path)?;
+                crate::info!("session", "checkpoint written to {}", path.display());
+            }
+            ElasticEvent::Eval => {
+                // label = index of the last completed step whose params are
+                // being evaluated — the same convention the eval cadence
+                // uses, so director and cadence evals of the same model
+                // state share one x and never collide ambiguously
+                let step = self.trainer.state.step.saturating_sub(1);
+                self.run_eval(step)?;
+            }
+            ElasticEvent::Stop => {
+                let step = self.trainer.state.step;
+                crate::info!("session", "director stopped the session at step {step}");
+                self.stopped = true;
+            }
+        }
+        Ok(())
+    }
+
+    fn run_eval(&mut self, step: u64) -> Result<()> {
+        let loss = self.trainer.eval(self.engine)?;
+        self.evals += 1;
+        self.sink.push("eval_loss", step as f64, loss as f64);
+        crate::info!("session", "step {step:5} EVAL loss {loss:.4}");
+        Ok(())
+    }
+
+    /// Director-driven reconfigurations applied so far.
+    pub fn reconfigs(&self) -> u64 {
+        self.reconfigs
+    }
+
+    /// The director's name (for logs and CLI summaries).
+    pub fn director_name(&self) -> &'static str {
+        self.director.name()
+    }
+
+    /// The director driving this session (e.g. to read `held_gpus`).
+    pub fn director(&self) -> &dyn ResourceDirector {
+        self.director.as_ref()
+    }
+
+    /// Tear down the session, keeping the trainer (e.g. to checkpoint or
+    /// inspect state beyond the report).
+    pub fn into_trainer(self) -> Trainer {
+        self.trainer
+    }
+}

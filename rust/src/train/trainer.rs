@@ -115,6 +115,18 @@ impl Trainer {
     /// Build a fresh job: initial parameters from the artifact, zero
     /// momentum, EST contexts for maxP virtual ranks.
     pub fn new(engine: &Engine, cfg: TrainConfig, placement: Placement) -> Result<Trainer> {
+        let mut t = Trainer::bare(engine, cfg, placement)?;
+        let data_seed = t.cfg.effective_seed();
+        t.rebuild_workers(data_seed, DataInit::Prefill(0));
+        Ok(t)
+    }
+
+    /// Everything `new` does *except* building the data/executor workers —
+    /// the constructor path for `resume`, which immediately replaces the
+    /// state and rebuilds workers under checkpoint semantics (building the
+    /// step-0 prefilled workers here only to throw them away would double
+    /// the construction cost).
+    fn bare(engine: &Engine, cfg: TrainConfig, placement: Placement) -> Result<Trainer> {
         placement.validate()?;
         anyhow::ensure!(placement.max_p() == cfg.max_p, "placement hosts {} ESTs, cfg.max_p = {}",
             placement.max_p(), cfg.max_p);
@@ -127,7 +139,7 @@ impl Trainer {
         let bucket_plan = BucketPlan::build(&sizes, cfg.bucket_cap_bytes);
         let m = &engine.manifest.model;
         let corpus = SyntheticCorpus::new(seed ^ 0xC0, m.vocab_size, m.seq_len);
-        let mut t = Trainer {
+        Ok(Trainer {
             cfg,
             placement,
             state: TrainState {
@@ -146,10 +158,7 @@ impl Trainer {
             last_timing: Vec::new(),
             last_step_wall_s: 0.0,
             last_step_serial_s: 0.0,
-        };
-        let data_seed = t.cfg.effective_seed();
-        t.rebuild_workers(data_seed, DataInit::Prefill(0));
-        Ok(t)
+        })
     }
 
     fn key_mode(&self) -> KeyMode {
@@ -242,6 +251,10 @@ impl Trainer {
         }
         // virtual-rank order from here on: thread completion order is gone
         let staged = table.into_ranked()?;
+        anyhow::ensure!(
+            !staged.is_empty(),
+            "step {step}: placement hosts no ESTs — nothing to aggregate (empty placement?)"
+        );
 
         let sizes: Vec<usize> =
             engine.manifest.params.iter().map(|p| p.size).collect();
@@ -338,7 +351,9 @@ impl Trainer {
         path: &std::path::Path,
     ) -> Result<Trainer> {
         let state = crate::train::Checkpoint::load(path)?;
-        let mut t = Trainer::new(engine, cfg, placement)?;
+        // no-prefill construction: the checkpoint replaces the state and the
+        // workers are built once below, under restart semantics
+        let mut t = Trainer::bare(engine, cfg, placement)?;
         t.state = state;
         t.state.restart_count += 1;
         let restart = t.state.restart_count;
@@ -364,6 +379,17 @@ impl Trainer {
             .collect();
         let tokens = self.corpus.batch(&idx);
         engine.eval_loss(&self.state.params, &tokens)
+    }
+
+    /// Observed global-step throughput of the last mini-batch (executor
+    /// critical path, steps/s) — what an AIMaster's Fig. 9 loop consumes.
+    pub fn last_step_rate(&self) -> f64 {
+        if self.last_step_wall_s > 0.0 { 1.0 / self.last_step_wall_s } else { 0.0 }
+    }
+
+    /// Number of executors (simulated GPUs) currently placed.
+    pub fn n_executors(&self) -> usize {
+        self.workers.len()
     }
 
     /// Bitwise fingerprint of the model parameters (the paper's

@@ -1,0 +1,265 @@
+//! The elastic session API end to end: director-driven elastic training
+//! must preserve the paper's bitwise guarantee — under D1, *any* session
+//! (static schedule, scripted events, or the AIMaster Fig. 9 loop) ends
+//! with exactly the bits of the fixed-placement sequential reference.
+
+use std::path::PathBuf;
+
+use easyscale::exec::executor::ExecutorSpec;
+use easyscale::exec::{DeviceType, Placement, RunMode};
+use easyscale::model::workload::Workload;
+use easyscale::runtime::Engine;
+use easyscale::sched::{
+    AiMasterDirector, ElasticEvent, ScriptedDirector, StaticScheduleDirector,
+};
+use easyscale::train::{Determinism, SessionBuilder, TrainConfig, Trainer};
+
+/// Native build: the synthetic engine always runs. PJRT build: needs the
+/// AOT artifacts on disk, skips loudly otherwise.
+#[cfg(not(feature = "pjrt"))]
+fn tiny() -> Option<Engine> {
+    Some(Engine::synthetic("tiny").unwrap())
+}
+
+#[cfg(feature = "pjrt")]
+fn tiny() -> Option<Engine> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !d.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/tiny not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(&d).unwrap())
+}
+
+const V: DeviceType = DeviceType::V100;
+
+fn cfg(det: Determinism) -> TrainConfig {
+    TrainConfig { determinism: det, ..TrainConfig::new(4) }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("easyscale_session_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// The fixed-placement sequential reference: 4 workers on 4 GPUs, straight
+/// through — what `easyscale train --sequential` runs.
+fn sequential_reference(engine: &Engine, det: Determinism, steps: u64) -> u64 {
+    let tc = TrainConfig { run_mode: RunMode::Sequential, ..cfg(det) };
+    let mut t = Trainer::new(engine, tc, Placement::homogeneous(V, 4, 4)).unwrap();
+    t.run(engine, steps).unwrap();
+    t.param_fingerprint()
+}
+
+/// The acceptance property: an `AiMasterDirector`-driven elastic session
+/// at D1 — seeded on one GPU, growing through throughput-observed
+/// proposals — fingerprint-matches the fixed-placement sequential
+/// reference of the same seed/steps.
+#[test]
+fn aimaster_session_d1_matches_sequential_reference_bitwise() {
+    let Some(engine) = tiny() else { return };
+    let reference = sequential_reference(&engine, Determinism::D1, 10);
+
+    let start = Placement::homogeneous(V, 1, 4);
+    let director =
+        AiMasterDirector::new(Workload::Bert, Determinism::D1, &start, [3, 0, 0], 2);
+    let mut session = SessionBuilder::new(&engine, cfg(Determinism::D1), start)
+        .steps(10)
+        .log_every(0)
+        .director(Box::new(director))
+        .build()
+        .unwrap();
+    let report = session.run().unwrap();
+
+    assert!(report.reconfigs >= 1, "AIMaster must perform a throughput-driven reconfiguration");
+    assert_eq!(report.steps_run, 10);
+    assert_eq!(
+        report.fingerprint, reference,
+        "elastic AIMaster session must be bitwise-identical to the sequential reference"
+    );
+}
+
+/// A static-schedule session must equal the same schedule applied by hand
+/// to a bare trainer — loss curve and bits.
+#[test]
+fn static_schedule_session_matches_manual_reconfigure() {
+    let Some(engine) = tiny() else { return };
+    let det = Determinism::D1_D2;
+    let hetero = Placement::heterogeneous(&[(V, 2), (DeviceType::P100, 1), (DeviceType::P100, 1)]);
+
+    let mut manual = Trainer::new(&engine, cfg(det), Placement::homogeneous(V, 4, 4)).unwrap();
+    manual.run(&engine, 3).unwrap();
+    manual.reconfigure(Placement::homogeneous(V, 2, 4)).unwrap();
+    manual.run(&engine, 2).unwrap();
+    manual.reconfigure(hetero.clone()).unwrap();
+    manual.run(&engine, 3).unwrap();
+
+    let director = StaticScheduleDirector::new(vec![
+        (3, Placement::homogeneous(V, 2, 4)),
+        (5, hetero),
+    ]);
+    let mut session =
+        SessionBuilder::new(&engine, cfg(det), Placement::homogeneous(V, 4, 4))
+            .steps(8)
+            .log_every(0)
+            .director(Box::new(director))
+            .build()
+            .unwrap();
+    let report = session.run().unwrap();
+
+    assert_eq!(report.reconfigs, 2);
+    assert_eq!(report.fingerprint, manual.param_fingerprint());
+    let session_loss = &session.trainer.loss_history;
+    for (a, b) in session_loss.iter().zip(&manual.loss_history) {
+        assert_eq!(a.to_bits(), b.to_bits(), "loss curves must be identical");
+    }
+}
+
+/// Same-step schedule entries all apply, in order — the last one defines
+/// the placement the next mini-batch runs on (the old CLI silently dropped
+/// all but one).
+#[test]
+fn same_step_schedule_entries_apply_in_order() {
+    let Some(engine) = tiny() else { return };
+    let director = StaticScheduleDirector::new(vec![
+        (2, Placement::homogeneous(V, 1, 4)),
+        (2, Placement::homogeneous(V, 3, 4)),
+    ]);
+    let mut session =
+        SessionBuilder::new(&engine, cfg(Determinism::D1), Placement::homogeneous(V, 4, 4))
+            .steps(5)
+            .log_every(0)
+            .director(Box::new(director))
+            .build()
+            .unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.reconfigs, 2, "both same-step entries must apply");
+    assert_eq!(session.trainer.placement.n_gpus(), 3, "last entry wins the placement");
+    assert_eq!(report.fingerprint, sequential_reference(&engine, Determinism::D1, 5));
+}
+
+/// Scripted director: eval, checkpoint and stop events flow through the
+/// session event loop.
+#[test]
+fn scripted_director_eval_checkpoint_stop() {
+    let Some(engine) = tiny() else { return };
+    let ckpt = tmp("scripted.ckpt");
+    let _ = std::fs::remove_file(&ckpt);
+    let director = ScriptedDirector::new(vec![
+        (2, ElasticEvent::Eval),
+        (3, ElasticEvent::Checkpoint(ckpt.clone())),
+        (5, ElasticEvent::Stop),
+    ]);
+    let mut session =
+        SessionBuilder::new(&engine, cfg(Determinism::D1), Placement::homogeneous(V, 2, 4))
+            .steps(50)
+            .log_every(0)
+            .director(Box::new(director))
+            .build()
+            .unwrap();
+    let report = session.run().unwrap();
+    assert!(report.stopped_early);
+    assert_eq!(report.steps_run, 5, "stop at step 5 runs exactly 5 mini-batches");
+    assert_eq!(report.evals, 1);
+    assert!(ckpt.exists(), "scripted checkpoint must be written");
+    assert!(session.sink.series.contains_key("eval_loss"));
+    assert!(session.sink.series.contains_key("train_loss"));
+}
+
+/// The builder's resume path (and the no-prefill constructor behind it):
+/// checkpoint mid-session, resume into a new session on different GPUs,
+/// and land on the uninterrupted reference bits.
+#[test]
+fn session_resume_reproduces_uninterrupted_run() {
+    let Some(engine) = tiny() else { return };
+    let reference = sequential_reference(&engine, Determinism::D1, 9);
+
+    let ckpt = tmp("resume.ckpt");
+    let mut first =
+        SessionBuilder::new(&engine, cfg(Determinism::D1), Placement::homogeneous(V, 4, 4))
+            .steps(4)
+            .log_every(0)
+            .final_checkpoint(ckpt.clone())
+            .build()
+            .unwrap();
+    first.run().unwrap();
+
+    let mut resumed =
+        SessionBuilder::new(&engine, cfg(Determinism::D1), Placement::homogeneous(V, 2, 4))
+            .steps(9)
+            .log_every(0)
+            .resume_from(ckpt)
+            .build()
+            .unwrap();
+    let report = resumed.run().unwrap();
+    assert_eq!(report.steps_run, 5, "absolute step target: 9 total, 4 already done");
+    assert_eq!(report.final_step, 9);
+    assert_eq!(report.fingerprint, reference);
+}
+
+/// Periodic checkpoint cadence owned by the session.
+#[test]
+fn checkpoint_cadence_writes_periodic_checkpoints() {
+    let Some(engine) = tiny() else { return };
+    let dir = std::env::temp_dir().join("easyscale_session_cadence");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut session =
+        SessionBuilder::new(&engine, cfg(Determinism::D1), Placement::homogeneous(V, 2, 4))
+            .steps(6)
+            .log_every(0)
+            .checkpoint_every(3, dir.clone())
+            .build()
+            .unwrap();
+    session.run().unwrap();
+    assert!(dir.join("step3.ckpt").exists());
+    assert!(dir.join("step6.ckpt").exists());
+}
+
+/// An empty placement must be rejected at step time with a proper error,
+/// not a NaN loss from a division by zero.
+#[test]
+fn empty_placement_step_errors_instead_of_nan() {
+    let Some(engine) = tiny() else { return };
+    let mut t = Trainer::new(
+        &engine,
+        TrainConfig { determinism: Determinism::D1, ..TrainConfig::new(0) },
+        Placement { executors: vec![] },
+    )
+    .unwrap();
+    let err = t.step(&engine).unwrap_err();
+    assert!(err.to_string().contains("no ESTs"), "unexpected error: {err}");
+}
+
+/// Hosting order inside an executor spec is still free under a session:
+/// two sessions whose directors reconfigure onto permuted-rank placements
+/// agree bit for bit.
+#[test]
+fn session_reconfigure_ignores_executor_rank_order() {
+    let Some(engine) = tiny() else { return };
+    let fwd = Placement {
+        executors: vec![
+            ExecutorSpec { device: V, est_ranks: vec![0, 1] },
+            ExecutorSpec { device: V, est_ranks: vec![2, 3] },
+        ],
+    };
+    let rev = Placement {
+        executors: vec![
+            ExecutorSpec { device: V, est_ranks: vec![3, 2] },
+            ExecutorSpec { device: V, est_ranks: vec![1, 0] },
+        ],
+    };
+    let run = |p: Placement| {
+        let director = StaticScheduleDirector::new(vec![(2, p)]);
+        let mut s =
+            SessionBuilder::new(&engine, cfg(Determinism::D1), Placement::homogeneous(V, 4, 4))
+                .steps(6)
+                .log_every(0)
+                .director(Box::new(director))
+                .build()
+                .unwrap();
+        s.run().unwrap().fingerprint
+    };
+    assert_eq!(run(fwd), run(rev));
+}
