@@ -1,0 +1,109 @@
+//! Multi-job cluster-runtime bench: aggregate training throughput of
+//! 1/2/4 concurrent elastic jobs contending for a fixed heterogeneous
+//! fleet (2 V100 + 1 P100 + 1 T4), under homogeneous-only scheduling (D1)
+//! vs D2 heterogeneous scheduling (mixed-type grants allowed).
+//!
+//! An inline bitwise cross-check asserts every job still equals its
+//! fixed-placement sequential reference. The record is written to
+//! `rust/BENCH_cluster.json` so future PRs have a perf trajectory.
+//!
+//!     cargo bench --bench cluster_throughput
+
+use std::path::PathBuf;
+
+use easyscale::model::workload::Workload;
+use easyscale::runtime::Engine;
+use easyscale::train::{reference_fingerprint, ClusterJob, ClusterRuntime, Determinism, TrainConfig};
+use easyscale::util::bench::Table;
+use easyscale::util::json::Json;
+
+const FLEET: [usize; 3] = [2, 1, 1];
+const STEPS: u64 = 10;
+const MAX_P: usize = 4;
+const MAX_JOBS: usize = 4;
+
+fn job_cfg(seed: u64, det: Determinism) -> TrainConfig {
+    TrainConfig { seed, determinism: det, aug_rate: 0.0, ..TrainConfig::new(MAX_P) }
+}
+
+/// One cluster run; returns (aggregate steps/s, per-job fingerprints).
+fn run_cluster(engine: &Engine, n_jobs: usize, det: Determinism) -> (f64, Vec<u64>) {
+    let workloads =
+        [Workload::Bert, Workload::Electra, Workload::NeuMf, Workload::SwinTransformer];
+    let mut rt = ClusterRuntime::new(engine, FLEET, 2);
+    for i in 0..n_jobs {
+        let cfg = job_cfg(42 + i as u64, det);
+        rt.submit(ClusterJob { workload: workloads[i % workloads.len()], cfg, steps: STEPS });
+    }
+    let report = rt.run().unwrap();
+    let fps = report.jobs.iter().map(|j| j.report.fingerprint).collect();
+    (report.aggregate_rate(), fps)
+}
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = match Engine::open(&root, "tiny") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP cluster bench: no engine available ({e:#})");
+            return;
+        }
+    };
+    println!(
+        "== cluster runtime: aggregate steps/s on [V100:{} P100:{} T4:{}], {} steps/job ==",
+        FLEET[0], FLEET[1], FLEET[2], STEPS
+    );
+    // sequential V100 references (the shared consistency oracle), one per
+    // seed, computed once and reused across the 1/2/4-job sweeps
+    let refs: Vec<u64> = (0..MAX_JOBS as u64)
+        .map(|i| {
+            reference_fingerprint(&engine, &job_cfg(42 + i, Determinism::D1_D2), STEPS).unwrap()
+        })
+        .collect();
+    let mut table = Table::new(&[
+        "jobs",
+        "homo-only (D1) steps/s",
+        "D2-hetero steps/s",
+        "hetero/homo",
+        "bitwise",
+    ]);
+    let mut rows = Vec::new();
+    for n_jobs in [1usize, 2, MAX_JOBS] {
+        let (homo_rate, _homo_fps) = run_cluster(&engine, n_jobs, Determinism::D1);
+        let (heter_rate, heter_fps) = run_cluster(&engine, n_jobs, Determinism::D1_D2);
+        // Bitwise cross-check on the D2 runs only: D1+D2 is placement- and
+        // type-free, so every job must equal its V100 sequential reference.
+        // (A D1-only job scheduled onto P100/T4 selects those vendor
+        // kernels — the paper's heterogeneity failure mode, reproduced
+        // mechanically — so no cross-type guarantee exists there.)
+        let bitwise = heter_fps.iter().zip(&refs).all(|(x, r)| x == r);
+        assert!(bitwise, "a D1+D2 cluster job drifted from its sequential reference");
+        table.row(&[
+            format!("{n_jobs}"),
+            format!("{homo_rate:.2}"),
+            format!("{heter_rate:.2}"),
+            format!("{:.2}x", heter_rate / homo_rate.max(1e-12)),
+            "identical".to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("jobs", Json::num(n_jobs as f64)),
+            ("homo_steps_per_s", Json::num(homo_rate)),
+            ("hetero_steps_per_s", Json::num(heter_rate)),
+        ]));
+    }
+    table.print();
+
+    let backend = if cfg!(feature = "pjrt") { "pjrt-sequential" } else { "native-parallel" };
+    let record = Json::obj(vec![
+        ("bench", Json::str("cluster_runtime")),
+        ("backend", Json::str(backend)),
+        ("fleet", Json::str("v100:2,p100:1,t4:1")),
+        ("steps_per_job", Json::num(STEPS as f64)),
+        ("max_p", Json::num(MAX_P as f64)),
+        ("decide_every", Json::num(2.0)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_cluster.json");
+    std::fs::write(&out, record.dump() + "\n").unwrap();
+    println!("cluster record written to {}", out.display());
+}

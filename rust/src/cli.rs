@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train            elastic training on simulated GPUs over real AOT artifacts
+//!   cluster          N concurrent elastic jobs contending for one shared fleet
 //!   plan             inspect the waste-model planner (paper Eq. 1)
 //!   trace            run the Fig. 14/15 trace experiment
 //!   serving          run the Fig. 16 serving-colocation experiment
@@ -30,7 +31,9 @@ use crate::sched::plan::{enumerate_configs, JobSpec};
 use crate::sim::serving::{run_serving_sim, ServingSimConfig};
 use crate::sim::simulator::{rate_scale_from_observation, ElasticSim, SchedulerKind};
 use crate::sim::trace::gen_trace;
-use crate::train::{Determinism, SessionBuilder, TrainConfig};
+use crate::train::{
+    reference_fingerprint, ClusterJob, ClusterRuntime, Determinism, SessionBuilder, TrainConfig,
+};
 use crate::util::argparse::Args;
 
 pub const USAGE: &str = "easyscale — accuracy-consistent elastic training (EasyScale reproduction)
@@ -58,6 +61,21 @@ SUBCOMMANDS
     --eval-every N    held-out eval every N steps (0 = off)
     --loss-csv PATH   write the loss curve as CSV
     --checkpoint P    write a final checkpoint
+  cluster           N concurrent elastic jobs on one shared heterogeneous fleet
+    --jobs N          concurrent jobs (default: 3)
+    --fleet SPEC      fleet GPUs, e.g. 'v100:2,p100:1,t4:1' (default)
+    --decide-every N  global rounds between scheduling decisions (default: 5)
+    --steps N         step budget per job (default: 30)
+    --max-p N         EasyScaleThreads per job (default: 4)
+    --workloads LIST  Table-1 profiles cycled over jobs (default: Bert,Electra,NeuMf)
+    --determinism L   none|d0|d1|d0+d2|d1+d2 (default: d1+d2 — D2 unlocks mixed types)
+    --seed N          base seed; job i trains with seed+i (default: 42)
+    --preset NAME     engine preset (default: tiny)
+    --sequential      drive each job's executors sequentially
+    --threads N       cap concurrent executor threads per job (default 0 = unbounded)
+    --verify          recompute each job's fixed-placement sequential V100
+                      reference and compare fingerprints (bitwise under d1+d2;
+                      without D2 only an all-V100 fleet can match)
   plan              print planner configurations for a workload
     --workload NAME   Table-1 model (default: Bert)
     --max-p N         (default: 8)  --gpus SPEC (default: v100:1,t4:1)
@@ -71,14 +89,15 @@ SUBCOMMANDS
 ";
 
 pub fn main_with(argv: Vec<String>) -> Result<()> {
-    let args =
-        Args::parse(&argv, &["d2", "help", "sequential"]).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let args = Args::parse(&argv, &["d2", "help", "sequential", "verify"])
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     if args.flag("help") {
         println!("{USAGE}");
         return Ok(());
     }
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("cluster") => cmd_cluster(&args),
         Some("plan") => cmd_plan(&args),
         Some("trace") => cmd_trace(&args),
         Some("serving") => cmd_serving(&args),
@@ -216,6 +235,106 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(ck) = final_ckpt {
         println!("checkpoint written to {ck}");
+    }
+    Ok(())
+}
+
+/// N concurrent elastic jobs on one shared heterogeneous fleet: a thin
+/// adapter over [`crate::train::ClusterRuntime`].
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let preset = args.str_or("preset", "tiny");
+    let n_jobs = args.usize_or("jobs", 3)?;
+    let steps = args.usize_or("steps", 30)? as u64;
+    let max_p = args.usize_or("max-p", 4)?;
+    let det = Determinism::parse(&args.str_or("determinism", "d1+d2"))?;
+    let seed = args.u64_or("seed", 42)?;
+    let decide_every = args.usize_or("decide-every", 5)? as u64;
+    let fleet = parse_gpu_vector(&args.str_or("fleet", "v100:2,p100:1,t4:1"))?;
+    let run_mode = if args.flag("sequential") {
+        RunMode::Sequential
+    } else {
+        RunMode::Parallel { max_threads: args.usize_or("threads", 0)? }
+    };
+    let names = args.str_or("workloads", "Bert,Electra,NeuMf");
+    let workloads: Vec<Workload> = names
+        .split(',')
+        .map(|n| {
+            Workload::by_name(n.trim())
+                .ok_or_else(|| anyhow::anyhow!("unknown workload '{}'", n.trim()))
+        })
+        .collect::<Result<_>>()?;
+    if n_jobs == 0 {
+        bail!("--jobs must be at least 1");
+    }
+    if max_p == 0 {
+        bail!("--max-p must be at least 1");
+    }
+
+    let engine = Engine::open(&artifacts, &preset)?;
+    crate::info!(
+        "cluster",
+        "preset={} jobs={} fleet=[V100:{} P100:{} T4:{}] det={} decide-every={}",
+        preset, n_jobs, fleet[0], fleet[1], fleet[2], det, decide_every
+    );
+    let mut rt = ClusterRuntime::new(&engine, fleet, decide_every);
+    for i in 0..n_jobs {
+        let cfg = TrainConfig {
+            seed: seed + i as u64,
+            determinism: det,
+            run_mode,
+            ..TrainConfig::new(max_p)
+        };
+        rt.submit(ClusterJob { workload: workloads[i % workloads.len()], cfg, steps });
+    }
+    let report = rt.run()?;
+
+    println!(
+        "{:>4} | {:>16} | {:>6} | {:>10} | {:>18} | {:>16}",
+        "job", "workload", "steps", "final loss", "final GPUs [V,P,T]", "fingerprint"
+    );
+    for j in &report.jobs {
+        println!(
+            "{:>4} | {:>16} | {:>6} | {:>10.4} | {:>18} | {:>16x}",
+            j.job_id,
+            j.workload.profile().name,
+            j.report.steps_run,
+            j.report.final_loss,
+            format!("{:?}", j.final_gpus),
+            j.report.fingerprint,
+        );
+    }
+    println!(
+        "cluster: {} decision round(s), {} reconfiguration(s), {:.1}s wall, \
+         aggregate {:.2} steps/s",
+        report.decisions,
+        report.reconfigs,
+        report.wall_s,
+        report.aggregate_rate()
+    );
+
+    if args.flag("verify") {
+        // each job's fixed-placement sequential V100 reference — the
+        // paper's consistency oracle, shared with tests and the bench
+        let mut all_ok = true;
+        for j in &report.jobs {
+            let cfg = TrainConfig {
+                seed: seed + j.job_id as u64,
+                determinism: det,
+                ..TrainConfig::new(max_p)
+            };
+            let reference = reference_fingerprint(&engine, &cfg, steps)?;
+            let ok = reference == j.report.fingerprint;
+            all_ok &= ok;
+            println!(
+                "verify job {}: reference {reference:16x} -> {}",
+                j.job_id,
+                if ok { "bitwise identical" } else { "DRIFT" }
+            );
+        }
+        if !all_ok {
+            bail!("verification failed: at least one job drifted from its reference");
+        }
     }
     Ok(())
 }
@@ -416,6 +535,25 @@ mod tests {
         assert!(main_with(argv(&[
             "train", "--preset", "tiny", "--steps", "2", "--director", "aimaster",
             "--schedule", "1:v100:1"
+        ]))
+        .is_err());
+    }
+
+    /// End-to-end smoke over the multi-job cluster runtime: two D1+D2 jobs
+    /// on a shared heterogeneous fleet, verified against their sequential
+    /// fixed-placement references (`--verify` bails on any drift).
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn cluster_smoke_runs_and_verifies() {
+        assert!(main_with(argv(&[
+            "cluster", "--preset", "tiny", "--jobs", "2", "--steps", "6",
+            "--max-p", "4", "--fleet", "v100:2,p100:1,t4:1", "--decide-every", "2",
+            "--sequential", "--verify",
+        ]))
+        .is_ok());
+        assert!(main_with(argv(&["cluster", "--jobs", "0"])).is_err());
+        assert!(main_with(argv(&[
+            "cluster", "--preset", "tiny", "--workloads", "NoSuchModel"
         ]))
         .is_err());
     }

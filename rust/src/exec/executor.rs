@@ -48,6 +48,37 @@ impl Placement {
         Placement { executors }
     }
 
+    /// [`Placement::heterogeneous`] with a memory-feasibility check: errors
+    /// when the workload's memory unit (`mu_gb`) does not fit one of the
+    /// listed devices instead of silently over-packing it.
+    pub fn heterogeneous_checked(spec: &[(DeviceType, usize)], mu_gb: f64) -> Result<Placement> {
+        let p = Placement::heterogeneous(spec);
+        p.check_memory(mu_gb)?;
+        Ok(p)
+    }
+
+    /// Memory feasibility under the one-executor-per-GPU convention of the
+    /// direct constructors: an executor's footprint is its MU plus the
+    /// CUDA context, and it must fit its device — the tight cases being the
+    /// 16 GB P100/T4 types. (Multi-executor-per-GPU plans are checked on
+    /// the planner side: `sched::plan::evaluate` and
+    /// `sched::director::placement_from_config`.)
+    pub fn check_memory(&self, mu_gb: f64) -> Result<()> {
+        for e in &self.executors {
+            let need = mu_gb + e.device.cuda_context_gb();
+            if need > e.device.memory_gb() {
+                anyhow::bail!(
+                    "executor on {} needs {need:.2} GB ({mu_gb:.2} GB MU + {:.2} GB context) \
+                     but the device has {} GB",
+                    e.device,
+                    e.device.cuda_context_gb(),
+                    e.device.memory_gb()
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Parse `'v100:2,p100:1'` and round-robin `max_p` EST ranks over the
     /// listed GPUs — the CLI's `--gpus` lowering.
     pub fn from_spec(spec: &str, max_p: usize) -> Result<Placement> {
@@ -197,6 +228,21 @@ mod tests {
         // whitespace around parts and separators is tolerated
         let p = Placement::from_spec("  v100:1 ,  p100:1  ", 2).unwrap();
         assert_eq!(p.device_counts(), [1, 1, 0]);
+    }
+
+    #[test]
+    fn memory_check_guards_16gb_types() {
+        // a 13 GB-MU workload (Bert-like) fits every type once...
+        let mix = &[(DeviceType::V100, 2), (DeviceType::P100, 1), (DeviceType::T4, 1)];
+        let p = Placement::heterogeneous_checked(mix, 13.0).unwrap();
+        p.check_memory(13.0).unwrap();
+        // ...but a 16 GB-MU one only fits the 32 GB V100 (16.75 > 16)
+        assert!(Placement::heterogeneous_checked(mix, 16.0).is_err());
+        assert!(Placement::heterogeneous_checked(&[(DeviceType::V100, 4)], 16.0).is_ok());
+        assert!(Placement::heterogeneous_checked(&[(DeviceType::T4, 4)], 16.0).is_err());
+        // the boundary: exactly memory - context still fits
+        assert!(Placement::heterogeneous_checked(&[(DeviceType::P100, 2)], 15.25).is_ok());
+        assert!(Placement::heterogeneous_checked(&[(DeviceType::P100, 2)], 15.26).is_err());
     }
 
     #[test]

@@ -26,6 +26,15 @@
 //! proposals are planned over free GPUs, and slowdowns fall back. The CLI's
 //! `train` subcommand is a thin adapter over this builder.
 //!
+//! At cluster scale, the trainer-agnostic [`sched::ClusterScheduler`]
+//! (Algorithm 1 + the §3.4.2 replanning policy) arbitrates one GPU fleet
+//! between jobs, with two frontends: the analytic trace simulator
+//! ([`sim::simulator::ElasticSim`]) and the real multi-job runtime
+//! ([`train::ClusterRuntime`], the CLI's `cluster` subcommand) — N
+//! elastic sessions whose mixed-type D2 grants lower to heterogeneous
+//! placements while every job stays bitwise-identical to its
+//! fixed-placement sequential reference.
+//!
 //! Python never runs on the request path: with `--features pjrt` the
 //! binary loads `artifacts/` via the PJRT CPU client (`xla` crate); the
 //! default build uses the pure-Rust native reference engine

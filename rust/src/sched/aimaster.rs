@@ -14,6 +14,14 @@ use crate::exec::devices::DEVICE_TYPES;
 
 use super::plan::{best_config, GpuVector, JobSpec, PlanConfig};
 
+/// Band the smoothed observed/estimated correction factor is clamped to.
+/// The Table-1 profiles only anchor *relative* capabilities; a real
+/// substrate's absolute clock can differ by orders of magnitude, so the
+/// band is wide — but bounded, so a single absurd throughput sample can
+/// never poison every future planning decision.
+pub const CALIB_MIN: f64 = 0.01;
+pub const CALIB_MAX: f64 = 100.0;
+
 /// A scale-out proposal: "give me `add` more GPUs; my throughput rises by
 /// `speedup` mini-batches/s, i.e. `speedup_per_gpu` per GPU added".
 #[derive(Debug, Clone)]
@@ -122,6 +130,43 @@ impl AiMaster {
                 out.push(p);
             }
         }
+        // Mixed-type proposal (D2 heterogeneity, §3.4.2): a greedy
+        // fastest-first take across *all* free types at once. Single-type
+        // adds cannot express "sweep the leftovers of every type", which is
+        // exactly what a hetero-eligible job should do on a fragmented
+        // fleet; the planner's per-type A_i assignment (Eq. 1) then
+        // load-balances the ESTs across the mix.
+        if !self.homogeneous_only {
+            let total_held: usize = self.held.iter().sum();
+            let mut left = self.job.max_p.saturating_sub(total_held);
+            let mut add = [0usize; 3];
+            for i in 0..3 {
+                let take = available[i].min(left);
+                add[i] = take;
+                left -= take;
+            }
+            let n_new: usize = add.iter().sum();
+            let n_types = add.iter().filter(|&&a| a > 0).count();
+            // single-type sweeps are already covered by the per-type search
+            if n_new > 0 && n_types > 1 {
+                let mut nums = self.held;
+                for i in 0..3 {
+                    nums[i] += add[i];
+                }
+                if let Some(cfg) = best_config(&self.job, nums) {
+                    let speedup = (cfg.step_rate * self.calib - base_rate).max(0.0);
+                    if speedup > 1e-12 && !(base_rate > 0.0 && speedup < 0.03 * base_rate) {
+                        out.push(Proposal {
+                            job_id: self.job_id,
+                            add,
+                            speedup_per_gpu: speedup / n_new as f64,
+                            speedup,
+                            config: cfg,
+                        });
+                    }
+                }
+            }
+        }
         out.sort_by(|a, b| {
             b.speedup_per_gpu
                 .partial_cmp(&a.speedup_per_gpu)
@@ -133,12 +178,19 @@ impl AiMaster {
     }
 
     /// Feed an observed throughput back into the estimator (paper: "uses
-    /// the runtime execution statistics of jobs").
+    /// the runtime execution statistics of jobs"). Non-finite or
+    /// non-positive samples are rejected outright — one bad measurement
+    /// (a stalled step, a division by zero upstream) must not poison all
+    /// future planning — and the smoothed factor is clamped to
+    /// [`CALIB_MIN`]..[`CALIB_MAX`].
     pub fn observe(&mut self, observed_rate: f64) {
+        if !observed_rate.is_finite() || observed_rate <= 0.0 {
+            return;
+        }
         if let Some(cfg) = self.plan_current() {
-            if cfg.step_rate > 0.0 && observed_rate > 0.0 {
+            if cfg.step_rate > 0.0 {
                 let ratio = observed_rate / cfg.step_rate;
-                self.calib = 0.7 * self.calib + 0.3 * ratio;
+                self.calib = (0.7 * self.calib + 0.3 * ratio).clamp(CALIB_MIN, CALIB_MAX);
             }
         }
     }
@@ -213,6 +265,51 @@ mod tests {
             props.iter().all(|p| p.add[0] == 0 && p.add[2] == 0 && p.add[1] > 0),
             "{props:?}"
         );
+    }
+
+    #[test]
+    fn mixed_proposal_spans_types_when_hetero_eligible() {
+        // Bert (hetero-eligible) on a fragmented fleet: besides per-type
+        // jumps, a greedy mixed sweep across all free types is proposed.
+        let mut m = master(Workload::Bert, 8);
+        m.held = [1, 0, 0];
+        let props = m.proposals([1, 1, 1], 10);
+        assert!(
+            props.iter().any(|p| p.add.iter().filter(|&&a| a > 0).count() > 1),
+            "expected a mixed-type proposal, got {props:?}"
+        );
+        // mixed proposals never exceed maxP GPUs in total
+        for p in &props {
+            let total: usize = m.held.iter().sum::<usize>() + p.n_new_gpus();
+            assert!(total <= m.job.max_p);
+        }
+        // a conv-heavy (homogeneous-only) job never proposes a mix
+        let mut conv = master(Workload::ResNet50, 8);
+        conv.held = [1, 0, 0];
+        for p in conv.proposals([1, 1, 1], 10) {
+            assert_eq!(p.add.iter().filter(|&&a| a > 0).count(), 1, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn observe_rejects_degenerate_samples_and_clamps() {
+        let mut m = master(Workload::Bert, 4);
+        m.held = [1, 0, 0];
+        let before = m.calib;
+        for bad in [0.0, -3.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            m.observe(bad);
+            assert_eq!(m.calib, before, "sample {bad} must not move calib");
+        }
+        // wildly fast/slow (but finite) samples saturate at the band edges
+        for _ in 0..200 {
+            m.observe(1e12);
+        }
+        assert_eq!(m.calib, CALIB_MAX);
+        for _ in 0..400 {
+            m.observe(1e-12);
+        }
+        assert_eq!(m.calib, CALIB_MIN);
+        assert!(m.calib.is_finite());
     }
 
     #[test]

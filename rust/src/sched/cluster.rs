@@ -1,27 +1,110 @@
-//! Inter-job cluster scheduler — paper Algorithm 1.
+//! Inter-job cluster scheduling — paper Algorithm 1 and the §3.4.2
+//! replanning policy, extracted trainer-agnostically so the *same*
+//! arbitration drives both the analytic trace simulator
+//! ([`crate::sim::simulator::ElasticSim`]) and real multi-job training
+//! ([`crate::train::cluster::ClusterRuntime`]).
 //!
-//! Responds to AIMaster proposals: sort by (average speedup-per-GPU desc,
-//! then more GPUs first), greedily approve while free GPUs remain. Elastic
-//! jobs use *spare* GPUs; when owners return, the scheduler preempts
-//! elastic allocations and tries to re-grant the same GPUs later (handled
-//! by the simulator's preemption events).
+//! Two layers:
+//!
+//! * **the Algorithm-1 core** ([`ClusterScheduler::schedule`]) — sort
+//!   proposals by (average speedup-per-GPU desc, then more GPUs first) and
+//!   greedily approve while free GPUs remain, at most one approval per job
+//!   per round (a job's proposals are alternatives against its *current*
+//!   allocation, not stackable increments);
+//! * **the replanning policy** ([`ClusterScheduler::replan`]) — the FIFO
+//!   elastic pass over all managed jobs: seed queued jobs with one GPU the
+//!   moment anything is free (scale-in a running job above its minP
+//!   guarantee when the fleet is full — the paper's "eliminate the
+//!   mandatory waiting of gang scheduling"), grow each job through its own
+//!   AIMaster proposals, then a thrash-guarded migration pass onto faster
+//!   replacement allocations.
+//!
+//! The scheduler owns GPU accounting and the per-job [`AiMaster`]s;
+//! frontends own time and the consequences of a changed [`Allocation`]:
+//! the simulator charges reconfiguration penalties to its analytic clock,
+//! the real runtime lowers granted configurations to
+//! [`crate::exec::Placement`]s and reconfigures live sessions.
 
-use super::aimaster::Proposal;
-use super::plan::GpuVector;
+use super::aimaster::{AiMaster, Proposal};
+use super::plan::{best_config_any, GpuVector, JobSpec, PlanConfig};
 
-#[derive(Debug, Clone, Default)]
+/// Lifecycle of a job under the cluster scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobPhase {
+    /// registered but not yet arrived
+    Pending,
+    /// arrived, waiting for its first GPU
+    Queued,
+    Running,
+    Finished,
+}
+
+/// Why a job's allocation changed in a replanning round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocationChange {
+    /// first GPUs of a queued job (Queued -> Running)
+    Started,
+    /// grew through approved proposals and/or migrated to faster GPUs
+    Reallocated,
+    /// yielded a GPU so a queued job could start (elastic scale-in)
+    Preempted,
+}
+
+/// One job's changed allocation out of [`ClusterScheduler::replan`].
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub job_id: usize,
+    /// the job's full new allocation (not a delta)
+    pub held: GpuVector,
+    /// top-1 planner configuration for the new allocation
+    pub config: Option<PlanConfig>,
+    pub change: AllocationChange,
+}
+
+#[derive(Debug, Clone)]
+struct Managed {
+    master: AiMaster,
+    phase: JobPhase,
+    arrival: f64,
+    preemptions: u64,
+}
+
+#[derive(Debug, Clone)]
 pub struct ClusterScheduler {
     /// free GPUs per type
     pub available: GpuVector,
+    /// total fleet (free + held) per type
+    fleet: GpuVector,
+    jobs: Vec<Managed>,
+    /// migration threshold: a job trades its allocation for a faster one
+    /// only when the estimated rate improves by this factor (anti-thrash)
+    pub migrate_threshold: f64,
+    /// top-K proposals evaluated per job per grow round
+    pub proposals_per_round: usize,
 }
 
 impl ClusterScheduler {
     pub fn new(available: GpuVector) -> ClusterScheduler {
-        ClusterScheduler { available }
+        ClusterScheduler {
+            available,
+            fleet: available,
+            jobs: Vec::new(),
+            migrate_threshold: 1.2,
+            proposals_per_round: 3,
+        }
     }
 
     pub fn total_available(&self) -> usize {
         self.available.iter().sum()
+    }
+
+    /// Total fleet (free + held) per type.
+    pub fn fleet(&self) -> GpuVector {
+        self.fleet
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
     }
 
     fn satisfies(&self, add: &GpuVector) -> bool {
@@ -72,13 +155,261 @@ impl ClusterScheduler {
         }
         got
     }
+
+    // -- managed-job lifecycle ---------------------------------------------
+
+    /// Register a job. Its [`AiMaster`] is created from the spec (D2,
+    /// minP, per-model homogeneity eligibility — §3.3); callers may tune
+    /// the master further through [`ClusterScheduler::master_mut`] (e.g.
+    /// force `homogeneous_only` when running without D2).
+    pub fn add_job(&mut self, spec: JobSpec) -> usize {
+        let id = self.jobs.len();
+        self.jobs.push(Managed {
+            master: AiMaster::new(id, spec),
+            phase: JobPhase::Pending,
+            arrival: 0.0,
+            preemptions: 0,
+        });
+        id
+    }
+
+    pub fn master(&self, id: usize) -> &AiMaster {
+        &self.jobs[id].master
+    }
+
+    pub fn master_mut(&mut self, id: usize) -> &mut AiMaster {
+        &mut self.jobs[id].master
+    }
+
+    pub fn phase(&self, id: usize) -> JobPhase {
+        self.jobs[id].phase
+    }
+
+    /// GPUs a job currently holds (the master's accounting, which stays
+    /// correct for multi-executor-per-GPU plans).
+    pub fn held(&self, id: usize) -> GpuVector {
+        self.jobs[id].master.held
+    }
+
+    /// Times this job yielded a GPU to seed another (elastic scale-in).
+    pub fn preemptions(&self, id: usize) -> u64 {
+        self.jobs[id].preemptions
+    }
+
+    /// A pending job enters the queue. `arrival` orders the FIFO pass
+    /// (ties broken by job id); idempotent once a job has arrived.
+    pub fn arrive(&mut self, id: usize, arrival: f64) {
+        let j = &mut self.jobs[id];
+        if j.phase == JobPhase::Pending {
+            j.phase = JobPhase::Queued;
+            j.arrival = arrival;
+        }
+    }
+
+    /// A job completed (or was torn down): its GPUs return to the pool.
+    /// Returns what was released.
+    pub fn finish(&mut self, id: usize) -> GpuVector {
+        if self.jobs[id].phase == JobPhase::Finished {
+            return [0, 0, 0];
+        }
+        let held = self.jobs[id].master.held;
+        self.jobs[id].phase = JobPhase::Finished;
+        self.jobs[id].master.revoke(held);
+        self.release(held);
+        held
+    }
+
+    // -- the replanning policy ---------------------------------------------
+
+    /// One replanning round over all managed jobs (paper §3.4.2): FIFO
+    /// elastic seeding, per-job Algorithm-1 growth, then migration.
+    /// Returns the allocations that actually changed, in FIFO order.
+    pub fn replan(&mut self) -> Vec<Allocation> {
+        let before: Vec<GpuVector> = self.jobs.iter().map(|j| j.master.held).collect();
+        let mut change: Vec<Option<AllocationChange>> = vec![None; self.jobs.len()];
+        let mut fifo: Vec<usize> = (0..self.jobs.len())
+            .filter(|&i| matches!(self.jobs[i].phase, JobPhase::Queued | JobPhase::Running))
+            .collect();
+        fifo.sort_by(|&a, &b| {
+            self.jobs[a]
+                .arrival
+                .partial_cmp(&self.jobs[b].arrival)
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for &id in &fifo {
+            if self.jobs[id].phase == JobPhase::Queued {
+                // device types this queued job can actually run on (a
+                // workload whose MU does not fit a 16 GB type must neither
+                // be seeded on it nor cause it to be freed for nothing)
+                let feasible: Vec<usize> = (0..3)
+                    .filter(|&ty| {
+                        let mut take = [0, 0, 0];
+                        take[ty] = 1;
+                        best_config_any(&self.jobs[id].master.job, take).is_some()
+                    })
+                    .collect();
+                if self.total_available() == 0 {
+                    // elastic scale-in: a job above its minP guarantee
+                    // yields one GPU so every job starts immediately (the
+                    // paper's "eliminate the mandatory waiting of gang
+                    // scheduling" — running jobs shrink in seconds). Jobs
+                    // at or below max(minP, 1) GPUs are never shrunk, and
+                    // only a GPU of a type the queued job can use is worth
+                    // freeing — otherwise the victim would just reabsorb it
+                    // next round while the queued job starves (livelock).
+                    let victim = self
+                        .jobs
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, j)| {
+                            j.phase == JobPhase::Running
+                                && j.master.held.iter().sum::<usize>()
+                                    > j.master.job.min_p.max(1)
+                                && feasible.iter().any(|&ty| j.master.held[ty] > 0)
+                        })
+                        .max_by_key(|(_, j)| j.master.held.iter().sum::<usize>())
+                        .map(|(i, _)| i);
+                    if let Some(v) = victim {
+                        let held = self.jobs[v].master.held;
+                        let ty = feasible
+                            .iter()
+                            .copied()
+                            .filter(|&t| held[t] > 0)
+                            .max_by_key(|&t| held[t])
+                            .unwrap();
+                        let mut give = [0, 0, 0];
+                        give[ty] = 1;
+                        self.jobs[v].master.revoke(give);
+                        self.jobs[v].preemptions += 1;
+                        self.release(give);
+                        if change[v].is_none() {
+                            change[v] = Some(AllocationChange::Preempted);
+                        }
+                    }
+                }
+                // seed with the fastest available feasible type
+                let mut seeded = false;
+                for ty in 0..3 {
+                    if self.available[ty] == 0 || !feasible.contains(&ty) {
+                        continue;
+                    }
+                    let mut take = [0, 0, 0];
+                    take[ty] = 1;
+                    self.reserve(take);
+                    self.jobs[id].master.grant(take);
+                    self.jobs[id].phase = JobPhase::Running;
+                    change[id] = Some(AllocationChange::Started);
+                    seeded = true;
+                    break;
+                }
+                if !seeded {
+                    continue;
+                }
+            }
+            // grow this job until its proposals dry up or the pool is
+            // exhausted (Algorithm 1 over its own top-K proposals)
+            loop {
+                let proposals = self.jobs[id]
+                    .master
+                    .proposals(self.available, self.proposals_per_round);
+                let approved = self.schedule(proposals);
+                if approved.is_empty() {
+                    break;
+                }
+                for p in approved {
+                    self.jobs[p.job_id].master.grant(p.add);
+                }
+                if change[id].is_none() {
+                    change[id] = Some(AllocationChange::Reallocated);
+                }
+            }
+            // migration/upgrade pass: when better GPUs freed up, a job may
+            // trade its allocation for a faster one (the AIMaster
+            // fallback/reallocation behaviour), guarded by the improvement
+            // threshold to avoid thrash.
+            let held = self.jobs[id].master.held;
+            let spec = self.jobs[id].master.job.clone();
+            let cur_rate = best_config_any(&spec, held).map(|c| c.step_rate).unwrap_or(0.0);
+            let mut pool = self.available;
+            for i in 0..3 {
+                pool[i] += held[i];
+            }
+            if let Some((cand, rate)) =
+                best_replacement(&spec, pool, self.jobs[id].master.homogeneous_only)
+            {
+                if rate > cur_rate * self.migrate_threshold && cand != held {
+                    self.release(held);
+                    self.reserve(cand);
+                    self.jobs[id].master.held = cand;
+                    if change[id].is_none() {
+                        change[id] = Some(AllocationChange::Reallocated);
+                    }
+                }
+            }
+        }
+        let mut out = Vec::new();
+        for &id in &fifo {
+            let Some(ch) = change[id] else { continue };
+            let held = self.jobs[id].master.held;
+            if ch != AllocationChange::Started && held == before[id] {
+                continue; // e.g. preempted, then re-grew to the same GPUs
+            }
+            out.push(Allocation {
+                job_id: id,
+                held,
+                config: best_config_any(&self.jobs[id].master.job, held),
+                change: ch,
+            });
+        }
+        out
+    }
+}
+
+/// Best full re-placement of a job from a GPU `pool` (its own GPUs plus the
+/// free ones). Candidates: each single type alone (the homogeneous set),
+/// and — for heterogeneity-eligible jobs — a fastest-first greedy mix.
+pub fn best_replacement(
+    spec: &JobSpec,
+    pool: GpuVector,
+    homogeneous_only: bool,
+) -> Option<(GpuVector, f64)> {
+    let mut best: Option<(GpuVector, f64)> = None;
+    let mut consider = |cand: GpuVector| {
+        if cand.iter().sum::<usize>() == 0 {
+            return;
+        }
+        if let Some(cfg) = best_config_any(spec, cand) {
+            if best.as_ref().map(|b| cfg.step_rate > b.1).unwrap_or(true) {
+                best = Some((cand, cfg.step_rate));
+            }
+        }
+    };
+    for t in 0..3 {
+        let n = pool[t].min(spec.max_p);
+        let mut cand = [0, 0, 0];
+        cand[t] = n;
+        consider(cand);
+    }
+    if !homogeneous_only {
+        // fastest-first greedy mix up to maxP GPUs
+        let mut left = spec.max_p;
+        let mut cand = [0, 0, 0];
+        for t in 0..3 {
+            let take = pool[t].min(left);
+            cand[t] = take;
+            left -= take;
+        }
+        consider(cand);
+    }
+    best
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sched::plan::{best_config, JobSpec};
     use crate::model::workload::Workload;
+    use crate::sched::plan::{best_config, JobSpec};
 
     fn proposal(job_id: usize, add: GpuVector, speedup_per_gpu: f64) -> Proposal {
         let job = JobSpec::new(Workload::Bert, 8);
@@ -140,5 +471,115 @@ mod tests {
         let mut cs = ClusterScheduler::new([0, 0, 0]);
         let approved = cs.schedule(vec![proposal(0, [1, 0, 0], 1.0)]);
         assert!(approved.is_empty());
+    }
+
+    // -- replanning policy -------------------------------------------------
+
+    fn managed(fleet: GpuVector, specs: &[JobSpec]) -> ClusterScheduler {
+        let mut cs = ClusterScheduler::new(fleet);
+        for s in specs {
+            cs.add_job(s.clone());
+        }
+        cs
+    }
+
+    #[test]
+    fn replan_seeds_and_grows_a_single_job() {
+        let spec = JobSpec::new(Workload::Bert, 4);
+        let mut cs = managed([4, 0, 0], &[spec]);
+        cs.arrive(0, 0.0);
+        let allocs = cs.replan();
+        assert_eq!(allocs.len(), 1);
+        assert_eq!(allocs[0].change, AllocationChange::Started);
+        assert_eq!(cs.phase(0), JobPhase::Running);
+        // seeded with one V100, then grew through its own proposals
+        assert!(cs.held(0)[0] >= 1, "held {:?}", cs.held(0));
+        assert_eq!(allocs[0].held, cs.held(0));
+        assert!(allocs[0].config.is_some());
+        // fleet accounting balances
+        assert_eq!(cs.held(0)[0] + cs.available[0], 4);
+    }
+
+    #[test]
+    fn replan_is_fifo_and_scale_in_seeds_late_arrivals() {
+        let specs = vec![
+            JobSpec::new(Workload::Bert, 8),
+            JobSpec::new(Workload::Electra, 4),
+        ];
+        let mut cs = managed([2, 0, 0], &[specs[0].clone()]);
+        let second = cs.add_job(specs[1].clone());
+        cs.arrive(0, 0.0);
+        cs.replan();
+        let first_held = cs.held(0);
+        assert_eq!(first_held.iter().sum::<usize>(), 2, "job 0 takes the whole fleet");
+        // job 1 arrives into a full fleet: job 0 must yield one GPU
+        cs.arrive(second, 1.0);
+        let allocs = cs.replan();
+        assert_eq!(cs.phase(second), JobPhase::Running);
+        assert_eq!(cs.held(0).iter().sum::<usize>(), 1);
+        assert_eq!(cs.held(second).iter().sum::<usize>(), 1);
+        assert_eq!(cs.preemptions(0), 1);
+        assert!(allocs
+            .iter()
+            .any(|a| a.job_id == 0 && a.change == AllocationChange::Preempted));
+        assert!(allocs
+            .iter()
+            .any(|a| a.job_id == second && a.change == AllocationChange::Started));
+    }
+
+    #[test]
+    fn min_p_guarantee_blocks_scale_in() {
+        // job 0 holds the whole 2-GPU fleet and guarantees minP = 2: the
+        // late arrival must wait instead of shrinking it.
+        let mut spec = JobSpec::new(Workload::Bert, 4);
+        spec.min_p = 2;
+        let mut cs = managed([2, 0, 0], &[spec, JobSpec::new(Workload::Electra, 4)]);
+        cs.arrive(0, 0.0);
+        cs.replan();
+        assert_eq!(cs.held(0).iter().sum::<usize>(), 2);
+        cs.arrive(1, 1.0);
+        cs.replan();
+        assert_eq!(cs.phase(1), JobPhase::Queued, "minP job must not be shrunk");
+        assert_eq!(cs.held(0).iter().sum::<usize>(), 2);
+        assert_eq!(cs.preemptions(0), 0);
+    }
+
+    #[test]
+    fn finish_releases_gpus_and_next_replan_redistributes() {
+        let specs =
+            vec![JobSpec::new(Workload::Bert, 4), JobSpec::new(Workload::Electra, 4)];
+        let mut cs = managed([4, 0, 0], &specs);
+        cs.arrive(0, 0.0);
+        cs.arrive(1, 0.0);
+        cs.replan();
+        let before: usize = cs.held(1).iter().sum();
+        let released = cs.finish(0);
+        assert!(released.iter().sum::<usize>() > 0);
+        assert_eq!(cs.phase(0), JobPhase::Finished);
+        assert_eq!(cs.held(0), [0, 0, 0]);
+        // double-finish is a no-op
+        assert_eq!(cs.finish(0), [0, 0, 0]);
+        cs.replan();
+        assert!(
+            cs.held(1).iter().sum::<usize>() >= before,
+            "survivor should absorb the released GPUs"
+        );
+        // the finished job never reappears
+        assert_eq!(cs.held(0), [0, 0, 0]);
+    }
+
+    #[test]
+    fn replan_never_exceeds_fleet() {
+        let specs: Vec<JobSpec> = (0..4)
+            .map(|i| JobSpec::new(if i % 2 == 0 { Workload::Bert } else { Workload::NeuMf }, 8))
+            .collect();
+        let mut cs = managed([2, 1, 1], &specs);
+        for (i, _) in specs.iter().enumerate() {
+            cs.arrive(i, i as f64);
+            cs.replan();
+            let held_total: usize =
+                (0..cs.n_jobs()).map(|j| cs.held(j).iter().sum::<usize>()).sum();
+            assert_eq!(held_total + cs.total_available(), 4, "accounting must balance");
+        }
     }
 }

@@ -22,8 +22,10 @@
 //! * [`ScriptedDirector`] — an explicit `(step, event)` script, for tests
 //!   and fault-injection scenarios.
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::path::PathBuf;
+use std::rc::Rc;
 
 use anyhow::{ensure, Context, Result};
 
@@ -92,9 +94,30 @@ pub trait ResourceDirector {
 /// round-robined across executors up to each executor's per-type EST share.
 /// Surplus CU capacity (the over-provisioning term of Eq. 1c) leaves
 /// trailing executors empty; those are dropped from the placement.
-pub fn placement_from_config(config: &PlanConfig, max_p: usize) -> Result<Placement> {
+///
+/// Memory feasibility is re-checked at this lowering boundary: a per-GPU
+/// footprint of `executors x (MU + CUDA context)` beyond the device's
+/// memory is an error. The planner's Eq.-1 search never emits such a
+/// configuration, but hand-built [`PlanConfig`]s must not silently
+/// over-pack a 16 GB P100/T4.
+pub fn placement_from_config(job: &JobSpec, config: &PlanConfig) -> Result<Placement> {
+    let max_p = job.max_p;
+    let mu = job.memory_gb();
     let mut caps: Vec<(DeviceType, usize)> = Vec::new();
     for (i, dev) in DEVICE_TYPES.iter().enumerate() {
+        if config.nums[i] == 0 {
+            continue;
+        }
+        let per_gpu = config.executors[i] as f64 * (mu + dev.cuda_context_gb());
+        ensure!(
+            per_gpu <= dev.memory_gb(),
+            "{} executor(s) x ({mu:.2} GB MU + {:.2} GB context) = {per_gpu:.2} GB \
+             exceeds {} memory ({} GB)",
+            config.executors[i],
+            dev.cuda_context_gb(),
+            dev.name(),
+            dev.memory_gb()
+        );
         for _ in 0..config.nums[i] * config.executors[i] {
             caps.push((*dev, config.threads[i]));
         }
@@ -232,7 +255,6 @@ pub struct AiMasterDirector {
     available: GpuVector,
     /// Decision cadence in steps (also the throughput-observation window).
     decide_every: u64,
-    max_p: usize,
     /// Set on the first consultation — a resumed session starts at step
     /// > 0, and anchoring here keeps the first observation window
     /// `decide_every` steps long instead of firing almost immediately.
@@ -282,7 +304,6 @@ impl AiMasterDirector {
             master,
             available,
             decide_every: decide_every.max(1),
-            max_p,
             start_step: None,
             last_decision_step: 0,
             window_wall_s: 0.0,
@@ -378,7 +399,7 @@ impl ResourceDirector for AiMasterDirector {
         let Some(p) = proposal else {
             return vec![ElasticEvent::Continue];
         };
-        match placement_from_config(&p.config, self.max_p) {
+        match placement_from_config(&self.master.job, &p.config) {
             Ok(placement) => {
                 crate::info!(
                     "aimaster",
@@ -436,6 +457,62 @@ impl ResourceDirector for ScriptedDirector {
         while self.entries.front().is_some_and(|e| e.0 <= obs.step) {
             out.push(self.entries.pop_front().unwrap().1);
         }
+        if out.is_empty() {
+            out.push(ElasticEvent::Continue);
+        }
+        out
+    }
+}
+
+/// A shared event queue feeding a [`MailboxDirector`] from *outside* the
+/// session — the seam the multi-job cluster runtime
+/// ([`crate::train::cluster::ClusterRuntime`]) uses: scheduling decisions
+/// are made centrally against the shared
+/// [`crate::sched::ClusterScheduler`], and each affected job is mailed the
+/// resulting events; its session applies them before the next mini-batch
+/// through the ordinary director contract.
+#[derive(Clone, Default)]
+pub struct Mailbox {
+    queue: Rc<RefCell<VecDeque<ElasticEvent>>>,
+}
+
+impl Mailbox {
+    pub fn new() -> Mailbox {
+        Mailbox::default()
+    }
+
+    pub fn push(&self, ev: ElasticEvent) {
+        self.queue.borrow_mut().push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.borrow().is_empty()
+    }
+}
+
+/// Drains its [`Mailbox`] before every mini-batch, in pushed order.
+pub struct MailboxDirector {
+    mailbox: Mailbox,
+}
+
+impl MailboxDirector {
+    /// Keep a clone of `mailbox` to push events from outside the session.
+    pub fn new(mailbox: Mailbox) -> MailboxDirector {
+        MailboxDirector { mailbox }
+    }
+}
+
+impl ResourceDirector for MailboxDirector {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn direct(&mut self, _obs: &StepObservation<'_>) -> Vec<ElasticEvent> {
+        let mut out: Vec<ElasticEvent> = self.mailbox.queue.borrow_mut().drain(..).collect();
         if out.is_empty() {
             out.push(ElasticEvent::Continue);
         }
@@ -538,18 +615,65 @@ mod tests {
     fn placement_from_config_round_robins_and_drops_surplus() {
         let job = JobSpec::new(Workload::Bert, 4);
         let cfg = best_config(&job, [2, 0, 0]).unwrap();
-        let p = placement_from_config(&cfg, 4).unwrap();
+        let p = placement_from_config(&job, &cfg).unwrap();
         assert_eq!(p, Placement::homogeneous(V, 2, 4));
 
         // 3 GPUs hosting 2 ESTs: capacity 3 > maxP 2, one executor dropped
         let job2 = JobSpec::new(Workload::Bert, 2);
         let cfg2 = crate::sched::plan::evaluate(&job2, [3, 0, 0], [1, 0, 0], [1, 0, 0]).unwrap();
-        let p2 = placement_from_config(&cfg2, 2).unwrap();
+        let p2 = placement_from_config(&job2, &cfg2).unwrap();
         assert_eq!(p2.n_gpus(), 2);
         p2.validate().unwrap();
 
         // a config that cannot host maxP is rejected
-        assert!(placement_from_config(&cfg2, 9).is_err());
+        let job9 = JobSpec::new(Workload::Bert, 9);
+        assert!(placement_from_config(&job9, &cfg2).is_err());
+    }
+
+    #[test]
+    fn placement_from_config_rejects_memory_overpacking() {
+        // Bert's MU is 13 GB (+0.75 GB context): two executors on a 16 GB
+        // P100 or T4 over-pack; the lowering must error, not build it.
+        let job = JobSpec::new(Workload::Bert, 4);
+        let overpacked = |nums: crate::sched::plan::GpuVector,
+                          executors: [usize; 3],
+                          threads: [usize; 3]| PlanConfig {
+            nums,
+            executors,
+            threads,
+            waste: 0.0,
+            waste_norm: 0.0,
+            perf: 0.0,
+            step_rate: 1.0,
+        };
+        let p100 = overpacked([0, 1, 0], [0, 2, 0], [0, 2, 0]);
+        assert!(placement_from_config(&job, &p100).is_err(), "2 executors on 16 GB P100");
+        let t4 = overpacked([0, 0, 1], [0, 0, 2], [0, 0, 2]);
+        assert!(placement_from_config(&job, &t4).is_err(), "2 executors on 16 GB T4");
+        // one executor fits both 16 GB types (13.75 GB <= 16 GB)
+        let fits = overpacked([0, 1, 0], [0, 1, 0], [0, 4, 0]);
+        assert!(placement_from_config(&job, &fits).is_ok());
+        // executor/thread junk on *unused* types must not trip the guard
+        let unused = overpacked([1, 0, 0], [2, 9, 9], [2, 9, 9]);
+        assert!(placement_from_config(&job, &unused).is_ok());
+    }
+
+    #[test]
+    fn mailbox_director_drains_pushed_events_in_order() {
+        let mailbox = Mailbox::new();
+        let mut d = MailboxDirector::new(mailbox.clone());
+        let home = Placement::homogeneous(V, 4, 4);
+        assert_eq!(d.direct(&obs(0, 0.0, &home)), vec![ElasticEvent::Continue]);
+        let p = Placement::homogeneous(V, 2, 4);
+        mailbox.push(ElasticEvent::Eval);
+        mailbox.push(ElasticEvent::Reconfigure(p.clone()));
+        assert_eq!(mailbox.len(), 2);
+        assert_eq!(
+            d.direct(&obs(1, 0.1, &home)),
+            vec![ElasticEvent::Eval, ElasticEvent::Reconfigure(p)]
+        );
+        assert!(mailbox.is_empty(), "direct must drain the queue");
+        assert_eq!(d.direct(&obs(2, 0.1, &home)), vec![ElasticEvent::Continue]);
     }
 
     #[test]

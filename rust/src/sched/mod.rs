@@ -10,9 +10,9 @@ pub mod director;
 pub mod plan;
 
 pub use aimaster::{AiMaster, Proposal};
-pub use cluster::ClusterScheduler;
+pub use cluster::{best_replacement, Allocation, AllocationChange, ClusterScheduler, JobPhase};
 pub use director::{
-    parse_gpu_vector, placement_from_config, AiMasterDirector, ElasticEvent, ResourceDirector,
-    ScriptedDirector, StaticScheduleDirector, StepObservation,
+    parse_gpu_vector, placement_from_config, AiMasterDirector, ElasticEvent, Mailbox,
+    MailboxDirector, ResourceDirector, ScriptedDirector, StaticScheduleDirector, StepObservation,
 };
 pub use plan::{best_config, enumerate_configs, GpuVector, JobSpec, PlanConfig};

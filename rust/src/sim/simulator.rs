@@ -8,8 +8,7 @@
 //! charge the reconfiguration penalty (on-demand checkpoint + restart).
 
 use crate::metrics::Series;
-use crate::sched::aimaster::AiMaster;
-use crate::sched::cluster::ClusterScheduler;
+use crate::sched::cluster::{AllocationChange, ClusterScheduler};
 use crate::sched::plan::{best_config_any, GpuVector};
 
 use super::engine::EventQueue;
@@ -59,45 +58,6 @@ impl SimOutcome {
         }
         self.jcts.iter().sum::<f64>() / self.jcts.len() as f64
     }
-}
-
-/// Best full re-placement of a job from a GPU `pool` (its own GPUs plus the
-/// free ones). Candidates: each single type alone (the homogeneous set),
-/// and — for heterogeneity-eligible jobs — a fastest-first greedy mix.
-fn best_replacement(
-    spec: &crate::sched::plan::JobSpec,
-    pool: GpuVector,
-    homogeneous_only: bool,
-) -> Option<(GpuVector, f64)> {
-    let mut best: Option<(GpuVector, f64)> = None;
-    let mut consider = |cand: GpuVector| {
-        if cand.iter().sum::<usize>() == 0 {
-            return;
-        }
-        if let Some(cfg) = best_config_any(spec, cand) {
-            if best.as_ref().map(|b| cfg.step_rate > b.1).unwrap_or(true) {
-                best = Some((cand, cfg.step_rate));
-            }
-        }
-    };
-    for t in 0..3 {
-        let n = pool[t].min(spec.max_p);
-        let mut cand = [0, 0, 0];
-        cand[t] = n;
-        consider(cand);
-    }
-    if !homogeneous_only {
-        // fastest-first greedy mix up to maxP GPUs
-        let mut left = spec.max_p;
-        let mut cand = [0, 0, 0];
-        for t in 0..3 {
-            let take = pool[t].min(left);
-            cand[t] = take;
-            left -= take;
-        }
-        consider(cand);
-    }
-    best
 }
 
 pub struct ElasticSim {
@@ -156,30 +116,28 @@ impl ElasticSim {
 
     pub fn run(&self, trace: &[TraceJob]) -> SimOutcome {
         let mut jobs: Vec<SimJob> = trace.iter().map(|t| t.to_sim_job()).collect();
-        let mut masters: Vec<AiMaster> = jobs
-            .iter()
-            .map(|j| {
-                let mut spec = j.spec.clone();
-                if self.kind == SchedulerKind::EasyScaleHeter
-                    && spec.workload.hetero_eligible()
-                {
-                    spec.d2 = true; // negligible-cost models pay for D2
-                }
-                let mut m = AiMaster::new(j.id, spec);
-                if self.kind == SchedulerKind::EasyScaleHomo {
-                    m.homogeneous_only = true;
-                }
-                m
-            })
-            .collect();
-        // also reflect the (possibly) d2-enabled spec in the sim job
-        for (j, m) in jobs.iter_mut().zip(&masters) {
-            j.spec = m.job.clone();
+        // Register every job with the extracted inter-job scheduler; its
+        // AIMasters own the per-job GPU accounting for the EasyScale kinds
+        // (YARN-CS only uses the fleet accountant).
+        let mut cs = ClusterScheduler::new(self.fleet);
+        for j in jobs.iter_mut() {
+            let mut spec = j.spec.clone();
+            if self.kind == SchedulerKind::EasyScaleHeter
+                && spec.workload.hetero_eligible()
+            {
+                spec.d2 = true; // negligible-cost models pay for D2
+            }
+            let id = cs.add_job(spec);
+            debug_assert_eq!(id, j.id);
+            if self.kind == SchedulerKind::EasyScaleHomo {
+                cs.master_mut(id).homogeneous_only = true;
+            }
+            // reflect the (possibly) d2-enabled spec in the sim job
+            j.spec = cs.master(id).job.clone();
         }
         // yarn gang bookkeeping: type a job was placed on
         let mut gang_type: Vec<Option<usize>> = vec![None; jobs.len()];
         let mut versions: Vec<u64> = vec![0; jobs.len()];
-        let mut cs = ClusterScheduler::new(self.fleet);
         let mut q: EventQueue<Event> = EventQueue::new();
         for j in &jobs {
             q.push(j.arrival, Event::Arrival(j.id));
@@ -200,12 +158,13 @@ impl ElasticSim {
                         continue;
                     }
                     j.state = JobState::Done { finish: now };
-                    cs.release(j.held);
-                    masters[id].revoke(j.held);
-                    let held = j.held;
+                    if self.kind == SchedulerKind::YarnCs {
+                        cs.release(j.held);
+                    } else {
+                        cs.finish(id);
+                    }
                     j.held = [0, 0, 0];
                     j.rate = 0.0;
-                    let _ = held;
                 }
             }
             // integrate all running jobs to now
@@ -214,7 +173,7 @@ impl ElasticSim {
                     j.advance(now);
                 }
             }
-            self.replan(now, &mut jobs, &mut masters, &mut cs, &mut gang_type, &mut reconfigs);
+            self.replan(now, &mut jobs, &mut cs, &mut gang_type, &mut reconfigs);
             // (re)schedule finish events
             for j in jobs.iter() {
                 if j.state == JobState::Running {
@@ -233,6 +192,9 @@ impl ElasticSim {
             alloc.push(now, used as f64);
         }
 
+        for j in jobs.iter_mut() {
+            j.preempt_count = cs.preemptions(j.id);
+        }
         let jcts: Vec<f64> = jobs.iter().filter_map(|j| j.jct()).collect();
         let makespan = jobs
             .iter()
@@ -254,7 +216,6 @@ impl ElasticSim {
         &self,
         now: f64,
         jobs: &mut [SimJob],
-        masters: &mut [AiMaster],
         cs: &mut ClusterScheduler,
         gang_type: &mut [Option<usize>],
         reconfigs: &mut u64,
@@ -292,96 +253,22 @@ impl ElasticSim {
                 // YARN-CS, but each job is elastic — it starts with one GPU
                 // the moment anything is free (no gang wait, minP = 0) and
                 // grows through its AIMaster proposals; later jobs backfill
-                // the leftovers. Within one job the grant loop applies
-                // Algorithm 1 to its own top-K proposals.
-                let mut fifo: Vec<usize> = jobs
-                    .iter()
-                    .filter(|j| {
-                        (j.state == JobState::Waiting && j.arrival <= now)
-                            || j.state == JobState::Running
-                    })
-                    .map(|j| j.id)
-                    .collect();
-                fifo.sort_by(|&a, &b| {
-                    jobs[a].arrival.partial_cmp(&jobs[b].arrival).unwrap().then(a.cmp(&b))
-                });
-                for id in fifo {
-                    if jobs[id].state == JobState::Waiting {
-                        if cs.total_available() == 0 {
-                            // elastic scale-in: minP = 0 jobs yield a GPU so
-                            // every job starts immediately (the paper's
-                            // "eliminate the mandatory waiting of gang
-                            // scheduling" — running jobs shrink in seconds).
-                            let victim = jobs
-                                .iter()
-                                .filter(|j| j.state == JobState::Running && j.n_gpus() > 1)
-                                .max_by_key(|j| j.n_gpus())
-                                .map(|j| j.id);
-                            if let Some(v) = victim {
-                                let ty = (0..3).max_by_key(|&i| jobs[v].held[i]).unwrap();
-                                let mut give = [0, 0, 0];
-                                give[ty] = 1;
-                                jobs[v].held[ty] -= 1;
-                                masters[v].revoke(give);
-                                jobs[v].preempt_count += 1;
-                                cs.release(give);
-                            }
-                        }
-                        // seed with the fastest available type
-                        let mut seeded = false;
-                        for ty in 0..3 {
-                            if cs.available[ty] == 0 {
-                                continue;
-                            }
-                            let mut take = [0, 0, 0];
-                            take[ty] = 1;
-                            cs.reserve(take);
-                            masters[id].grant(take);
-                            jobs[id].held = take;
-                            jobs[id].state = JobState::Running;
-                            seeded = true;
-                            break;
-                        }
-                        if !seeded {
-                            continue;
-                        }
+                // the leftovers. The whole pass — seeding, elastic
+                // scale-in, the Algorithm-1 grow loop, migration — lives
+                // in [`ClusterScheduler::replan`]; here we only mark
+                // arrivals and mirror the changed allocations into the
+                // simulated jobs (a burst can land several arrivals on
+                // one event, so scan by time rather than per-event).
+                for j in jobs.iter() {
+                    if j.state == JobState::Waiting && j.arrival <= now {
+                        cs.arrive(j.id, j.arrival);
                     }
-                    // grow this job until its proposals dry up or the pool
-                    // is exhausted (Algorithm 1 over its own proposals)
-                    loop {
-                        let proposals = masters[id].proposals(cs.available, 3);
-                        let approved = cs.schedule(proposals);
-                        if approved.is_empty() {
-                            break;
-                        }
-                        for p in approved {
-                            masters[p.job_id].grant(p.add);
-                            for i in 0..3 {
-                                jobs[p.job_id].held[i] += p.add[i];
-                            }
-                        }
-                    }
-                    // migration/upgrade pass: when better GPUs freed up, a
-                    // job may trade its allocation for a faster one (the
-                    // AIMaster fallback/reallocation behaviour). Guarded by
-                    // a 20% improvement threshold to avoid thrash.
-                    let held = jobs[id].held;
-                    let cur_rate = best_config_any(&jobs[id].spec, held)
-                        .map(|c| c.step_rate)
-                        .unwrap_or(0.0);
-                    let mut pool = cs.available;
-                    for i in 0..3 {
-                        pool[i] += held[i];
-                    }
-                    if let Some((cand, rate)) =
-                        best_replacement(&jobs[id].spec, pool, masters[id].homogeneous_only)
-                    {
-                        if rate > cur_rate * 1.2 && cand != held {
-                            cs.release(held);
-                            cs.reserve(cand);
-                            masters[id].held = cand;
-                            jobs[id].held = cand;
-                        }
+                }
+                for a in cs.replan() {
+                    let j = &mut jobs[a.job_id];
+                    j.held = a.held;
+                    if a.change == AllocationChange::Started {
+                        j.state = JobState::Running;
                     }
                 }
                 // refresh rates from the planner

@@ -1,0 +1,297 @@
+//! The multi-job cluster runtime — N *real* elastic training jobs
+//! contending for one shared, heterogeneous GPU fleet (paper §3.4 end to
+//! end, on real trainers instead of the analytic trace simulator).
+//!
+//! A [`ClusterRuntime`] owns one [`ElasticSession`] per submitted job plus
+//! the shared [`ClusterScheduler`]. Jobs step round-robin on the driver
+//! thread — each job's executors still run thread-per-executor through
+//! [`crate::exec::pool`] — and every `decide_every` rounds the runtime:
+//!
+//! 1. feeds each running job's observed step rate into its AIMaster
+//!    ([`crate::sched::AiMaster::observe`], the Fig. 9 loop),
+//! 2. runs one [`ClusterScheduler::replan`] round (FIFO elastic seeding,
+//!    Algorithm-1 growth, migration),
+//! 3. lowers every changed allocation to a [`crate::exec::Placement`]
+//!    ([`placement_from_config`], the planner's per-type `A_i` EST
+//!    load-balancing) and mails it to the job's session as an
+//!    [`ElasticEvent::Reconfigure`] through its [`Mailbox`].
+//!
+//! Mixed-type grants — available when a job runs `Determinism::d2` on a
+//! `hetero_eligible()` workload — lower to heterogeneous placements whose
+//! executors load per-device kernel variants (`det` under D2), so under
+//! D1+D2 every job's final model is bitwise identical to its
+//! fixed-placement sequential reference no matter how the fleet was
+//! shuffled underneath it (`tests/cluster.rs`).
+
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::exec::{DeviceType, Placement, RunMode};
+use crate::model::workload::Workload;
+use crate::runtime::Engine;
+use crate::sched::cluster::{ClusterScheduler, JobPhase};
+use crate::sched::director::{placement_from_config, ElasticEvent, Mailbox, MailboxDirector};
+use crate::sched::plan::{GpuVector, JobSpec};
+use crate::train::session::{ElasticSession, SessionReport};
+use crate::train::{SessionBuilder, TrainConfig, Trainer};
+
+/// The paper's consistency oracle for one job configuration: `max_p`
+/// workers on `max_p` V100s, sequential executors, straight through —
+/// same seed/determinism/hyper-parameters as `cfg` (only the run mode is
+/// forced to sequential). Under D1 an elastic run on V100s, and under
+/// D1+D2 an elastic run on *any* mix of device types, must match this
+/// fingerprint bitwise. One shared implementation serves the CLI's
+/// `cluster --verify`, `tests/cluster.rs` and the cluster bench, so the
+/// oracle cannot silently diverge between them.
+pub fn reference_fingerprint(engine: &Engine, cfg: &TrainConfig, steps: u64) -> Result<u64> {
+    let cfg = TrainConfig { run_mode: RunMode::Sequential, ..cfg.clone() };
+    let max_p = cfg.max_p;
+    let placement = Placement::homogeneous(DeviceType::V100, max_p, max_p);
+    let mut t = Trainer::new(engine, cfg, placement)?;
+    t.run(engine, steps)?;
+    Ok(t.param_fingerprint())
+}
+
+/// One job submitted to the cluster runtime.
+#[derive(Debug, Clone)]
+pub struct ClusterJob {
+    /// Table-1 profile the scheduler plans this job with (capabilities,
+    /// MU, D2 eligibility). The training substrate is the shared engine.
+    pub workload: Workload,
+    pub cfg: TrainConfig,
+    /// Global-step budget of the job.
+    pub steps: u64,
+}
+
+/// Final per-job outcome of a cluster run.
+#[derive(Debug, Clone)]
+pub struct ClusterJobReport {
+    pub job_id: usize,
+    pub workload: Workload,
+    pub report: SessionReport,
+    /// GPUs held when the job finished.
+    pub final_gpus: GpuVector,
+}
+
+/// What a whole cluster run reports.
+#[derive(Debug)]
+pub struct ClusterReport {
+    pub jobs: Vec<ClusterJobReport>,
+    /// End-to-end wall-clock of the run, seconds.
+    pub wall_s: f64,
+    /// Scheduling rounds executed.
+    pub decisions: u64,
+    /// Reconfigurations mailed to running sessions.
+    pub reconfigs: u64,
+}
+
+impl ClusterReport {
+    /// Aggregate cluster throughput: total global steps of all jobs over
+    /// the whole wall-clock.
+    pub fn aggregate_rate(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.jobs.iter().map(|j| j.report.steps_run).sum::<u64>() as f64 / self.wall_s
+    }
+}
+
+struct Slot<'e> {
+    job: ClusterJob,
+    /// Built when the scheduler first grants GPUs; torn down at budget.
+    session: Option<ElasticSession<'e>>,
+    mailbox: Mailbox,
+    started: Option<Instant>,
+    report: Option<SessionReport>,
+    final_gpus: GpuVector,
+}
+
+/// N real elastic jobs on one shared fleet, arbitrated by the extracted
+/// inter-job scheduler.
+pub struct ClusterRuntime<'e> {
+    engine: &'e Engine,
+    scheduler: ClusterScheduler,
+    slots: Vec<Slot<'e>>,
+    decide_every: u64,
+}
+
+impl<'e> ClusterRuntime<'e> {
+    /// A runtime over `engine` arbitrating `fleet` GPUs, replanning every
+    /// `decide_every` global rounds (min 1).
+    pub fn new(engine: &'e Engine, fleet: GpuVector, decide_every: u64) -> ClusterRuntime<'e> {
+        ClusterRuntime {
+            engine,
+            scheduler: ClusterScheduler::new(fleet),
+            slots: Vec::new(),
+            decide_every: decide_every.max(1),
+        }
+    }
+
+    /// Submit a job; jobs queue FIFO in submission order. A D2 job on a
+    /// hetero-eligible workload may be granted mixed-type GPUs; everything
+    /// else stays homogeneous — heterogeneous vendor kernels would break
+    /// the bitwise guarantee (paper §3.3, the same rule
+    /// [`crate::sched::AiMasterDirector`] applies).
+    pub fn submit(&mut self, job: ClusterJob) -> usize {
+        let mut spec = JobSpec::new(job.workload, job.cfg.max_p);
+        spec.d2 = job.cfg.determinism.d2;
+        let id = self.scheduler.add_job(spec);
+        if !job.cfg.determinism.d2 {
+            self.scheduler.master_mut(id).homogeneous_only = true;
+        }
+        debug_assert_eq!(id, self.slots.len());
+        self.slots.push(Slot {
+            job,
+            session: None,
+            mailbox: Mailbox::new(),
+            started: None,
+            report: None,
+            final_gpus: [0, 0, 0],
+        });
+        id
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// GPUs a job currently holds (the scheduler's view).
+    pub fn held(&self, id: usize) -> GpuVector {
+        self.scheduler.held(id)
+    }
+
+    /// Drive every job to its step budget, arbitrating the fleet between
+    /// them; returns per-job reports plus aggregate stats.
+    pub fn run(&mut self) -> Result<ClusterReport> {
+        ensure!(!self.slots.is_empty(), "no jobs submitted");
+        ensure!(
+            self.scheduler.fleet().iter().sum::<usize>() > 0,
+            "cluster fleet holds zero GPUs"
+        );
+        let t0 = Instant::now();
+        for id in 0..self.slots.len() {
+            self.scheduler.arrive(id, id as f64); // FIFO by submission order
+        }
+        let mut decisions = 0u64;
+        let mut reconfigs = 0u64;
+        let mut round = 0u64;
+        let mut need_decide = false;
+        loop {
+            if round % self.decide_every == 0 || need_decide {
+                reconfigs += self.decide(round, &mut decisions)?;
+                need_decide = false;
+            }
+            let mut progressed = false;
+            for id in 0..self.slots.len() {
+                let step = match self.slots[id].session.as_mut() {
+                    Some(session) => session.step_once()?,
+                    None => continue,
+                };
+                match step {
+                    Some(_) => progressed = true,
+                    None => {
+                        // budget reached: report, tear down, free the GPUs
+                        self.slots[id].final_gpus = self.scheduler.held(id);
+                        let session = self.slots[id].session.take().unwrap();
+                        let wall = self.slots[id]
+                            .started
+                            .map(|t| t.elapsed().as_secs_f64())
+                            .unwrap_or(0.0);
+                        self.slots[id].report = Some(session.report(wall));
+                        let released = self.scheduler.finish(id);
+                        crate::info!(
+                            "cluster",
+                            "job {id} finished, released {released:?} GPUs"
+                        );
+                        need_decide = true; // redistribute immediately
+                    }
+                }
+            }
+            if self.slots.iter().all(|s| s.report.is_some()) {
+                break;
+            }
+            if !progressed && !need_decide {
+                // nobody holds GPUs: force a replanning round; if that
+                // cannot seed anyone either, the fleet is unusable
+                reconfigs += self.decide(round, &mut decisions)?;
+                ensure!(
+                    self.slots.iter().any(|s| s.session.is_some()),
+                    "cluster stalled: no job can be placed on the fleet"
+                );
+            }
+            round += 1;
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut jobs = Vec::with_capacity(self.slots.len());
+        for (id, slot) in self.slots.iter_mut().enumerate() {
+            let report = slot.report.take().with_context(|| format!("job {id} has no report"))?;
+            jobs.push(ClusterJobReport {
+                job_id: id,
+                workload: slot.job.workload,
+                report,
+                final_gpus: slot.final_gpus,
+            });
+        }
+        Ok(ClusterReport { jobs, wall_s, decisions, reconfigs })
+    }
+
+    /// One scheduling round: observe throughput, replan the fleet, lower
+    /// changed allocations and mail them. Returns reconfigurations mailed.
+    fn decide(&mut self, round: u64, decisions: &mut u64) -> Result<u64> {
+        *decisions += 1;
+        // Fig. 9: observed step rates calibrate each running job's waste
+        // model before it proposes
+        for id in 0..self.slots.len() {
+            if let Some(session) = self.slots[id].session.as_ref() {
+                let rate = session.trainer.last_step_rate();
+                if rate > 0.0 {
+                    self.scheduler.master_mut(id).observe(rate);
+                }
+            }
+        }
+        let mut mailed = 0u64;
+        for alloc in self.scheduler.replan() {
+            let id = alloc.job_id;
+            let Some(config) = alloc.config.clone() else {
+                crate::warnlog!(
+                    "cluster",
+                    "job {id}: allocation {:?} has no feasible plan, skipping",
+                    alloc.held
+                );
+                continue;
+            };
+            let spec = self.scheduler.master(id).job.clone();
+            let placement = placement_from_config(&spec, &config)
+                .with_context(|| format!("lowering grant {:?} for job {id}", alloc.held))?;
+            if self.slots[id].session.is_none() {
+                debug_assert_eq!(self.scheduler.phase(id), JobPhase::Running);
+                crate::info!(
+                    "cluster",
+                    "round {round}: job {id} starts on {:?} ({} executors)",
+                    alloc.held,
+                    placement.n_gpus()
+                );
+                let slot = &mut self.slots[id];
+                let session = SessionBuilder::new(self.engine, slot.job.cfg.clone(), placement)
+                    .steps(slot.job.steps)
+                    .log_every(0)
+                    .director(Box::new(MailboxDirector::new(slot.mailbox.clone())))
+                    .build()?;
+                slot.session = Some(session);
+                slot.started = Some(Instant::now());
+            } else {
+                crate::info!(
+                    "cluster",
+                    "round {round}: job {id} -> {:?} ({:?}, {} executors)",
+                    alloc.held,
+                    alloc.change,
+                    placement.n_gpus()
+                );
+                self.slots[id].mailbox.push(ElasticEvent::Reconfigure(placement));
+                mailed += 1;
+            }
+        }
+        Ok(mailed)
+    }
+}

@@ -1,13 +1,19 @@
 //! The training coordinator: determinism levels, the elastic trainer,
-//! on-demand checkpointing, and the elastic session — the event-driven
-//! driver that steps a job under a [`crate::sched::ResourceDirector`].
+//! on-demand checkpointing, the elastic session — the event-driven driver
+//! that steps a job under a [`crate::sched::ResourceDirector`] — and the
+//! multi-job cluster runtime that arbitrates N real sessions over one
+//! shared heterogeneous fleet.
 
 pub mod checkpoint;
+pub mod cluster;
 pub mod determinism;
 pub mod session;
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
+pub use cluster::{
+    reference_fingerprint, ClusterJob, ClusterJobReport, ClusterReport, ClusterRuntime,
+};
 pub use determinism::Determinism;
 pub use session::{ElasticSession, SessionBuilder, SessionReport};
 pub use trainer::{TrainConfig, Trainer};

@@ -162,6 +162,7 @@ impl<'e> SessionBuilder<'e> {
             Some(path) => Trainer::resume(engine, cfg, placement, &path)?,
             None => Trainer::new(engine, cfg, placement)?,
         };
+        let start_step = trainer.state.step;
         Ok(ElasticSession {
             engine,
             trainer,
@@ -176,6 +177,7 @@ impl<'e> SessionBuilder<'e> {
             reconfigs: 0,
             evals: 0,
             stopped: false,
+            start_step,
         })
     }
 }
@@ -195,6 +197,9 @@ pub struct ElasticSession<'e> {
     reconfigs: u64,
     evals: u64,
     stopped: bool,
+    /// Global step the trainer was built at (0 fresh, >0 on resume) — the
+    /// baseline `steps_run` is measured against.
+    start_step: u64,
 }
 
 impl<'e> ElasticSession<'e> {
@@ -246,7 +251,10 @@ impl<'e> ElasticSession<'e> {
     }
 
     /// Drive the session to its step budget (or a director stop), then
-    /// write the final checkpoint if one was configured.
+    /// write the final checkpoint if one was configured. The report is
+    /// scoped to THIS call: steps/losses/wall-clock count from here, so a
+    /// caller who pumped [`Self::step_once`] beforehand does not inflate
+    /// `observed_rate` (which calibrates the trace simulator).
     pub fn run(&mut self) -> Result<SessionReport> {
         let t0 = Instant::now();
         let start_step = self.trainer.state.step;
@@ -256,21 +264,33 @@ impl<'e> ElasticSession<'e> {
             self.trainer.checkpoint(&path)?;
             crate::info!("session", "final checkpoint written to {}", path.display());
         }
-        let wall_s = t0.elapsed().as_secs_f64();
+        Ok(self.report_since(start_step, losses_before, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Assemble a report for the *whole session* (every step since build)
+    /// — for external drivers like the multi-job
+    /// [`crate::train::cluster::ClusterRuntime`] that pump
+    /// [`Self::step_once`] themselves. `wall_s` is the caller-measured
+    /// wall-clock of the drive.
+    pub fn report(&self, wall_s: f64) -> SessionReport {
+        self.report_since(self.start_step, 0, wall_s)
+    }
+
+    fn report_since(&self, start_step: u64, losses_before: usize, wall_s: f64) -> SessionReport {
         let steps_run = self.trainer.state.step - start_step;
-        let session_losses = &self.trainer.loss_history[losses_before..];
-        Ok(SessionReport {
+        let losses = &self.trainer.loss_history[losses_before..];
+        SessionReport {
             steps_run,
             final_step: self.trainer.state.step,
-            first_loss: session_losses.first().copied().unwrap_or(f32::NAN),
-            final_loss: session_losses.last().copied().unwrap_or(f32::NAN),
+            first_loss: losses.first().copied().unwrap_or(f32::NAN),
+            final_loss: losses.last().copied().unwrap_or(f32::NAN),
             fingerprint: self.trainer.param_fingerprint(),
             reconfigs: self.reconfigs,
             evals: self.evals,
             wall_s,
             observed_rate: if wall_s > 0.0 { steps_run as f64 / wall_s } else { 0.0 },
             stopped_early: self.stopped,
-        })
+        }
     }
 
     fn apply(&mut self, event: ElasticEvent) -> Result<()> {

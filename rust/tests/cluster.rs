@@ -1,0 +1,139 @@
+//! The multi-job cluster runtime end to end: N real elastic jobs
+//! contending for one shared heterogeneous fleet through the extracted
+//! inter-job scheduler, with the paper's bitwise guarantee intact — under
+//! D1(+D2) every job's final model equals its fixed-placement sequential
+//! reference no matter how the fleet was shuffled underneath it.
+
+use easyscale::exec::RunMode;
+use easyscale::model::workload::Workload;
+use easyscale::runtime::Engine;
+use easyscale::train::{ClusterJob, ClusterRuntime, Determinism, TrainConfig};
+
+/// Native build: the synthetic engine always runs. PJRT build: needs the
+/// AOT artifacts on disk, skips loudly otherwise.
+#[cfg(not(feature = "pjrt"))]
+fn tiny() -> Option<Engine> {
+    Some(Engine::synthetic("tiny").unwrap())
+}
+
+#[cfg(feature = "pjrt")]
+fn tiny() -> Option<Engine> {
+    let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !d.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/tiny not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(&d).unwrap())
+}
+
+fn job(workload: Workload, seed: u64, det: Determinism, steps: u64) -> ClusterJob {
+    let cfg = TrainConfig {
+        seed,
+        determinism: det,
+        run_mode: RunMode::Sequential, // keep test wall-clock deterministic-ish
+        ..TrainConfig::new(4)
+    };
+    ClusterJob { workload, cfg, steps }
+}
+
+/// The fixed-placement sequential V100 reference of one job — the shared
+/// oracle from `easyscale::train` (same seed/determinism as the job).
+fn reference_fingerprint(engine: &Engine, seed: u64, det: Determinism, steps: u64) -> u64 {
+    let cfg = job(Workload::Bert, seed, det, steps).cfg;
+    easyscale::train::reference_fingerprint(engine, &cfg, steps).unwrap()
+}
+
+/// The acceptance property: a 3-job run on a heterogeneous fleet with
+/// D1+D2 yields per-job final model hashes bitwise-identical to each job's
+/// fixed-placement sequential reference.
+#[test]
+fn three_job_heterogeneous_cluster_is_bitwise_consistent() {
+    let Some(engine) = tiny() else { return };
+    let det = Determinism::D1_D2;
+    let workloads = [Workload::Bert, Workload::Electra, Workload::NeuMf];
+    // staggered budgets: early finishers free GPUs mid-run, so survivors
+    // get regrown/migrated onto a shuffled (possibly mixed-type) fleet
+    let budgets = [6u64, 10, 14];
+
+    let mut rt = ClusterRuntime::new(&engine, [2, 1, 1], 2);
+    for (i, w) in workloads.iter().enumerate() {
+        rt.submit(job(*w, 42 + i as u64, det, budgets[i]));
+    }
+    let report = rt.run().unwrap();
+
+    assert_eq!(report.jobs.len(), 3);
+    assert!(report.decisions >= 2, "expected several scheduling rounds");
+    for j in &report.jobs {
+        assert_eq!(
+            j.report.steps_run, budgets[j.job_id],
+            "job {} must exhaust its budget",
+            j.job_id
+        );
+        let reference =
+            reference_fingerprint(&engine, 42 + j.job_id as u64, det, budgets[j.job_id]);
+        assert_eq!(
+            j.report.fingerprint, reference,
+            "job {} drifted from its sequential fixed-placement reference",
+            j.job_id
+        );
+    }
+    // three 4-EST jobs on 4 GPUs with staggered finishes: released GPUs
+    // must have been redistributed to the survivors at least once
+    assert!(
+        report.reconfigs >= 1,
+        "a contended 3-job run should reconfigure at least once"
+    );
+}
+
+/// A lone job on a homogeneous fleet behaves exactly like a single
+/// elastic session: budget exhausted, bitwise equal to the reference.
+#[test]
+fn single_job_cluster_matches_reference() {
+    let Some(engine) = tiny() else { return };
+    let det = Determinism::D1;
+    let mut rt = ClusterRuntime::new(&engine, [4, 0, 0], 3);
+    rt.submit(job(Workload::Bert, 7, det, 8));
+    let report = rt.run().unwrap();
+    assert_eq!(report.jobs.len(), 1);
+    assert_eq!(report.jobs[0].report.steps_run, 8);
+    assert_eq!(
+        report.jobs[0].report.fingerprint,
+        reference_fingerprint(&engine, 7, det, 8)
+    );
+    // D1 without D2 stays homogeneous: only V100s were ever held
+    assert_eq!(report.jobs[0].final_gpus[1], 0);
+    assert_eq!(report.jobs[0].final_gpus[2], 0);
+}
+
+/// More jobs than GPUs: elastic scale-in must seed every job (no
+/// gang-scheduling starvation) and all budgets complete.
+#[test]
+fn oversubscribed_fleet_finishes_every_job() {
+    let Some(engine) = tiny() else { return };
+    let det = Determinism::D1_D2;
+    let steps = 6u64;
+    let mut rt = ClusterRuntime::new(&engine, [1, 1, 0], 2);
+    for i in 0..3u64 {
+        rt.submit(job(Workload::Electra, 100 + i, det, steps));
+    }
+    let report = rt.run().unwrap();
+    for j in &report.jobs {
+        assert_eq!(j.report.steps_run, steps, "job {} starved", j.job_id);
+        assert_eq!(
+            j.report.fingerprint,
+            reference_fingerprint(&engine, 100 + j.job_id as u64, det, steps),
+            "job {} drifted",
+            j.job_id
+        );
+    }
+}
+
+/// An empty fleet cannot place anyone: the runtime errors instead of
+/// spinning forever.
+#[test]
+fn zero_gpu_fleet_errors() {
+    let Some(engine) = tiny() else { return };
+    let mut rt = ClusterRuntime::new(&engine, [0, 0, 0], 1);
+    rt.submit(job(Workload::Bert, 1, Determinism::D1, 4));
+    assert!(rt.run().is_err());
+}

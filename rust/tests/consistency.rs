@@ -35,6 +35,7 @@ fn cfg(det: Determinism) -> TrainConfig {
 
 const V: DeviceType = DeviceType::V100;
 const P: DeviceType = DeviceType::P100;
+const T: DeviceType = DeviceType::T4;
 
 /// DDP baseline: fixed 4 GPUs, one worker each, straight through.
 fn run_ddp(engine: &Engine, det: Determinism, steps: u64) -> (u64, Vec<f32>) {
@@ -141,6 +142,45 @@ fn full_paper_stage_sequence_d1_d2() {
     for (a, b) in es.loss_history.iter().zip(&ddp_loss) {
         assert_eq!(a.to_bits(), b.to_bits());
     }
+}
+
+/// D2 across the *full* device zoo: a placement mixing all three types
+/// ([V100, P100, T4] — the paper's whole evaluation fleet) under D1+D2 is
+/// bitwise identical to the homogeneous-V100 **sequential** reference.
+#[test]
+fn d1_d2_three_type_mix_matches_homogeneous_sequential_reference() {
+    let Some(engine) = tiny() else { return };
+    let seq = TrainConfig { run_mode: RunMode::Sequential, ..cfg(Determinism::D1_D2) };
+    let mut reference = Trainer::new(&engine, seq, Placement::homogeneous(V, 4, 4)).unwrap();
+    reference.run(&engine, 6).unwrap();
+
+    let mixed = Placement::heterogeneous(&[(V, 2), (P, 1), (T, 1)]);
+    let mut es = Trainer::new(&engine, cfg(Determinism::D1_D2), mixed).unwrap();
+    es.run(&engine, 6).unwrap();
+    assert_eq!(
+        es.param_fingerprint(),
+        reference.param_fingerprint(),
+        "three-type D1+D2 run must match the homogeneous sequential reference"
+    );
+    for (a, b) in es.loss_history.iter().zip(&reference.loss_history) {
+        assert_eq!(a.to_bits(), b.to_bits(), "loss curves must be identical");
+    }
+}
+
+/// Negative control: the same three-type mix under D1 *alone* selects a
+/// different vendor kernel per device type and drifts.
+#[test]
+fn d1_alone_diverges_across_all_three_device_types() {
+    let Some(engine) = tiny() else { return };
+    let (ddp_fp, _) = run_ddp(&engine, Determinism::D1, 6);
+    let mixed = Placement::heterogeneous(&[(V, 2), (P, 1), (T, 1)]);
+    let mut es = Trainer::new(&engine, cfg(Determinism::D1), mixed).unwrap();
+    es.run(&engine, 6).unwrap();
+    assert_ne!(
+        es.param_fingerprint(),
+        ddp_fp,
+        "heterogeneous vendor kernels must drift without D2"
+    );
 }
 
 #[test]
