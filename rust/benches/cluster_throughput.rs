@@ -1,11 +1,16 @@
 //! Multi-job cluster-runtime bench: aggregate training throughput of
 //! 1/2/4 concurrent elastic jobs contending for a fixed heterogeneous
 //! fleet (2 V100 + 1 P100 + 1 T4), under homogeneous-only scheduling (D1)
-//! vs D2 heterogeneous scheduling (mixed-type grants allowed).
+//! vs D2 heterogeneous scheduling (mixed-type grants allowed) — each D2
+//! scenario measured twice: on the single-threaded round-robin driver and
+//! with concurrent job stepping (`--job-threads` = jobs, one thread per
+//! job between scheduling barriers).
 //!
-//! An inline bitwise cross-check asserts every job still equals its
-//! fixed-placement sequential reference. The record is written to
-//! `rust/BENCH_cluster.json` so future PRs have a perf trajectory.
+//! An inline bitwise cross-check asserts every job (round-robin *and*
+//! concurrent) still equals its fixed-placement sequential reference —
+//! numbers are only recorded for runs proven consistent. The record is
+//! written to `rust/BENCH_cluster.json` so future PRs have a perf
+//! trajectory.
 //!
 //!     cargo bench --bench cluster_throughput
 
@@ -27,10 +32,17 @@ fn job_cfg(seed: u64, det: Determinism) -> TrainConfig {
 }
 
 /// One cluster run; returns (aggregate steps/s, per-job fingerprints).
-fn run_cluster(engine: &Engine, n_jobs: usize, det: Determinism) -> (f64, Vec<u64>) {
+/// `job_threads` = 1 is the round-robin driver; > 1 steps jobs on their
+/// own threads between scheduling barriers.
+fn run_cluster(
+    engine: &Engine,
+    n_jobs: usize,
+    det: Determinism,
+    job_threads: usize,
+) -> (f64, Vec<u64>) {
     let workloads =
         [Workload::Bert, Workload::Electra, Workload::NeuMf, Workload::SwinTransformer];
-    let mut rt = ClusterRuntime::new(engine, FLEET, 2);
+    let mut rt = ClusterRuntime::new(engine, FLEET, 2).with_job_threads(job_threads);
     for i in 0..n_jobs {
         let cfg = job_cfg(42 + i as u64, det);
         rt.submit(ClusterJob { workload: workloads[i % workloads.len()], cfg, steps: STEPS });
@@ -64,31 +76,39 @@ fn main() {
         "jobs",
         "homo-only (D1) steps/s",
         "D2-hetero steps/s",
-        "hetero/homo",
+        "D2 + job-threads steps/s",
+        "mt/rr",
         "bitwise",
     ]);
     let mut rows = Vec::new();
     for n_jobs in [1usize, 2, MAX_JOBS] {
-        let (homo_rate, _homo_fps) = run_cluster(&engine, n_jobs, Determinism::D1);
-        let (heter_rate, heter_fps) = run_cluster(&engine, n_jobs, Determinism::D1_D2);
+        let (homo_rate, _homo_fps) = run_cluster(&engine, n_jobs, Determinism::D1, 1);
+        let (heter_rate, heter_fps) = run_cluster(&engine, n_jobs, Determinism::D1_D2, 1);
+        // concurrent job stepping: one thread per job between barriers
+        let (mt_rate, mt_fps) = run_cluster(&engine, n_jobs, Determinism::D1_D2, n_jobs);
         // Bitwise cross-check on the D2 runs only: D1+D2 is placement- and
-        // type-free, so every job must equal its V100 sequential reference.
-        // (A D1-only job scheduled onto P100/T4 selects those vendor
-        // kernels — the paper's heterogeneity failure mode, reproduced
-        // mechanically — so no cross-type guarantee exists there.)
+        // type-free, so every job — however driven — must equal its V100
+        // sequential reference. (A D1-only job scheduled onto P100/T4
+        // selects those vendor kernels — the paper's heterogeneity failure
+        // mode, reproduced mechanically — so no cross-type guarantee
+        // exists there.)
         let bitwise = heter_fps.iter().zip(&refs).all(|(x, r)| x == r);
         assert!(bitwise, "a D1+D2 cluster job drifted from its sequential reference");
+        let bitwise_mt = mt_fps.iter().zip(&refs).all(|(x, r)| x == r);
+        assert!(bitwise_mt, "a concurrently-stepped job drifted from its sequential reference");
         table.row(&[
             format!("{n_jobs}"),
             format!("{homo_rate:.2}"),
             format!("{heter_rate:.2}"),
-            format!("{:.2}x", heter_rate / homo_rate.max(1e-12)),
+            format!("{mt_rate:.2}"),
+            format!("{:.2}x", mt_rate / heter_rate.max(1e-12)),
             "identical".to_string(),
         ]);
         rows.push(Json::obj(vec![
             ("jobs", Json::num(n_jobs as f64)),
             ("homo_steps_per_s", Json::num(homo_rate)),
             ("hetero_steps_per_s", Json::num(heter_rate)),
+            ("hetero_jobthreads_steps_per_s", Json::num(mt_rate)),
         ]));
     }
     table.print();

@@ -1,0 +1,175 @@
+//! Pool-overhead bench: per-step thread spawning vs the persistent
+//! executor pool, at 1/2/4/8 executors (maxP = 8).
+//!
+//! The spawn-per-step baseline is the pre-pool hot path — one scoped OS
+//! thread per executor plus a fresh mpsc channel **every mini-batch**
+//! (`exec::pool::run_step`). The persistent `ExecutorPool` keeps worker
+//! threads alive across steps and reuses one completion channel as the
+//! step barrier; this bench measures exactly the overhead that removes.
+//! Executor-phase only (no aggregation/optimizer), so the spawn cost is
+//! not diluted by unrelated work.
+//!
+//! Before any timing, the harness asserts that the sequential loop, the
+//! spawning driver and the persistent pool stage **bitwise-identical**
+//! gradients — numbers are only recorded for implementations proven
+//! equivalent. Results go to `rust/BENCH_pool.json`.
+//!
+//!     cargo bench --bench pool_overhead
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use easyscale::data::{DeterministicSampler, SharedDataWorkers, SyntheticCorpus};
+use easyscale::est::EstContext;
+use easyscale::exec::pool::{run_step, ExecutorOutput, ExecutorPool, StepInputs};
+use easyscale::exec::{DeviceType, ExecutorWorker, KeyMode, Placement, RunMode};
+use easyscale::runtime::Engine;
+use easyscale::util::bench::Table;
+use easyscale::util::json::Json;
+
+const MAX_P: usize = 8;
+const STEPS: u64 = 20;
+const TRIALS: usize = 3;
+
+fn mk_workers(engine: &Engine, n_exec: usize) -> Vec<ExecutorWorker> {
+    let placement = Placement::homogeneous(DeviceType::V100, n_exec, MAX_P);
+    let m = &engine.manifest.model;
+    placement
+        .executors
+        .iter()
+        .enumerate()
+        .map(|(slot, spec)| ExecutorWorker {
+            spec: spec.clone(),
+            slot,
+            contexts: spec.est_ranks.iter().map(|&r| EstContext::new(42, r)).collect(),
+            sampler: DeterministicSampler::new(42, 4096, MAX_P, m.batch_per_est),
+            data: SharedDataWorkers::new(42, &spec.est_ranks, 4, 2),
+        })
+        .collect()
+}
+
+fn inputs<'a>(
+    engine: &'a Engine,
+    params: &'a easyscale::runtime::ParamBuffers,
+    corpus: &'a SyntheticCorpus,
+    step: u64,
+) -> StepInputs<'a> {
+    StepInputs {
+        engine,
+        params,
+        corpus,
+        seed: 42,
+        step,
+        d2: false,
+        key_mode: KeyMode::Virtual,
+        aug_rate: 0.0,
+    }
+}
+
+/// Per-rank gradient digests in rank order — the shared bitwise oracle.
+fn digest(outs: &[ExecutorOutput]) -> Vec<(usize, u64)> {
+    let mut d: Vec<(usize, u64)> = outs
+        .iter()
+        .flat_map(|o| o.staged.iter())
+        .map(|s| (s.virtual_rank, s.grad_digest()))
+        .collect();
+    d.sort_by_key(|(r, _)| *r);
+    d
+}
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = match Engine::open(&root, "tiny") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP pool bench: no engine available ({e:#})");
+            return;
+        }
+    };
+    let params = engine.manifest.load_init_params().unwrap();
+    let corpus = SyntheticCorpus::new(
+        1,
+        engine.manifest.model.vocab_size,
+        engine.manifest.model.seq_len,
+    );
+    let bufs = engine.upload_params(&params).unwrap();
+    let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "== executor-phase steps/s: spawn-per-step vs persistent pool \
+         (maxP={MAX_P}, {STEPS} steps x {TRIALS} trials, host threads={host_threads}) =="
+    );
+    let mut table = Table::new(&[
+        "executors",
+        "spawn-per-step steps/s",
+        "persistent pool steps/s",
+        "speedup",
+        "bitwise",
+    ]);
+    let mut rows = Vec::new();
+    for n_exec in [1usize, 2, 4, 8] {
+        // (1) prove the implementations bitwise-equivalent at this size
+        let inp0 = inputs(&engine, &bufs, &corpus, 0);
+        let seq =
+            run_step(&mut mk_workers(&engine, n_exec), &inp0, RunMode::Sequential).unwrap();
+        let spawned =
+            run_step(&mut mk_workers(&engine, n_exec), &inp0, RunMode::parallel()).unwrap();
+        let mut check_pool = ExecutorPool::new(RunMode::parallel());
+        check_pool.install(mk_workers(&engine, n_exec));
+        let pooled = check_pool.step(&inp0).unwrap();
+        let reference = digest(&seq);
+        assert_eq!(reference, digest(&spawned), "spawn driver drifted at {n_exec} executors");
+        assert_eq!(reference, digest(&pooled), "persistent pool drifted at {n_exec} executors");
+
+        // (2) time both drivers, best-of-TRIALS, interleaved
+        let mut spawn_rate = 0.0f64;
+        let mut pool_rate = 0.0f64;
+        for _ in 0..TRIALS {
+            let mut workers = mk_workers(&engine, n_exec);
+            let t0 = Instant::now();
+            for step in 0..STEPS {
+                let inp = inputs(&engine, &bufs, &corpus, step);
+                run_step(&mut workers, &inp, RunMode::parallel()).unwrap();
+            }
+            spawn_rate = spawn_rate.max(STEPS as f64 / t0.elapsed().as_secs_f64());
+
+            let mut pool = ExecutorPool::new(RunMode::parallel());
+            pool.install(mk_workers(&engine, n_exec)); // once, outside the timer
+            let t0 = Instant::now();
+            for step in 0..STEPS {
+                let inp = inputs(&engine, &bufs, &corpus, step);
+                pool.step(&inp).unwrap();
+            }
+            pool_rate = pool_rate.max(STEPS as f64 / t0.elapsed().as_secs_f64());
+        }
+        let speedup = pool_rate / spawn_rate;
+        table.row(&[
+            format!("{n_exec}"),
+            format!("{spawn_rate:.2}"),
+            format!("{pool_rate:.2}"),
+            format!("{speedup:.2}x"),
+            "identical".to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("executors", Json::num(n_exec as f64)),
+            ("spawn_steps_per_s", Json::num(spawn_rate)),
+            ("pool_steps_per_s", Json::num(pool_rate)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+    table.print();
+
+    let backend = if cfg!(feature = "pjrt") { "pjrt-sequential" } else { "native-parallel" };
+    let record = Json::obj(vec![
+        ("bench", Json::str("pool_overhead")),
+        ("backend", Json::str(backend)),
+        ("preset", Json::str(engine.manifest.model.preset.clone())),
+        ("max_p", Json::num(MAX_P as f64)),
+        ("steps", Json::num(STEPS as f64)),
+        ("trials", Json::num(TRIALS as f64)),
+        ("host_threads", Json::num(host_threads as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_pool.json");
+    std::fs::write(&out, record.dump() + "\n").unwrap();
+    println!("pool-overhead record written to {}", out.display());
+}

@@ -71,6 +71,9 @@ SUBCOMMANDS
     --determinism L   none|d0|d1|d0+d2|d1+d2 (default: d1+d2 — D2 unlocks mixed types)
     --seed N          base seed; job i trains with seed+i (default: 42)
     --preset NAME     engine preset (default: tiny)
+    --job-threads N   concurrent job stepping between scheduling barriers:
+                      1 = round-robin driver (default), 0 = one thread per
+                      job, N = at most N job threads (native backend only)
     --sequential      drive each job's executors sequentially
     --threads N       cap concurrent executor threads per job (default 0 = unbounded)
     --verify          recompute each job's fixed-placement sequential V100
@@ -250,6 +253,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let det = Determinism::parse(&args.str_or("determinism", "d1+d2"))?;
     let seed = args.u64_or("seed", 42)?;
     let decide_every = args.usize_or("decide-every", 5)? as u64;
+    let job_threads = args.usize_or("job-threads", 1)?;
     let fleet = parse_gpu_vector(&args.str_or("fleet", "v100:2,p100:1,t4:1"))?;
     let run_mode = if args.flag("sequential") {
         RunMode::Sequential
@@ -274,10 +278,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let engine = Engine::open(&artifacts, &preset)?;
     crate::info!(
         "cluster",
-        "preset={} jobs={} fleet=[V100:{} P100:{} T4:{}] det={} decide-every={}",
-        preset, n_jobs, fleet[0], fleet[1], fleet[2], det, decide_every
+        "preset={} jobs={} fleet=[V100:{} P100:{} T4:{}] det={} decide-every={} job-threads={}",
+        preset, n_jobs, fleet[0], fleet[1], fleet[2], det, decide_every, job_threads
     );
-    let mut rt = ClusterRuntime::new(&engine, fleet, decide_every);
+    let mut rt =
+        ClusterRuntime::new(&engine, fleet, decide_every).with_job_threads(job_threads);
     for i in 0..n_jobs {
         let cfg = TrainConfig {
             seed: seed + i as u64,
@@ -549,6 +554,13 @@ mod tests {
             "cluster", "--preset", "tiny", "--jobs", "2", "--steps", "6",
             "--max-p", "4", "--fleet", "v100:2,p100:1,t4:1", "--decide-every", "2",
             "--sequential", "--verify",
+        ]))
+        .is_ok());
+        // concurrent job stepping verifies against the same references
+        assert!(main_with(argv(&[
+            "cluster", "--preset", "tiny", "--jobs", "2", "--steps", "6",
+            "--max-p", "4", "--fleet", "v100:2,p100:1,t4:1", "--decide-every", "2",
+            "--job-threads", "2", "--sequential", "--verify",
         ]))
         .is_ok());
         assert!(main_with(argv(&["cluster", "--jobs", "0"])).is_err());

@@ -109,6 +109,16 @@ impl BucketPlan {
         Ok(BucketPlan { buckets, cap_bytes })
     }
 
+    /// Per-bucket element counts under `param_sizes` — what aggregation
+    /// scratch pre-sizing needs (the widest bucket is the flatten/ring
+    /// buffer high-water mark).
+    pub fn bucket_elems(&self, param_sizes: &[usize]) -> Vec<usize> {
+        self.buckets
+            .iter()
+            .map(|b| b.iter().map(|&p| param_sizes[p]).sum())
+            .collect()
+    }
+
     /// Validity: an ordered partition of 0..n.
     pub fn validate(&self, n_params: usize) -> Result<()> {
         let mut seen = vec![false; n_params];

@@ -20,11 +20,12 @@ pub mod reduce;
 pub mod ring;
 
 pub use bucket::BucketPlan;
-pub use reduce::{pairwise_tree_sum, SlotTable};
+pub use reduce::{pairwise_tree_sum, ReduceScratch, SlotTable};
 pub use ring::{ring_allreduce, RING_CHUNK_ALIGN};
 
 use crate::est::StagedGrads;
-use reduce::{flatten_bucket, scatter_bucket};
+use reduce::{flatten_bucket_into, pairwise_tree_sum_into, scatter_bucket};
+use ring::ring_allreduce_into;
 
 /// Deterministic gradient aggregation over staged per-EST gradients.
 ///
@@ -33,28 +34,48 @@ use reduce::{flatten_bucket, scatter_bucket};
 /// scattered back to per-parameter buffers (manifest order). The caller
 /// may hand `staged` in any order — including parallel-executor completion
 /// order — the rank sort makes arrival order structurally irrelevant.
+///
+/// Allocating convenience form of [`aggregate_virtual_into`].
 pub fn aggregate_virtual(
     plan: &BucketPlan,
     staged: &[StagedGrads],
     param_sizes: &[usize],
     max_p: usize,
 ) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    aggregate_virtual_into(plan, staged, param_sizes, max_p, &mut ReduceScratch::new(), &mut out);
+    out
+}
+
+/// [`aggregate_virtual`] with caller-held buffers: `scratch` provides the
+/// flatten/ring workspace and `out` receives the averaged per-parameter
+/// gradients — all reused across steps (the trainer holds one of each), so
+/// steady-state aggregation allocates nothing. Flatten order, ring hop
+/// order and chunk boundaries are unchanged: bitwise identical to the
+/// allocating form (pinned in tests).
+pub fn aggregate_virtual_into(
+    plan: &BucketPlan,
+    staged: &[StagedGrads],
+    param_sizes: &[usize],
+    max_p: usize,
+    scratch: &mut ReduceScratch,
+    out: &mut Vec<Vec<f32>>,
+) {
     assert_eq!(staged.len(), max_p, "need one staged grad set per EST");
     // order by virtual rank — placement/arrival order must not matter
     let mut by_rank: Vec<&StagedGrads> = staged.iter().collect();
     by_rank.sort_by_key(|s| s.virtual_rank);
     let scale = 1.0f32 / max_p as f32;
 
-    let mut out: Vec<Vec<f32>> = param_sizes.iter().map(|&s| vec![0.0; s]).collect();
+    resize_params(out, param_sizes);
+    ReduceScratch::ensure(&mut scratch.flat, max_p);
     for bucket in &plan.buckets {
-        let flat: Vec<Vec<f32>> = by_rank
-            .iter()
-            .map(|s| flatten_bucket(bucket, &s.grads, param_sizes))
-            .collect();
-        let reduced = ring_allreduce(&flat);
-        scatter_bucket(bucket, &reduced, scale, param_sizes, &mut out);
+        for (buf, s) in scratch.flat[..max_p].iter_mut().zip(&by_rank) {
+            flatten_bucket_into(bucket, &s.grads, param_sizes, buf);
+        }
+        ring_allreduce_into(&scratch.flat[..max_p], &mut scratch.reduced);
+        scatter_bucket(bucket, &scratch.reduced, scale, param_sizes, out);
     }
-    out
 }
 
 /// The *physical* aggregation that existing elastic frameworks do
@@ -62,35 +83,67 @@ pub fn aggregate_virtual(
 /// gradients (fixed pairwise tree in hosting order), then a ring spans the
 /// physical executors. Bitwise-faithful to why elasticity breaks
 /// reproducibility: the result depends on the placement `groups`.
+///
+/// Allocating convenience form of [`aggregate_physical_into`].
 pub fn aggregate_physical(
     plan: &BucketPlan,
     staged: &[StagedGrads],
     param_sizes: &[usize],
     groups: &[Vec<usize>], // per-executor lists of virtual ranks, hosting order
 ) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    aggregate_physical_into(plan, staged, param_sizes, groups, &mut ReduceScratch::new(), &mut out);
+    out
+}
+
+/// [`aggregate_physical`] with caller-held buffers — same reuse contract
+/// (and the same bitwise guarantee) as [`aggregate_virtual_into`].
+pub fn aggregate_physical_into(
+    plan: &BucketPlan,
+    staged: &[StagedGrads],
+    param_sizes: &[usize],
+    groups: &[Vec<usize>],
+    scratch: &mut ReduceScratch,
+    out: &mut Vec<Vec<f32>>,
+) {
     let total: usize = groups.iter().map(|g| g.len()).sum();
     assert_eq!(total, staged.len());
     let scale = 1.0f32 / staged.len() as f32;
     let find = |rank: usize| staged.iter().find(|s| s.virtual_rank == rank).unwrap();
 
-    let mut out: Vec<Vec<f32>> = param_sizes.iter().map(|&s| vec![0.0; s]).collect();
+    resize_params(out, param_sizes);
+    let max_members = groups.iter().map(|g| g.len()).max().unwrap_or(0);
+    ReduceScratch::ensure(&mut scratch.flat, max_members);
+    ReduceScratch::ensure(&mut scratch.locals, groups.len());
     for bucket in &plan.buckets {
         // local accumulation per executor (pairwise tree in hosting order)
-        let locals: Vec<Vec<f32>> = groups
-            .iter()
-            .map(|g| {
-                let members: Vec<Vec<f32>> = g
-                    .iter()
-                    .map(|&rank| flatten_bucket(bucket, &find(rank).grads, param_sizes))
-                    .collect();
-                pairwise_tree_sum(&members)
-            })
-            .collect();
-        let reduced =
-            if locals.len() == 1 { locals.into_iter().next().unwrap() } else { ring_allreduce(&locals) };
-        scatter_bucket(bucket, &reduced, scale, param_sizes, &mut out);
+        for (gi, g) in groups.iter().enumerate() {
+            for (buf, &rank) in scratch.flat[..g.len()].iter_mut().zip(g) {
+                flatten_bucket_into(bucket, &find(rank).grads, param_sizes, buf);
+            }
+            pairwise_tree_sum_into(
+                &scratch.flat[..g.len()],
+                &mut scratch.tree,
+                &mut scratch.locals[gi],
+            );
+        }
+        if groups.len() == 1 {
+            scatter_bucket(bucket, &scratch.locals[0], scale, param_sizes, out);
+        } else {
+            ring_allreduce_into(&scratch.locals[..groups.len()], &mut scratch.reduced);
+            scatter_bucket(bucket, &scratch.reduced, scale, param_sizes, out);
+        }
     }
-    out
+}
+
+/// Size `out` as one buffer per parameter (`param_sizes`, manifest order),
+/// preserving capacity across steps. Contents are irrelevant: every bucket
+/// plan is a partition, so `scatter_bucket` overwrites every element.
+fn resize_params(out: &mut Vec<Vec<f32>>, param_sizes: &[usize]) {
+    out.resize_with(param_sizes.len(), Vec::new);
+    for (buf, &s) in out.iter_mut().zip(param_sizes) {
+        buf.resize(s, 0.0);
+    }
 }
 
 #[cfg(test)]
@@ -190,6 +243,37 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// One dirty `ReduceScratch` reused across aggregations of different
+    /// shapes (maxP, bucket layout, physical grouping) must reproduce the
+    /// allocating forms bit for bit — the zero-realloc hot path guarantee.
+    #[test]
+    fn scratch_reuse_is_bitwise_invisible() {
+        let mut rng = crate::util::rng::SplitMix64::new(17);
+        let mut scratch = ReduceScratch::new();
+        let mut out = Vec::new();
+        let bits = |g: &Vec<Vec<f32>>| -> Vec<u32> {
+            g.iter().flat_map(|b| b.iter().map(|v| v.to_bits())).collect()
+        };
+        for (max_p, cap) in [(4usize, 64usize), (2, 16), (6, 256), (3, 32)] {
+            let n_params = gen::usize_in(&mut rng, 2, 5);
+            let sizes: Vec<usize> =
+                (0..n_params).map(|_| gen::usize_in(&mut rng, 3, 40)).collect();
+            let plan = BucketPlan::build(&sizes, 4 * cap);
+            let s = random_staged(&mut rng, &sizes, max_p);
+            let fresh = aggregate_virtual(&plan, &s, &sizes, max_p);
+            aggregate_virtual_into(&plan, &s, &sizes, max_p, &mut scratch, &mut out);
+            assert_eq!(bits(&fresh), bits(&out), "virtual drifted at maxP={max_p}");
+            // physical form: two uneven groups (exercises the tree scratch)
+            let split = max_p.div_ceil(2);
+            let groups = vec![(0..split).collect::<Vec<_>>(), (split..max_p).collect()];
+            let groups: Vec<Vec<usize>> =
+                groups.into_iter().filter(|g| !g.is_empty()).collect();
+            let fresh_p = aggregate_physical(&plan, &s, &sizes, &groups);
+            aggregate_physical_into(&plan, &s, &sizes, &groups, &mut scratch, &mut out);
+            assert_eq!(bits(&fresh_p), bits(&out), "physical drifted at maxP={max_p}");
+        }
     }
 
     #[test]

@@ -60,6 +60,83 @@ impl SlotTable {
         }
         Ok(out)
     }
+
+    /// Reset for reuse: `max_p` empty slots, allocation preserved — the
+    /// trainer holds one table across steps instead of building a fresh
+    /// one per mini-batch.
+    pub fn reset(&mut self, max_p: usize) {
+        self.slots.clear();
+        self.slots.resize_with(max_p, || None);
+    }
+
+    /// The reusable form of [`SlotTable::into_ranked`]: move every result
+    /// out in virtual-rank order into `out` (cleared first, capacity
+    /// kept); errors if any rank is missing. The table is left empty (all
+    /// `None`) and ready for [`SlotTable::reset`].
+    pub fn take_ranked(&mut self, out: &mut Vec<StagedGrads>) -> Result<()> {
+        out.clear();
+        out.reserve(self.slots.len());
+        for (r, slot) in self.slots.iter_mut().enumerate() {
+            match slot.take() {
+                Some(sg) => out.push(sg),
+                None => bail!("no staged gradients arrived for virtual rank {r}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Reusable scratch for deterministic aggregation, held by the trainer so
+/// the per-step hot path stops allocating: flattened per-rank bucket
+/// buffers, pairwise-tree levels, per-group local sums, and the reduced
+/// bucket. Contents are transient within one aggregation call — nothing
+/// carries across steps except *capacity* — and every summation runs in
+/// exactly the order of the allocating implementations, so digests are
+/// bitwise-unchanged (pinned in `comm` tests).
+#[derive(Debug, Default)]
+pub struct ReduceScratch {
+    /// One flattened bucket buffer per rank (virtual aggregation) or per
+    /// local group member (physical aggregation).
+    pub(crate) flat: Vec<Vec<f32>>,
+    /// Pairwise-tree level buffers (`pairwise_tree_sum_into`).
+    pub(crate) tree: Vec<Vec<f32>>,
+    /// Per-executor local sums (physical aggregation only).
+    pub(crate) locals: Vec<Vec<f32>>,
+    /// The reduced bucket before scatter.
+    pub(crate) reduced: Vec<f32>,
+}
+
+impl ReduceScratch {
+    pub fn new() -> ReduceScratch {
+        ReduceScratch::default()
+    }
+
+    /// Ensure at least `n` (cleared) buffers in `pool`, preserving the
+    /// capacity of existing ones.
+    pub(crate) fn ensure(pool: &mut Vec<Vec<f32>>, n: usize) {
+        if pool.len() < n {
+            pool.resize_with(n, Vec::new);
+        }
+    }
+
+    /// Pre-size the virtual-aggregation buffers for `max_p` rank sets
+    /// under `plan` — called at trainer (re)build time, so even the first
+    /// mini-batch after a reconfiguration grows nothing in the hot loop.
+    pub fn reserve_for(
+        &mut self,
+        plan: &crate::comm::BucketPlan,
+        param_sizes: &[usize],
+        max_p: usize,
+    ) {
+        let widest = plan.bucket_elems(param_sizes).into_iter().max().unwrap_or(0);
+        Self::ensure(&mut self.flat, max_p);
+        for b in self.flat.iter_mut() {
+            b.clear();
+            b.reserve(widest);
+        }
+        self.reduced.clear();
+        self.reduced.reserve(widest);
+    }
 }
 
 /// Fixed-shape balanced pairwise-tree sum: level k adds neighbours 2i and
@@ -67,44 +144,90 @@ impl SlotTable {
 /// arrival order, so it is a deterministic building block for local
 /// (within-executor) accumulation.
 pub fn pairwise_tree_sum(bufs: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = Vec::new();
+    pairwise_tree_sum_into(bufs, &mut Vec::new(), &mut out);
+    out
+}
+
+/// [`pairwise_tree_sum`] writing into caller buffers: `levels` holds the
+/// reusable tree-level scratch, `out` receives the sum (both cleared, with
+/// capacity preserved across calls). The pairing — level k adds neighbours
+/// 2i and 2i+1, odd tails carried — is element-for-element the order the
+/// allocating form used, so results are bitwise identical.
+pub fn pairwise_tree_sum_into(bufs: &[Vec<f32>], levels: &mut Vec<Vec<f32>>, out: &mut Vec<f32>) {
     assert!(!bufs.is_empty(), "pairwise_tree_sum over zero buffers");
     let len = bufs[0].len();
     assert!(bufs.iter().all(|b| b.len() == len), "buffer lengths must match");
+    out.clear();
     if bufs.len() == 1 {
-        return bufs[0].clone();
+        out.extend_from_slice(&bufs[0]);
+        return;
     }
-    // first level reads the borrowed inputs; later levels consume owned sums
-    let mut level: Vec<Vec<f32>> = bufs
-        .chunks(2)
-        .map(|pair| match pair {
-            [a, b] => a.iter().zip(b.iter()).map(|(x, y)| x + y).collect(),
-            [a] => a.clone(),
+    // level 0: pairwise sums of the borrowed inputs into the scratch
+    let n0 = bufs.len().div_ceil(2);
+    ReduceScratch::ensure(levels, n0);
+    for (slot, pair) in levels[..n0].iter_mut().zip(bufs.chunks(2)) {
+        slot.clear();
+        match pair {
+            [a, b] => slot.extend(a.iter().zip(b.iter()).map(|(x, y)| x + y)),
+            [a] => slot.extend_from_slice(a),
             _ => unreachable!("chunks(2) yields 1 or 2 elements"),
-        })
-        .collect();
-    while level.len() > 1 {
-        let mut next = Vec::with_capacity(level.len().div_ceil(2));
-        let mut it = level.into_iter();
-        while let Some(a) = it.next() {
-            match it.next() {
-                Some(b) => next.push(a.iter().zip(&b).map(|(x, y)| x + y).collect()),
-                None => next.push(a),
+        }
+    }
+    // higher levels fold neighbour pairs down within the scratch prefix:
+    // levels[i] <- levels[2i] + levels[2i+1] (odd tail carried through)
+    let mut n = n0;
+    while n > 1 {
+        let next = n.div_ceil(2);
+        for i in 0..next {
+            let a = 2 * i;
+            let b = a + 1;
+            if i == 0 {
+                // destination == left source: fold the neighbour in place
+                if b < n {
+                    let (head, tail) = levels.split_at_mut(b);
+                    for (x, y) in head[a].iter_mut().zip(&tail[0]) {
+                        *x += *y;
+                    }
+                }
+            } else {
+                let (head, tail) = levels.split_at_mut(a);
+                let dst = &mut head[i];
+                dst.clear();
+                if b < n {
+                    dst.extend(tail[0].iter().zip(&tail[1]).map(|(x, y)| x + y));
+                } else {
+                    dst.extend_from_slice(&tail[0]);
+                }
             }
         }
-        level = next;
+        n = next;
     }
-    level.pop().unwrap()
+    out.extend_from_slice(&levels[0]);
 }
 
 /// Flatten one rank's gradients for a bucket (bucket order) into a single
 /// contiguous buffer.
 pub fn flatten_bucket(bucket: &[usize], grads: &[Vec<f32>], param_sizes: &[usize]) -> Vec<f32> {
-    let bucket_len: usize = bucket.iter().map(|&p| param_sizes[p]).sum();
-    let mut buf = Vec::with_capacity(bucket_len);
-    for &p in bucket {
-        buf.extend_from_slice(&grads[p]);
-    }
+    let mut buf = Vec::new();
+    flatten_bucket_into(bucket, grads, param_sizes, &mut buf);
     buf
+}
+
+/// [`flatten_bucket`] into a caller buffer (cleared first, capacity
+/// preserved across steps).
+pub fn flatten_bucket_into(
+    bucket: &[usize],
+    grads: &[Vec<f32>],
+    param_sizes: &[usize],
+    out: &mut Vec<f32>,
+) {
+    let bucket_len: usize = bucket.iter().map(|&p| param_sizes[p]).sum();
+    out.clear();
+    out.reserve(bucket_len);
+    for &p in bucket {
+        out.extend_from_slice(&grads[p]);
+    }
 }
 
 /// Scatter a reduced bucket buffer back to per-parameter output tensors,
@@ -180,6 +303,56 @@ mod tests {
         let b = vec![vec![1.0f32, -0.0, 3.5]];
         let out = pairwise_tree_sum(&b);
         assert!(out.iter().zip(&b[0]).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn slot_table_reset_and_take_ranked_reuse() {
+        let mut t = SlotTable::new(2);
+        t.insert(sg(1, vec![vec![1.0]])).unwrap();
+        t.insert(sg(0, vec![vec![0.0]])).unwrap();
+        let mut ranked = Vec::new();
+        t.take_ranked(&mut ranked).unwrap();
+        let ranks: Vec<usize> = ranked.iter().map(|s| s.virtual_rank).collect();
+        assert_eq!(ranks, vec![0, 1]);
+        // the table is drained; reset re-arms it for the next step
+        assert!(t.take_ranked(&mut ranked).is_err());
+        t.reset(3);
+        assert_eq!(t.filled(), 0);
+        t.insert(sg(2, vec![])).unwrap();
+        t.insert(sg(0, vec![])).unwrap();
+        t.insert(sg(1, vec![])).unwrap();
+        t.take_ranked(&mut ranked).unwrap();
+        assert_eq!(ranked.len(), 3);
+    }
+
+    #[test]
+    fn tree_sum_into_matches_allocating_form_bitwise() {
+        let mut rng = SplitMix64::new(11);
+        let mut levels = Vec::new();
+        let mut out = Vec::new();
+        for n in [1usize, 2, 3, 4, 5, 7, 8, 9] {
+            let bufs: Vec<Vec<f32>> =
+                (0..n).map(|_| gen::vec_f32(&mut rng, 129, 1.0)).collect();
+            let fresh = pairwise_tree_sum(&bufs);
+            // reused scratch (dirty from the previous iteration) must not
+            // change a single bit
+            pairwise_tree_sum_into(&bufs, &mut levels, &mut out);
+            assert_eq!(fresh.len(), out.len());
+            assert!(
+                fresh.iter().zip(&out).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "scratch tree sum drifted at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn flatten_into_reuses_capacity_bitwise() {
+        let sizes = [3usize, 2];
+        let grads = vec![vec![1.0f32, 2.0, 3.0], vec![4.0, 5.0]];
+        let mut buf = vec![9.0f32; 64]; // dirty, oversized
+        flatten_bucket_into(&[1, 0], &grads, &sizes, &mut buf);
+        assert_eq!(buf, flatten_bucket(&[1, 0], &grads, &sizes));
+        assert_eq!(buf, vec![4.0, 5.0, 1.0, 2.0, 3.0]);
     }
 
     #[test]

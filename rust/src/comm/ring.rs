@@ -15,14 +15,25 @@ pub const RING_CHUNK_ALIGN: usize = 1;
 /// Sum `bufs` (one equal-length buffer per rank) in ring order.
 /// Returns the reduced buffer (what every rank holds after all-gather).
 pub fn ring_allreduce(bufs: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = Vec::new();
+    ring_allreduce_into(bufs, &mut out);
+    out
+}
+
+/// [`ring_allreduce`] into a caller buffer (cleared first, capacity
+/// preserved across steps) — hop order and chunk boundaries unchanged, so
+/// the result is bitwise identical to the allocating form.
+pub fn ring_allreduce_into(bufs: &[Vec<f32>], out: &mut Vec<f32>) {
     let n = bufs.len();
     assert!(n > 0);
     let len = bufs[0].len();
     assert!(bufs.iter().all(|b| b.len() == len), "rank buffers must match");
+    out.clear();
     if n == 1 {
-        return bufs[0].clone();
+        out.extend_from_slice(&bufs[0]);
+        return;
     }
-    let mut out = vec![0.0f32; len];
+    out.resize(len, 0.0);
     // chunk c covers [c*base + min(c, rem), ...): balanced split like NCCL
     let base = len / n;
     let rem = len % n;
@@ -47,7 +58,6 @@ pub fn ring_allreduce(bufs: &[Vec<f32>]) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 /// Naive in-order summation (rank 0 + rank 1 + ...) — what a tree/direct
@@ -117,6 +127,22 @@ mod tests {
         let r2 = ring_allreduce(&bufs2);
         let differs = r4.iter().zip(&r2).any(|(a, b)| a.to_bits() != b.to_bits());
         assert!(differs);
+    }
+
+    #[test]
+    fn into_form_reuses_dirty_buffers_bitwise() {
+        let mut rng = crate::util::rng::SplitMix64::new(9);
+        let mut out = vec![7.5f32; 4096]; // dirty, differently sized
+        for n in [1usize, 2, 3, 5] {
+            let bufs = rand_bufs(&mut rng, n, 513);
+            let fresh = ring_allreduce(&bufs);
+            ring_allreduce_into(&bufs, &mut out);
+            assert_eq!(fresh.len(), out.len());
+            assert!(
+                fresh.iter().zip(&out).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "reused ring buffer drifted at n={n}"
+            );
+        }
     }
 
     #[test]

@@ -55,6 +55,29 @@ pub struct StagedGrads {
     pub grads: Vec<Vec<f32>>,
 }
 
+impl StagedGrads {
+    /// Total gradient elements staged (all parameters) — what aggregation
+    /// scratch sizing and bandwidth accounting care about.
+    pub fn total_elems(&self) -> usize {
+        self.grads.iter().map(|g| g.len()).sum()
+    }
+
+    /// FNV-1a digest over the staged gradient bits (loss and rank
+    /// excluded). The cheap bitwise-identity check shared by the executor
+    /// runtime tests and the pool-overhead bench — one implementation, so
+    /// the oracle cannot drift between them.
+    pub fn grad_digest(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for g in &self.grads {
+            for v in g {
+                h ^= v.to_bits() as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        h
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,5 +105,28 @@ mod tests {
         let a = EstContext::new(5, 0);
         let b = EstContext::new(5, 1);
         assert_ne!(a.aug_rng_state, b.aug_rng_state);
+    }
+
+    #[test]
+    fn grad_digest_tracks_bits_not_metadata() {
+        let sg = StagedGrads {
+            virtual_rank: 0,
+            loss: 1.0,
+            grads: vec![vec![1.0, -0.5], vec![2.0]],
+        };
+        assert_eq!(sg.total_elems(), 3);
+        let mut same_bits = sg.clone();
+        same_bits.virtual_rank = 7;
+        same_bits.loss = 9.0;
+        assert_eq!(sg.grad_digest(), same_bits.grad_digest());
+        let mut flipped = sg.clone();
+        flipped.grads[1][0] = 2.0000002;
+        assert_ne!(sg.grad_digest(), flipped.grad_digest());
+        // -0.0 and 0.0 are numerically equal but bitwise distinct
+        let mut neg_zero = sg.clone();
+        neg_zero.grads[0][1] = 0.0;
+        let mut pos_zero = sg;
+        pos_zero.grads[0][1] = -0.0;
+        assert_ne!(neg_zero.grad_digest(), pos_zero.grad_digest());
     }
 }

@@ -171,6 +171,15 @@ pub struct ExecTiming {
     pub stage_s: Vec<f64>,
 }
 
+impl ExecTiming {
+    /// Pre-sized for `n` hosted ESTs, so the per-step push loop in
+    /// [`crate::exec::pool::ExecutorWorker::run_minibatch`] never grows
+    /// from empty.
+    pub fn with_capacity(n: usize) -> ExecTiming {
+        ExecTiming { compute_s: Vec::with_capacity(n), stage_s: Vec::with_capacity(n) }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -9,4 +9,4 @@ pub mod pool;
 pub use devices::DeviceType;
 pub use executor::{ExecTiming, ExecutorSpec, KeyMode, Placement};
 pub use memory::MemoryModel;
-pub use pool::{ExecutorOutput, ExecutorWorker, RunMode, StepInputs};
+pub use pool::{ExecutorOutput, ExecutorPool, ExecutorWorker, RunMode, StepInputs};

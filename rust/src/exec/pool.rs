@@ -1,23 +1,42 @@
-//! The parallel executor runtime: one OS thread per executor, a
-//! channel-based step barrier, and completion-order result collection.
+//! The parallel executor runtime: a **persistent** thread-per-executor
+//! pool with a reusable step barrier, plus the one-shot spawning driver it
+//! replaced (kept as the bitwise reference and overhead baseline).
 //!
 //! The paper's executor is a per-GPU process that time-slices its
 //! EasyScaleThreads; different executors run *concurrently* on different
-//! GPUs. This module reproduces that concurrency on the CPU substrate:
-//! each [`ExecutorWorker`] is a `Send`-able unit owning everything one
-//! executor mutates during a mini-batch — its EST contexts, its data-worker
-//! pool (per-EST queues for exactly its hosted ranks), its sampler clone —
-//! so workers share nothing mutable and can run on scoped threads against
-//! a shared `&Engine`.
+//! GPUs — and, crucially, those processes are **long-lived**: they survive
+//! across mini-batches and are only rebuilt on elastic reconfiguration
+//! (the paper's context switch). This module reproduces both properties on
+//! the CPU substrate:
+//!
+//! * [`ExecutorWorker`] is a `Send`-able unit owning everything one
+//!   executor mutates during a mini-batch — its EST contexts, its
+//!   data-worker pool (per-EST queues for exactly its hosted ranks), its
+//!   sampler clone — so workers share nothing mutable.
+//! * [`ExecutorPool`] owns one long-lived OS thread per worker. Each
+//!   global mini-batch is one [`ExecutorPool::step`]: jobs go out over
+//!   per-worker channels, results come back over one shared completion
+//!   channel (the reusable step barrier). No thread is spawned and no
+//!   channel is created on the hot path; workers (and their threads) are
+//!   rebuilt only by [`ExecutorPool::install`] — i.e. on `Reconfigure`.
+//! * [`run_step`] is the pre-pool driver: `std::thread::scope` + a fresh
+//!   mpsc channel **per step**. It stays as the spawn-per-step baseline
+//!   the `pool_overhead` bench measures the pool against, and as a
+//!   second, independent implementation for the bitwise tests.
 //!
 //! Determinism contract: every EST's computation is a pure function of
 //! (job seed, virtual rank, step, kernel variant), and results are handed
-//! back through a channel in whatever order threads finish. The trainer
-//! re-indexes them into a virtual-rank [`crate::comm::SlotTable`] before
-//! aggregation, so the bitwise result is independent of thread scheduling —
-//! `RunMode::Parallel` and `RunMode::Sequential` produce identical digests
-//! (asserted in `tests/consistency.rs`).
+//! back in whatever order threads finish. The trainer re-indexes them into
+//! a virtual-rank [`crate::comm::SlotTable`] before aggregation, so the
+//! bitwise result is independent of thread scheduling — `RunMode::Parallel`
+//! and `RunMode::Sequential` produce identical digests (asserted in
+//! `tests/consistency.rs`), and the persistent pool is bitwise identical
+//! to the spawning driver (asserted below).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -28,6 +47,20 @@ use crate::runtime::{Engine, ParamBuffers};
 use crate::util::rng::dropout_key;
 
 use super::executor::{ExecTiming, ExecutorSpec, KeyMode};
+
+// The pool threads share one `&StepInputs` (engine, uploaded parameters,
+// corpus) through an erased pointer, which is only sound when everything
+// behind it is `Sync` — asserted here for the whole struct, so adding a
+// non-`Sync` field to `StepInputs` (or to `ParamBuffers`/`Engine`/the
+// corpus) breaks the build instead of introducing a silent data race. The
+// native backend satisfies it; the PJRT client is not `Sync` — and under
+// the `pjrt` feature the pool never spawns threads (see
+// `ExecutorPool::threaded`), so the assertion is native-only.
+#[cfg(not(feature = "pjrt"))]
+const _STEP_INPUTS_ARE_SYNC: () = {
+    const fn assert_sync<T: Sync>() {}
+    assert_sync::<StepInputs<'static>>()
+};
 
 /// How the trainer drives its executors for each global mini-batch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -106,7 +139,8 @@ impl ExecutorWorker {
         let t_start = Instant::now();
         let variant = self.spec.device.kernel_variant(inp.d2);
         self.data.prefill(inp.step, &self.spec.est_ranks);
-        let mut timing = ExecTiming::default();
+        // pre-sized result buffers: the per-EST loop never reallocates
+        let mut timing = ExecTiming::with_capacity(self.contexts.len());
         let mut staged = Vec::with_capacity(self.contexts.len());
         for (pos, ctx) in self.contexts.iter_mut().enumerate() {
             let rank = ctx.virtual_rank;
@@ -149,10 +183,13 @@ impl ExecutorWorker {
     }
 }
 
-/// Drive all executors through one global mini-batch. Returns the
-/// executor outputs in **completion order** (parallel) or slot order
-/// (sequential) — callers must not rely on the order; the trainer
-/// re-indexes by virtual rank.
+/// Drive all executors through one global mini-batch **without a pool**:
+/// slot order on the calling thread (sequential) or one freshly spawned
+/// scoped thread per executor (parallel). This is the pre-pool hot path,
+/// kept as the spawn-per-step baseline (`benches/pool_overhead.rs`) and as
+/// an independent implementation for the bitwise tests. Returns outputs in
+/// completion order (parallel) or slot order (sequential) — callers must
+/// not rely on the order; the trainer re-indexes by virtual rank.
 pub fn run_step(
     workers: &mut [ExecutorWorker],
     inp: &StepInputs<'_>,
@@ -164,22 +201,19 @@ pub fn run_step(
     }
 }
 
-/// Thread-per-executor execution over scoped threads. The mpsc channel is
-/// the step barrier: the scope joins every worker thread, then results are
-/// drained in completion order.
+/// Thread-per-executor execution over scoped threads, **re-spawned every
+/// step** with a fresh mpsc channel as the barrier — the overhead the
+/// persistent [`ExecutorPool`] eliminates.
 #[cfg(not(feature = "pjrt"))]
 fn run_parallel(
     workers: &mut [ExecutorWorker],
     inp: &StepInputs<'_>,
     max_threads: usize,
 ) -> Result<Vec<ExecutorOutput>> {
-    if workers.len() <= 1 {
-        return workers.iter_mut().map(|w| w.run_minibatch(inp)).collect();
-    }
-    let wave = if max_threads == 0 { workers.len() } else { max_threads.max(1) };
+    let wave = if max_threads == 0 { workers.len().max(1) } else { max_threads.max(1) };
     let mut outs = Vec::with_capacity(workers.len());
     for chunk in workers.chunks_mut(wave) {
-        let (tx, rx) = std::sync::mpsc::channel();
+        let (tx, rx) = channel();
         std::thread::scope(|s| {
             for w in chunk.iter_mut() {
                 let tx = tx.clone();
@@ -208,6 +242,223 @@ fn run_parallel(
     workers.iter_mut().map(|w| w.run_minibatch(inp)).collect()
 }
 
+/// What the pool sends a worker thread.
+enum Job {
+    /// Run one mini-batch against the erased step inputs.
+    Step(StepPtr),
+    /// Exit the worker loop (teardown / reconfigure).
+    Stop,
+}
+
+/// An erased `&StepInputs<'_>` handed to pool threads for exactly one
+/// step.
+///
+/// SAFETY: [`ExecutorPool::step`] does not return until every dispatched
+/// worker has answered over the completion channel, so the pointee (a
+/// local on the caller's stack) strictly outlives every dereference — the
+/// same lifetime discipline `std::thread::scope` enforces statically. The
+/// shared `&Engine` inside additionally requires `Engine: Sync`, asserted
+/// at the top of this module for every build that spawns pool threads.
+struct StepPtr(*const StepInputs<'static>);
+
+unsafe impl Send for StepPtr {}
+
+/// A long-lived pool worker thread: waits for jobs, runs its executor's
+/// mini-batch, reports on the shared completion channel. Panics inside a
+/// mini-batch are converted into an `Err` result so the step barrier can
+/// never deadlock waiting for a dead worker.
+fn worker_loop(
+    worker: Arc<Mutex<ExecutorWorker>>,
+    jobs: Receiver<Job>,
+    results: Sender<Result<ExecutorOutput>>,
+) {
+    while let Ok(Job::Step(ptr)) = jobs.recv() {
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: see `StepPtr` — the pool's step barrier keeps the
+            // pointee alive for the whole call.
+            let inp: &StepInputs<'_> = unsafe { &*ptr.0 };
+            lock_ignore_poison(&worker).run_minibatch(inp)
+        }))
+        .unwrap_or_else(|_| Err(anyhow::anyhow!("executor worker thread panicked")));
+        if results.send(res).is_err() {
+            break; // pool gone; nobody left to report to
+        }
+    }
+}
+
+/// Pool locks are only ever taken between steps (by the trainer) or by the
+/// owning worker thread during its step, so they are uncontended; a poison
+/// flag from an earlier panic carries no torn state we care about beyond
+/// the `Err` already reported for that step.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+struct PoolThread {
+    jobs: Sender<Job>,
+    join: JoinHandle<()>,
+}
+
+struct PoolSlot {
+    worker: Arc<Mutex<ExecutorWorker>>,
+    /// None for inline slots (sequential mode, single-executor pools, or
+    /// the pjrt backend).
+    thread: Option<PoolThread>,
+}
+
+/// A persistent executor pool: worker threads live across mini-batches and
+/// are rebuilt only on [`ExecutorPool::install`] — the paper's context
+/// switch. The hot path ([`ExecutorPool::step`]) spawns nothing and
+/// allocates no channels; the shared completion channel is the reusable
+/// step barrier.
+pub struct ExecutorPool {
+    mode: RunMode,
+    slots: Vec<PoolSlot>,
+    /// The completion channel, present iff this pool runs threads. Created
+    /// once per install, reused by every step.
+    results: Option<Receiver<Result<ExecutorOutput>>>,
+}
+
+impl ExecutorPool {
+    /// An empty pool; call [`ExecutorPool::install`] to populate it.
+    pub fn new(mode: RunMode) -> ExecutorPool {
+        ExecutorPool { mode, slots: Vec::new(), results: None }
+    }
+
+    /// Whether a worker set of `n` executors gets long-lived threads:
+    /// parallel mode on the native backend with real concurrency to
+    /// exploit. A single executor runs inline — a thread would only add a
+    /// channel round-trip per step. Under `pjrt` the engine is not `Sync`,
+    /// so the pool always runs inline (matching the spawning driver).
+    fn threaded(&self, n: usize) -> bool {
+        matches!(self.mode, RunMode::Parallel { .. }) && !cfg!(feature = "pjrt") && n > 1
+    }
+
+    /// Install a fresh worker set: stop and join any existing threads,
+    /// then take ownership of `workers` (spawning one long-lived thread
+    /// per worker when threaded). Called on initial build and on every
+    /// elastic reconfiguration — never on the per-step hot path.
+    pub fn install(&mut self, workers: Vec<ExecutorWorker>) {
+        self.teardown();
+        if self.threaded(workers.len()) {
+            let (res_tx, res_rx) = channel();
+            self.slots = workers
+                .into_iter()
+                .map(|w| {
+                    let worker = Arc::new(Mutex::new(w));
+                    let (job_tx, job_rx) = channel();
+                    let thread_worker = Arc::clone(&worker);
+                    let thread_results = res_tx.clone();
+                    let join = std::thread::spawn(move || {
+                        worker_loop(thread_worker, job_rx, thread_results)
+                    });
+                    PoolSlot { worker, thread: Some(PoolThread { jobs: job_tx, join }) }
+                })
+                .collect();
+            self.results = Some(res_rx);
+        } else {
+            self.slots = workers
+                .into_iter()
+                .map(|w| PoolSlot { worker: Arc::new(Mutex::new(w)), thread: None })
+                .collect();
+        }
+    }
+
+    /// Stop and join all worker threads, dropping the workers.
+    fn teardown(&mut self) {
+        for slot in &mut self.slots {
+            if let Some(t) = slot.thread.take() {
+                let _ = t.jobs.send(Job::Stop);
+                let _ = t.join.join();
+            }
+        }
+        self.slots.clear();
+        self.results = None;
+    }
+
+    /// Number of installed executors.
+    pub fn n_workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Visit every worker in slot order. Only call between steps — the
+    /// locks are then uncontended (worker threads are idle at the barrier).
+    pub fn for_each(&self, mut f: impl FnMut(&ExecutorWorker)) {
+        for slot in &self.slots {
+            let guard = lock_ignore_poison(&slot.worker);
+            let worker: &ExecutorWorker = &guard;
+            f(worker);
+        }
+    }
+
+    /// One global mini-batch over all installed workers. Inline pools run
+    /// slot order on the calling thread (the bitwise reference); threaded
+    /// pools dispatch to their long-lived workers — in waves of at most
+    /// `max_threads` when capped — and return results in completion order,
+    /// exactly like the spawning [`run_step`] path.
+    pub fn step(&mut self, inp: &StepInputs<'_>) -> Result<Vec<ExecutorOutput>> {
+        let Some(results) = self.results.as_ref() else {
+            let mut outs = Vec::with_capacity(self.slots.len());
+            for slot in &self.slots {
+                outs.push(lock_ignore_poison(&slot.worker).run_minibatch(inp)?);
+            }
+            return Ok(outs);
+        };
+        let wave = match self.mode {
+            RunMode::Parallel { max_threads } if max_threads > 0 => max_threads,
+            _ => self.slots.len(),
+        };
+        let ptr = inp as *const StepInputs<'_> as *const StepInputs<'static>;
+        let mut outs = Vec::with_capacity(self.slots.len());
+        let mut first_err: Option<anyhow::Error> = None;
+        for chunk in self.slots.chunks(wave.max(1)) {
+            let mut dispatched = 0usize;
+            for slot in chunk {
+                let t = slot.thread.as_ref().expect("threaded pool slot without thread");
+                if t.jobs.send(Job::Step(StepPtr(ptr))).is_ok() {
+                    dispatched += 1;
+                } else if first_err.is_none() {
+                    first_err =
+                        Some(anyhow::anyhow!("executor worker thread exited unexpectedly"));
+                }
+            }
+            // The step barrier: wait for exactly this wave's results before
+            // dispatching the next (preserves `--threads N` wave semantics)
+            // and before returning (the StepPtr safety invariant). On error
+            // the remaining results are still drained — never left behind
+            // to corrupt a later step's barrier.
+            for _ in 0..dispatched {
+                match results.recv() {
+                    Ok(Ok(out)) => outs.push(out),
+                    Ok(Err(e)) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                    Err(_) => {
+                        if first_err.is_none() {
+                            first_err = Some(anyhow::anyhow!(
+                                "executor worker thread exited unexpectedly"
+                            ));
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        match first_err {
+            None => Ok(outs),
+            Some(e) => Err(e),
+        }
+    }
+}
+
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
 #[cfg(all(test, not(feature = "pjrt")))]
 mod tests {
     use super::*;
@@ -231,19 +482,32 @@ mod tests {
             .collect()
     }
 
-    fn staged_bits(outs: &[ExecutorOutput]) -> Vec<(usize, Vec<u32>)> {
-        let mut per_rank: Vec<(usize, Vec<u32>)> = outs
+    fn staged_bits(outs: &[ExecutorOutput]) -> Vec<(usize, u64)> {
+        let mut per_rank: Vec<(usize, u64)> = outs
             .iter()
             .flat_map(|o| o.staged.iter())
-            .map(|s| {
-                (
-                    s.virtual_rank,
-                    s.grads.iter().flat_map(|g| g.iter().map(|v| v.to_bits())).collect(),
-                )
-            })
+            .map(|s| (s.virtual_rank, s.grad_digest()))
             .collect();
         per_rank.sort_by_key(|(r, _)| *r);
         per_rank
+    }
+
+    fn mk_inputs<'a>(
+        engine: &'a Engine,
+        params: &'a ParamBuffers,
+        corpus: &'a SyntheticCorpus,
+        step: u64,
+    ) -> StepInputs<'a> {
+        StepInputs {
+            engine,
+            params,
+            corpus,
+            seed: 42,
+            step,
+            d2: false,
+            key_mode: KeyMode::Virtual,
+            aug_rate: 0.02,
+        }
     }
 
     #[test]
@@ -256,16 +520,7 @@ mod tests {
             engine.manifest.model.seq_len,
         );
         let bufs = engine.upload_params(&params).unwrap();
-        let inp = StepInputs {
-            engine: &engine,
-            params: &bufs,
-            corpus: &corpus,
-            seed: 42,
-            step: 0,
-            d2: false,
-            key_mode: KeyMode::Virtual,
-            aug_rate: 0.02,
-        };
+        let inp = mk_inputs(&engine, &bufs, &corpus, 0);
         let mut seq_workers = mk_workers(&engine, 4, 4);
         let seq = run_step(&mut seq_workers, &inp, RunMode::Sequential).unwrap();
         let mut par_workers = mk_workers(&engine, 4, 4);
@@ -276,6 +531,13 @@ mod tests {
         let wave =
             run_step(&mut wave_workers, &inp, RunMode::Parallel { max_threads: 2 }).unwrap();
         assert_eq!(staged_bits(&seq), staged_bits(&wave));
+        // and so does the persistent pool, capped or not
+        for mode in [RunMode::parallel(), RunMode::Parallel { max_threads: 2 }] {
+            let mut pool = ExecutorPool::new(mode);
+            pool.install(mk_workers(&engine, 4, 4));
+            let pooled = pool.step(&inp).unwrap();
+            assert_eq!(staged_bits(&seq), staged_bits(&pooled), "{mode:?}");
+        }
     }
 
     #[test]
@@ -301,7 +563,7 @@ mod tests {
         let mut workers = mk_workers(&engine, 3, 8);
         // steps 0..3 were never consumed; prefill starts at the step given
         for w in workers.iter_mut() {
-            w.data.prefill(3, &w.spec.est_ranks.clone());
+            w.data.prefill(3, &w.spec.est_ranks);
         }
         let outs = run_step(&mut workers, &inp, RunMode::parallel()).unwrap();
         let mut table = crate::comm::SlotTable::new(8);
@@ -311,5 +573,84 @@ mod tests {
             }
         }
         assert!(table.is_complete());
+    }
+
+    /// The pool-reuse guarantee: 100 consecutive steps through one
+    /// persistent pool (threads, queues and contexts carried across steps)
+    /// are bitwise identical to 100 steps through the spawn-per-step
+    /// driver on an equivalent worker set.
+    #[test]
+    fn persistent_pool_matches_spawn_per_step_over_100_steps() {
+        let engine = Engine::synthetic("tiny").unwrap();
+        let params = engine.manifest.load_init_params().unwrap();
+        let corpus = SyntheticCorpus::new(
+            1,
+            engine.manifest.model.vocab_size,
+            engine.manifest.model.seq_len,
+        );
+        let bufs = engine.upload_params(&params).unwrap();
+        let mut spawn_workers = mk_workers(&engine, 2, 4);
+        let mut pool = ExecutorPool::new(RunMode::parallel());
+        pool.install(mk_workers(&engine, 2, 4));
+        for step in 0..100u64 {
+            let inp = mk_inputs(&engine, &bufs, &corpus, step);
+            let spawned = run_step(&mut spawn_workers, &inp, RunMode::parallel()).unwrap();
+            let pooled = pool.step(&inp).unwrap();
+            assert_eq!(staged_bits(&spawned), staged_bits(&pooled), "step {step} drifted");
+        }
+    }
+
+    /// Reinstalling a pool (the reconfigure path) rebuilds threads and
+    /// workers without disturbing determinism: a 2-executor pool
+    /// reinstalled as a 4-executor pool stages the same bits as a fresh
+    /// 4-executor spawning run at the same step.
+    #[test]
+    fn pool_reinstall_rebuilds_cleanly() {
+        let engine = Engine::synthetic("tiny").unwrap();
+        let params = engine.manifest.load_init_params().unwrap();
+        let corpus = SyntheticCorpus::new(
+            1,
+            engine.manifest.model.vocab_size,
+            engine.manifest.model.seq_len,
+        );
+        let bufs = engine.upload_params(&params).unwrap();
+        let mut pool = ExecutorPool::new(RunMode::parallel());
+        pool.install(mk_workers(&engine, 2, 4));
+        let inp0 = mk_inputs(&engine, &bufs, &corpus, 0);
+        pool.step(&inp0).unwrap();
+        assert_eq!(pool.n_workers(), 2);
+        // context switch: rebuild onto 4 executors, resuming at step 1
+        let mut fresh = mk_workers(&engine, 4, 4);
+        for w in fresh.iter_mut() {
+            for c in w.contexts.iter_mut() {
+                c.step = 1;
+            }
+            w.data.prefill(1, &w.spec.est_ranks);
+        }
+        pool.install(fresh);
+        assert_eq!(pool.n_workers(), 4);
+        let inp1 = mk_inputs(&engine, &bufs, &corpus, 1);
+        let pooled = pool.step(&inp1).unwrap();
+        let mut reference = mk_workers(&engine, 4, 4);
+        for w in reference.iter_mut() {
+            for c in w.contexts.iter_mut() {
+                c.step = 1;
+            }
+            w.data.prefill(1, &w.spec.est_ranks);
+        }
+        let spawned = run_step(&mut reference, &inp1, RunMode::parallel()).unwrap();
+        assert_eq!(staged_bits(&spawned), staged_bits(&pooled));
+    }
+
+    /// Between steps the trainer reads worker state back (context sync,
+    /// checkpointing); `for_each` must expose every worker in slot order.
+    #[test]
+    fn for_each_visits_workers_in_slot_order() {
+        let engine = Engine::synthetic("tiny").unwrap();
+        let mut pool = ExecutorPool::new(RunMode::parallel());
+        pool.install(mk_workers(&engine, 3, 6));
+        let mut slots = Vec::new();
+        pool.for_each(|w| slots.push(w.slot));
+        assert_eq!(slots, vec![0, 1, 2]);
     }
 }

@@ -81,6 +81,14 @@ pub struct ClusterScheduler {
     pub migrate_threshold: f64,
     /// top-K proposals evaluated per job per grow round
     pub proposals_per_round: usize,
+    /// Accuracy-strict placement policy (opt-in): a job planned *without*
+    /// D2 is pinned to the device type of its first grant — growth and
+    /// migration never cross types, because a vendor-kernel switch is
+    /// exactly the paper's heterogeneity failure mode. **Off by default**:
+    /// the permissive policy (type switches are throughput-legal,
+    /// accuracy-inconsistent) is what the `EasyScale_homo` simulator
+    /// baseline measures, and it must stay unchanged.
+    pub pin_type: bool,
 }
 
 impl ClusterScheduler {
@@ -91,7 +99,44 @@ impl ClusterScheduler {
             jobs: Vec::new(),
             migrate_threshold: 1.2,
             proposals_per_round: 3,
+            pin_type: false,
         }
+    }
+
+    /// The device type a job is pinned to under [`ClusterScheduler::pin_type`]:
+    /// the single type a non-D2 job currently holds. D2 jobs (bitwise-safe
+    /// across types), queued jobs (nothing held yet — the first seed picks
+    /// the type) and mixed holdings are unpinned.
+    fn pinned_type(&self, id: usize) -> Option<usize> {
+        if !self.pin_type || self.jobs[id].master.job.d2 {
+            return None;
+        }
+        let held = self.jobs[id].master.held;
+        let mut single = None;
+        for (ty, &n) in held.iter().enumerate() {
+            if n > 0 {
+                if single.is_some() {
+                    return None; // mixed allocation: no meaningful pin
+                }
+                single = Some(ty);
+            }
+        }
+        single
+    }
+
+    /// Zero out every type except a job's pinned one (identity when
+    /// unpinned) — applied to the GPU pools the grow and migration passes
+    /// see, so a pinned job can neither be granted nor migrated onto
+    /// another device type.
+    fn restrict_to_pin(&self, id: usize, mut pool: GpuVector) -> GpuVector {
+        if let Some(pin) = self.pinned_type(id) {
+            for (ty, n) in pool.iter_mut().enumerate() {
+                if ty != pin {
+                    *n = 0;
+                }
+            }
+        }
+        pool
     }
 
     pub fn total_available(&self) -> usize {
@@ -308,11 +353,13 @@ impl ClusterScheduler {
                 }
             }
             // grow this job until its proposals dry up or the pool is
-            // exhausted (Algorithm 1 over its own top-K proposals)
+            // exhausted (Algorithm 1 over its own top-K proposals); a
+            // pinned job only sees free GPUs of its own type
             loop {
+                let visible = self.restrict_to_pin(id, self.available);
                 let proposals = self.jobs[id]
                     .master
-                    .proposals(self.available, self.proposals_per_round);
+                    .proposals(visible, self.proposals_per_round);
                 let approved = self.schedule(proposals);
                 if approved.is_empty() {
                     break;
@@ -335,6 +382,8 @@ impl ClusterScheduler {
             for i in 0..3 {
                 pool[i] += held[i];
             }
+            // a pinned job never trades its allocation for another type
+            let pool = self.restrict_to_pin(id, pool);
             if let Some((cand, rate)) =
                 best_replacement(&spec, pool, self.jobs[id].master.homogeneous_only)
             {
@@ -566,6 +615,75 @@ mod tests {
         );
         // the finished job never reappears
         assert_eq!(cs.held(0), [0, 0, 0]);
+    }
+
+    /// Two Bert jobs (maxP 2, no D2) on [2 V100, 2 P100]: the first takes
+    /// the V100s, the second lands on the P100s; when the first finishes,
+    /// the freed V100s tempt the survivor (9.8 vs 5.6 steps/s per EST —
+    /// well past the 1.2x migration threshold). Default policy migrates
+    /// across types (the accuracy-inconsistent vendor-kernel switch);
+    /// `pin_type` keeps the job on the type it started on.
+    fn pin_case(pin: bool) -> (ClusterScheduler, usize) {
+        let mut cs = ClusterScheduler::new([2, 2, 0]);
+        cs.pin_type = pin;
+        let hog = cs.add_job(JobSpec::new(Workload::Bert, 2));
+        let job = cs.add_job(JobSpec::new(Workload::Bert, 2));
+        cs.arrive(hog, 0.0);
+        cs.replan();
+        assert_eq!(cs.held(hog), [2, 0, 0], "first job should take both V100s");
+        cs.arrive(job, 1.0);
+        cs.replan();
+        assert_eq!(cs.held(job), [0, 2, 0], "second job should land on the P100s");
+        cs.finish(hog);
+        cs.replan();
+        (cs, job)
+    }
+
+    #[test]
+    fn default_policy_migrates_non_d2_jobs_across_types() {
+        let (cs, job) = pin_case(false);
+        assert_eq!(
+            cs.held(job),
+            [2, 0, 0],
+            "permissive policy should migrate onto the freed (faster) V100s"
+        );
+    }
+
+    #[test]
+    fn pin_type_blocks_cross_type_migration_and_growth_for_non_d2_jobs() {
+        let (cs, job) = pin_case(true);
+        assert_eq!(
+            cs.held(job),
+            [0, 2, 0],
+            "pinned non-D2 job must stay on the type it was seeded on"
+        );
+        // the freed V100s remain unclaimed rather than cross the pin
+        assert_eq!(cs.available[0], 2);
+    }
+
+    #[test]
+    fn pin_type_leaves_d2_jobs_free_to_migrate() {
+        let mut cs = ClusterScheduler::new([2, 2, 0]);
+        cs.pin_type = true;
+        let mut spec_hog = JobSpec::new(Workload::Bert, 2);
+        spec_hog.d2 = true;
+        let mut spec_job = JobSpec::new(Workload::Bert, 2);
+        spec_job.d2 = true;
+        let hog = cs.add_job(spec_hog);
+        let job = cs.add_job(spec_job);
+        cs.arrive(hog, 0.0);
+        cs.replan();
+        cs.arrive(job, 1.0);
+        cs.replan();
+        assert_eq!(cs.held(job), [0, 2, 0]);
+        cs.finish(hog);
+        cs.replan();
+        // D2 is bitwise-safe across types: the pin does not apply
+        assert!(
+            cs.held(job)[0] > 0,
+            "D2 job should absorb the freed V100s, held {:?}",
+            cs.held(job)
+        );
     }
 
     #[test]

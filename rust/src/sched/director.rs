@@ -22,10 +22,9 @@
 //! * [`ScriptedDirector`] — an explicit `(step, event)` script, for tests
 //!   and fault-injection scenarios.
 
-use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::{ensure, Context, Result};
 
@@ -73,7 +72,14 @@ pub struct StepObservation<'a> {
 
 /// The intra-job control plane: consulted between every two mini-batches,
 /// returns the events to apply before the next one runs.
-pub trait ResourceDirector {
+///
+/// `Send` is a supertrait: an [`crate::train::ElasticSession`] owns its
+/// director and the multi-job cluster runtime steps sessions on their own
+/// threads between scheduling barriers (`--job-threads`), so every
+/// director must be movable across threads. All shipped directors are
+/// plain owned data (the cluster [`Mailbox`] is an `Arc<Mutex<_>>`
+/// precisely so its director qualifies).
+pub trait ResourceDirector: Send {
     fn name(&self) -> &'static str;
 
     /// Decide what happens before step `obs.step` runs. Events apply in
@@ -471,9 +477,14 @@ impl ResourceDirector for ScriptedDirector {
 /// [`crate::sched::ClusterScheduler`], and each affected job is mailed the
 /// resulting events; its session applies them before the next mini-batch
 /// through the ordinary director contract.
+///
+/// Thread-safe (`Arc<Mutex<_>>`): the cluster driver pushes from its
+/// scheduling thread while the owning session drains on its own job
+/// thread. The lock is held only for a push or a drain, never across a
+/// mini-batch.
 #[derive(Clone, Default)]
 pub struct Mailbox {
-    queue: Rc<RefCell<VecDeque<ElasticEvent>>>,
+    queue: Arc<Mutex<VecDeque<ElasticEvent>>>,
 }
 
 impl Mailbox {
@@ -481,16 +492,22 @@ impl Mailbox {
         Mailbox::default()
     }
 
+    fn lock(&self) -> MutexGuard<'_, VecDeque<ElasticEvent>> {
+        // a poisoned queue (panicking pusher) still holds well-formed
+        // events; delivery must not die with the panicker
+        self.queue.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     pub fn push(&self, ev: ElasticEvent) {
-        self.queue.borrow_mut().push_back(ev);
+        self.lock().push_back(ev);
     }
 
     pub fn len(&self) -> usize {
-        self.queue.borrow().len()
+        self.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.borrow().is_empty()
+        self.lock().is_empty()
     }
 }
 
@@ -512,7 +529,7 @@ impl ResourceDirector for MailboxDirector {
     }
 
     fn direct(&mut self, _obs: &StepObservation<'_>) -> Vec<ElasticEvent> {
-        let mut out: Vec<ElasticEvent> = self.mailbox.queue.borrow_mut().drain(..).collect();
+        let mut out: Vec<ElasticEvent> = self.mailbox.lock().drain(..).collect();
         if out.is_empty() {
             out.push(ElasticEvent::Continue);
         }
@@ -674,6 +691,33 @@ mod tests {
         );
         assert!(mailbox.is_empty(), "direct must drain the queue");
         assert_eq!(d.direct(&obs(2, 0.1, &home)), vec![ElasticEvent::Continue]);
+    }
+
+    #[test]
+    fn mailbox_and_directors_cross_threads() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        fn assert_send<T: Send>() {}
+        assert_send_sync::<Mailbox>();
+        // Send is a supertrait of ResourceDirector, so boxed directors move
+        // onto cluster job threads
+        assert_send::<Box<dyn ResourceDirector>>();
+
+        // events pushed from another thread arrive in pushed order
+        let mailbox = Mailbox::new();
+        let remote = mailbox.clone();
+        std::thread::spawn(move || {
+            remote.push(ElasticEvent::Eval);
+            remote.push(ElasticEvent::Stop);
+        })
+        .join()
+        .unwrap();
+        let mut d = MailboxDirector::new(mailbox.clone());
+        let home = Placement::homogeneous(V, 2, 4);
+        assert_eq!(
+            d.direct(&obs(0, 0.0, &home)),
+            vec![ElasticEvent::Eval, ElasticEvent::Stop]
+        );
+        assert!(mailbox.is_empty());
     }
 
     #[test]

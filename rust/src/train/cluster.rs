@@ -3,9 +3,12 @@
 //! end, on real trainers instead of the analytic trace simulator).
 //!
 //! A [`ClusterRuntime`] owns one [`ElasticSession`] per submitted job plus
-//! the shared [`ClusterScheduler`]. Jobs step round-robin on the driver
-//! thread — each job's executors still run thread-per-executor through
-//! [`crate::exec::pool`] — and every `decide_every` rounds the runtime:
+//! the shared [`ClusterScheduler`]. Jobs step either round-robin on the
+//! driver thread (the default, `--job-threads 1`) or **concurrently, one
+//! OS thread per job between scheduling barriers** (`--job-threads N`,
+//! native backend) — each job's executors additionally run on their own
+//! persistent [`crate::exec::ExecutorPool`] threads — and every
+//! `decide_every` rounds the runtime:
 //!
 //! 1. feeds each running job's observed step rate into its AIMaster
 //!    ([`crate::sched::AiMaster::observe`], the Fig. 9 loop),
@@ -114,18 +117,38 @@ pub struct ClusterRuntime<'e> {
     scheduler: ClusterScheduler,
     slots: Vec<Slot<'e>>,
     decide_every: u64,
+    /// Concurrent job threads between scheduling barriers: 1 = the
+    /// round-robin driver, 0 = one thread per job, N = at most N at once.
+    job_threads: usize,
 }
 
 impl<'e> ClusterRuntime<'e> {
     /// A runtime over `engine` arbitrating `fleet` GPUs, replanning every
-    /// `decide_every` global rounds (min 1).
+    /// `decide_every` global rounds (min 1). Jobs step round-robin on the
+    /// driver thread unless [`ClusterRuntime::with_job_threads`] says
+    /// otherwise.
     pub fn new(engine: &'e Engine, fleet: GpuVector, decide_every: u64) -> ClusterRuntime<'e> {
         ClusterRuntime {
             engine,
             scheduler: ClusterScheduler::new(fleet),
             slots: Vec::new(),
             decide_every: decide_every.max(1),
+            job_threads: 1,
         }
+    }
+
+    /// Step jobs **concurrently** between scheduling barriers: each placed
+    /// job runs `decide_every` rounds on its own OS thread, then the
+    /// driver synchronizes once — observes rates, replans, mails
+    /// `Reconfigure` events — and releases the next epoch. A slow job no
+    /// longer throttles the other jobs' step clocks (only the decision
+    /// cadence waits for stragglers). `n` caps the concurrent job threads
+    /// (0 = one per job); `1` keeps the single-threaded round-robin
+    /// driver. Requires the native backend — under `pjrt` (whose engine is
+    /// not `Sync`) the round-robin driver always runs.
+    pub fn with_job_threads(mut self, n: usize) -> Self {
+        self.job_threads = n;
+        self
     }
 
     /// Submit a job; jobs queue FIFO in submission order. A D2 job on a
@@ -169,18 +192,33 @@ impl<'e> ClusterRuntime<'e> {
             self.scheduler.fleet().iter().sum::<usize>() > 0,
             "cluster fleet holds zero GPUs"
         );
-        let t0 = Instant::now();
         for id in 0..self.slots.len() {
             self.scheduler.arrive(id, id as f64); // FIFO by submission order
         }
+        if self.job_threads != 1 {
+            self.run_concurrent()
+        } else {
+            self.run_round_robin()
+        }
+    }
+
+    /// The single-threaded driver: every round steps each placed job once,
+    /// in submission order.
+    fn run_round_robin(&mut self) -> Result<ClusterReport> {
+        let t0 = Instant::now();
         let mut decisions = 0u64;
         let mut reconfigs = 0u64;
         let mut round = 0u64;
         let mut need_decide = false;
         loop {
+            // at most one replanning round per step round: the boundary
+            // cadence and the post-finish fallback used to be able to both
+            // fire in the same round, double-counting `decisions`
+            let mut decided_this_round = false;
             if round % self.decide_every == 0 || need_decide {
                 reconfigs += self.decide(round, &mut decisions)?;
                 need_decide = false;
+                decided_this_round = true;
             }
             let mut progressed = false;
             for id in 0..self.slots.len() {
@@ -191,19 +229,7 @@ impl<'e> ClusterRuntime<'e> {
                 match step {
                     Some(_) => progressed = true,
                     None => {
-                        // budget reached: report, tear down, free the GPUs
-                        self.slots[id].final_gpus = self.scheduler.held(id);
-                        let session = self.slots[id].session.take().unwrap();
-                        let wall = self.slots[id]
-                            .started
-                            .map(|t| t.elapsed().as_secs_f64())
-                            .unwrap_or(0.0);
-                        self.slots[id].report = Some(session.report(wall));
-                        let released = self.scheduler.finish(id);
-                        crate::info!(
-                            "cluster",
-                            "job {id} finished, released {released:?} GPUs"
-                        );
+                        self.retire(id);
                         need_decide = true; // redistribute immediately
                     }
                 }
@@ -212,9 +238,12 @@ impl<'e> ClusterRuntime<'e> {
                 break;
             }
             if !progressed && !need_decide {
-                // nobody holds GPUs: force a replanning round; if that
-                // cannot seed anyone either, the fleet is unusable
-                reconfigs += self.decide(round, &mut decisions)?;
+                // nobody holds GPUs: force a replanning round (unless this
+                // round already replanned); if that cannot seed anyone
+                // either, the fleet is unusable
+                if !decided_this_round {
+                    reconfigs += self.decide(round, &mut decisions)?;
+                }
                 ensure!(
                     self.slots.iter().any(|s| s.session.is_some()),
                     "cluster stalled: no job can be placed on the fleet"
@@ -222,7 +251,114 @@ impl<'e> ClusterRuntime<'e> {
             }
             round += 1;
         }
-        let wall_s = t0.elapsed().as_secs_f64();
+        self.final_report(t0.elapsed().as_secs_f64(), decisions, reconfigs)
+    }
+
+    /// The concurrent driver: between two scheduling barriers every placed
+    /// job steps up to `decide_every` rounds **on its own thread** (in
+    /// waves of at most `job_threads` when capped), so one slow job delays
+    /// only the next decision, not every other job's mini-batches. Under
+    /// D1(+D2) the fingerprints are bitwise identical to the round-robin
+    /// driver — placement and scheduling timing never reach the bits
+    /// (`tests/cluster.rs`).
+    #[cfg(not(feature = "pjrt"))]
+    fn run_concurrent(&mut self) -> Result<ClusterReport> {
+        let t0 = Instant::now();
+        let rounds = self.decide_every;
+        let wave = if self.job_threads == 0 { self.slots.len() } else { self.job_threads };
+        let mut decisions = 0u64;
+        let mut reconfigs = 0u64;
+        let mut epoch = 0u64;
+        loop {
+            // the scheduling barrier: observe rates, replan, mail events
+            reconfigs += self.decide(epoch * rounds, &mut decisions)?;
+            ensure!(
+                self.slots.iter().any(|s| s.session.is_some()),
+                "cluster stalled: no job can be placed on the fleet"
+            );
+            let mut finished: Vec<usize> = Vec::new();
+            {
+                let mut running: Vec<(usize, &mut ElasticSession<'e>)> = self
+                    .slots
+                    .iter_mut()
+                    .enumerate()
+                    .filter_map(|(id, s)| s.session.as_mut().map(|sess| (id, sess)))
+                    .collect();
+                for chunk in running.chunks_mut(wave.max(1)) {
+                    let results: Vec<(usize, Result<bool>)> = std::thread::scope(|scope| {
+                        let handles: Vec<_> = chunk
+                            .iter_mut()
+                            .map(|item| {
+                                let id = item.0;
+                                let session = &mut *item.1;
+                                let handle = scope.spawn(move || -> Result<bool> {
+                                    for _ in 0..rounds {
+                                        if session.step_once()?.is_none() {
+                                            return Ok(true); // budget reached
+                                        }
+                                    }
+                                    Ok(false)
+                                });
+                                (id, handle)
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .map(|(id, h)| {
+                                let res = h.join().unwrap_or_else(|_| {
+                                    Err(anyhow::anyhow!("job {id} thread panicked"))
+                                });
+                                (id, res)
+                            })
+                            .collect()
+                    });
+                    for (id, res) in results {
+                        if res? {
+                            finished.push(id);
+                        }
+                    }
+                }
+            }
+            for id in finished {
+                self.retire(id);
+            }
+            if self.slots.iter().all(|s| s.report.is_some()) {
+                break;
+            }
+            epoch += 1;
+        }
+        self.final_report(t0.elapsed().as_secs_f64(), decisions, reconfigs)
+    }
+
+    /// `--job-threads` needs `ElasticSession: Send`, which the PJRT engine
+    /// (not `Sync`) cannot provide; `run` never dispatches here under that
+    /// feature, but the method must exist for the call to type-check.
+    #[cfg(feature = "pjrt")]
+    fn run_concurrent(&mut self) -> Result<ClusterReport> {
+        crate::warnlog!(
+            "cluster",
+            "--job-threads requires the native backend; using the round-robin driver"
+        );
+        self.run_round_robin()
+    }
+
+    /// A job hit its step budget: take its report, tear the session down,
+    /// return its GPUs to the pool.
+    fn retire(&mut self, id: usize) {
+        self.slots[id].final_gpus = self.scheduler.held(id);
+        let session = self.slots[id].session.take().unwrap();
+        let wall = self.slots[id].started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        self.slots[id].report = Some(session.report(wall));
+        let released = self.scheduler.finish(id);
+        crate::info!("cluster", "job {id} finished, released {released:?} GPUs");
+    }
+
+    fn final_report(
+        &mut self,
+        wall_s: f64,
+        decisions: u64,
+        reconfigs: u64,
+    ) -> Result<ClusterReport> {
         let mut jobs = Vec::with_capacity(self.slots.len());
         for (id, slot) in self.slots.iter_mut().enumerate() {
             let report = slot.report.take().with_context(|| format!("job {id} has no report"))?;

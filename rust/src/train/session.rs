@@ -183,6 +183,14 @@ impl<'e> SessionBuilder<'e> {
 }
 
 /// A running elastic job: trainer + director + metrics under one driver.
+///
+/// `Send` contract: the multi-job cluster runtime steps sessions on their
+/// own OS threads between scheduling barriers (`--job-threads`), so the
+/// whole session — trainer (with its executor pool), director
+/// (`ResourceDirector: Send`), metric sink — must move across threads,
+/// and the shared `&Engine` must be `Sync`. The native engine is; PJRT is
+/// not, which is why the concurrent cluster driver (like the executor
+/// pool's threads) is native-only.
 pub struct ElasticSession<'e> {
     engine: &'e Engine,
     pub trainer: Trainer,
@@ -357,4 +365,13 @@ impl<'e> ElasticSession<'e> {
     pub fn into_trainer(self) -> Trainer {
         self.trainer
     }
+}
+
+// Compile-time pin of the `Send` contract above: if any session component
+// stops being `Send`, concurrent job stepping breaks here, not at a
+// distant spawn site. Native-only — the PJRT engine is not `Sync`.
+#[cfg(not(feature = "pjrt"))]
+#[allow(dead_code)]
+fn _assert_session_is_send(s: ElasticSession<'_>) -> impl Send + '_ {
+    s
 }

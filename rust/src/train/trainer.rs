@@ -10,23 +10,29 @@
 //! restore. With D1 the model bits never notice; with lower levels the
 //! paper's failure modes reproduce mechanically (see `determinism.rs`).
 //!
-//! Threading: executors run **concurrently, one OS thread each**
-//! (`exec::pool`), exactly like the paper's per-GPU executor processes.
-//! Staged gradients arrive in thread-completion order and are re-indexed
-//! into a virtual-rank slot table before aggregation, so under D1 the
-//! parallel runtime is bitwise identical to `RunMode::Sequential` — tested
-//! in `tests/consistency.rs`. Per-step wall-clock is therefore the *max*
-//! over concurrent executors (`last_step_wall_s`), not the sum
-//! (`last_step_serial_s`); the planner's Eq. 1b models the same quantity.
+//! Threading: executors run **concurrently, one OS thread each**, on the
+//! persistent [`ExecutorPool`] — long-lived worker threads, exactly like
+//! the paper's per-GPU executor processes, rebuilt only on elastic
+//! reconfiguration (never per step). Staged gradients arrive in
+//! thread-completion order and are re-indexed into a virtual-rank slot
+//! table before aggregation, so under D1 the parallel runtime is bitwise
+//! identical to `RunMode::Sequential` — tested in `tests/consistency.rs`.
+//! Per-step wall-clock is therefore the *max* over concurrent executors
+//! (`last_step_wall_s`), not the sum (`last_step_serial_s`); the planner's
+//! Eq. 1b models the same quantity. Aggregation runs through a reusable
+//! [`ReduceScratch`], so the steady-state hot path neither spawns threads
+//! nor grows buffers.
 
 use anyhow::Result;
 
-use crate::comm::{aggregate_physical, aggregate_virtual, BucketPlan, SlotTable};
+use crate::comm::{
+    aggregate_physical_into, aggregate_virtual_into, BucketPlan, ReduceScratch, SlotTable,
+};
 use crate::data::loader::WorkItem;
 use crate::data::{DeterministicSampler, SharedDataWorkers, SyntheticCorpus};
-use crate::est::EstContext;
+use crate::est::{EstContext, StagedGrads};
 use crate::exec::executor::{ExecTiming, KeyMode, Placement};
-use crate::exec::pool::{self, ExecutorWorker, RunMode, StepInputs};
+use crate::exec::pool::{ExecutorPool, ExecutorWorker, RunMode, StepInputs};
 use crate::runtime::Engine;
 use crate::train::determinism::Determinism;
 
@@ -94,12 +100,22 @@ pub struct Trainer {
     pub placement: Placement,
     pub state: TrainState,
     pub corpus: SyntheticCorpus,
-    /// One Send-able worker per executor; owns the executor's EST contexts
-    /// and data queues. Rebuilt on (re)placement; contexts sync back into
-    /// `state` after every step.
-    workers: Vec<ExecutorWorker>,
+    /// The persistent executor runtime: one Send-able worker per executor
+    /// (owning its EST contexts and data queues) on a long-lived thread.
+    /// Workers and threads are rebuilt on (re)placement only; contexts
+    /// sync back into `state` after every step.
+    pool: ExecutorPool,
     /// microbatch size per EST, from the engine manifest
     batch_per_est: usize,
+    /// parameter tensor sizes, manifest order (cached: per-step constant)
+    param_sizes: Vec<usize>,
+    /// reusable aggregation workspace (flatten/tree/ring buffers)
+    scratch: ReduceScratch,
+    /// reused per-parameter aggregated-gradient output buffers
+    grad_bufs: Vec<Vec<f32>>,
+    /// reused virtual-rank table + ranked staging buffer
+    slot_table: SlotTable,
+    ranked: Vec<StagedGrads>,
     /// mean training loss per completed step
     pub loss_history: Vec<f32>,
     /// timing of the last mini-batch per executor slot (for benches)
@@ -139,6 +155,7 @@ impl Trainer {
         let bucket_plan = BucketPlan::build(&sizes, cfg.bucket_cap_bytes);
         let m = &engine.manifest.model;
         let corpus = SyntheticCorpus::new(seed ^ 0xC0, m.vocab_size, m.seq_len);
+        let run_mode = cfg.run_mode;
         Ok(Trainer {
             cfg,
             placement,
@@ -152,8 +169,13 @@ impl Trainer {
                 data_items: Vec::new(),
             },
             corpus,
-            workers: Vec::new(),
+            pool: ExecutorPool::new(run_mode),
             batch_per_est: m.batch_per_est,
+            param_sizes: sizes,
+            scratch: ReduceScratch::new(),
+            grad_bufs: Vec::new(),
+            slot_table: SlotTable::new(0),
+            ranked: Vec::new(),
             loss_history: Vec::new(),
             last_timing: Vec::new(),
             last_step_wall_s: 0.0,
@@ -166,7 +188,9 @@ impl Trainer {
     }
 
     /// (Re)build the per-executor workers from the current placement and
-    /// checkpointable state. `data_seed`/`init` carry the determinism-level
+    /// checkpointable state, installing them into the persistent pool —
+    /// the paper's context switch: the only place executor threads are
+    /// (re)spawned. `data_seed`/`init` carry the determinism-level
     /// semantics of the data-worker queues across restarts.
     fn rebuild_workers(&mut self, data_seed: u64, init: DataInit) {
         let seed = self.cfg.effective_seed();
@@ -202,21 +226,26 @@ impl Trainer {
                 data,
             });
         }
-        self.workers = workers;
+        self.pool.install(workers);
+        // pre-size the aggregation scratch so even the first step on the
+        // new placement grows nothing in the hot loop
+        self.scratch.reserve_for(&self.state.bucket_plan, &self.param_sizes, self.cfg.max_p);
     }
 
     /// All workers' pending data-worker items, in deterministic
     /// (step, rank) production order — the checkpoint "extra state".
     fn checkpoint_data_items(&self) -> Vec<WorkItem> {
-        let mut out: Vec<WorkItem> =
-            self.workers.iter().flat_map(|w| w.data.checkpoint_states()).collect();
+        let mut out: Vec<WorkItem> = Vec::new();
+        self.pool.for_each(|w| out.extend(w.data.checkpoint_states()));
         out.sort_by_key(|w| (w.step, w.rank));
         out
     }
 
     /// One global mini-batch across all executors and ESTs: submit the
-    /// step to the executor pool, collect staged gradients in completion
-    /// order, re-index by virtual rank, aggregate, apply the fused update.
+    /// step to the persistent executor pool, collect staged gradients in
+    /// completion order, re-index by virtual rank, aggregate through the
+    /// reusable scratch, apply the fused update. Steady state, this path
+    /// spawns no threads and grows no buffers.
     pub fn step(&mut self, engine: &Engine) -> Result<f32> {
         let step = self.state.step;
         let seed = self.cfg.effective_seed();
@@ -234,58 +263,71 @@ impl Trainer {
             key_mode: self.key_mode(),
             aug_rate: self.cfg.aug_rate,
         };
-        let outs = pool::run_step(&mut self.workers, &inp, self.cfg.run_mode)?;
+        let outs = self.pool.step(&inp)?;
 
         let n_exec = self.placement.executors.len();
-        self.last_timing = vec![ExecTiming::default(); n_exec];
+        self.last_timing.clear();
+        self.last_timing.resize_with(n_exec, ExecTiming::default);
         self.last_step_wall_s = 0.0;
         self.last_step_serial_s = 0.0;
-        let mut table = SlotTable::new(self.cfg.max_p);
+        self.slot_table.reset(self.cfg.max_p);
         for out in outs {
             self.last_step_serial_s += out.wall_s;
             self.last_step_wall_s = self.last_step_wall_s.max(out.wall_s);
             self.last_timing[out.slot] = out.timing;
             for sg in out.staged {
-                table.insert(sg)?;
+                self.slot_table.insert(sg)?;
             }
         }
         // virtual-rank order from here on: thread completion order is gone
-        let staged = table.into_ranked()?;
+        self.slot_table.take_ranked(&mut self.ranked)?;
         anyhow::ensure!(
-            !staged.is_empty(),
+            !self.ranked.is_empty(),
             "step {step}: placement hosts no ESTs — nothing to aggregate (empty placement?)"
         );
 
-        let sizes: Vec<usize> =
-            engine.manifest.params.iter().map(|p| p.size).collect();
         // EasyScale (D0/D1): ring over maxP virtual ranks, placement-free.
         // none: physical topology — what naive elastic frameworks do.
-        let grads = if self.cfg.determinism.d0 {
-            aggregate_virtual(&self.state.bucket_plan, &staged, &sizes, self.cfg.max_p)
-        } else {
-            aggregate_physical(
+        if self.cfg.determinism.d0 {
+            aggregate_virtual_into(
                 &self.state.bucket_plan,
-                &staged,
-                &sizes,
+                &self.ranked,
+                &self.param_sizes,
+                self.cfg.max_p,
+                &mut self.scratch,
+                &mut self.grad_bufs,
+            );
+        } else {
+            aggregate_physical_into(
+                &self.state.bucket_plan,
+                &self.ranked,
+                &self.param_sizes,
                 &self.placement.groups(),
-            )
-        };
+                &mut self.scratch,
+                &mut self.grad_bufs,
+            );
+        }
 
-        let (params, momenta) =
-            engine.opt_update(&self.state.params, &self.state.momenta, &grads, self.cfg.lr)?;
+        let (params, momenta) = engine.opt_update(
+            &self.state.params,
+            &self.state.momenta,
+            &self.grad_bufs,
+            self.cfg.lr,
+        )?;
         self.state.params = params;
         self.state.momenta = momenta;
         self.state.step += 1;
 
         // sync EST contexts back into the checkpointable state
-        for w in &self.workers {
+        let est_contexts = &mut self.state.est_contexts;
+        self.pool.for_each(|w| {
             for c in &w.contexts {
-                self.state.est_contexts[c.virtual_rank] = c.clone();
+                est_contexts[c.virtual_rank] = c.clone();
             }
-        }
+        });
 
         // deterministic loss reduction: by virtual rank order
-        let loss = staged.iter().map(|s| s.loss).sum::<f32>() / staged.len() as f32;
+        let loss = self.ranked.iter().map(|s| s.loss).sum::<f32>() / self.ranked.len() as f32;
         self.loss_history.push(loss);
         Ok(loss)
     }
@@ -389,7 +431,7 @@ impl Trainer {
 
     /// Number of executors (simulated GPUs) currently placed.
     pub fn n_executors(&self) -> usize {
-        self.workers.len()
+        self.pool.n_workers()
     }
 
     /// Bitwise fingerprint of the model parameters (the paper's

@@ -128,6 +128,54 @@ fn oversubscribed_fleet_finishes_every_job() {
     }
 }
 
+/// Concurrent job stepping (`--job-threads N`) must be bitwise invisible:
+/// a 4-job heterogeneous D1+D2 run produces per-job fingerprints identical
+/// to the single-threaded round-robin driver *and* to each job's
+/// fixed-placement sequential reference — scheduling-epoch timing and job
+/// thread interleaving never reach the bits. Native-only: under `pjrt`
+/// sessions are not `Send` and the round-robin driver always runs.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn concurrent_job_stepping_matches_round_robin_and_references_bitwise() {
+    let Some(engine) = tiny() else { return };
+    let det = Determinism::D1_D2;
+    let workloads =
+        [Workload::Bert, Workload::Electra, Workload::NeuMf, Workload::SwinTransformer];
+    // staggered budgets: early finishers free GPUs mid-run in both drivers
+    let budgets = [5u64, 7, 9, 11];
+    let run = |job_threads: usize| {
+        let mut rt =
+            ClusterRuntime::new(&engine, [2, 1, 1], 2).with_job_threads(job_threads);
+        for (i, w) in workloads.iter().enumerate() {
+            rt.submit(job(*w, 42 + i as u64, det, budgets[i]));
+        }
+        let report = rt.run().unwrap();
+        report
+            .jobs
+            .iter()
+            .map(|j| {
+                assert_eq!(j.report.steps_run, budgets[j.job_id], "job {} starved", j.job_id);
+                j.report.fingerprint
+            })
+            .collect::<Vec<u64>>()
+    };
+    let round_robin = run(1);
+    for job_threads in [4usize, 0, 2] {
+        let concurrent = run(job_threads);
+        assert_eq!(
+            concurrent, round_robin,
+            "--job-threads {job_threads} drifted from the round-robin driver"
+        );
+    }
+    for (i, fp) in round_robin.iter().enumerate() {
+        assert_eq!(
+            *fp,
+            reference_fingerprint(&engine, 42 + i as u64, det, budgets[i]),
+            "job {i} drifted from its sequential fixed-placement reference"
+        );
+    }
+}
+
 /// An empty fleet cannot place anyone: the runtime errors instead of
 /// spinning forever.
 #[test]
