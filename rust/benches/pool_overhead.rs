@@ -1,5 +1,6 @@
 //! Pool-overhead bench: per-step thread spawning vs the persistent
-//! executor pool, at 1/2/4/8 executors (maxP = 8).
+//! executor pool, at 1/2/4/8 executors (maxP = 8) — plus a steady-state
+//! **allocations-per-step** column for the pool path.
 //!
 //! The spawn-per-step baseline is the pre-pool hot path — one scoped OS
 //! thread per executor plus a fresh mpsc channel **every mini-batch**
@@ -8,6 +9,13 @@
 //! step barrier; this bench measures exactly the overhead that removes.
 //! Executor-phase only (no aggregation/optimizer), so the spawn cost is
 //! not diluted by unrelated work.
+//!
+//! Allocation accounting: a counting global allocator tallies heap
+//! allocations during the pool timing loop (arenas warmed, spoils
+//! recycled exactly like the trainer does). Inline (1-executor) pools hit
+//! zero; threaded pools amortize a tiny channel-block residue. The honest
+//! end-to-end zero-allocation claim for `Trainer::step` is pinned in
+//! `tests/alloc.rs`.
 //!
 //! Before any timing, the harness asserts that the sequential loop, the
 //! spawning driver and the persistent pool stage **bitwise-identical**
@@ -22,10 +30,15 @@ use std::time::Instant;
 use easyscale::data::{DeterministicSampler, SharedDataWorkers, SyntheticCorpus};
 use easyscale::est::EstContext;
 use easyscale::exec::pool::{run_step, ExecutorOutput, ExecutorPool, StepInputs};
-use easyscale::exec::{DeviceType, ExecutorWorker, KeyMode, Placement, RunMode};
+use easyscale::exec::{DeviceType, ExecTiming, ExecutorWorker, KeyMode, Placement, RunMode};
 use easyscale::runtime::Engine;
-use easyscale::util::bench::Table;
+use easyscale::util::bench::{heap_allocs, CountingAlloc, Table};
 use easyscale::util::json::Json;
+
+// Counts every heap allocation (alloc/realloc/alloc_zeroed) so the bench
+// can report steady-state allocations per step.
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 const MAX_P: usize = 8;
 const STEPS: u64 = 20;
@@ -34,16 +47,21 @@ const TRIALS: usize = 3;
 fn mk_workers(engine: &Engine, n_exec: usize) -> Vec<ExecutorWorker> {
     let placement = Placement::homogeneous(DeviceType::V100, n_exec, MAX_P);
     let m = &engine.manifest.model;
+    let sizes: Vec<usize> = engine.manifest.params.iter().map(|p| p.size).collect();
     placement
         .executors
         .iter()
         .enumerate()
-        .map(|(slot, spec)| ExecutorWorker {
-            spec: spec.clone(),
-            slot,
-            contexts: spec.est_ranks.iter().map(|&r| EstContext::new(42, r)).collect(),
-            sampler: DeterministicSampler::new(42, 4096, MAX_P, m.batch_per_est),
-            data: SharedDataWorkers::new(42, &spec.est_ranks, 4, 2),
+        .map(|(slot, spec)| {
+            let mut w = ExecutorWorker::new(
+                spec.clone(),
+                slot,
+                spec.est_ranks.iter().map(|&r| EstContext::new(42, r)).collect(),
+                DeterministicSampler::new(42, 4096, MAX_P, m.batch_per_est),
+                SharedDataWorkers::new(42, &spec.est_ranks, 4, 2),
+            );
+            w.warm_arena(&sizes);
+            w
         })
         .collect()
 }
@@ -77,6 +95,24 @@ fn digest(outs: &[ExecutorOutput]) -> Vec<(usize, u64)> {
     d
 }
 
+/// Hand a step's outputs back to the spoils pools, exactly like the
+/// trainer's recycle path.
+fn recycle(
+    outs: &mut Vec<ExecutorOutput>,
+    grads: &mut Vec<Vec<Vec<f32>>>,
+    timings: &mut Vec<ExecTiming>,
+    staged: &mut Vec<Vec<easyscale::est::StagedGrads>>,
+) {
+    for out in outs.iter_mut() {
+        for sg in out.staged.drain(..) {
+            grads.push(sg.grads);
+        }
+        staged.push(std::mem::take(&mut out.staged));
+        timings.push(std::mem::take(&mut out.timing));
+    }
+    outs.clear();
+}
+
 fn main() {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let engine = match Engine::open(&root, "tiny") {
@@ -103,6 +139,7 @@ fn main() {
         "spawn-per-step steps/s",
         "persistent pool steps/s",
         "speedup",
+        "pool allocs/step",
         "bitwise",
     ]);
     let mut rows = Vec::new();
@@ -120,9 +157,12 @@ fn main() {
         assert_eq!(reference, digest(&spawned), "spawn driver drifted at {n_exec} executors");
         assert_eq!(reference, digest(&pooled), "persistent pool drifted at {n_exec} executors");
 
-        // (2) time both drivers, best-of-TRIALS, interleaved
+        // (2) time both drivers, best-of-TRIALS, interleaved; count the
+        // pool path's steady-state allocations (spoils recycled like the
+        // trainer does)
         let mut spawn_rate = 0.0f64;
         let mut pool_rate = 0.0f64;
+        let mut allocs_per_step = f64::INFINITY;
         for _ in 0..TRIALS {
             let mut workers = mk_workers(&engine, n_exec);
             let t0 = Instant::now();
@@ -134,12 +174,28 @@ fn main() {
 
             let mut pool = ExecutorPool::new(RunMode::parallel());
             pool.install(mk_workers(&engine, n_exec)); // once, outside the timer
-            let t0 = Instant::now();
-            for step in 0..STEPS {
+            let mut outs: Vec<ExecutorOutput> = Vec::new();
+            let mut spare_grads: Vec<Vec<Vec<f32>>> = Vec::new();
+            let mut spare_timing: Vec<ExecTiming> = Vec::new();
+            let mut spare_staged: Vec<Vec<easyscale::est::StagedGrads>> = Vec::new();
+            // warmup: let every recycled buffer reach its steady capacity
+            for step in 0..4u64 {
                 let inp = inputs(&engine, &bufs, &corpus, step);
-                pool.step(&inp).unwrap();
+                pool.refill(&mut spare_grads, &mut spare_timing, &mut spare_staged);
+                pool.step_into(&inp, &mut outs).unwrap();
+                recycle(&mut outs, &mut spare_grads, &mut spare_timing, &mut spare_staged);
+            }
+            let allocs0 = heap_allocs();
+            let t0 = Instant::now();
+            for step in 4..4 + STEPS {
+                let inp = inputs(&engine, &bufs, &corpus, step);
+                pool.refill(&mut spare_grads, &mut spare_timing, &mut spare_staged);
+                pool.step_into(&inp, &mut outs).unwrap();
+                recycle(&mut outs, &mut spare_grads, &mut spare_timing, &mut spare_staged);
             }
             pool_rate = pool_rate.max(STEPS as f64 / t0.elapsed().as_secs_f64());
+            let delta = heap_allocs() - allocs0;
+            allocs_per_step = allocs_per_step.min(delta as f64 / STEPS as f64);
         }
         let speedup = pool_rate / spawn_rate;
         table.row(&[
@@ -147,6 +203,7 @@ fn main() {
             format!("{spawn_rate:.2}"),
             format!("{pool_rate:.2}"),
             format!("{speedup:.2}x"),
+            format!("{allocs_per_step:.2}"),
             "identical".to_string(),
         ]);
         rows.push(Json::obj(vec![
@@ -154,6 +211,7 @@ fn main() {
             ("spawn_steps_per_s", Json::num(spawn_rate)),
             ("pool_steps_per_s", Json::num(pool_rate)),
             ("speedup", Json::num(speedup)),
+            ("pool_allocs_per_step", Json::num(allocs_per_step)),
         ]));
     }
     table.print();

@@ -1,0 +1,181 @@
+//! Reconfiguration-latency bench: full rebuild vs the incremental delta
+//! fast path (ISSUE 5 tentpole), across grow / shrink / migrate
+//! transitions at maxP 4 / 8 / 16.
+//!
+//! Full rebuild (`Trainer::reconfigure_full`) tears down every worker,
+//! thread and data queue and rebuilds them from the on-demand checkpoint
+//! state — the restart cost stop-free scaling systems show dominates
+//! elastic overhead. The incremental path (`Trainer::reconfigure`) diffs
+//! the placements, keeps surviving executors (threads, contexts, queues)
+//! alive and builds/moves only the delta.
+//!
+//! Before any timing, each (maxP, transition) pair drives both paths
+//! through the transition plus a training step and asserts the
+//! **post-reconfigure parameter fingerprints are bitwise equal** — the
+//! fast path is only timed once proven indistinguishable. Results go to
+//! `rust/BENCH_reconfig.json`.
+//!
+//!     cargo bench --bench reconfig_latency
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use easyscale::exec::executor::ExecutorSpec;
+use easyscale::exec::{DeviceType, Placement};
+use easyscale::runtime::Engine;
+use easyscale::train::{Determinism, TrainConfig, Trainer};
+use easyscale::util::bench::Table;
+use easyscale::util::json::Json;
+
+const TRIALS: usize = 3;
+const CYCLES: usize = 8; // A->B->A round trips per trial
+
+fn exec(device: DeviceType, ranks: std::ops::Range<usize>) -> ExecutorSpec {
+    ExecutorSpec { device, est_ranks: ranks.collect() }
+}
+
+/// (name, placement A, placement B) per transition kind; executor
+/// `[V100: 0..h]` survives every transition, so the incremental path has
+/// a real delta to exploit.
+fn transitions(max_p: usize) -> Vec<(&'static str, Placement, Placement)> {
+    let h = max_p / 2;
+    let v = DeviceType::V100;
+    let p = DeviceType::P100;
+    let two = Placement { executors: vec![exec(v, 0..h), exec(v, h..max_p)] };
+    // one executor per tail rank: 1 + h executors in total
+    let spread = {
+        let mut execs = vec![exec(v, 0..h)];
+        for r in h..max_p {
+            execs.push(exec(v, r..r + 1));
+        }
+        Placement { executors: execs }
+    };
+    let migrated = Placement { executors: vec![exec(v, 0..h), exec(p, h..max_p)] };
+    vec![
+        ("grow", two.clone(), spread.clone()),
+        ("shrink", spread, two.clone()),
+        ("migrate", two, migrated),
+    ]
+}
+
+/// Time `CYCLES` reconfiguration round trips (steps interleaved so queues
+/// stay live), returning seconds spent inside reconfigure only. The
+/// trainer starts at the placement `second` describes, so each cycle goes
+/// `first` then `second`.
+fn time_cycles(
+    engine: &Engine,
+    t: &mut Trainer,
+    first: &Placement,
+    second: &Placement,
+    incremental: bool,
+) -> f64 {
+    let mut total = 0.0f64;
+    for _ in 0..CYCLES {
+        for target in [first, second] {
+            let placement = target.clone(); // clone outside the timer
+            let t0 = Instant::now();
+            if incremental {
+                t.reconfigure(placement).unwrap();
+            } else {
+                t.reconfigure_full(placement).unwrap();
+            }
+            total += t0.elapsed().as_secs_f64();
+            t.step(engine).unwrap();
+        }
+    }
+    total
+}
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = match Engine::open(&root, "tiny") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP reconfig bench: no engine available ({e:#})");
+            return;
+        }
+    };
+    println!(
+        "== reconfiguration latency: full rebuild vs incremental delta \
+         ({CYCLES} A->B->A cycles x {TRIALS} trials, per-reconfigure mean) =="
+    );
+    let mut table = Table::new(&[
+        "maxP",
+        "transition",
+        "full ms",
+        "incremental ms",
+        "speedup",
+        "bitwise",
+    ]);
+    let mut rows = Vec::new();
+    for max_p in [4usize, 8, 16] {
+        for (name, a, b) in transitions(max_p) {
+            let mk = |placement: &Placement| -> Trainer {
+                let cfg = TrainConfig {
+                    determinism: Determinism::D1,
+                    aug_rate: 0.0,
+                    ..TrainConfig::new(max_p)
+                };
+                let mut t = Trainer::new(&engine, cfg, placement.clone()).unwrap();
+                t.run(&engine, 2).unwrap(); // warm queues and arenas
+                t
+            };
+            // (1) the gate: both paths through A -> B -> step must land on
+            // the same parameter fingerprint before anything is timed
+            let mut inc = mk(&a);
+            let mut full = mk(&a);
+            inc.reconfigure(b.clone()).unwrap();
+            full.reconfigure_full(b.clone()).unwrap();
+            inc.step(&engine).unwrap();
+            full.step(&engine).unwrap();
+            assert_eq!(
+                inc.param_fingerprint(),
+                full.param_fingerprint(),
+                "incremental path drifted at maxP={max_p} transition={name}"
+            );
+            // (2) timing: best-of-trials mean per reconfigure call
+            let n_calls = (2 * CYCLES) as f64;
+            let mut full_ms = f64::INFINITY;
+            let mut inc_ms = f64::INFINITY;
+            for _ in 0..TRIALS {
+                full_ms =
+                    full_ms.min(time_cycles(&engine, &mut full, &a, &b, false) / n_calls * 1e3);
+                inc_ms = inc_ms.min(time_cycles(&engine, &mut inc, &a, &b, true) / n_calls * 1e3);
+            }
+            let speedup = full_ms / inc_ms;
+            table.row(&[
+                format!("{max_p}"),
+                name.to_string(),
+                format!("{full_ms:.3}"),
+                format!("{inc_ms:.3}"),
+                format!("{speedup:.2}x"),
+                "identical".to_string(),
+            ]);
+            rows.push(Json::obj(vec![
+                ("max_p", Json::num(max_p as f64)),
+                ("transition", Json::str(name)),
+                ("full_ms", Json::num(full_ms)),
+                ("incremental_ms", Json::num(inc_ms)),
+                ("speedup", Json::num(speedup)),
+            ]));
+        }
+    }
+    table.print();
+    println!(
+        "note: the paper's sub-second context switch (Fig. 13) is the full path; \
+         the incremental path removes the worker/thread/queue rebuild from it."
+    );
+
+    let backend = if cfg!(feature = "pjrt") { "pjrt-sequential" } else { "native-parallel" };
+    let record = Json::obj(vec![
+        ("bench", Json::str("reconfig_latency")),
+        ("backend", Json::str(backend)),
+        ("preset", Json::str(engine.manifest.model.preset.clone())),
+        ("cycles", Json::num(CYCLES as f64)),
+        ("trials", Json::num(TRIALS as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_reconfig.json");
+    std::fs::write(&out, record.dump() + "\n").unwrap();
+    println!("reconfig-latency record written to {}", out.display());
+}

@@ -30,7 +30,7 @@ use crate::sched::director::{
 use crate::sched::plan::{enumerate_configs, JobSpec};
 use crate::sim::serving::{run_serving_sim, ServingSimConfig};
 use crate::sim::simulator::{rate_scale_from_observation, ElasticSim, SchedulerKind};
-use crate::sim::trace::gen_trace;
+use crate::sim::trace::{gen_trace, read_trace_csv, write_trace_csv};
 use crate::train::{
     reference_fingerprint, ClusterJob, ClusterRuntime, Determinism, SessionBuilder, TrainConfig,
 };
@@ -79,6 +79,13 @@ SUBCOMMANDS
     --verify          recompute each job's fixed-placement sequential V100
                       reference and compare fingerprints (bitwise under d1+d2;
                       without D2 only an all-V100 fleet can match)
+    --trace FILE      replay a gen_trace arrival schedule (see `trace --export`)
+                      against real tiny-engine jobs: workloads/maxP/arrivals/
+                      budgets come from the file; --jobs/--workloads are ignored
+    --trace-max-p N     [trace] cap on per-job EasyScaleThreads (default: 8)
+    --trace-steps-cap N [trace] cap on per-job step budgets (default: 8)
+    --trace-round-s S   [trace] trace seconds per cluster round (default:
+                        auto — the schedule spans ~jobs*decide-every rounds)
   plan              print planner configurations for a workload
     --workload NAME   Table-1 model (default: Bert)
     --max-p N         (default: 8)  --gpus SPEC (default: v100:1,t4:1)
@@ -86,6 +93,8 @@ SUBCOMMANDS
   trace             Fig. 14/15 trace experiment
     --jobs N --interarrival S --seed N --scale F --out CSV
     --rate-scale F    calibrate sim step rates from a real run (default: 1.0)
+    --export FILE     also write the arrival schedule as CSV, replayable
+                      against real jobs via `cluster --trace FILE`
   serving           Fig. 16 serving-colocation experiment
     --out CSV
   bitwise-compare A B   compare two checkpoints bit by bit
@@ -274,23 +283,62 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if max_p == 0 {
         bail!("--max-p must be at least 1");
     }
+    let trace_file = args.get("trace").map(str::to_string);
+    if trace_file.is_some() && args.flag("verify") {
+        bail!("--verify applies to uniform --jobs runs, not --trace replays");
+    }
 
     let engine = Engine::open(&artifacts, &preset)?;
-    crate::info!(
-        "cluster",
-        "preset={} jobs={} fleet=[V100:{} P100:{} T4:{}] det={} decide-every={} job-threads={}",
-        preset, n_jobs, fleet[0], fleet[1], fleet[2], det, decide_every, job_threads
-    );
     let mut rt =
         ClusterRuntime::new(&engine, fleet, decide_every).with_job_threads(job_threads);
-    for i in 0..n_jobs {
-        let cfg = TrainConfig {
-            seed: seed + i as u64,
-            determinism: det,
-            run_mode,
-            ..TrainConfig::new(max_p)
-        };
-        rt.submit(ClusterJob { workload: workloads[i % workloads.len()], cfg, steps });
+    if let Some(tf) = &trace_file {
+        // replay a generated arrival schedule against real jobs: close the
+        // loop between the analytic Fig. 14 clock and measured steps/s
+        let tjobs = read_trace_csv(Path::new(tf))?;
+        let steps_cap = args.usize_or("trace-steps-cap", 8)? as u64;
+        let max_p_cap = args.usize_or("trace-max-p", 8)?.max(1);
+        let span = tjobs.iter().map(|j| j.arrival_s).fold(0.0f64, f64::max);
+        let auto_round_s =
+            (span / (tjobs.len() as f64 * decide_every as f64)).max(1e-9);
+        let round_s = args.f64_or("trace-round-s", auto_round_s)?;
+        if !round_s.is_finite() || round_s <= 0.0 {
+            bail!("--trace-round-s must be a positive finite number");
+        }
+        crate::info!(
+            "cluster",
+            "trace replay: {} jobs from {tf}, fleet=[V100:{} P100:{} T4:{}] det={} \
+             decide-every={decide_every} round-s={round_s:.2}",
+            tjobs.len(), fleet[0], fleet[1], fleet[2], det
+        );
+        for t in &tjobs {
+            let job_max_p = t.max_p.clamp(1, max_p_cap);
+            let cfg = TrainConfig {
+                seed: seed + t.id as u64,
+                determinism: det,
+                run_mode,
+                ..TrainConfig::new(job_max_p)
+            };
+            let arrival_round = (t.arrival_s / round_s).round() as u64;
+            rt.submit_at(
+                ClusterJob { workload: t.workload, cfg, steps: t.replay_steps(steps_cap) },
+                arrival_round,
+            );
+        }
+    } else {
+        crate::info!(
+            "cluster",
+            "preset={} jobs={} fleet=[V100:{} P100:{} T4:{}] det={} decide-every={} job-threads={}",
+            preset, n_jobs, fleet[0], fleet[1], fleet[2], det, decide_every, job_threads
+        );
+        for i in 0..n_jobs {
+            let cfg = TrainConfig {
+                seed: seed + i as u64,
+                determinism: det,
+                run_mode,
+                ..TrainConfig::new(max_p)
+            };
+            rt.submit(ClusterJob { workload: workloads[i % workloads.len()], cfg, steps });
+        }
     }
     let report = rt.run()?;
 
@@ -385,6 +433,11 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let mut trace = gen_trace(seed, n, inter);
     for j in trace.iter_mut() {
         j.duration_s *= scale;
+    }
+    if let Some(path) = args.get("export") {
+        write_trace_csv(Path::new(path), &trace)
+            .map_err(|e| anyhow::anyhow!("writing trace export {path}: {e}"))?;
+        println!("arrival schedule exported to {path} (replay: cluster --trace {path})");
     }
     println!(
         "trace: {n} jobs, mean interarrival {inter}s, duration scale {scale}, rate scale {rate_scale}"
@@ -566,6 +619,38 @@ mod tests {
         assert!(main_with(argv(&["cluster", "--jobs", "0"])).is_err());
         assert!(main_with(argv(&[
             "cluster", "--preset", "tiny", "--workloads", "NoSuchModel"
+        ]))
+        .is_err());
+    }
+
+    /// The ROADMAP loop-closer: export a gen_trace arrival schedule, then
+    /// replay it against real tiny-engine jobs in the cluster runtime
+    /// (smoke: staggered arrivals, tiny budgets, sequential executors).
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn cluster_replays_exported_trace() {
+        let path = std::env::temp_dir().join("easyscale_cli_trace_replay_test.csv");
+        let path_s = path.to_str().unwrap().to_string();
+        assert!(main_with(argv(&[
+            "trace", "--jobs", "4", "--interarrival", "30", "--seed", "3",
+            "--export", &path_s,
+        ]))
+        .is_ok());
+        assert!(path.exists(), "trace export must write the schedule");
+        let replay = main_with(argv(&[
+            "cluster", "--preset", "tiny", "--trace", &path_s,
+            "--fleet", "v100:2,p100:1,t4:1", "--decide-every", "2",
+            "--trace-max-p", "4", "--trace-steps-cap", "4", "--sequential",
+        ]));
+        assert!(replay.is_ok(), "trace replay failed: {replay:?}");
+        // --verify is a uniform-run concept
+        assert!(main_with(argv(&[
+            "cluster", "--preset", "tiny", "--trace", &path_s, "--verify",
+        ]))
+        .is_err());
+        std::fs::remove_file(&path).ok();
+        assert!(main_with(argv(&[
+            "cluster", "--preset", "tiny", "--trace", "/nonexistent/trace.csv",
         ]))
         .is_err());
     }

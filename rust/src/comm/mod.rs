@@ -62,16 +62,24 @@ pub fn aggregate_virtual_into(
     out: &mut Vec<Vec<f32>>,
 ) {
     assert_eq!(staged.len(), max_p, "need one staged grad set per EST");
-    // order by virtual rank — placement/arrival order must not matter
-    let mut by_rank: Vec<&StagedGrads> = staged.iter().collect();
-    by_rank.sort_by_key(|s| s.virtual_rank);
+    // order by virtual rank — placement/arrival order must not matter.
+    // The sort permutation lives in the reusable scratch (no per-call
+    // Vec<&StagedGrads>), same comparison, same stable order: bitwise
+    // identical to the allocating form.
+    scratch.order.clear();
+    scratch.order.extend(0..staged.len());
+    // unstable sort: allocation-free, and virtual ranks are unique (the
+    // SlotTable rejects duplicates) so the permutation is identical to
+    // the stable sort the allocating form used
+    scratch.order.sort_unstable_by_key(|&i| staged[i].virtual_rank);
     let scale = 1.0f32 / max_p as f32;
 
     resize_params(out, param_sizes);
     ReduceScratch::ensure(&mut scratch.flat, max_p);
     for bucket in &plan.buckets {
-        for (buf, s) in scratch.flat[..max_p].iter_mut().zip(&by_rank) {
-            flatten_bucket_into(bucket, &s.grads, param_sizes, buf);
+        for k in 0..max_p {
+            let i = scratch.order[k];
+            flatten_bucket_into(bucket, &staged[i].grads, param_sizes, &mut scratch.flat[k]);
         }
         ring_allreduce_into(&scratch.flat[..max_p], &mut scratch.reduced);
         scatter_bucket(bucket, &scratch.reduced, scale, param_sizes, out);

@@ -104,6 +104,9 @@ pub struct ReduceScratch {
     pub(crate) locals: Vec<Vec<f32>>,
     /// The reduced bucket before scatter.
     pub(crate) reduced: Vec<f32>,
+    /// Reusable rank-sort index buffer (the virtual aggregation's
+    /// arrival-order erasure, without a per-call `Vec<&StagedGrads>`).
+    pub(crate) order: Vec<usize>,
 }
 
 impl ReduceScratch {
@@ -119,9 +122,14 @@ impl ReduceScratch {
         }
     }
 
-    /// Pre-size the virtual-aggregation buffers for `max_p` rank sets
-    /// under `plan` — called at trainer (re)build time, so even the first
-    /// mini-batch after a reconfiguration grows nothing in the hot loop.
+    /// Pre-size every workspace for `max_p` rank sets under `plan` —
+    /// called at trainer (re)build time, so even the first mini-batch
+    /// after a reconfiguration grows nothing in the hot loop. Strictly
+    /// monotone in capacity: when the new shapes are *smaller* (fewer
+    /// buckets, narrower buckets, fewer ranks) existing buffers are
+    /// re-reserved in place and never shrunk or reallocated (pinned in
+    /// tests below), so repeated grow/shrink reconfigurations settle into
+    /// a fixed memory footprint.
     pub fn reserve_for(
         &mut self,
         plan: &crate::comm::BucketPlan,
@@ -134,8 +142,22 @@ impl ReduceScratch {
             b.clear();
             b.reserve(widest);
         }
+        // the physical path's per-group workspaces: at most maxP groups,
+        // tree depth bounded by ceil(maxP/2) level-0 slots
+        Self::ensure(&mut self.locals, max_p);
+        for b in self.locals.iter_mut() {
+            b.clear();
+            b.reserve(widest);
+        }
+        Self::ensure(&mut self.tree, max_p.div_ceil(2));
+        for b in self.tree.iter_mut() {
+            b.clear();
+            b.reserve(widest);
+        }
         self.reduced.clear();
         self.reduced.reserve(widest);
+        self.order.clear();
+        self.order.reserve(max_p);
     }
 }
 
@@ -323,6 +345,37 @@ mod tests {
         t.insert(sg(1, vec![])).unwrap();
         t.take_ranked(&mut ranked).unwrap();
         assert_eq!(ranked.len(), 3);
+    }
+
+    /// Re-reserving for *smaller* shapes must neither shrink nor
+    /// reallocate: capacities are monotone, so grow/shrink/grow elastic
+    /// cycles settle into a fixed footprint instead of thrashing the
+    /// allocator.
+    #[test]
+    fn reserve_for_never_shrinks_or_reallocates() {
+        let big_sizes = [400usize, 300, 200];
+        let big_plan = crate::comm::BucketPlan::build(&big_sizes, 1 << 12);
+        let mut s = ReduceScratch::new();
+        s.reserve_for(&big_plan, &big_sizes, 8);
+        assert!(s.flat.len() >= 8 && s.locals.len() >= 8 && s.tree.len() >= 4);
+        let caps = |s: &ReduceScratch| {
+            (
+                s.flat.iter().map(|b| b.capacity()).collect::<Vec<_>>(),
+                s.locals.iter().map(|b| b.capacity()).collect::<Vec<_>>(),
+                s.tree.iter().map(|b| b.capacity()).collect::<Vec<_>>(),
+                s.reduced.capacity(),
+                s.order.capacity(),
+            )
+        };
+        let before = caps(&s);
+        // shrink: fewer ranks, narrower buckets
+        let small_sizes = [16usize, 8];
+        let small_plan = crate::comm::BucketPlan::build(&small_sizes, 1 << 6);
+        s.reserve_for(&small_plan, &small_sizes, 2);
+        assert_eq!(caps(&s), before, "shrinking shapes must not touch capacity");
+        // and a re-grow back to the original shape is also a no-op
+        s.reserve_for(&big_plan, &big_sizes, 8);
+        assert_eq!(caps(&s), before, "re-growing to a seen shape must not reallocate");
     }
 
     #[test]

@@ -34,8 +34,15 @@ impl SyntheticCorpus {
     /// Token sequence (length `seq_len + 1`: inputs + shifted targets) for a
     /// dataset index.
     pub fn sample(&self, index: u64) -> Vec<i32> {
-        let mut rng = SplitMix64::derive(self.seed, &[0x5EED, index]);
         let mut out = Vec::with_capacity(self.seq_len + 1);
+        self.sample_into(index, &mut out);
+        out
+    }
+
+    /// Append the token sequence for `index` to `out` — the hot-loop form;
+    /// token values are identical to [`SyntheticCorpus::sample`].
+    pub fn sample_into(&self, index: u64, out: &mut Vec<i32>) {
+        let mut rng = SplitMix64::derive(self.seed, &[0x5EED, index]);
         let mut cur = rng.next_below(self.vocab_size as u64) as u32;
         out.push(cur as i32);
         for pos in 0..self.seq_len {
@@ -48,16 +55,23 @@ impl SyntheticCorpus {
             };
             out.push(cur as i32);
         }
-        out
     }
 
     /// Flattened microbatch for a set of dataset indices.
     pub fn batch(&self, indices: &[u64]) -> Vec<i32> {
         let mut out = Vec::with_capacity(indices.len() * (self.seq_len + 1));
-        for &i in indices {
-            out.extend(self.sample(i));
-        }
+        self.batch_into(indices, &mut out);
         out
+    }
+
+    /// [`SyntheticCorpus::batch`] into a caller buffer (cleared first,
+    /// capacity preserved across steps — zero allocation once warm).
+    pub fn batch_into(&self, indices: &[u64], out: &mut Vec<i32>) {
+        out.clear();
+        out.reserve(indices.len() * (self.seq_len + 1));
+        for &i in indices {
+            self.sample_into(i, out);
+        }
     }
 
     /// Entropy rate (nats/token) of the generating process — the loss floor

@@ -123,11 +123,57 @@ impl SharedDataWorkers {
 
     /// The queued (unconsumed) states — persisted by on-demand checkpoint.
     /// Deterministic order: (step, rank) ascending, i.e. production order.
+    /// Each per-rank queue is already step-ascending and the rank map
+    /// iterates ranks ascending, so a k-way front merge produces the order
+    /// directly — pre-sized, one clone per item, no intermediate Vec and
+    /// no re-sort (this runs on every checkpoint *and* reconfigure).
     pub fn checkpoint_states(&self) -> Vec<WorkItem> {
-        let mut out: Vec<WorkItem> =
-            self.queues.values().flat_map(|q| q.items.iter().cloned()).collect();
-        out.sort_by_key(|w| (w.step, w.rank));
+        let mut out: Vec<WorkItem> = Vec::with_capacity(self.queued());
+        let mut fronts: Vec<std::collections::vec_deque::Iter<'_, WorkItem>> =
+            self.queues.values().map(|q| q.items.iter()).collect();
+        let mut heads: Vec<Option<&WorkItem>> = fronts.iter_mut().map(|it| it.next()).collect();
+        loop {
+            let mut best: Option<(u64, usize, usize)> = None; // (step, rank, lane)
+            for (lane, head) in heads.iter().enumerate() {
+                if let Some(w) = head {
+                    let key = (w.step, w.rank, lane);
+                    let better = match best {
+                        None => true,
+                        Some(b) => key < b,
+                    };
+                    if better {
+                        best = Some(key);
+                    }
+                }
+            }
+            match best {
+                Some((_, _, lane)) => {
+                    out.push(heads[lane].take().unwrap().clone());
+                    heads[lane] = fronts[lane].next();
+                }
+                None => break,
+            }
+        }
         out
+    }
+
+    /// Remove and hand over one rank's whole queue — the queued items (in
+    /// step order) plus the production cursor — for incremental
+    /// reconfiguration: a moved EST's data stream migrates verbatim to the
+    /// executor that hosts it next, with no cross-rank collect/sort pass.
+    pub fn take_rank(&mut self, rank: usize) -> Option<(Vec<WorkItem>, Option<u64>)> {
+        self.queues.remove(&rank).map(|q| (q.items.into_iter().collect(), q.next_step))
+    }
+
+    /// Install a migrated rank queue verbatim (counterpart of
+    /// [`SharedDataWorkers::take_rank`]; `items` must be step-ascending,
+    /// which `take_rank` guarantees). Unlike [`SharedDataWorkers::restore`]
+    /// this keeps the exact production cursor, so a rank whose queue
+    /// happened to be empty still resumes production where it left off.
+    pub fn adopt_rank(&mut self, rank: usize, items: Vec<WorkItem>, next_step: Option<u64>) {
+        let q = self.queues.entry(rank).or_default();
+        q.items = items.into_iter().collect();
+        q.next_step = next_step;
     }
 
     /// Restore after an elastic restart: overlay the checkpointed queue
@@ -249,6 +295,43 @@ mod tests {
         let saved = w.checkpoint_states();
         let keys: Vec<(u64, usize)> = saved.iter().map(|i| (i.step, i.rank)).collect();
         assert_eq!(keys, vec![(0, 0), (0, 1), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn take_rank_adopt_rank_migrates_stream_verbatim() {
+        // the incremental-reconfigure path: move rank 1's queue to another
+        // pool and the stream must continue exactly where it left off
+        let ranks = [0, 1];
+        let mut src = SharedDataWorkers::new(8, &ranks, 2, 3);
+        src.prefill(0, &ranks);
+        src.consume(0, 1);
+        // reference: uninterrupted continuation in the original pool
+        let mut reference = src.clone();
+        reference.prefill(1, &[1]);
+        let want_queued = reference.consume(1, 1);
+        let want_produced = reference.consume(3, 1);
+        // migrate rank 1 into a fresh pool
+        let (items, cursor) = src.take_rank(1).unwrap();
+        assert!(src.take_rank(1).is_none(), "taken rank is gone");
+        assert_eq!(src.queued(), 3, "rank 0's queue untouched");
+        let mut dst = SharedDataWorkers::new(8, &[1], 2, 3);
+        dst.adopt_rank(1, items, cursor);
+        dst.prefill(1, &[1]);
+        assert_eq!(dst.consume(1, 1), want_queued);
+        assert_eq!(dst.consume(3, 1), want_produced, "production must continue the stream");
+        // an empty queue still migrates its production cursor
+        let mut a = SharedDataWorkers::new(9, &[0], 1, 1);
+        a.prefill(0, &[0]);
+        a.consume(0, 0);
+        a.prefill(0, &[0]);
+        a.consume(1, 0); // queue now empty, cursor at 2
+        let (items, cursor) = a.take_rank(0).unwrap();
+        assert!(items.is_empty());
+        assert_eq!(cursor, Some(2));
+        let mut b = SharedDataWorkers::new(9, &[0], 1, 1);
+        b.adopt_rank(0, items, cursor);
+        b.prefill(0, &[0]); // from_step ignored: the cursor wins
+        assert_eq!(b.consume(2, 0).step, 2);
     }
 
     #[test]

@@ -73,9 +73,20 @@ impl DeterministicSampler {
 
     /// The whole microbatch of dataset indices for an EST at a step.
     pub fn microbatch(&mut self, step: u64, rank: usize) -> Vec<u64> {
-        (0..self.batch_per_est)
-            .map(|slot| self.sample_index(step, rank, slot))
-            .collect()
+        let mut out = Vec::with_capacity(self.batch_per_est);
+        self.microbatch_into(step, rank, &mut out);
+        out
+    }
+
+    /// [`DeterministicSampler::microbatch`] into a caller buffer (cleared
+    /// first, capacity preserved) — the hot-loop form; allocates nothing
+    /// except when crossing an epoch boundary (permutation rebuild).
+    pub fn microbatch_into(&mut self, step: u64, rank: usize, out: &mut Vec<u64>) {
+        out.clear();
+        out.reserve(self.batch_per_est);
+        for slot in 0..self.batch_per_est {
+            out.push(self.sample_index(step, rank, slot));
+        }
     }
 }
 

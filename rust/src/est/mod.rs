@@ -44,6 +44,54 @@ impl EstContext {
     }
 }
 
+/// Per-executor pool of spare gradient buffer *sets* (one `Vec<Vec<f32>>`
+/// per EST microbatch, manifest order), so the engine writes gradients
+/// into recycled memory instead of allocating a model-sized buffer set
+/// every mini-batch. The lifecycle is a round trip: `run_minibatch` takes
+/// a set per hosted EST and ships it inside [`StagedGrads`]; after
+/// aggregation the trainer hands the (now-dead) buffers back through
+/// `ExecutorPool::refill`. Buffer contents are irrelevant — the engine
+/// fully overwrites every element — so a "dirty" arena can never reach
+/// the bits (pinned in `tests/reconfig.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct GradArena {
+    sets: Vec<Vec<Vec<f32>>>,
+}
+
+impl GradArena {
+    pub fn new() -> GradArena {
+        GradArena::default()
+    }
+
+    /// Spare sets currently pooled.
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+
+    /// Take a spare set (empty and freshly allocated if the pool is dry —
+    /// only happens before the arena has warmed up).
+    pub fn take_set(&mut self) -> Vec<Vec<f32>> {
+        self.sets.pop().unwrap_or_default()
+    }
+
+    /// Return a used set to the pool.
+    pub fn put_set(&mut self, set: Vec<Vec<f32>>) {
+        self.sets.push(set);
+    }
+
+    /// Pre-allocate `n_sets` full-sized buffer sets (build-time warmup, so
+    /// even the first mini-batch after a (re)build allocates nothing).
+    pub fn warm(&mut self, n_sets: usize, param_sizes: &[usize]) {
+        while self.sets.len() < n_sets {
+            self.sets.push(param_sizes.iter().map(|&s| vec![0.0f32; s]).collect());
+        }
+    }
+}
+
 /// Gradients staged to host DRAM while other ESTs compute (paper §3.2:
 /// "migrate the gradients to host DRAM when context switch and overlap it
 /// with the computation of the next EasyScaleThread").

@@ -150,6 +150,87 @@ impl Placement {
     pub fn groups(&self) -> Vec<Vec<usize>> {
         self.executors.iter().map(|e| e.est_ranks.clone()).collect()
     }
+
+    /// Diff this placement against its successor for incremental
+    /// reconfiguration: which executors survive verbatim (same device,
+    /// same hosted ranks in the same order — their workers, threads and
+    /// data queues can be kept alive), and how every EST classifies:
+    ///
+    /// * **kept** — hosted by a surviving executor; nothing moves;
+    /// * **moved** — hosted in both placements but its executor changed;
+    ///   its per-rank state (data queue, context) migrates;
+    /// * **new** — hosted only in the new placement (never the case
+    ///   between two valid same-maxP placements, which both partition
+    ///   0..maxP; non-empty only when diffing from a smaller/empty old
+    ///   placement).
+    ///
+    /// The three sets are disjoint and cover the new placement's ranks
+    /// (property-tested in `tests/reconfig.rs`).
+    pub fn diff(&self, new: &Placement) -> PlacementDelta {
+        let mut old_matched = vec![false; self.executors.len()];
+        let mut kept: Vec<(usize, usize)> = Vec::new();
+        let mut kept_ranks: Vec<usize> = Vec::new();
+        for (new_slot, spec) in new.executors.iter().enumerate() {
+            let hit = self
+                .executors
+                .iter()
+                .enumerate()
+                .position(|(old_slot, old_spec)| !old_matched[old_slot] && old_spec == spec);
+            if let Some(old_slot) = hit {
+                old_matched[old_slot] = true;
+                kept.push((old_slot, new_slot));
+                kept_ranks.extend(spec.est_ranks.iter().copied());
+            }
+        }
+        let mut old_hosted = vec![false; new.max_p().max(self.max_p())];
+        for e in &self.executors {
+            for &r in &e.est_ranks {
+                if r < old_hosted.len() {
+                    old_hosted[r] = true;
+                }
+            }
+        }
+        let kept_set: std::collections::BTreeSet<usize> = kept_ranks.iter().copied().collect();
+        let mut moved_ranks: Vec<usize> = Vec::new();
+        let mut new_ranks: Vec<usize> = Vec::new();
+        for e in &new.executors {
+            for &r in &e.est_ranks {
+                if kept_set.contains(&r) {
+                    continue;
+                }
+                if r < old_hosted.len() && old_hosted[r] {
+                    moved_ranks.push(r);
+                } else {
+                    new_ranks.push(r);
+                }
+            }
+        }
+        kept_ranks.sort_unstable();
+        moved_ranks.sort_unstable();
+        new_ranks.sort_unstable();
+        PlacementDelta { kept, kept_ranks, moved_ranks, new_ranks }
+    }
+}
+
+/// The result of [`Placement::diff`]: the executor-survival map and the
+/// disjoint kept/moved/new partition of the new placement's EST ranks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlacementDelta {
+    /// `(old_slot, new_slot)` pairs of executors surviving verbatim.
+    pub kept: Vec<(usize, usize)>,
+    /// Ranks hosted by surviving executors (ascending).
+    pub kept_ranks: Vec<usize>,
+    /// Ranks hosted in both placements whose executor changed (ascending).
+    pub moved_ranks: Vec<usize>,
+    /// Ranks hosted only in the new placement (ascending).
+    pub new_ranks: Vec<usize>,
+}
+
+impl PlacementDelta {
+    /// Total ranks classified (== the new placement's maxP).
+    pub fn n_ranks(&self) -> usize {
+        self.kept_ranks.len() + self.moved_ranks.len() + self.new_ranks.len()
+    }
 }
 
 /// How dropout keys are derived: EasyScale keys by *virtual* rank (D0
@@ -177,6 +258,16 @@ impl ExecTiming {
     /// from empty.
     pub fn with_capacity(n: usize) -> ExecTiming {
         ExecTiming { compute_s: Vec::with_capacity(n), stage_s: Vec::with_capacity(n) }
+    }
+
+    /// Re-arm a recycled timing record for `n` hosted ESTs: cleared, with
+    /// at least `n` capacity, no allocation once warmed — timing buffers
+    /// round-trip trainer ↔ worker instead of being rebuilt per step.
+    pub fn reset(&mut self, n: usize) {
+        self.compute_s.clear();
+        self.stage_s.clear();
+        self.compute_s.reserve(n);
+        self.stage_s.reserve(n);
     }
 }
 
@@ -252,6 +343,51 @@ mod tests {
         // the boundary: exactly memory - context still fits
         assert!(Placement::heterogeneous_checked(&[(DeviceType::P100, 2)], 15.25).is_ok());
         assert!(Placement::heterogeneous_checked(&[(DeviceType::P100, 2)], 15.26).is_err());
+    }
+
+    #[test]
+    fn diff_classifies_kept_moved_new() {
+        // 4 ESTs on 2 V100s -> executor 0 survives, executor 1 replaced by
+        // two: ranks 0,2 kept; 1,3 moved.
+        let old = Placement {
+            executors: vec![
+                ExecutorSpec { device: DeviceType::V100, est_ranks: vec![0, 2] },
+                ExecutorSpec { device: DeviceType::V100, est_ranks: vec![1, 3] },
+            ],
+        };
+        let new = Placement {
+            executors: vec![
+                ExecutorSpec { device: DeviceType::V100, est_ranks: vec![0, 2] },
+                ExecutorSpec { device: DeviceType::V100, est_ranks: vec![1] },
+                ExecutorSpec { device: DeviceType::P100, est_ranks: vec![3] },
+            ],
+        };
+        let d = old.diff(&new);
+        assert_eq!(d.kept, vec![(0, 0)]);
+        assert_eq!(d.kept_ranks, vec![0, 2]);
+        assert_eq!(d.moved_ranks, vec![1, 3]);
+        assert!(d.new_ranks.is_empty());
+        assert_eq!(d.n_ranks(), 4);
+        // identical placements: everything kept, slot map is the identity
+        let d = old.diff(&old.clone());
+        assert_eq!(d.kept, vec![(0, 0), (1, 1)]);
+        assert_eq!(d.kept_ranks, vec![0, 1, 2, 3]);
+        assert!(d.moved_ranks.is_empty() && d.new_ranks.is_empty());
+        // device change breaks survival even with identical ranks
+        let migrated = Placement {
+            executors: vec![
+                ExecutorSpec { device: DeviceType::T4, est_ranks: vec![0, 2] },
+                ExecutorSpec { device: DeviceType::V100, est_ranks: vec![1, 3] },
+            ],
+        };
+        let d = old.diff(&migrated);
+        assert_eq!(d.kept, vec![(1, 1)]);
+        assert_eq!(d.moved_ranks, vec![0, 2]);
+        // from an empty placement every rank is new
+        let empty = Placement { executors: vec![] };
+        let d = empty.diff(&old);
+        assert!(d.kept.is_empty() && d.moved_ranks.is_empty());
+        assert_eq!(d.new_ranks, vec![0, 1, 2, 3]);
     }
 
     #[test]

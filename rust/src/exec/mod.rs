@@ -7,6 +7,6 @@ pub mod memory;
 pub mod pool;
 
 pub use devices::DeviceType;
-pub use executor::{ExecTiming, ExecutorSpec, KeyMode, Placement};
+pub use executor::{ExecTiming, ExecutorSpec, KeyMode, Placement, PlacementDelta};
 pub use memory::MemoryModel;
-pub use pool::{ExecutorOutput, ExecutorPool, ExecutorWorker, RunMode, StepInputs};
+pub use pool::{ExecutorOutput, ExecutorPool, ExecutorWorker, RunMode, SlotPlan, StepInputs};

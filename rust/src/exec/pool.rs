@@ -42,8 +42,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::data::{DeterministicSampler, SharedDataWorkers, SyntheticCorpus};
-use crate::est::{EstContext, StagedGrads};
-use crate::runtime::{Engine, ParamBuffers};
+use crate::est::{EstContext, GradArena, StagedGrads};
+use crate::runtime::{Engine, FwdScratch, ParamBuffers};
 use crate::util::rng::dropout_key;
 
 use super::executor::{ExecTiming, ExecutorSpec, KeyMode};
@@ -116,7 +116,10 @@ pub struct ExecutorOutput {
 
 /// A `Send`-able per-executor worker: owns its EST contexts and all
 /// per-executor mutable state, mirrors the paper's one-process-per-GPU
-/// executor.
+/// executor. The private fields are the worker's reusable hot-loop
+/// buffers (gradient arena, forward scratch, token/index scratch, spare
+/// output containers) — they carry only *capacity* across steps, never
+/// values, so a steady-state mini-batch allocates nothing.
 #[derive(Debug, Clone)]
 pub struct ExecutorWorker {
     pub spec: ExecutorSpec,
@@ -129,29 +132,82 @@ pub struct ExecutorWorker {
     pub sampler: DeterministicSampler,
     /// This executor's shared data-worker pool (its ranks only).
     pub data: SharedDataWorkers,
+    /// Spare gradient buffer sets, one taken per hosted EST per step and
+    /// returned by the driver between steps (`ExecutorPool::refill`).
+    arena: GradArena,
+    /// Reusable forward/backward workspace for the engine.
+    scratch: FwdScratch,
+    /// Recycled timing record (round-trips through `ExecutorOutput`).
+    timing_spare: Option<ExecTiming>,
+    /// Recycled staged-gradients container (round-trips likewise).
+    staged_spare: Option<Vec<StagedGrads>>,
+    /// Reused dataset-index and token buffers.
+    idx_buf: Vec<u64>,
+    tokens_buf: Vec<i32>,
 }
 
 impl ExecutorWorker {
+    /// A worker owning everything one executor mutates during a
+    /// mini-batch; the reusable hot-loop buffers start empty and warm up
+    /// on first use (or at build time via [`ExecutorWorker::warm_arena`]).
+    pub fn new(
+        spec: ExecutorSpec,
+        slot: usize,
+        contexts: Vec<EstContext>,
+        sampler: DeterministicSampler,
+        data: SharedDataWorkers,
+    ) -> ExecutorWorker {
+        ExecutorWorker {
+            spec,
+            slot,
+            contexts,
+            sampler,
+            data,
+            arena: GradArena::new(),
+            scratch: FwdScratch::default(),
+            timing_spare: None,
+            staged_spare: None,
+            idx_buf: Vec::new(),
+            tokens_buf: Vec::new(),
+        }
+    }
+
+    /// Pre-allocate one full-sized gradient buffer set per hosted EST so
+    /// even the first mini-batch after a (re)build allocates nothing.
+    pub fn warm_arena(&mut self, param_sizes: &[usize]) {
+        self.arena.warm(self.contexts.len(), param_sizes);
+    }
+
+    /// Spare gradient sets currently pooled (test/driver introspection).
+    pub fn arena_len(&self) -> usize {
+        self.arena.len()
+    }
+
     /// Run one global mini-batch's worth of this executor's ESTs,
     /// time-slicing them at mini-batch boundaries and staging each EST's
-    /// gradients to host DRAM (the `StagedGrads` return).
+    /// gradients to host DRAM (the `StagedGrads` return). All buffers come
+    /// from the worker's recycled pools; with a warm arena this path
+    /// performs zero heap allocation (`tests/alloc.rs`).
     pub fn run_minibatch(&mut self, inp: &StepInputs<'_>) -> Result<ExecutorOutput> {
         let t_start = Instant::now();
         let variant = self.spec.device.kernel_variant(inp.d2);
         self.data.prefill(inp.step, &self.spec.est_ranks);
-        // pre-sized result buffers: the per-EST loop never reallocates
-        let mut timing = ExecTiming::with_capacity(self.contexts.len());
-        let mut staged = Vec::with_capacity(self.contexts.len());
+        // recycled result buffers: cleared, capacity preserved
+        let mut timing = self.timing_spare.take().unwrap_or_default();
+        timing.reset(self.contexts.len());
+        let mut staged = self.staged_spare.take().unwrap_or_default();
+        staged.clear();
+        staged.reserve(self.contexts.len());
         for (pos, ctx) in self.contexts.iter_mut().enumerate() {
             let rank = ctx.virtual_rank;
             debug_assert_eq!(rank, self.spec.est_ranks[pos]);
-            let indices = self.sampler.microbatch(inp.step, rank);
-            let mut tokens = inp.corpus.batch(&indices);
+            self.sampler.microbatch_into(inp.step, rank, &mut self.idx_buf);
+            inp.corpus.batch_into(&self.idx_buf, &mut self.tokens_buf);
             let item = self.data.consume(inp.step, rank);
             if inp.aug_rate > 0.0 {
                 SharedDataWorkers::augment(
                     &item,
-                    &mut tokens,
+                    &mut self.tokens_buf,
                     inp.corpus.vocab_size,
                     inp.aug_rate,
                 );
@@ -161,13 +217,21 @@ impl ExecutorWorker {
                 // physical identity: (executor slot, position in executor)
                 KeyMode::Physical => dropout_key(inp.seed, self.slot * 1024 + pos, inp.step),
             };
+            let mut grads = self.arena.take_set();
             let t0 = Instant::now();
-            let out = inp.engine.fwd_bwd_buffered(variant, inp.params, &tokens, key)?;
+            let loss = inp.engine.fwd_bwd_staged(
+                variant,
+                inp.params,
+                &self.tokens_buf,
+                key,
+                &mut self.scratch,
+                &mut grads,
+            )?;
             let compute = t0.elapsed().as_secs_f64();
             // gradient "D2H" staging: in our substrate fwd_bwd already
-            // returns host buffers; the move into StagedGrads is the stage.
+            // wrote host buffers; the move into StagedGrads is the stage.
             let t1 = Instant::now();
-            let sg = StagedGrads { virtual_rank: rank, loss: out.loss, grads: out.grads };
+            let sg = StagedGrads { virtual_rank: rank, loss, grads };
             let stage = t1.elapsed().as_secs_f64();
             timing.compute_s.push(compute);
             timing.stage_s.push(stage);
@@ -306,23 +370,41 @@ struct PoolSlot {
     thread: Option<PoolThread>,
 }
 
+/// How [`ExecutorPool::install_delta`] treats each slot of the new
+/// placement: keep a surviving worker (thread, contexts and data queues
+/// stay alive — only its slot index is updated) or install a freshly built
+/// one.
+pub enum SlotPlan {
+    /// Reuse the worker currently at `old_slot` verbatim.
+    Keep {
+        /// Slot of the surviving worker in the *old* placement.
+        old_slot: usize,
+    },
+    /// Install this freshly built worker.
+    Fresh(Box<ExecutorWorker>),
+}
+
 /// A persistent executor pool: worker threads live across mini-batches and
-/// are rebuilt only on [`ExecutorPool::install`] — the paper's context
-/// switch. The hot path ([`ExecutorPool::step`]) spawns nothing and
-/// allocates no channels; the shared completion channel is the reusable
-/// step barrier.
+/// are rebuilt only on [`ExecutorPool::install`] /
+/// [`ExecutorPool::install_delta`] — the paper's context switch. The hot
+/// path ([`ExecutorPool::step`]) spawns nothing and allocates no channels;
+/// the shared completion channel is the reusable step barrier.
 pub struct ExecutorPool {
     mode: RunMode,
     slots: Vec<PoolSlot>,
     /// The completion channel, present iff this pool runs threads. Created
-    /// once per install, reused by every step.
+    /// once per install, reused by every step — and across delta installs,
+    /// so surviving threads keep their sender clones.
     results: Option<Receiver<Result<ExecutorOutput>>>,
+    /// Sender side of the completion channel, kept so delta installs can
+    /// hand clones to newly spawned threads.
+    res_tx: Option<Sender<Result<ExecutorOutput>>>,
 }
 
 impl ExecutorPool {
     /// An empty pool; call [`ExecutorPool::install`] to populate it.
     pub fn new(mode: RunMode) -> ExecutorPool {
-        ExecutorPool { mode, slots: Vec::new(), results: None }
+        ExecutorPool { mode, slots: Vec::new(), results: None, res_tx: None }
     }
 
     /// Whether a worker set of `n` executors gets long-lived threads:
@@ -334,10 +416,21 @@ impl ExecutorPool {
         matches!(self.mode, RunMode::Parallel { .. }) && !cfg!(feature = "pjrt") && n > 1
     }
 
+    fn spawn_thread(
+        worker: &Arc<Mutex<ExecutorWorker>>,
+        res_tx: &Sender<Result<ExecutorOutput>>,
+    ) -> PoolThread {
+        let (job_tx, job_rx) = channel();
+        let thread_worker = Arc::clone(worker);
+        let thread_results = res_tx.clone();
+        let join = std::thread::spawn(move || worker_loop(thread_worker, job_rx, thread_results));
+        PoolThread { jobs: job_tx, join }
+    }
+
     /// Install a fresh worker set: stop and join any existing threads,
     /// then take ownership of `workers` (spawning one long-lived thread
-    /// per worker when threaded). Called on initial build and on every
-    /// elastic reconfiguration — never on the per-step hot path.
+    /// per worker when threaded). Called on initial build and on full
+    /// (oracle-path) reconfigurations — never on the per-step hot path.
     pub fn install(&mut self, workers: Vec<ExecutorWorker>) {
         self.teardown();
         if self.threaded(workers.len()) {
@@ -346,22 +439,76 @@ impl ExecutorPool {
                 .into_iter()
                 .map(|w| {
                     let worker = Arc::new(Mutex::new(w));
-                    let (job_tx, job_rx) = channel();
-                    let thread_worker = Arc::clone(&worker);
-                    let thread_results = res_tx.clone();
-                    let join = std::thread::spawn(move || {
-                        worker_loop(thread_worker, job_rx, thread_results)
-                    });
-                    PoolSlot { worker, thread: Some(PoolThread { jobs: job_tx, join }) }
+                    let thread = Some(Self::spawn_thread(&worker, &res_tx));
+                    PoolSlot { worker, thread }
                 })
                 .collect();
             self.results = Some(res_rx);
+            self.res_tx = Some(res_tx);
         } else {
             self.slots = workers
                 .into_iter()
                 .map(|w| PoolSlot { worker: Arc::new(Mutex::new(w)), thread: None })
                 .collect();
         }
+    }
+
+    /// The incremental context switch: re-seat the pool onto a new
+    /// placement keeping surviving workers — their threads, EST contexts
+    /// and per-rank data queues — alive, building/stopping only the delta.
+    /// Kept slots' workers get their `slot` index updated; discarded
+    /// workers' threads are stopped and joined; fresh workers get threads
+    /// only if the new size is threaded (a pool crossing the
+    /// inline/threaded boundary spawns or joins the difference). Bitwise
+    /// equivalence to a full [`ExecutorPool::install`] of identically
+    /// constructed workers is pinned in `tests/reconfig.rs`.
+    pub fn install_delta(&mut self, plan: Vec<SlotPlan>) {
+        let now_threaded = self.threaded(plan.len());
+        let mut old: Vec<Option<PoolSlot>> =
+            std::mem::take(&mut self.slots).into_iter().map(Some).collect();
+        // (re)arm or drop the shared completion channel as needed; an
+        // existing channel is reused so surviving threads' senders stay
+        // valid
+        if now_threaded && self.res_tx.is_none() {
+            let (res_tx, res_rx) = channel();
+            self.res_tx = Some(res_tx);
+            self.results = Some(res_rx);
+        }
+        if !now_threaded {
+            self.res_tx = None;
+            self.results = None;
+        }
+        let mut new_slots: Vec<PoolSlot> = Vec::with_capacity(plan.len());
+        for (new_slot, entry) in plan.into_iter().enumerate() {
+            let mut slot = match entry {
+                SlotPlan::Keep { old_slot } => old
+                    .get_mut(old_slot)
+                    .and_then(Option::take)
+                    .expect("SlotPlan::Keep references a missing or reused old slot"),
+                SlotPlan::Fresh(w) => {
+                    PoolSlot { worker: Arc::new(Mutex::new(*w)), thread: None }
+                }
+            };
+            if now_threaded && slot.thread.is_none() {
+                let res_tx = self.res_tx.as_ref().expect("threaded pool without channel");
+                slot.thread = Some(Self::spawn_thread(&slot.worker, res_tx));
+            } else if !now_threaded {
+                if let Some(th) = slot.thread.take() {
+                    let _ = th.jobs.send(Job::Stop);
+                    let _ = th.join.join();
+                }
+            }
+            lock_ignore_poison(&slot.worker).slot = new_slot;
+            new_slots.push(slot);
+        }
+        // stop and join the threads of workers the new placement dropped
+        for slot in old.into_iter().flatten() {
+            if let Some(t) = slot.thread {
+                let _ = t.jobs.send(Job::Stop);
+                let _ = t.join.join();
+            }
+        }
+        self.slots = new_slots;
     }
 
     /// Stop and join all worker threads, dropping the workers.
@@ -374,6 +521,7 @@ impl ExecutorPool {
         }
         self.slots.clear();
         self.results = None;
+        self.res_tx = None;
     }
 
     /// Number of installed executors.
@@ -391,25 +539,80 @@ impl ExecutorPool {
         }
     }
 
+    /// Visit every worker mutably in slot order (between steps only, like
+    /// [`ExecutorPool::for_each`]) — the driver's hook for migrating
+    /// per-rank state during incremental reconfiguration.
+    pub fn for_each_mut(&self, mut f: impl FnMut(&mut ExecutorWorker)) {
+        for slot in &self.slots {
+            let mut guard = lock_ignore_poison(&slot.worker);
+            f(&mut guard);
+        }
+    }
+
+    /// Return the previous step's spoils to the workers: gradient buffer
+    /// sets (topped up to one per hosted EST), timing records and staged
+    /// containers. Called by the trainer between steps, so the whole
+    /// grad/timing/staged memory round-trips forever instead of being
+    /// reallocated — leftover spares simply stay with the caller.
+    pub fn refill(
+        &self,
+        grad_sets: &mut Vec<Vec<Vec<f32>>>,
+        timings: &mut Vec<ExecTiming>,
+        staged: &mut Vec<Vec<StagedGrads>>,
+    ) {
+        for slot in &self.slots {
+            let mut w = lock_ignore_poison(&slot.worker);
+            let need = w.contexts.len();
+            while w.arena.len() < need {
+                match grad_sets.pop() {
+                    Some(set) => w.arena.put_set(set),
+                    None => break,
+                }
+            }
+            if w.timing_spare.is_none() {
+                w.timing_spare = timings.pop();
+            }
+            if w.staged_spare.is_none() {
+                w.staged_spare = staged.pop();
+            }
+        }
+    }
+
     /// One global mini-batch over all installed workers. Inline pools run
     /// slot order on the calling thread (the bitwise reference); threaded
     /// pools dispatch to their long-lived workers — in waves of at most
     /// `max_threads` when capped — and return results in completion order,
     /// exactly like the spawning [`run_step`] path.
+    ///
+    /// Allocating convenience form of [`ExecutorPool::step_into`].
     pub fn step(&mut self, inp: &StepInputs<'_>) -> Result<Vec<ExecutorOutput>> {
+        let mut outs = Vec::with_capacity(self.slots.len());
+        self.step_into(inp, &mut outs)?;
+        Ok(outs)
+    }
+
+    /// [`ExecutorPool::step`] into a caller buffer (cleared first, capacity
+    /// preserved across steps) — the trainer holds one output vector for
+    /// the job's lifetime, so the per-step barrier drains into recycled
+    /// memory.
+    pub fn step_into(
+        &mut self,
+        inp: &StepInputs<'_>,
+        outs: &mut Vec<ExecutorOutput>,
+    ) -> Result<()> {
+        outs.clear();
+        outs.reserve(self.slots.len());
         let Some(results) = self.results.as_ref() else {
-            let mut outs = Vec::with_capacity(self.slots.len());
             for slot in &self.slots {
                 outs.push(lock_ignore_poison(&slot.worker).run_minibatch(inp)?);
             }
-            return Ok(outs);
+            return Ok(());
         };
         let wave = match self.mode {
             RunMode::Parallel { max_threads } if max_threads > 0 => max_threads,
             _ => self.slots.len(),
         };
         let ptr = inp as *const StepInputs<'_> as *const StepInputs<'static>;
-        let mut outs = Vec::with_capacity(self.slots.len());
         let mut first_err: Option<anyhow::Error> = None;
         for chunk in self.slots.chunks(wave.max(1)) {
             let mut dispatched = 0usize;
@@ -447,7 +650,7 @@ impl ExecutorPool {
             }
         }
         match first_err {
-            None => Ok(outs),
+            None => Ok(()),
             Some(e) => Err(e),
         }
     }
@@ -472,12 +675,14 @@ mod tests {
             .executors
             .iter()
             .enumerate()
-            .map(|(slot, spec)| ExecutorWorker {
-                spec: spec.clone(),
-                slot,
-                contexts: spec.est_ranks.iter().map(|&r| EstContext::new(42, r)).collect(),
-                sampler: DeterministicSampler::new(42, 1024, max_p, m.batch_per_est),
-                data: SharedDataWorkers::new(42, &spec.est_ranks, 4, 2),
+            .map(|(slot, spec)| {
+                ExecutorWorker::new(
+                    spec.clone(),
+                    slot,
+                    spec.est_ranks.iter().map(|&r| EstContext::new(42, r)).collect(),
+                    DeterministicSampler::new(42, 1024, max_p, m.batch_per_est),
+                    SharedDataWorkers::new(42, &spec.est_ranks, 4, 2),
+                )
             })
             .collect()
     }
@@ -640,6 +845,171 @@ mod tests {
         }
         let spawned = run_step(&mut reference, &inp1, RunMode::parallel()).unwrap();
         assert_eq!(staged_bits(&spawned), staged_bits(&pooled));
+    }
+
+    /// The incremental context switch: a delta install keeping one worker
+    /// and freshly building the others must stage exactly the bits a full
+    /// install of identically constructed workers stages — and the kept
+    /// worker's slot index must follow the new placement.
+    #[test]
+    fn install_delta_keeps_survivors_and_matches_full_install() {
+        let engine = Engine::synthetic("tiny").unwrap();
+        let params = engine.manifest.load_init_params().unwrap();
+        let corpus = SyntheticCorpus::new(
+            1,
+            engine.manifest.model.vocab_size,
+            engine.manifest.model.seq_len,
+        );
+        let bufs = engine.upload_params(&params).unwrap();
+        let inp0 = mk_inputs(&engine, &bufs, &corpus, 0);
+
+        // shrink 4 -> 2 (the 4-executor placement hosts one rank each, so
+        // nothing survives verbatim into the 2-executor one: both slots
+        // are Fresh; survival itself is pinned by the Keep branch below)
+        let mut four = ExecutorPool::new(RunMode::parallel());
+        four.install(mk_workers(&engine, 4, 4));
+        four.step(&inp0).unwrap();
+        // new placement: keep old slots 1 and 3 (specs [1] and [3] of a
+        // hypothetical 2-exec placement won't match; build Fresh for them)
+        let fresh: Vec<ExecutorWorker> = mk_workers(&engine, 2, 4)
+            .into_iter()
+            .map(|mut w| {
+                for c in w.contexts.iter_mut() {
+                    c.step = 1;
+                }
+                w.data.prefill(1, &w.spec.est_ranks);
+                w
+            })
+            .collect();
+        let mut it = fresh.into_iter();
+        let plan = vec![
+            SlotPlan::Fresh(Box::new(it.next().unwrap())),
+            SlotPlan::Fresh(Box::new(it.next().unwrap())),
+        ];
+        four.install_delta(plan);
+        assert_eq!(four.n_workers(), 2);
+        let inp1 = mk_inputs(&engine, &bufs, &corpus, 1);
+        let delta_out = four.step(&inp1).unwrap();
+        // reference: full install of the same worker set
+        let mut reference = ExecutorPool::new(RunMode::parallel());
+        reference.install(
+            mk_workers(&engine, 2, 4)
+                .into_iter()
+                .map(|mut w| {
+                    for c in w.contexts.iter_mut() {
+                        c.step = 1;
+                    }
+                    w.data.prefill(1, &w.spec.est_ranks);
+                    w
+                })
+                .collect(),
+        );
+        let full_out = reference.step(&inp1).unwrap();
+        assert_eq!(staged_bits(&full_out), staged_bits(&delta_out));
+
+        // identity delta: keep both workers, reversed into new slots —
+        // slot indices must be rewritten to the new positions
+        four.install_delta(vec![
+            SlotPlan::Keep { old_slot: 1 },
+            SlotPlan::Keep { old_slot: 0 },
+        ]);
+        let mut slots = Vec::new();
+        let mut ranks = Vec::new();
+        four.for_each(|w| {
+            slots.push(w.slot);
+            ranks.push(w.spec.est_ranks.clone());
+        });
+        assert_eq!(slots, vec![0, 1]);
+        assert_eq!(ranks, vec![vec![1, 3], vec![0, 2]]);
+    }
+
+    /// Crossing the inline/threaded boundary: a single-executor (inline)
+    /// pool delta-installed to 3 executors spawns threads for everyone,
+    /// and back down to 1 joins them again — bits unchanged throughout.
+    #[test]
+    fn install_delta_crosses_inline_threaded_boundary() {
+        let engine = Engine::synthetic("tiny").unwrap();
+        let params = engine.manifest.load_init_params().unwrap();
+        let corpus = SyntheticCorpus::new(
+            1,
+            engine.manifest.model.vocab_size,
+            engine.manifest.model.seq_len,
+        );
+        let bufs = engine.upload_params(&params).unwrap();
+        let inp0 = mk_inputs(&engine, &bufs, &corpus, 0);
+        let mut pool = ExecutorPool::new(RunMode::parallel());
+        pool.install(mk_workers(&engine, 1, 3));
+        pool.step(&inp0).unwrap();
+        // 1 -> 3 executors, all fresh (the single old worker is dropped)
+        let plan: Vec<SlotPlan> = mk_workers(&engine, 3, 3)
+            .into_iter()
+            .map(|mut w| {
+                for c in w.contexts.iter_mut() {
+                    c.step = 1;
+                }
+                w.data.prefill(1, &w.spec.est_ranks);
+                SlotPlan::Fresh(Box::new(w))
+            })
+            .collect();
+        pool.install_delta(plan);
+        let inp1 = mk_inputs(&engine, &bufs, &corpus, 1);
+        let grown = pool.step(&inp1).unwrap();
+        let mut reference = mk_workers(&engine, 3, 3);
+        for w in reference.iter_mut() {
+            for c in w.contexts.iter_mut() {
+                c.step = 1;
+            }
+            w.data.prefill(1, &w.spec.est_ranks);
+        }
+        let spawned = run_step(&mut reference, &inp1, RunMode::parallel()).unwrap();
+        assert_eq!(staged_bits(&spawned), staged_bits(&grown));
+        // 3 -> 1: keep old slot 0 only; the pool goes inline again
+        pool.install_delta(vec![SlotPlan::Keep { old_slot: 0 }]);
+        assert_eq!(pool.n_workers(), 1);
+    }
+
+    /// The grad-arena round trip: spoils handed back through `refill` are
+    /// reused (arena stays topped up) and the staged bits never change.
+    #[test]
+    fn refill_recycles_buffers_bitwise() {
+        let engine = Engine::synthetic("tiny").unwrap();
+        let params = engine.manifest.load_init_params().unwrap();
+        let sizes: Vec<usize> = engine.manifest.params.iter().map(|p| p.size).collect();
+        let corpus = SyntheticCorpus::new(
+            1,
+            engine.manifest.model.vocab_size,
+            engine.manifest.model.seq_len,
+        );
+        let bufs = engine.upload_params(&params).unwrap();
+        let mut pool = ExecutorPool::new(RunMode::parallel());
+        let mut workers = mk_workers(&engine, 2, 4);
+        for w in workers.iter_mut() {
+            w.warm_arena(&sizes);
+        }
+        pool.install(workers);
+        let mut spare_grads: Vec<Vec<Vec<f32>>> = Vec::new();
+        let mut spare_timing: Vec<ExecTiming> = Vec::new();
+        let mut spare_staged: Vec<Vec<StagedGrads>> = Vec::new();
+        let mut baseline = mk_workers(&engine, 2, 4);
+        for step in 0..6u64 {
+            let inp = mk_inputs(&engine, &bufs, &corpus, step);
+            pool.refill(&mut spare_grads, &mut spare_timing, &mut spare_staged);
+            let mut outs = pool.step(&inp).unwrap();
+            let spawned = run_step(&mut baseline, &inp, RunMode::parallel()).unwrap();
+            assert_eq!(staged_bits(&spawned), staged_bits(&outs), "step {step} drifted");
+            // hand everything back, dirty, exactly like the trainer does
+            for out in outs.iter_mut() {
+                for sg in out.staged.drain(..) {
+                    spare_grads.push(sg.grads);
+                }
+                spare_staged.push(std::mem::take(&mut out.staged));
+                spare_timing.push(std::mem::take(&mut out.timing));
+            }
+        }
+        // after a refill the arenas are topped back up from the spoils
+        pool.refill(&mut spare_grads, &mut spare_timing, &mut spare_staged);
+        pool.for_each(|w| assert_eq!(w.arena_len(), w.contexts.len()));
+        assert!(spare_grads.is_empty(), "all grad sets back in the arenas");
     }
 
     /// Between steps the trainer reads worker state back (context sync,

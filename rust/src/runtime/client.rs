@@ -27,6 +27,13 @@ pub struct ParamBuffers {
     bufs: Vec<xla::PjRtBuffer>,
 }
 
+/// API-parity stub for the native backend's reusable forward workspace:
+/// the PJRT executables own their workspace device-side, so there is
+/// nothing to reuse host-side — the type exists so executor workers have
+/// one backend-independent field.
+#[derive(Debug, Clone, Default)]
+pub struct FwdScratch;
+
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
@@ -165,6 +172,32 @@ impl Engine {
         Ok(FwdBwdOut { loss, grads })
     }
 
+    /// API parity with the native backend's zero-alloc hot-loop form: the
+    /// PJRT path still allocates host-side result buffers (the executable
+    /// returns fresh literals), so this simply writes the decomposed
+    /// gradients into the caller's buffers.
+    pub fn fwd_bwd_staged(
+        &self,
+        variant: &str,
+        params: &ParamBuffers,
+        tokens: &[i32],
+        rng: [u32; 2],
+        _scratch: &mut FwdScratch,
+        grads: &mut Vec<Vec<f32>>,
+    ) -> Result<f32> {
+        let out = self.fwd_bwd_buffered(variant, params, tokens, rng)?;
+        *grads = out.grads;
+        Ok(out.loss)
+    }
+
+    /// API parity with the native backend: re-upload into the existing
+    /// handle (PJRT device buffers are immutable, so "refresh in place"
+    /// is a fresh upload behind the same `ParamBuffers`).
+    pub fn upload_params_into(&self, params: &[Vec<f32>], bufs: &mut ParamBuffers) -> Result<()> {
+        *bufs = self.upload_params(params)?;
+        Ok(())
+    }
+
     /// One EST microbatch: fwd/bwd with the given kernel variant.
     ///
     /// `params`: flat f32 per tensor (manifest order); `tokens`: flat i32 of
@@ -242,6 +275,25 @@ impl Engine {
             }
         }
         Ok((new_params, new_momenta))
+    }
+
+    /// API parity with the native backend's in-place update: runs the
+    /// fused kernel and writes the results back into the caller's tensors.
+    pub fn opt_update_into(
+        &self,
+        params: &mut [Vec<f32>],
+        momenta: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+    ) -> Result<()> {
+        let (new_params, new_momenta) = self.opt_update(params, momenta, grads, lr)?;
+        for (dst, src) in params.iter_mut().zip(new_params) {
+            *dst = src;
+        }
+        for (dst, src) in momenta.iter_mut().zip(new_momenta) {
+            *dst = src;
+        }
+        Ok(())
     }
 
     /// Dropout-free validation loss on one batch.

@@ -38,9 +38,9 @@ pub struct FwdBwdOut {
 }
 
 #[cfg(feature = "pjrt")]
-pub use client::{Engine, ParamBuffers};
+pub use client::{Engine, FwdScratch, ParamBuffers};
 #[cfg(not(feature = "pjrt"))]
-pub use native::{Engine, ParamBuffers};
+pub use native::{Engine, FwdScratch, ParamBuffers};
 
 pub use manifest::{ArtifactSig, Manifest, ParamInfo, TensorSig};
 #[cfg(feature = "pjrt")]

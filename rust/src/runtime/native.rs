@@ -78,9 +78,28 @@ impl NativeLayout {
 
 /// Device-resident parameter set. In the native substrate "device" memory
 /// is host memory; the single upload per mini-batch shared by all ESTs is
-/// preserved so the hot-loop shape matches the PJRT backend.
+/// preserved so the hot-loop shape matches the PJRT backend. Persistent:
+/// the trainer holds one and refreshes it in place each mini-batch
+/// ([`Engine::upload_params_into`]), so the steady-state "upload" is a
+/// copy, never an allocation.
 pub struct ParamBuffers {
     bufs: Vec<Vec<f32>>,
+}
+
+/// Reusable forward/backward workspace: the activation/softmax temporaries
+/// one EST microbatch needs (`e`, dropout mask, logits, probabilities,
+/// logit gradients). Owned by the caller — each executor worker holds one
+/// — so a steady-state `fwd_bwd_staged` call allocates nothing. Contents
+/// are transient within one call; only *capacity* carries across calls,
+/// and every value is fully overwritten before use, so reuse is bitwise
+/// invisible (pinned in tests).
+#[derive(Debug, Clone, Default)]
+pub struct FwdScratch {
+    e: Vec<f32>,
+    mask: Vec<f32>,
+    z: Vec<f32>,
+    p: Vec<f32>,
+    dz: Vec<f32>,
 }
 
 pub struct Engine {
@@ -129,9 +148,13 @@ impl Engine {
 
     /// Accumulation chunk width of a kernel variant: 0 = plain sequential
     /// (the D2 fixed-schedule kernel), otherwise the per-"architecture"
-    /// tiling that makes vendor variants bitwise-distinct.
+    /// tiling that makes vendor variants bitwise-distinct. Validates
+    /// against the manifest without cloning the artifact path — this runs
+    /// once per EST microbatch on the hot loop.
     fn variant_chunk(&self, variant: &str) -> Result<usize> {
-        self.variant_path(variant)?; // validate against the manifest
+        if !self.manifest.fwd_bwd_variants.contains_key(variant) {
+            return Err(anyhow!("unknown kernel variant '{variant}'"));
+        }
         Ok(match variant {
             "det" => 0,
             "v100" => 16,
@@ -142,7 +165,12 @@ impl Engine {
     }
 
     fn mark_compiled(&self, name: &str) {
-        self.compiled.lock().unwrap().insert(name.to_string());
+        let mut compiled = self.compiled.lock().unwrap();
+        // steady state the variant is already cached: skip the insert so
+        // the hot loop never allocates the key string again
+        if !compiled.contains(name) {
+            compiled.insert(name.to_string());
+        }
     }
 
     /// Pre-"compile" an artifact (API parity with the PJRT engine).
@@ -196,6 +224,23 @@ impl Engine {
         Ok(ParamBuffers { bufs: params.to_vec() })
     }
 
+    /// Refresh a persistent [`ParamBuffers`] in place after an optimizer
+    /// step — the steady-state "upload": a copy into the existing device
+    /// buffers, zero heap allocation when shapes are unchanged.
+    pub fn upload_params_into(&self, params: &[Vec<f32>], bufs: &mut ParamBuffers) -> Result<()> {
+        self.check_params(params)?;
+        bufs.bufs.resize_with(params.len(), Vec::new);
+        for (dst, src) in bufs.bufs.iter_mut().zip(params) {
+            if dst.len() == src.len() {
+                dst.copy_from_slice(src);
+            } else {
+                dst.clear();
+                dst.extend_from_slice(src);
+            }
+        }
+        Ok(())
+    }
+
     /// fwd/bwd against pre-uploaded parameters (the hot-loop form).
     pub fn fwd_bwd_buffered(
         &self,
@@ -208,6 +253,28 @@ impl Engine {
         self.mark_compiled(variant);
         self.check_tokens(tokens)?;
         Ok(self.fwd_bwd_impl(chunk, &params.bufs, tokens, Some(rng), true))
+    }
+
+    /// The allocation-free hot-loop form: fwd/bwd against pre-uploaded
+    /// parameters, writing the per-parameter gradients into caller-owned
+    /// `grads` buffers (resized in place; manifest order) and using the
+    /// caller's [`FwdScratch`] for activations. Returns the loss. Bitwise
+    /// identical to [`Engine::fwd_bwd_buffered`] — same math, same
+    /// summation orders — with zero heap allocation once the buffers have
+    /// warmed up (pinned in tests and `tests/alloc.rs`).
+    pub fn fwd_bwd_staged(
+        &self,
+        variant: &str,
+        params: &ParamBuffers,
+        tokens: &[i32],
+        rng: [u32; 2],
+        scratch: &mut FwdScratch,
+        grads: &mut Vec<Vec<f32>>,
+    ) -> Result<f32> {
+        let chunk = self.variant_chunk(variant)?;
+        self.mark_compiled(variant);
+        self.check_tokens(tokens)?;
+        Ok(self.fwd_bwd_core(chunk, &params.bufs, tokens, Some(rng), true, scratch, grads))
     }
 
     /// One EST microbatch: fwd/bwd with the given kernel variant.
@@ -268,9 +335,39 @@ impl Engine {
         Ok((new_params, new_momenta))
     }
 
-    /// The model math. `chunk` selects the summation order (kernel
-    /// variant); `dropout` is the u32[2] key (None = eval path);
-    /// `with_grads` skips the backward pass for eval.
+    /// In-place fused SGD-momentum: the same elementwise update as
+    /// [`Engine::opt_update`] (`m' = momentum·m + g`, `p' = p − lr·m'`,
+    /// identical operation order so the bits match), applied directly to
+    /// the caller's parameter and momentum tensors — the zero-allocation
+    /// steady-state form.
+    pub fn opt_update_into(
+        &self,
+        params: &mut [Vec<f32>],
+        momenta: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+    ) -> Result<()> {
+        let n = self.manifest.params.len();
+        if params.len() != n || momenta.len() != n || grads.len() != n {
+            bail!("opt_update arity mismatch");
+        }
+        self.mark_compiled("opt_update");
+        let mu = self.manifest.model.momentum as f32;
+        for ((p, m), g) in params.iter_mut().zip(momenta.iter_mut()).zip(grads) {
+            if p.len() != m.len() || p.len() != g.len() {
+                bail!("opt_update tensor length mismatch");
+            }
+            for i in 0..p.len() {
+                let v = mu * m[i] + g[i];
+                m[i] = v;
+                p[i] -= lr * v;
+            }
+        }
+        Ok(())
+    }
+
+    /// The model math, allocating form: wraps [`Engine::fwd_bwd_core`]
+    /// with call-local scratch and gradient buffers.
     fn fwd_bwd_impl(
         &self,
         chunk: usize,
@@ -279,6 +376,33 @@ impl Engine {
         dropout: Option<[u32; 2]>,
         with_grads: bool,
     ) -> FwdBwdOut {
+        let mut scratch = FwdScratch::default();
+        let mut grads = Vec::new();
+        let loss =
+            self.fwd_bwd_core(chunk, params, tokens, dropout, with_grads, &mut scratch, &mut grads);
+        if !with_grads {
+            grads = Vec::new();
+        }
+        FwdBwdOut { loss, grads }
+    }
+
+    /// The model math. `chunk` selects the summation order (kernel
+    /// variant); `dropout` is the u32[2] key (None = eval path);
+    /// `with_grads` skips the backward pass for eval. All workspace comes
+    /// from the caller (`scratch` + `grads`), so the steady-state call
+    /// allocates nothing; every temporary is fully overwritten before use,
+    /// so buffer reuse never reaches the bits.
+    #[allow(clippy::too_many_arguments)]
+    fn fwd_bwd_core(
+        &self,
+        chunk: usize,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        dropout: Option<[u32; 2]>,
+        with_grads: bool,
+        scratch: &mut FwdScratch,
+        grads: &mut Vec<Vec<f32>>,
+    ) -> f32 {
         let m = &self.manifest.model;
         let (v_sz, d) = (m.vocab_size, m.d_model);
         let (b, s) = (m.batch_per_est, m.seq_len);
@@ -286,20 +410,39 @@ impl Engine {
         let head_w = &params[self.layout.head_w];
         let head_b = &params[self.layout.head_b];
 
-        let (mut g_embed, mut g_w, mut g_b) = if with_grads {
-            (vec![0.0f32; embed.len()], vec![0.0f32; head_w.len()], vec![0.0f32; head_b.len()])
-        } else {
-            (Vec::new(), Vec::new(), Vec::new())
-        };
+        // size the caller's gradient buffers in place (clear + resize keeps
+        // capacity; the zero fill reproduces the fresh-allocation init)
+        grads.resize_with(params.len(), Vec::new);
+        for (idx, g) in grads.iter_mut().enumerate() {
+            g.clear();
+            if with_grads {
+                g.resize(params[idx].len(), 0.0);
+            }
+        }
+        // the three layout tensors are distinct indices; take them out so
+        // the backward loops can borrow all three mutably at once
+        let mut g_embed = std::mem::take(&mut grads[self.layout.embed]);
+        let mut g_w = std::mem::take(&mut grads[self.layout.head_w]);
+        let mut g_b = std::mem::take(&mut grads[self.layout.head_b]);
 
         let n_tok = b * s;
         let inv_n = 1.0f32 / n_tok as f32;
         let key = dropout.map(|k| ((k[0] as u64) << 32) | k[1] as u64);
-        let mut e = vec![0.0f32; d];
-        let mut mask = vec![1.0f32; d];
-        let mut z = vec![0.0f32; v_sz];
-        let mut p = vec![0.0f32; v_sz];
-        let mut dz = vec![0.0f32; v_sz];
+        scratch.e.clear();
+        scratch.e.resize(d, 0.0);
+        scratch.mask.clear();
+        scratch.mask.resize(d, 1.0);
+        scratch.z.clear();
+        scratch.z.resize(v_sz, 0.0);
+        scratch.p.clear();
+        scratch.p.resize(v_sz, 0.0);
+        scratch.dz.clear();
+        scratch.dz.resize(v_sz, 0.0);
+        let e = &mut scratch.e;
+        let mask = &mut scratch.mask;
+        let z = &mut scratch.z;
+        let p = &mut scratch.p;
+        let dz = &mut scratch.dz;
         let mut loss_sum = 0.0f32;
 
         for bi in 0..b {
@@ -354,16 +497,10 @@ impl Engine {
             }
         }
 
-        let grads = if with_grads {
-            let mut out: Vec<Vec<f32>> = vec![Vec::new(); params.len()];
-            out[self.layout.embed] = g_embed;
-            out[self.layout.head_w] = g_w;
-            out[self.layout.head_b] = g_b;
-            out
-        } else {
-            Vec::new()
-        };
-        FwdBwdOut { loss: loss_sum * inv_n, grads }
+        grads[self.layout.embed] = g_embed;
+        grads[self.layout.head_w] = g_w;
+        grads[self.layout.head_b] = g_b;
+        loss_sum * inv_n
     }
 }
 
@@ -417,6 +554,77 @@ mod tests {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<Engine>();
         assert_send_sync::<ParamBuffers>();
+        assert_send_sync::<FwdScratch>();
+    }
+
+    /// The zero-alloc hot-loop form must be bitwise identical to the
+    /// allocating form — including when its scratch and gradient buffers
+    /// are dirty from earlier calls of different shapes/variants.
+    #[test]
+    fn fwd_bwd_staged_matches_buffered_with_dirty_buffers() {
+        let eng = engine();
+        let params = eng.manifest.load_init_params().unwrap();
+        let bufs = eng.upload_params(&params).unwrap();
+        let mut scratch = FwdScratch::default();
+        let mut grads: Vec<Vec<f32>> = vec![vec![9.0; 3]; 7]; // dirty, wrong shape
+        for (i, variant) in ["det", "v100", "p100", "t4", "det"].iter().enumerate() {
+            let tokens = some_tokens(&eng, 10 + i as u64);
+            let key = dropout_key(3, i, i as u64);
+            let fresh = eng.fwd_bwd_buffered(variant, &bufs, &tokens, key).unwrap();
+            let loss = eng
+                .fwd_bwd_staged(variant, &bufs, &tokens, key, &mut scratch, &mut grads)
+                .unwrap();
+            assert_eq!(loss.to_bits(), fresh.loss.to_bits(), "loss drifted ({variant})");
+            assert_eq!(grads.len(), fresh.grads.len());
+            for (a, b) in grads.iter().zip(&fresh.grads) {
+                assert_eq!(a.len(), b.len());
+                assert!(
+                    a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "staged gradients drifted ({variant})"
+                );
+            }
+        }
+    }
+
+    /// In-place optimizer update == allocating update, bit for bit.
+    #[test]
+    fn opt_update_into_matches_allocating_form() {
+        let eng = engine();
+        let params = eng.manifest.load_init_params().unwrap();
+        let momenta: Vec<Vec<f32>> = params.iter().map(|p| vec![0.125; p.len()]).collect();
+        let grads: Vec<Vec<f32>> =
+            params.iter().map(|p| p.iter().map(|v| v * 0.5 - 0.1).collect()).collect();
+        let (ref_p, ref_m) = eng.opt_update(&params, &momenta, &grads, 0.07).unwrap();
+        let mut ip = params.clone();
+        let mut im = momenta.clone();
+        eng.opt_update_into(&mut ip, &mut im, &grads, 0.07).unwrap();
+        for (a, b) in ip.iter().zip(&ref_p) {
+            assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+        for (a, b) in im.iter().zip(&ref_m) {
+            assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+        // arity mismatch still rejected
+        assert!(eng.opt_update_into(&mut ip[1..].to_vec(), &mut im, &grads, 0.07).is_err());
+    }
+
+    /// Refreshing a persistent ParamBuffers in place == a fresh upload.
+    #[test]
+    fn upload_params_into_refreshes_in_place() {
+        let eng = engine();
+        let params = eng.manifest.load_init_params().unwrap();
+        let mut bufs = eng.upload_params(&params).unwrap();
+        let updated: Vec<Vec<f32>> =
+            params.iter().map(|p| p.iter().map(|v| v + 1.0).collect()).collect();
+        eng.upload_params_into(&updated, &mut bufs).unwrap();
+        let tokens = some_tokens(&eng, 5);
+        let key = dropout_key(1, 0, 0);
+        let fresh = eng.upload_params(&updated).unwrap();
+        let a = eng.fwd_bwd_buffered("det", &bufs, &tokens, key).unwrap();
+        let b = eng.fwd_bwd_buffered("det", &fresh, &tokens, key).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        // shape mismatch rejected, buffers untouched
+        assert!(eng.upload_params_into(&updated[1..], &mut bufs).is_err());
     }
 
     #[test]

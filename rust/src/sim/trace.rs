@@ -87,6 +87,82 @@ impl TraceJob {
         spec.min_p = self.min_p;
         SimJob::new(self.id, spec, self.arrival_s, self.total_steps())
     }
+
+    /// Compress the service demand into a real-trainer step budget in
+    /// `1..=cap`: linear in log-duration (the duration distribution is
+    /// log-uniform over [30 s, 24 h]), so the replayed cluster preserves
+    /// the trace's relative job-length ordering at tiny-engine scale.
+    pub fn replay_steps(&self, cap: u64) -> u64 {
+        let cap = cap.max(1);
+        let (lo, hi) = ((30.0f64).ln(), (24.0 * 3600.0f64).ln());
+        let t = ((self.duration_s.max(1.0).ln() - lo) / (hi - lo)).clamp(0.0, 1.0);
+        1 + (t * (cap - 1) as f64).round() as u64
+    }
+
+    /// One CSV line: `id,workload,arrival_s,max_p,min_p,duration_s`.
+    pub fn to_csv_line(&self) -> String {
+        format!(
+            "{},{},{:.3},{},{},{:.3}",
+            self.id,
+            self.workload.profile().name,
+            self.arrival_s,
+            self.max_p,
+            self.min_p,
+            self.duration_s
+        )
+    }
+}
+
+/// Write an arrival schedule as CSV (with header) — the file format
+/// `easyscale cluster --trace` replays against real jobs.
+pub fn write_trace_csv(path: &std::path::Path, jobs: &[TraceJob]) -> std::io::Result<()> {
+    let mut out = String::from("id,workload,arrival_s,max_p,min_p,duration_s\n");
+    for j in jobs {
+        out.push_str(&j.to_csv_line());
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+}
+
+/// Parse a trace CSV written by [`write_trace_csv`] (header optional,
+/// blank lines ignored).
+pub fn read_trace_csv(path: &std::path::Path) -> anyhow::Result<Vec<TraceJob>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading trace {}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with("id,") {
+            continue;
+        }
+        let parts: Vec<&str> = line.split(',').map(|p| p.trim()).collect();
+        if parts.len() != 6 {
+            anyhow::bail!("trace line {}: expected 6 fields, got {}", ln + 1, parts.len());
+        }
+        let workload = Workload::by_name(parts[1]).ok_or_else(|| {
+            anyhow::anyhow!("trace line {}: unknown workload '{}'", ln + 1, parts[1])
+        })?;
+        out.push(TraceJob {
+            id: parts[0]
+                .parse()
+                .map_err(|e| anyhow::anyhow!("trace line {}: bad id: {e}", ln + 1))?,
+            workload,
+            arrival_s: parts[2]
+                .parse()
+                .map_err(|e| anyhow::anyhow!("trace line {}: bad arrival: {e}", ln + 1))?,
+            max_p: parts[3]
+                .parse()
+                .map_err(|e| anyhow::anyhow!("trace line {}: bad max_p: {e}", ln + 1))?,
+            min_p: parts[4]
+                .parse()
+                .map_err(|e| anyhow::anyhow!("trace line {}: bad min_p: {e}", ln + 1))?,
+            duration_s: parts[5]
+                .parse()
+                .map_err(|e| anyhow::anyhow!("trace line {}: bad duration: {e}", ln + 1))?,
+        });
+    }
+    anyhow::ensure!(!out.is_empty(), "trace {} holds no jobs", path.display());
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -118,6 +194,32 @@ mod tests {
             assert!(j.max_p >= 1 && j.max_p <= 32);
             assert!(j.total_steps() >= 1.0);
         }
+    }
+
+    #[test]
+    fn trace_csv_roundtrips_and_replay_steps_are_bounded() {
+        let jobs = gen_trace(5, 20, 45.0);
+        let path = std::env::temp_dir().join("easyscale_trace_roundtrip_test.csv");
+        write_trace_csv(&path, &jobs).unwrap();
+        let back = read_trace_csv(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(jobs.len(), back.len());
+        for (a, b) in jobs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.workload, b.workload);
+            assert_eq!(a.max_p, b.max_p);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-2);
+            assert!((a.duration_s - b.duration_s).abs() < 1e-2);
+            let steps = a.replay_steps(12);
+            assert!((1..=12).contains(&steps), "steps {steps} out of range");
+        }
+        // longer jobs never get fewer replay steps
+        let mut sorted = jobs.clone();
+        sorted.sort_by(|x, y| x.duration_s.partial_cmp(&y.duration_s).unwrap());
+        for w in sorted.windows(2) {
+            assert!(w[0].replay_steps(12) <= w[1].replay_steps(12));
+        }
+        assert!(read_trace_csv(std::path::Path::new("/nonexistent/trace.csv")).is_err());
     }
 
     #[test]

@@ -103,11 +103,88 @@ impl ClusterReport {
 struct Slot<'e> {
     job: ClusterJob,
     /// Built when the scheduler first grants GPUs; torn down at budget.
+    /// Under the concurrent driver the session lives on its persistent
+    /// runner thread instead (this stays `None` while it does).
     session: Option<ElasticSession<'e>>,
     mailbox: Mailbox,
     started: Option<Instant>,
     report: Option<SessionReport>,
     final_gpus: GpuVector,
+    /// Round at which this job arrives (0 = immediately; used by the
+    /// `cluster --trace` replay). Jobs are admitted to the scheduler's
+    /// FIFO only once the cluster clock reaches this round.
+    arrival_round: u64,
+    arrived: bool,
+    /// Last step rate reported by the job's runner thread (the concurrent
+    /// driver's substitute for reading the session directly).
+    observed_rate: f64,
+}
+
+/// What the concurrent driver sends a persistent job-runner thread.
+#[cfg(not(feature = "pjrt"))]
+enum RunnerCmd {
+    /// Step the session up to this many rounds, then report back.
+    Run(u64),
+    /// Assemble the final report (with the driver-measured wall-clock)
+    /// and exit.
+    Retire { wall_s: f64 },
+}
+
+/// What a job-runner thread reports back to the driver.
+#[cfg(not(feature = "pjrt"))]
+enum RunnerReply {
+    Ran { finished: bool, rate: f64, error: Option<anyhow::Error> },
+    Retired(Box<SessionReport>),
+}
+
+/// The driver's handle to one persistent job-runner thread.
+#[cfg(not(feature = "pjrt"))]
+struct JobRunner {
+    cmd: std::sync::mpsc::Sender<RunnerCmd>,
+    reply: std::sync::mpsc::Receiver<RunnerReply>,
+}
+
+/// The persistent per-job runner loop: owns its [`ElasticSession`] for the
+/// job's whole life, stepping it in `decide_every`-round epochs on
+/// command. Spawned once when the scheduler first places the job, exits at
+/// retirement (or when the driver drops the command channel) — never
+/// re-spawned per scheduling epoch. Panics inside a session step are
+/// converted into an error reply so the epoch barrier can never deadlock.
+#[cfg(not(feature = "pjrt"))]
+fn job_runner(
+    mut session: ElasticSession<'_>,
+    cmds: std::sync::mpsc::Receiver<RunnerCmd>,
+    replies: std::sync::mpsc::Sender<RunnerReply>,
+) {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    while let Ok(cmd) = cmds.recv() {
+        match cmd {
+            RunnerCmd::Run(rounds) => {
+                let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<bool> {
+                    for _ in 0..rounds {
+                        if session.step_once()?.is_none() {
+                            return Ok(true); // budget reached
+                        }
+                    }
+                    Ok(false)
+                }));
+                let (finished, error) = match outcome {
+                    Ok(Ok(done)) => (done, None),
+                    Ok(Err(e)) => (false, Some(e)),
+                    Err(_) => (false, Some(anyhow::anyhow!("job runner thread panicked"))),
+                };
+                let rate = session.trainer.last_step_rate();
+                if replies.send(RunnerReply::Ran { finished, rate, error }).is_err() {
+                    return; // driver gone; nobody left to report to
+                }
+            }
+            RunnerCmd::Retire { wall_s } => {
+                let report = session.report(wall_s);
+                let _ = replies.send(RunnerReply::Retired(Box::new(report)));
+                return;
+            }
+        }
+    }
 }
 
 /// N real elastic jobs on one shared fleet, arbitrated by the extracted
@@ -157,6 +234,14 @@ impl<'e> ClusterRuntime<'e> {
     /// the bitwise guarantee (paper §3.3, the same rule
     /// [`crate::sched::AiMasterDirector`] applies).
     pub fn submit(&mut self, job: ClusterJob) -> usize {
+        self.submit_at(job, 0)
+    }
+
+    /// [`ClusterRuntime::submit`] with a deferred arrival: the job joins
+    /// the scheduler's FIFO only once the cluster clock reaches
+    /// `arrival_round` global rounds — the replay hook that lets a
+    /// `gen_trace` arrival schedule drive real jobs (`cluster --trace`).
+    pub fn submit_at(&mut self, job: ClusterJob, arrival_round: u64) -> usize {
         let mut spec = JobSpec::new(job.workload, job.cfg.max_p);
         spec.d2 = job.cfg.determinism.d2;
         let id = self.scheduler.add_job(spec);
@@ -171,8 +256,28 @@ impl<'e> ClusterRuntime<'e> {
             started: None,
             report: None,
             final_gpus: [0, 0, 0],
+            arrival_round,
+            arrived: false,
+            observed_rate: 0.0,
         });
         id
+    }
+
+    /// Admit every job whose arrival round has come. Ties (and the default
+    /// all-at-round-0 submissions) keep submission order: the scheduler's
+    /// FIFO breaks equal arrival times by job id.
+    fn admit(&mut self, round: u64) {
+        for id in 0..self.slots.len() {
+            if !self.slots[id].arrived && self.slots[id].arrival_round <= round {
+                self.slots[id].arrived = true;
+                self.scheduler.arrive(id, self.slots[id].arrival_round as f64);
+            }
+        }
+    }
+
+    /// Earliest arrival round among jobs still waiting to arrive.
+    fn next_arrival_round(&self) -> Option<u64> {
+        self.slots.iter().filter(|s| !s.arrived).map(|s| s.arrival_round).min()
     }
 
     pub fn n_jobs(&self) -> usize {
@@ -185,16 +290,15 @@ impl<'e> ClusterRuntime<'e> {
     }
 
     /// Drive every job to its step budget, arbitrating the fleet between
-    /// them; returns per-job reports plus aggregate stats.
+    /// them; returns per-job reports plus aggregate stats. Jobs submitted
+    /// with a deferred arrival join the FIFO when the cluster clock (in
+    /// global rounds) reaches their arrival round.
     pub fn run(&mut self) -> Result<ClusterReport> {
         ensure!(!self.slots.is_empty(), "no jobs submitted");
         ensure!(
             self.scheduler.fleet().iter().sum::<usize>() > 0,
             "cluster fleet holds zero GPUs"
         );
-        for id in 0..self.slots.len() {
-            self.scheduler.arrive(id, id as f64); // FIFO by submission order
-        }
         if self.job_threads != 1 {
             self.run_concurrent()
         } else {
@@ -211,6 +315,7 @@ impl<'e> ClusterRuntime<'e> {
         let mut round = 0u64;
         let mut need_decide = false;
         loop {
+            self.admit(round);
             // at most one replanning round per step round: the boundary
             // cadence and the post-finish fallback used to be able to both
             // fire in the same round, double-counting `decisions`
@@ -238,6 +343,15 @@ impl<'e> ClusterRuntime<'e> {
                 break;
             }
             if !progressed && !need_decide {
+                if self.slots.iter().all(|s| s.session.is_none()) {
+                    if let Some(next) = self.next_arrival_round() {
+                        // idle gap before the next arrival: fast-forward
+                        // the cluster clock instead of spinning
+                        round = round.max(next);
+                        need_decide = true;
+                        continue;
+                    }
+                }
                 // nobody holds GPUs: force a replanning round (unless this
                 // round already replanned); if that cannot seed anyone
                 // either, the fleet is unusable
@@ -254,79 +368,121 @@ impl<'e> ClusterRuntime<'e> {
         self.final_report(t0.elapsed().as_secs_f64(), decisions, reconfigs)
     }
 
-    /// The concurrent driver: between two scheduling barriers every placed
-    /// job steps up to `decide_every` rounds **on its own thread** (in
-    /// waves of at most `job_threads` when capped), so one slow job delays
-    /// only the next decision, not every other job's mini-batches. Under
-    /// D1(+D2) the fingerprints are bitwise identical to the round-robin
-    /// driver — placement and scheduling timing never reach the bits
-    /// (`tests/cluster.rs`).
+    /// The concurrent driver: every placed job runs on a **persistent
+    /// runner thread** that lives across scheduling epochs, driven by a
+    /// command channel — between two scheduling barriers each runner steps
+    /// its session up to `decide_every` rounds (dispatched in waves of at
+    /// most `job_threads` when capped), so one slow job delays only the
+    /// next decision, not every other job's mini-batches, and no thread is
+    /// re-spawned per epoch (the ROADMAP refinement this replaces). The
+    /// decide-every barrier is preserved — every dispatched runner answers
+    /// before the driver replans — so decisions stay calib-invariant, and
+    /// under D1(+D2) the fingerprints are bitwise identical to the
+    /// round-robin driver (`tests/cluster.rs`).
     #[cfg(not(feature = "pjrt"))]
     fn run_concurrent(&mut self) -> Result<ClusterReport> {
         let t0 = Instant::now();
         let rounds = self.decide_every;
-        let wave = if self.job_threads == 0 { self.slots.len() } else { self.job_threads };
+        let cap = self.job_threads;
+        let n = self.slots.len();
         let mut decisions = 0u64;
         let mut reconfigs = 0u64;
-        let mut epoch = 0u64;
-        loop {
-            // the scheduling barrier: observe rates, replan, mail events
-            reconfigs += self.decide(epoch * rounds, &mut decisions)?;
-            ensure!(
-                self.slots.iter().any(|s| s.session.is_some()),
-                "cluster stalled: no job can be placed on the fleet"
-            );
-            let mut finished: Vec<usize> = Vec::new();
-            {
-                let mut running: Vec<(usize, &mut ElasticSession<'e>)> = self
-                    .slots
-                    .iter_mut()
-                    .enumerate()
-                    .filter_map(|(id, s)| s.session.as_mut().map(|sess| (id, sess)))
+        std::thread::scope(|scope| -> Result<()> {
+            let mut runners: Vec<Option<JobRunner>> = (0..n).map(|_| None).collect();
+            let mut epoch = 0u64;
+            loop {
+                let round = epoch * rounds;
+                self.admit(round);
+                // the scheduling barrier: observe rates, replan, mail events
+                reconfigs += self.decide(round, &mut decisions)?;
+                // newly placed sessions move onto fresh persistent runners
+                for id in 0..n {
+                    if let Some(session) = self.slots[id].session.take() {
+                        let (cmd_tx, cmd_rx) = std::sync::mpsc::channel();
+                        let (rep_tx, rep_rx) = std::sync::mpsc::channel();
+                        scope.spawn(move || job_runner(session, cmd_rx, rep_tx));
+                        runners[id] = Some(JobRunner { cmd: cmd_tx, reply: rep_rx });
+                    }
+                }
+                let active: Vec<usize> = (0..n)
+                    .filter(|&id| runners[id].is_some() && self.slots[id].report.is_none())
                     .collect();
-                for chunk in running.chunks_mut(wave.max(1)) {
-                    let results: Vec<(usize, Result<bool>)> = std::thread::scope(|scope| {
-                        let handles: Vec<_> = chunk
-                            .iter_mut()
-                            .map(|item| {
-                                let id = item.0;
-                                let session = &mut *item.1;
-                                let handle = scope.spawn(move || -> Result<bool> {
-                                    for _ in 0..rounds {
-                                        if session.step_once()?.is_none() {
-                                            return Ok(true); // budget reached
-                                        }
-                                    }
-                                    Ok(false)
-                                });
-                                (id, handle)
-                            })
-                            .collect();
-                        handles
-                            .into_iter()
-                            .map(|(id, h)| {
-                                let res = h.join().unwrap_or_else(|_| {
-                                    Err(anyhow::anyhow!("job {id} thread panicked"))
-                                });
-                                (id, res)
-                            })
-                            .collect()
-                    });
-                    for (id, res) in results {
-                        if res? {
-                            finished.push(id);
+                if active.is_empty() {
+                    if let Some(next) = self.next_arrival_round() {
+                        // idle gap before the next arrival: fast-forward
+                        epoch = epoch.max(next.div_ceil(rounds.max(1)));
+                        continue;
+                    }
+                    anyhow::bail!("cluster stalled: no job can be placed on the fleet");
+                }
+                // one epoch: dispatch Run commands in waves, collect every
+                // reply before replanning (the barrier)
+                let wave = if cap == 0 { active.len() } else { cap.max(1) };
+                let mut finished: Vec<usize> = Vec::new();
+                for chunk in active.chunks(wave.max(1)) {
+                    for &id in chunk {
+                        let runner = runners[id].as_ref().expect("active job without runner");
+                        runner
+                            .cmd
+                            .send(RunnerCmd::Run(rounds))
+                            .map_err(|_| anyhow::anyhow!("job {id} runner thread is gone"))?;
+                    }
+                    for &id in chunk {
+                        let runner = runners[id].as_ref().expect("active job without runner");
+                        match runner.reply.recv() {
+                            Ok(RunnerReply::Ran { finished: done, rate, error }) => {
+                                if let Some(e) = error {
+                                    return Err(e);
+                                }
+                                self.slots[id].observed_rate = rate;
+                                if done {
+                                    finished.push(id);
+                                }
+                            }
+                            Ok(RunnerReply::Retired(_)) => {
+                                return Err(anyhow::anyhow!(
+                                    "job {id} runner retired unexpectedly"
+                                ));
+                            }
+                            Err(_) => {
+                                return Err(anyhow::anyhow!(
+                                    "job {id} runner thread exited unexpectedly"
+                                ));
+                            }
                         }
                     }
                 }
+                for id in finished {
+                    // retire through the runner: it owns the session
+                    self.slots[id].final_gpus = self.scheduler.held(id);
+                    let wall = self.slots[id]
+                        .started
+                        .map(|t| t.elapsed().as_secs_f64())
+                        .unwrap_or(0.0);
+                    let runner = runners[id].take().expect("finished job without runner");
+                    runner
+                        .cmd
+                        .send(RunnerCmd::Retire { wall_s: wall })
+                        .map_err(|_| anyhow::anyhow!("job {id} runner thread is gone"))?;
+                    match runner.reply.recv() {
+                        Ok(RunnerReply::Retired(report)) => {
+                            self.slots[id].report = Some(*report);
+                        }
+                        _ => {
+                            return Err(anyhow::anyhow!(
+                                "job {id} runner failed to deliver its report"
+                            ));
+                        }
+                    }
+                    let released = self.scheduler.finish(id);
+                    crate::info!("cluster", "job {id} finished, released {released:?} GPUs");
+                }
+                if self.slots.iter().all(|s| s.report.is_some()) {
+                    return Ok(());
+                }
+                epoch += 1;
             }
-            for id in finished {
-                self.retire(id);
-            }
-            if self.slots.iter().all(|s| s.report.is_some()) {
-                break;
-            }
-            epoch += 1;
-        }
+        })?;
         self.final_report(t0.elapsed().as_secs_f64(), decisions, reconfigs)
     }
 
@@ -377,13 +533,19 @@ impl<'e> ClusterRuntime<'e> {
     fn decide(&mut self, round: u64, decisions: &mut u64) -> Result<u64> {
         *decisions += 1;
         // Fig. 9: observed step rates calibrate each running job's waste
-        // model before it proposes
+        // model before it proposes. Round-robin jobs are read directly;
+        // jobs living on runner threads report through `observed_rate` at
+        // the epoch barrier.
         for id in 0..self.slots.len() {
-            if let Some(session) = self.slots[id].session.as_ref() {
-                let rate = session.trainer.last_step_rate();
-                if rate > 0.0 {
-                    self.scheduler.master_mut(id).observe(rate);
-                }
+            if self.slots[id].report.is_some() {
+                continue; // finished: nothing to observe
+            }
+            let rate = match self.slots[id].session.as_ref() {
+                Some(session) => session.trainer.last_step_rate(),
+                None => self.slots[id].observed_rate,
+            };
+            if rate > 0.0 {
+                self.scheduler.master_mut(id).observe(rate);
             }
         }
         let mut mailed = 0u64;
@@ -400,7 +562,12 @@ impl<'e> ClusterRuntime<'e> {
             let spec = self.scheduler.master(id).job.clone();
             let placement = placement_from_config(&spec, &config)
                 .with_context(|| format!("lowering grant {:?} for job {id}", alloc.held))?;
-            if self.slots[id].session.is_none() {
+            // "not yet started" must be judged by `started`, not by the
+            // session slot: under the concurrent driver a *running* job's
+            // session lives on its persistent runner thread and the slot
+            // stays `None` — its reallocations go through the mailbox
+            // (shared with the runner) exactly like round-robin ones.
+            if self.slots[id].session.is_none() && self.slots[id].started.is_none() {
                 debug_assert_eq!(self.scheduler.phase(id), JobPhase::Running);
                 crate::info!(
                     "cluster",

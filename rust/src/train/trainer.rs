@@ -31,9 +31,11 @@ use crate::comm::{
 use crate::data::loader::WorkItem;
 use crate::data::{DeterministicSampler, SharedDataWorkers, SyntheticCorpus};
 use crate::est::{EstContext, StagedGrads};
-use crate::exec::executor::{ExecTiming, KeyMode, Placement};
-use crate::exec::pool::{ExecutorPool, ExecutorWorker, RunMode, StepInputs};
-use crate::runtime::Engine;
+use crate::exec::executor::{ExecTiming, KeyMode, Placement, PlacementDelta};
+use crate::exec::pool::{
+    ExecutorOutput, ExecutorPool, ExecutorWorker, RunMode, SlotPlan, StepInputs,
+};
+use crate::runtime::{Engine, ParamBuffers};
 use crate::train::determinism::Determinism;
 
 #[derive(Debug, Clone)]
@@ -116,6 +118,21 @@ pub struct Trainer {
     /// reused virtual-rank table + ranked staging buffer
     slot_table: SlotTable,
     ranked: Vec<StagedGrads>,
+    /// persistent device-resident parameters, refreshed in place after
+    /// every optimizer step (the steady-state "upload" is a copy)
+    param_bufs: ParamBuffers,
+    /// reused per-step executor-output buffer (the barrier drains here)
+    outs: Vec<ExecutorOutput>,
+    /// spoils of the previous step, recycled into the workers between
+    /// steps (`ExecutorPool::refill`): gradient buffer sets, timing
+    /// records, staged-gradient containers
+    spare_grads: Vec<Vec<Vec<f32>>>,
+    spare_timing: Vec<ExecTiming>,
+    spare_staged: Vec<Vec<StagedGrads>>,
+    /// cached `placement.groups()` (physical-aggregation topology),
+    /// rebuilt on (re)placement so the `none`-determinism path does not
+    /// re-clone rank lists every step
+    groups: Vec<Vec<usize>>,
     /// mean training loss per completed step
     pub loss_history: Vec<f32>,
     /// timing of the last mini-batch per executor slot (for benches)
@@ -147,6 +164,7 @@ impl Trainer {
         anyhow::ensure!(placement.max_p() == cfg.max_p, "placement hosts {} ESTs, cfg.max_p = {}",
             placement.max_p(), cfg.max_p);
         let params = engine.manifest.load_init_params()?;
+        let param_bufs = engine.upload_params(&params)?;
         let momenta: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
         let seed = cfg.effective_seed();
         let est_contexts: Vec<EstContext> =
@@ -176,6 +194,12 @@ impl Trainer {
             grad_bufs: Vec::new(),
             slot_table: SlotTable::new(0),
             ranked: Vec::new(),
+            param_bufs,
+            outs: Vec::new(),
+            spare_grads: Vec::new(),
+            spare_timing: Vec::new(),
+            spare_staged: Vec::new(),
+            groups: Vec::new(),
             loss_history: Vec::new(),
             last_timing: Vec::new(),
             last_step_wall_s: 0.0,
@@ -193,14 +217,8 @@ impl Trainer {
     /// (re)spawned. `data_seed`/`init` carry the determinism-level
     /// semantics of the data-worker queues across restarts.
     fn rebuild_workers(&mut self, data_seed: u64, init: DataInit) {
-        let seed = self.cfg.effective_seed();
         let mut workers = Vec::with_capacity(self.placement.executors.len());
         for (slot, spec) in self.placement.executors.iter().enumerate() {
-            let contexts: Vec<EstContext> = spec
-                .est_ranks
-                .iter()
-                .map(|&r| self.state.est_contexts[r].clone())
-                .collect();
             let mut data = SharedDataWorkers::new(data_seed, &spec.est_ranks, 4, 2);
             match &init {
                 DataInit::Prefill(from_step) => data.prefill(*from_step, &spec.est_ranks),
@@ -213,23 +231,51 @@ impl Trainer {
                     data.restore(mine);
                 }
             }
-            workers.push(ExecutorWorker {
-                spec: spec.clone(),
-                slot,
-                contexts,
-                sampler: DeterministicSampler::new(
-                    seed,
-                    self.cfg.dataset_size,
-                    self.cfg.max_p,
-                    self.batch_per_est,
-                ),
-                data,
-            });
+            workers.push(self.build_worker(spec.clone(), slot, data));
         }
         self.pool.install(workers);
-        // pre-size the aggregation scratch so even the first step on the
-        // new placement grows nothing in the hot loop
+        self.reserve_step_buffers();
+    }
+
+    /// One freshly built executor worker over the given data pool:
+    /// contexts cloned from the checkpointable state, a sampler clone, and
+    /// a pre-warmed gradient arena (one full-sized buffer set per hosted
+    /// EST — allocated here, at build time, never on the hot path).
+    fn build_worker(
+        &self,
+        spec: crate::exec::ExecutorSpec,
+        slot: usize,
+        data: SharedDataWorkers,
+    ) -> ExecutorWorker {
+        let seed = self.cfg.effective_seed();
+        let contexts: Vec<EstContext> = spec
+            .est_ranks
+            .iter()
+            .map(|&r| self.state.est_contexts[r].clone())
+            .collect();
+        let sampler = DeterministicSampler::new(
+            seed,
+            self.cfg.dataset_size,
+            self.cfg.max_p,
+            self.batch_per_est,
+        );
+        let mut w = ExecutorWorker::new(spec, slot, contexts, sampler, data);
+        w.warm_arena(&self.param_sizes);
+        w
+    }
+
+    /// Pre-size every reusable per-step buffer for the current placement —
+    /// aggregation scratch, output vector, spoils pools — so even the
+    /// first mini-batch after a (re)build grows nothing in the hot loop.
+    fn reserve_step_buffers(&mut self) {
         self.scratch.reserve_for(&self.state.bucket_plan, &self.param_sizes, self.cfg.max_p);
+        self.groups = self.placement.groups();
+        let n_exec = self.placement.executors.len();
+        self.outs.reserve(n_exec);
+        self.spare_grads.reserve(self.cfg.max_p);
+        self.spare_timing.reserve(n_exec);
+        self.spare_staged.reserve(n_exec);
+        self.ranked.reserve(self.cfg.max_p);
     }
 
     /// All workers' pending data-worker items, in deterministic
@@ -241,44 +287,63 @@ impl Trainer {
         out
     }
 
-    /// One global mini-batch across all executors and ESTs: submit the
-    /// step to the persistent executor pool, collect staged gradients in
-    /// completion order, re-index by virtual rank, aggregate through the
-    /// reusable scratch, apply the fused update. Steady state, this path
-    /// spawns no threads and grows no buffers.
+    /// One global mini-batch across all executors and ESTs: recycle the
+    /// previous step's buffers into the workers, refresh the persistent
+    /// device parameters in place, submit the step to the persistent
+    /// executor pool, collect staged gradients in completion order,
+    /// re-index by virtual rank, aggregate through the reusable scratch,
+    /// and apply the fused update in place. Steady state, this path spawns
+    /// no threads and performs **zero heap allocation** on the native
+    /// engine (pinned by `tests/alloc.rs`).
     pub fn step(&mut self, engine: &Engine) -> Result<f32> {
         let step = self.state.step;
         let seed = self.cfg.effective_seed();
-        // one device upload of the shared parameters per mini-batch; every
-        // EST of every executor reuses it (paper: parameters are shared and
-        // reused across EasyScaleThread switches)
-        let param_bufs = engine.upload_params(&self.state.params)?;
-        let inp = StepInputs {
-            engine,
-            params: &param_bufs,
-            corpus: &self.corpus,
-            seed,
-            step,
-            d2: self.cfg.determinism.d2,
-            key_mode: self.key_mode(),
-            aug_rate: self.cfg.aug_rate,
-        };
-        let outs = self.pool.step(&inp)?;
+        // recycle the previous step's spoils: timing records drain back to
+        // the spares, then every worker's arena/timing/staged pools are
+        // topped back up
+        {
+            let Trainer { last_timing, spare_timing, .. } = self;
+            spare_timing.extend(last_timing.drain(..));
+        }
+        self.pool.refill(&mut self.spare_grads, &mut self.spare_timing, &mut self.spare_staged);
+        // one device "upload" of the shared parameters per mini-batch —
+        // a copy into the persistent buffers; every EST of every executor
+        // reuses it (paper: parameters are shared and reused across
+        // EasyScaleThread switches)
+        engine.upload_params_into(&self.state.params, &mut self.param_bufs)?;
+        {
+            let inp = StepInputs {
+                engine,
+                params: &self.param_bufs,
+                corpus: &self.corpus,
+                seed,
+                step,
+                d2: self.cfg.determinism.d2,
+                key_mode: self.key_mode(),
+                aug_rate: self.cfg.aug_rate,
+            };
+            self.pool.step_into(&inp, &mut self.outs)?;
+        }
 
         let n_exec = self.placement.executors.len();
-        self.last_timing.clear();
         self.last_timing.resize_with(n_exec, ExecTiming::default);
-        self.last_step_wall_s = 0.0;
-        self.last_step_serial_s = 0.0;
         self.slot_table.reset(self.cfg.max_p);
-        for out in outs {
-            self.last_step_serial_s += out.wall_s;
-            self.last_step_wall_s = self.last_step_wall_s.max(out.wall_s);
-            self.last_timing[out.slot] = out.timing;
-            for sg in out.staged {
-                self.slot_table.insert(sg)?;
+        let mut wall = 0.0f64;
+        let mut serial = 0.0f64;
+        {
+            let Trainer { outs, slot_table, last_timing, spare_staged, .. } = self;
+            for mut out in outs.drain(..) {
+                serial += out.wall_s;
+                wall = wall.max(out.wall_s);
+                last_timing[out.slot] = std::mem::take(&mut out.timing);
+                for sg in out.staged.drain(..) {
+                    slot_table.insert(sg)?;
+                }
+                spare_staged.push(out.staged);
             }
         }
+        self.last_step_wall_s = wall;
+        self.last_step_serial_s = serial;
         // virtual-rank order from here on: thread completion order is gone
         self.slot_table.take_ranked(&mut self.ranked)?;
         anyhow::ensure!(
@@ -302,34 +367,55 @@ impl Trainer {
                 &self.state.bucket_plan,
                 &self.ranked,
                 &self.param_sizes,
-                &self.placement.groups(),
+                &self.groups,
                 &mut self.scratch,
                 &mut self.grad_bufs,
             );
         }
 
-        let (params, momenta) = engine.opt_update(
-            &self.state.params,
-            &self.state.momenta,
+        engine.opt_update_into(
+            &mut self.state.params,
+            &mut self.state.momenta,
             &self.grad_bufs,
             self.cfg.lr,
         )?;
-        self.state.params = params;
-        self.state.momenta = momenta;
         self.state.step += 1;
 
-        // sync EST contexts back into the checkpointable state
+        // the staged gradient buffers are dead after aggregation: back to
+        // the spares pool (the loss fields below stay intact)
+        {
+            let Trainer { ranked, spare_grads, .. } = self;
+            for sg in ranked.iter_mut() {
+                spare_grads.push(std::mem::take(&mut sg.grads));
+            }
+        }
+
+        // sync the EST contexts' step counters into the checkpointable
+        // state. `run_minibatch` advances exactly `ctx.step` and nothing
+        // else, so this cheap bump is equivalent to cloning every context
+        // back — the full clone sync happens only at checkpoint and
+        // reconfigure boundaries (`sync_contexts_from_pool`).
+        let next = self.state.step;
+        for c in self.state.est_contexts.iter_mut() {
+            c.step = next;
+        }
+
+        // deterministic loss reduction: by virtual rank order
+        let loss = self.ranked.iter().map(|s| s.loss).sum::<f32>() / self.ranked.len() as f32;
+        self.loss_history.push(loss);
+        Ok(loss)
+    }
+
+    /// Clone every live EST context back into the checkpointable state —
+    /// the boundary-time (checkpoint/reconfigure) counterpart of the cheap
+    /// per-step counter sync in [`Trainer::step`].
+    fn sync_contexts_from_pool(&mut self) {
         let est_contexts = &mut self.state.est_contexts;
         self.pool.for_each(|w| {
             for c in &w.contexts {
                 est_contexts[c.virtual_rank] = c.clone();
             }
         });
-
-        // deterministic loss reduction: by virtual rank order
-        let loss = self.ranked.iter().map(|s| s.loss).sum::<f32>() / self.ranked.len() as f32;
-        self.loss_history.push(loss);
-        Ok(loss)
     }
 
     /// Run `n` mini-batches.
@@ -345,12 +431,41 @@ impl Trainer {
     /// bucket plan travels in the checkpoint; without it, DDP's bucket
     /// reconstruction kicks in on the resumed run (bits drift). Without D0
     /// even the data/dropout identities follow the new physical layout.
+    ///
+    /// Under D0, when the new placement shares executors with the old one,
+    /// the **incremental fast path** runs: the placement is diffed into
+    /// kept/moved/new EST sets ([`Placement::diff`]), surviving workers —
+    /// threads, contexts, per-rank data queues — stay alive, moved ranks'
+    /// queues migrate verbatim, and only the delta is built
+    /// ([`ExecutorPool::install_delta`]). Bit-for-bit equal to the full
+    /// rebuild ([`Trainer::reconfigure_full`], the oracle and the D0-off
+    /// path) — pinned in `tests/reconfig.rs`, timed in
+    /// `benches/reconfig_latency.rs`.
     pub fn reconfigure(&mut self, new_placement: Placement) -> Result<()> {
+        self.reconfigure_with(new_placement, true)
+    }
+
+    /// The full-rebuild reconfiguration: tear down every worker, thread
+    /// and data queue and rebuild from the on-demand checkpoint state.
+    /// Kept as the bitwise oracle the incremental path is verified and
+    /// benchmarked against.
+    pub fn reconfigure_full(&mut self, new_placement: Placement) -> Result<()> {
+        self.reconfigure_with(new_placement, false)
+    }
+
+    fn reconfigure_with(
+        &mut self,
+        new_placement: Placement,
+        allow_incremental: bool,
+    ) -> Result<()> {
         new_placement.validate()?;
         anyhow::ensure!(
             new_placement.max_p() == self.cfg.max_p,
             "reconfiguration must preserve maxP ESTs"
         );
+        // boundary-time full context sync (the per-step path only bumps
+        // step counters)
+        self.sync_contexts_from_pool();
         self.state.restart_count += 1;
         let restart = self.state.restart_count;
 
@@ -361,6 +476,17 @@ impl Trainer {
                 .state
                 .bucket_plan
                 .rebuilt_in_arrival_order(restart ^ new_placement.n_gpus() as u64);
+        }
+        // the incremental path carries live per-rank queue state, which is
+        // only meaningful under D0 (without it streams are reseeded per
+        // restart — the full rebuild is the semantics)
+        let delta = self.placement.diff(&new_placement);
+        if allow_incremental
+            && self.cfg.determinism.d0
+            && !delta.kept.is_empty()
+            && delta.new_ranks.is_empty()
+        {
+            return self.reconfigure_incremental(new_placement, delta);
         }
         let (data_seed, init) = if self.cfg.determinism.d0 {
             // data-worker queue states are part of the on-demand checkpoint
@@ -374,9 +500,61 @@ impl Trainer {
         Ok(())
     }
 
+    /// The incremental context switch: keep surviving executors alive and
+    /// build/move only the delta. Moved ranks' data queues (items + exact
+    /// production cursor) are harvested from the retiring workers and
+    /// adopted verbatim by the new hosts — item RNG states are pure
+    /// functions of (seed, rank, step), so the migrated stream is
+    /// bit-identical to what a full restore would rebuild.
+    fn reconfigure_incremental(
+        &mut self,
+        new_placement: Placement,
+        delta: PlacementDelta,
+    ) -> Result<()> {
+        use std::collections::BTreeMap;
+        let seed = self.cfg.effective_seed();
+        // 1. harvest moved ranks' queues from the workers that lose them
+        let moved: std::collections::BTreeSet<usize> =
+            delta.moved_ranks.iter().copied().collect();
+        let mut harvested: BTreeMap<usize, (Vec<WorkItem>, Option<u64>)> = BTreeMap::new();
+        self.pool.for_each_mut(|w| {
+            for r in w.spec.est_ranks.clone() {
+                if moved.contains(&r) {
+                    if let Some(q) = w.data.take_rank(r) {
+                        harvested.insert(r, q);
+                    }
+                }
+            }
+        });
+        // 2. slot plan over the new placement: kept executors survive
+        //    verbatim, everything else is freshly built with its moved
+        //    ranks' queues adopted
+        let kept_by_new: BTreeMap<usize, usize> =
+            delta.kept.iter().map(|&(old, new)| (new, old)).collect();
+        let mut plan = Vec::with_capacity(new_placement.executors.len());
+        for (slot, spec) in new_placement.executors.iter().enumerate() {
+            if let Some(&old_slot) = kept_by_new.get(&slot) {
+                plan.push(SlotPlan::Keep { old_slot });
+                continue;
+            }
+            let mut data = SharedDataWorkers::new(seed, &spec.est_ranks, 4, 2);
+            for &r in &spec.est_ranks {
+                if let Some((items, cursor)) = harvested.remove(&r) {
+                    data.adopt_rank(r, items, cursor);
+                }
+            }
+            plan.push(SlotPlan::Fresh(Box::new(self.build_worker(spec.clone(), slot, data))));
+        }
+        self.pool.install_delta(plan);
+        self.placement = new_placement;
+        self.reserve_step_buffers();
+        Ok(())
+    }
+
     /// On-demand checkpoint to disk (paper §3.2): fills the queuing-buffer
     /// extra state and persists everything `resume` needs.
     pub fn checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        self.sync_contexts_from_pool();
         self.state.data_items = self.checkpoint_data_items();
         crate::train::Checkpoint::save(path, &self.state)
     }

@@ -5,6 +5,8 @@
 //! with warmup, report mean/p50/p95, and print paper-style tables so the
 //! output can be compared side by side with the paper's reported rows.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 #[derive(Debug, Clone)]
@@ -92,6 +94,45 @@ impl Table {
         for row in &self.rows {
             line(row);
         }
+    }
+}
+
+/// A heap-allocation-counting global allocator for the zero-allocation
+/// pins (`tests/alloc.rs`, `benches/pool_overhead.rs`): every
+/// alloc/realloc/alloc_zeroed bumps a process-global counter read via
+/// [`heap_allocs`]. The caller installs it per binary:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static GLOBAL: easyscale::util::bench::CountingAlloc = CountingAlloc;
+/// ```
+///
+/// The counter is process-global, so measurement windows are only
+/// meaningful while no other thread is allocating concurrently.
+pub struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Heap allocations observed so far (see [`CountingAlloc`]).
+pub fn heap_allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
     }
 }
 

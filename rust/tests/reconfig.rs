@@ -1,0 +1,190 @@
+//! Incremental reconfiguration pins (ISSUE 5): the delta fast path —
+//! surviving workers/threads/queues kept alive, moved ranks migrated,
+//! dirty grad arenas reused throughout — must be **bit-for-bit** equal to
+//! the full-rebuild oracle (`Trainer::reconfigure_full`) and to a
+//! fixed-placement reference, across grow, shrink and device-migration
+//! transitions; and `Placement::diff` must partition the EST ranks into
+//! disjoint kept/moved/new sets covering maxP (property-tested over
+//! random placement pairs).
+
+use easyscale::exec::executor::ExecutorSpec;
+use easyscale::exec::{DeviceType, Placement, RunMode};
+use easyscale::runtime::Engine;
+use easyscale::train::{Determinism, TrainConfig, Trainer};
+use easyscale::util::propcheck::{check, gen};
+use easyscale::util::rng::SplitMix64;
+
+/// Native build only: the synthetic engine always runs; under `pjrt` the
+/// suite needs artifacts and these paths are covered by the native CI.
+#[cfg(not(feature = "pjrt"))]
+fn tiny() -> Option<Engine> {
+    Some(Engine::synthetic("tiny").unwrap())
+}
+
+#[cfg(feature = "pjrt")]
+fn tiny() -> Option<Engine> {
+    None
+}
+
+const V: DeviceType = DeviceType::V100;
+const P: DeviceType = DeviceType::P100;
+const T: DeviceType = DeviceType::T4;
+
+fn cfg(mode: RunMode) -> TrainConfig {
+    TrainConfig { determinism: Determinism::D1_D2, run_mode: mode, ..TrainConfig::new(4) }
+}
+
+/// A placement keeping executor 0 of `homogeneous(V, 2, 4)` alive
+/// (ranks [0,2]) while re-hosting ranks 1 and 3 elsewhere.
+fn split_tail(dev: DeviceType) -> Placement {
+    Placement {
+        executors: vec![
+            ExecutorSpec { device: V, est_ranks: vec![0, 2] },
+            ExecutorSpec { device: dev, est_ranks: vec![1] },
+            ExecutorSpec { device: dev, est_ranks: vec![3] },
+        ],
+    }
+}
+
+/// The headline pin: grow 1 -> 4 executors, shrink 4 -> 2, migrate part
+/// of the fleet across device types mid-run — with reused arenas and the
+/// delta install — and land on exactly the fingerprint of (a) the same
+/// schedule through the full-rebuild oracle and (b) a straight
+/// fixed-placement run.
+#[test]
+fn dirty_arena_delta_reconfigure_matches_full_rebuild_bitwise() {
+    let Some(engine) = tiny() else { return };
+    for mode in [RunMode::Sequential, RunMode::parallel()] {
+        let schedule = |incremental: bool| -> (u64, Vec<f32>) {
+            let mut t =
+                Trainer::new(&engine, cfg(mode), Placement::homogeneous(V, 1, 4)).unwrap();
+            t.run(&engine, 3).unwrap();
+            let stages = [
+                Placement::homogeneous(V, 4, 4), // grow 1 -> 4 (nothing survives: full path)
+                Placement::homogeneous(V, 2, 4), // shrink 4 -> 2 (ditto)
+                split_tail(V),                   // grow 2 -> 3 keeping executor [0,2]
+                Placement::homogeneous(V, 2, 4), // shrink 3 -> 2 keeping executor [0,2]
+                split_tail(P),                   // re-split, ranks 1,3 migrate onto P100s
+                split_tail(T),                   // device migration P100 -> T4, [0,2] kept
+            ];
+            for p in stages {
+                if incremental {
+                    t.reconfigure(p).unwrap();
+                } else {
+                    t.reconfigure_full(p).unwrap();
+                }
+                t.run(&engine, 3).unwrap();
+            }
+            (t.param_fingerprint(), t.loss_history.clone())
+        };
+        let (fast_fp, fast_loss) = schedule(true);
+        let (full_fp, full_loss) = schedule(false);
+        assert_eq!(
+            fast_fp, full_fp,
+            "incremental reconfigure drifted from the full-rebuild oracle ({mode:?})"
+        );
+        for (a, b) in fast_loss.iter().zip(&full_loss) {
+            assert_eq!(a.to_bits(), b.to_bits(), "loss curve drifted ({mode:?})");
+        }
+        // and both equal the never-reconfigured fixed-placement reference
+        let mut flat =
+            Trainer::new(&engine, cfg(mode), Placement::homogeneous(V, 2, 4)).unwrap();
+        flat.run(&engine, 21).unwrap();
+        assert_eq!(fast_fp, flat.param_fingerprint(), "elastic run != fixed reference ({mode:?})");
+    }
+}
+
+/// Checkpoints taken after an incremental reconfigure must carry the same
+/// state as ones taken after a full rebuild (the context/queue migration
+/// is checkpoint-equivalent).
+#[test]
+fn checkpoint_after_incremental_reconfigure_matches_full() {
+    let Some(engine) = tiny() else { return };
+    let run = |incremental: bool| -> Vec<u8> {
+        let mut t = Trainer::new(
+            &engine,
+            cfg(RunMode::Sequential),
+            Placement::homogeneous(V, 2, 4),
+        )
+        .unwrap();
+        t.run(&engine, 4).unwrap();
+        if incremental {
+            t.reconfigure(split_tail(P)).unwrap();
+        } else {
+            t.reconfigure_full(split_tail(P)).unwrap();
+        }
+        t.run(&engine, 2).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "easyscale_reconfig_ckpt_{}.ckpt",
+            if incremental { "inc" } else { "full" }
+        ));
+        t.checkpoint(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        bytes
+    };
+    assert_eq!(run(true), run(false), "checkpoint bytes diverge between the two paths");
+}
+
+/// Random same-maxP placement pair generator for the diff property.
+fn random_placement(rng: &mut SplitMix64, max_p: usize) -> Placement {
+    let n_exec = gen::usize_in(rng, 1, max_p);
+    let mut ranks: Vec<usize> = (0..max_p).collect();
+    rng.shuffle(&mut ranks);
+    let devices = [V, P, T];
+    let mut executors: Vec<ExecutorSpec> = (0..n_exec)
+        .map(|_| ExecutorSpec { device: *gen::pick(rng, &devices), est_ranks: Vec::new() })
+        .collect();
+    for (i, r) in ranks.into_iter().enumerate() {
+        executors[i % n_exec].est_ranks.push(r);
+    }
+    Placement { executors }
+}
+
+/// The diff partition property: over random placement pairs sharing maxP,
+/// kept/moved/new are disjoint and cover exactly 0..maxP (new empty,
+/// since both placements host every rank); kept executor pairs reference
+/// valid, distinct slots with identical specs.
+#[test]
+fn placement_diff_partitions_ranks() {
+    check("placement-diff-partition", 200, |rng| {
+        let max_p = gen::usize_in(rng, 1, 12);
+        let old = random_placement(rng, max_p);
+        let new = random_placement(rng, max_p);
+        old.validate().map_err(|e| format!("old invalid: {e}"))?;
+        new.validate().map_err(|e| format!("new invalid: {e}"))?;
+        let d = old.diff(&new);
+        let mut seen = vec![0u8; max_p];
+        for &r in d.kept_ranks.iter().chain(&d.moved_ranks).chain(&d.new_ranks) {
+            if r >= max_p {
+                return Err(format!("rank {r} out of range"));
+            }
+            seen[r] += 1;
+        }
+        if seen.iter().any(|&c| c != 1) {
+            return Err(format!(
+                "kept/moved/new is not a partition: counts {seen:?} (delta {d:?})"
+            ));
+        }
+        if !d.new_ranks.is_empty() {
+            return Err(format!("same-maxP diff produced new ranks {:?}", d.new_ranks));
+        }
+        // kept pairs: valid slots, no double-use, identical specs
+        let mut old_used = vec![false; old.executors.len()];
+        let mut new_used = vec![false; new.executors.len()];
+        for &(o, n) in &d.kept {
+            if o >= old.executors.len() || n >= new.executors.len() {
+                return Err(format!("kept pair ({o},{n}) out of range"));
+            }
+            if old_used[o] || new_used[n] {
+                return Err(format!("kept pair ({o},{n}) reuses a slot"));
+            }
+            old_used[o] = true;
+            new_used[n] = true;
+            if old.executors[o] != new.executors[n] {
+                return Err(format!("kept pair ({o},{n}) has differing specs"));
+            }
+        }
+        Ok(())
+    });
+}
