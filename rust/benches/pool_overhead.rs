@@ -1,6 +1,9 @@
 //! Pool-overhead bench: per-step thread spawning vs the persistent
 //! executor pool, at 1/2/4/8 executors (maxP = 8) — plus a steady-state
-//! **allocations-per-step** column for the pool path.
+//! **allocations-per-step** column for the pool path, a
+//! **steps/s-per-core** column, and a **forced-scalar** pool row so the
+//! SIMD kernel speedup is recorded against its scalar oracle in the same
+//! artifact.
 //!
 //! The spawn-per-step baseline is the pre-pool hot path — one scoped OS
 //! thread per executor plus a fresh mpsc channel **every mini-batch**
@@ -17,8 +20,9 @@
 //! end-to-end zero-allocation claim for `Trainer::step` is pinned in
 //! `tests/alloc.rs`.
 //!
-//! Before any timing, the harness asserts that the sequential loop, the
-//! spawning driver and the persistent pool stage **bitwise-identical**
+//! Before any timing, the harness asserts that the forced-scalar
+//! sequential loop, the spawning driver and the persistent pool — with
+//! SIMD kernels on and forced scalar — stage **bitwise-identical**
 //! gradients — numbers are only recorded for implementations proven
 //! equivalent. Results go to `rust/BENCH_pool.json`.
 //!
@@ -136,42 +140,57 @@ fn main() {
     );
     let mut table = Table::new(&[
         "executors",
-        "spawn-per-step steps/s",
-        "persistent pool steps/s",
-        "speedup",
+        "spawn steps/s",
+        "pool steps/s",
+        "pool scalar steps/s",
+        "simd speedup",
+        "pool steps/s/core",
+        "pool vs spawn",
         "pool allocs/step",
         "bitwise",
     ]);
     let mut rows = Vec::new();
     for n_exec in [1usize, 2, 4, 8] {
-        // (1) prove the implementations bitwise-equivalent at this size
+        // (1) prove every implementation bitwise-equivalent at this size:
+        // the forced-scalar sequential loop is the oracle; the spawning
+        // driver and the persistent pool — with SIMD kernels on AND forced
+        // scalar — must all reproduce its gradient digests exactly
+        engine.set_simd_enabled(false);
         let inp0 = inputs(&engine, &bufs, &corpus, 0);
         let seq =
             run_step(&mut mk_workers(&engine, n_exec), &inp0, RunMode::Sequential).unwrap();
+        let reference = digest(&seq);
+        let mut check_pool = ExecutorPool::new(RunMode::parallel());
+        check_pool.install(mk_workers(&engine, n_exec));
+        let pooled_scalar = check_pool.step(&inp0).unwrap();
+        assert_eq!(
+            reference,
+            digest(&pooled_scalar),
+            "forced-scalar pool drifted at {n_exec} executors"
+        );
+        engine.set_simd_enabled(true);
         let spawned =
             run_step(&mut mk_workers(&engine, n_exec), &inp0, RunMode::parallel()).unwrap();
         let mut check_pool = ExecutorPool::new(RunMode::parallel());
         check_pool.install(mk_workers(&engine, n_exec));
         let pooled = check_pool.step(&inp0).unwrap();
-        let reference = digest(&seq);
         assert_eq!(reference, digest(&spawned), "spawn driver drifted at {n_exec} executors");
-        assert_eq!(reference, digest(&pooled), "persistent pool drifted at {n_exec} executors");
+        assert_eq!(
+            reference,
+            digest(&pooled),
+            "SIMD persistent pool drifted at {n_exec} executors"
+        );
 
-        // (2) time both drivers, best-of-TRIALS, interleaved; count the
-        // pool path's steady-state allocations (spoils recycled like the
-        // trainer does)
+        // (2) time the spawning driver (SIMD on) and the persistent pool
+        // with SIMD on and forced scalar, best-of-TRIALS, interleaved;
+        // count the SIMD pool path's steady-state allocations (spoils
+        // recycled like the trainer does)
         let mut spawn_rate = 0.0f64;
         let mut pool_rate = 0.0f64;
+        let mut pool_scalar_rate = 0.0f64;
         let mut allocs_per_step = f64::INFINITY;
-        for _ in 0..TRIALS {
-            let mut workers = mk_workers(&engine, n_exec);
-            let t0 = Instant::now();
-            for step in 0..STEPS {
-                let inp = inputs(&engine, &bufs, &corpus, step);
-                run_step(&mut workers, &inp, RunMode::parallel()).unwrap();
-            }
-            spawn_rate = spawn_rate.max(STEPS as f64 / t0.elapsed().as_secs_f64());
-
+        let mut time_pool = |simd: bool| -> f64 {
+            engine.set_simd_enabled(simd);
             let mut pool = ExecutorPool::new(RunMode::parallel());
             pool.install(mk_workers(&engine, n_exec)); // once, outside the timer
             let mut outs: Vec<ExecutorOutput> = Vec::new();
@@ -193,15 +212,36 @@ fn main() {
                 pool.step_into(&inp, &mut outs).unwrap();
                 recycle(&mut outs, &mut spare_grads, &mut spare_timing, &mut spare_staged);
             }
-            pool_rate = pool_rate.max(STEPS as f64 / t0.elapsed().as_secs_f64());
-            let delta = heap_allocs() - allocs0;
-            allocs_per_step = allocs_per_step.min(delta as f64 / STEPS as f64);
+            let rate = STEPS as f64 / t0.elapsed().as_secs_f64();
+            if simd {
+                let delta = heap_allocs() - allocs0;
+                allocs_per_step = allocs_per_step.min(delta as f64 / STEPS as f64);
+            }
+            rate
+        };
+        for _ in 0..TRIALS {
+            engine.set_simd_enabled(true);
+            let mut workers = mk_workers(&engine, n_exec);
+            let t0 = Instant::now();
+            for step in 0..STEPS {
+                let inp = inputs(&engine, &bufs, &corpus, step);
+                run_step(&mut workers, &inp, RunMode::parallel()).unwrap();
+            }
+            spawn_rate = spawn_rate.max(STEPS as f64 / t0.elapsed().as_secs_f64());
+            pool_rate = pool_rate.max(time_pool(true));
+            pool_scalar_rate = pool_scalar_rate.max(time_pool(false));
         }
+        engine.set_simd_enabled(true);
         let speedup = pool_rate / spawn_rate;
+        let simd_speedup = pool_rate / pool_scalar_rate;
+        let per_core = pool_rate / n_exec as f64;
         table.row(&[
             format!("{n_exec}"),
             format!("{spawn_rate:.2}"),
             format!("{pool_rate:.2}"),
+            format!("{pool_scalar_rate:.2}"),
+            format!("{simd_speedup:.2}x"),
+            format!("{per_core:.2}"),
             format!("{speedup:.2}x"),
             format!("{allocs_per_step:.2}"),
             "identical".to_string(),
@@ -210,6 +250,9 @@ fn main() {
             ("executors", Json::num(n_exec as f64)),
             ("spawn_steps_per_s", Json::num(spawn_rate)),
             ("pool_steps_per_s", Json::num(pool_rate)),
+            ("pool_scalar_steps_per_s", Json::num(pool_scalar_rate)),
+            ("simd_speedup", Json::num(simd_speedup)),
+            ("pool_steps_per_s_per_core", Json::num(per_core)),
             ("speedup", Json::num(speedup)),
             ("pool_allocs_per_step", Json::num(allocs_per_step)),
         ]));

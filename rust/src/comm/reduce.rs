@@ -185,13 +185,19 @@ pub fn pairwise_tree_sum_into(bufs: &[Vec<f32>], levels: &mut Vec<Vec<f32>>, out
         out.extend_from_slice(&bufs[0]);
         return;
     }
-    // level 0: pairwise sums of the borrowed inputs into the scratch
+    // level 0: pairwise sums of the borrowed inputs into the scratch.
+    // The elementwise add runs through the simd lane kernels — each pair
+    // sum is an independent per-element IEEE add, so vector width never
+    // touches the bits (only fold *order* would, and pairing is fixed).
     let n0 = bufs.len().div_ceil(2);
     ReduceScratch::ensure(levels, n0);
     for (slot, pair) in levels[..n0].iter_mut().zip(bufs.chunks(2)) {
         slot.clear();
         match pair {
-            [a, b] => slot.extend(a.iter().zip(b.iter()).map(|(x, y)| x + y)),
+            [a, b] => {
+                slot.extend_from_slice(a);
+                crate::simd::add_assign(slot, b);
+            }
             [a] => slot.extend_from_slice(a),
             _ => unreachable!("chunks(2) yields 1 or 2 elements"),
         }
@@ -208,16 +214,15 @@ pub fn pairwise_tree_sum_into(bufs: &[Vec<f32>], levels: &mut Vec<Vec<f32>>, out
                 // destination == left source: fold the neighbour in place
                 if b < n {
                     let (head, tail) = levels.split_at_mut(b);
-                    for (x, y) in head[a].iter_mut().zip(&tail[0]) {
-                        *x += *y;
-                    }
+                    crate::simd::add_assign(&mut head[a], &tail[0]);
                 }
             } else {
                 let (head, tail) = levels.split_at_mut(a);
                 let dst = &mut head[i];
                 dst.clear();
                 if b < n {
-                    dst.extend(tail[0].iter().zip(&tail[1]).map(|(x, y)| x + y));
+                    dst.extend_from_slice(&tail[0]);
+                    crate::simd::add_assign(dst, &tail[1]);
                 } else {
                     dst.extend_from_slice(&tail[0]);
                 }
@@ -264,9 +269,7 @@ pub fn scatter_bucket(
     let mut off = 0;
     for &p in bucket {
         let n = param_sizes[p];
-        for i in 0..n {
-            out[p][i] = reduced[off + i] * scale;
-        }
+        crate::simd::scale_into(&mut out[p][..n], &reduced[off..off + n], scale);
         off += n;
     }
 }

@@ -47,15 +47,14 @@ pub fn ring_allreduce_into(bufs: &[Vec<f32>], out: &mut Vec<f32>) {
         if lo >= hi {
             continue;
         }
-        // accumulate in rotation order starting at rank c
+        // accumulate in rotation order starting at rank c; each hop is an
+        // independent per-element IEEE add, so the simd lane kernel keeps
+        // the bits — only the hop *order* matters, and it is unchanged
         let first = c % n;
         out[lo..hi].copy_from_slice(&bufs[first][lo..hi]);
         for hop in 1..n {
             let r = (c + hop) % n;
-            let src = &bufs[r][lo..hi];
-            for (o, s) in out[lo..hi].iter_mut().zip(src) {
-                *o += *s;
-            }
+            crate::simd::add_assign(&mut out[lo..hi], &bufs[r][lo..hi]);
         }
     }
 }

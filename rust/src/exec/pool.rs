@@ -43,7 +43,7 @@ use anyhow::Result;
 
 use crate::data::{DeterministicSampler, SharedDataWorkers, SyntheticCorpus};
 use crate::est::{EstContext, GradArena, StagedGrads};
-use crate::runtime::{Engine, FwdScratch, ParamBuffers};
+use crate::runtime::{Engine, FwdScratch, KernelVariant, ParamBuffers};
 use crate::util::rng::dropout_key;
 
 use super::executor::{ExecTiming, ExecutorSpec, KeyMode};
@@ -144,6 +144,11 @@ pub struct ExecutorWorker {
     /// Reused dataset-index and token buffers.
     idx_buf: Vec<u64>,
     tokens_buf: Vec<i32>,
+    /// Resolved kernel-variant handle, cached lazily per (d2, simd) state
+    /// so the hot loop never re-matches the variant string or takes the
+    /// engine's compile-cache lock. Invalidated when the step's `d2` flag
+    /// or the engine's core selection changes.
+    kernel: Option<(bool, KernelVariant)>,
 }
 
 impl ExecutorWorker {
@@ -169,6 +174,7 @@ impl ExecutorWorker {
             staged_spare: None,
             idx_buf: Vec::new(),
             tokens_buf: Vec::new(),
+            kernel: None,
         }
     }
 
@@ -190,7 +196,16 @@ impl ExecutorWorker {
     /// performs zero heap allocation (`tests/alloc.rs`).
     pub fn run_minibatch(&mut self, inp: &StepInputs<'_>) -> Result<ExecutorOutput> {
         let t_start = Instant::now();
-        let variant = self.spec.device.kernel_variant(inp.d2);
+        // satellite: variant resolution hoisted off the per-EST hot path —
+        // the cached handle is reused until d2 or the engine's core
+        // selection changes (both are (re)build-time events in practice)
+        let cache_ok = matches!(&self.kernel,
+            Some((d2, k)) if *d2 == inp.d2 && k.lanes() == inp.engine.simd_enabled());
+        if !cache_ok {
+            let variant = self.spec.device.kernel_variant(inp.d2);
+            self.kernel = Some((inp.d2, inp.engine.resolve_variant(variant)?));
+        }
+        let k = self.kernel.as_ref().map(|(_, k)| k).expect("kernel cache just filled");
         self.data.prefill(inp.step, &self.spec.est_ranks);
         // recycled result buffers: cleared, capacity preserved
         let mut timing = self.timing_spare.take().unwrap_or_default();
@@ -219,8 +234,8 @@ impl ExecutorWorker {
             };
             let mut grads = self.arena.take_set();
             let t0 = Instant::now();
-            let loss = inp.engine.fwd_bwd_staged(
-                variant,
+            let loss = inp.engine.fwd_bwd_staged_k(
+                k,
                 inp.params,
                 &self.tokens_buf,
                 key,
@@ -668,6 +683,21 @@ mod tests {
     use crate::exec::devices::DeviceType;
     use crate::exec::executor::Placement;
 
+    /// Upload via the shared-upload cache instead of a private
+    /// `upload_params`, so every pool test incidentally covers the
+    /// checkout path (satellite of the cross-job sharing work). The
+    /// second checkout pins the hit path; results are bitwise identical
+    /// to a private upload because it *is* the same upload call.
+    fn shared_upload(engine: &Engine, params: &[Vec<f32>]) -> crate::runtime::UploadHandle {
+        let cache = crate::runtime::UploadCache::new();
+        let h = cache.checkout(engine, DeviceType::V100, params).unwrap();
+        let h2 = cache.checkout(engine, DeviceType::V100, params).unwrap();
+        let st = cache.stats();
+        assert_eq!((st.entries, st.hits, st.misses), (1, 1, 1));
+        drop(h2);
+        h
+    }
+
     fn mk_workers(engine: &Engine, n_exec: usize, max_p: usize) -> Vec<ExecutorWorker> {
         let placement = Placement::homogeneous(DeviceType::V100, n_exec, max_p);
         let m = &engine.manifest.model;
@@ -724,7 +754,8 @@ mod tests {
             engine.manifest.model.vocab_size,
             engine.manifest.model.seq_len,
         );
-        let bufs = engine.upload_params(&params).unwrap();
+        let handle = shared_upload(&engine, &params);
+        let bufs = handle.lock();
         let inp = mk_inputs(&engine, &bufs, &corpus, 0);
         let mut seq_workers = mk_workers(&engine, 4, 4);
         let seq = run_step(&mut seq_workers, &inp, RunMode::Sequential).unwrap();
@@ -754,7 +785,8 @@ mod tests {
             engine.manifest.model.vocab_size,
             engine.manifest.model.seq_len,
         );
-        let bufs = engine.upload_params(&params).unwrap();
+        let handle = shared_upload(&engine, &params);
+        let bufs = handle.lock();
         let inp = StepInputs {
             engine: &engine,
             params: &bufs,
@@ -793,7 +825,8 @@ mod tests {
             engine.manifest.model.vocab_size,
             engine.manifest.model.seq_len,
         );
-        let bufs = engine.upload_params(&params).unwrap();
+        let handle = shared_upload(&engine, &params);
+        let bufs = handle.lock();
         let mut spawn_workers = mk_workers(&engine, 2, 4);
         let mut pool = ExecutorPool::new(RunMode::parallel());
         pool.install(mk_workers(&engine, 2, 4));
@@ -818,7 +851,8 @@ mod tests {
             engine.manifest.model.vocab_size,
             engine.manifest.model.seq_len,
         );
-        let bufs = engine.upload_params(&params).unwrap();
+        let handle = shared_upload(&engine, &params);
+        let bufs = handle.lock();
         let mut pool = ExecutorPool::new(RunMode::parallel());
         pool.install(mk_workers(&engine, 2, 4));
         let inp0 = mk_inputs(&engine, &bufs, &corpus, 0);
@@ -860,7 +894,8 @@ mod tests {
             engine.manifest.model.vocab_size,
             engine.manifest.model.seq_len,
         );
-        let bufs = engine.upload_params(&params).unwrap();
+        let handle = shared_upload(&engine, &params);
+        let bufs = handle.lock();
         let inp0 = mk_inputs(&engine, &bufs, &corpus, 0);
 
         // shrink 4 -> 2 (the 4-executor placement hosts one rank each, so
@@ -935,7 +970,8 @@ mod tests {
             engine.manifest.model.vocab_size,
             engine.manifest.model.seq_len,
         );
-        let bufs = engine.upload_params(&params).unwrap();
+        let handle = shared_upload(&engine, &params);
+        let bufs = handle.lock();
         let inp0 = mk_inputs(&engine, &bufs, &corpus, 0);
         let mut pool = ExecutorPool::new(RunMode::parallel());
         pool.install(mk_workers(&engine, 1, 3));
@@ -980,7 +1016,8 @@ mod tests {
             engine.manifest.model.vocab_size,
             engine.manifest.model.seq_len,
         );
-        let bufs = engine.upload_params(&params).unwrap();
+        let handle = shared_upload(&engine, &params);
+        let bufs = handle.lock();
         let mut pool = ExecutorPool::new(RunMode::parallel());
         let mut workers = mk_workers(&engine, 2, 4);
         for w in workers.iter_mut() {

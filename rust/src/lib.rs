@@ -47,6 +47,7 @@
 //! per-figure experiment index.
 
 pub mod util;
+pub mod simd;
 pub mod runtime;
 pub mod model;
 pub mod data;

@@ -34,6 +34,21 @@ pub struct ParamBuffers {
 #[derive(Debug, Clone, Default)]
 pub struct FwdScratch;
 
+/// A pre-resolved kernel-variant handle (API parity with the native
+/// backend's hoisted variant resolution): the name is validated against
+/// the manifest once, then reused per microbatch without a map lookup.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelVariant {
+    variant: String,
+}
+
+impl KernelVariant {
+    /// The PJRT backend never routes through a host-side vectorized core.
+    pub fn lanes(&self) -> bool {
+        false
+    }
+}
+
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
@@ -197,6 +212,36 @@ impl Engine {
         *bufs = self.upload_params(params)?;
         Ok(())
     }
+
+    /// API parity with the native backend's hoisted variant resolution:
+    /// validates the name against the manifest once, so the hot loop
+    /// skips the map lookup.
+    pub fn resolve_variant(&self, variant: &str) -> Result<KernelVariant> {
+        self.variant_path(variant)?;
+        Ok(KernelVariant { variant: variant.to_string() })
+    }
+
+    /// [`Engine::fwd_bwd_staged`] with a pre-resolved variant handle.
+    pub fn fwd_bwd_staged_k(
+        &self,
+        k: &KernelVariant,
+        params: &ParamBuffers,
+        tokens: &[i32],
+        rng: [u32; 2],
+        scratch: &mut FwdScratch,
+        grads: &mut Vec<Vec<f32>>,
+    ) -> Result<f32> {
+        self.fwd_bwd_staged(&k.variant, params, tokens, rng, scratch, grads)
+    }
+
+    /// The PJRT backend has no vectorized-core toggle: the kernels are
+    /// whatever the compiled artifacts contain.
+    pub fn simd_enabled(&self) -> bool {
+        false
+    }
+
+    /// No-op (API parity with the native backend).
+    pub fn set_simd_enabled(&self, _on: bool) {}
 
     /// One EST microbatch: fwd/bwd with the given kernel variant.
     ///

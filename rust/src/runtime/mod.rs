@@ -23,6 +23,7 @@
 
 pub mod manifest;
 pub mod native;
+pub mod upload;
 
 #[cfg(feature = "pjrt")]
 pub mod client;
@@ -38,10 +39,11 @@ pub struct FwdBwdOut {
 }
 
 #[cfg(feature = "pjrt")]
-pub use client::{Engine, FwdScratch, ParamBuffers};
+pub use client::{Engine, FwdScratch, KernelVariant, ParamBuffers};
 #[cfg(not(feature = "pjrt"))]
-pub use native::{Engine, FwdScratch, ParamBuffers};
+pub use native::{Engine, FwdScratch, KernelVariant, ParamBuffers, ParamShapeMismatch};
 
 pub use manifest::{ArtifactSig, Manifest, ParamInfo, TensorSig};
+pub use upload::{UploadCache, UploadHandle, UploadStats};
 #[cfg(feature = "pjrt")]
 pub use tensor::{dims_i64, literal_f32, literal_i32, literal_u32};

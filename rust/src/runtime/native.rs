@@ -22,12 +22,14 @@
 
 use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
 use super::manifest::Manifest;
 use super::FwdBwdOut;
+use crate::simd;
 use crate::util::rng::SplitMix64;
 
 const DROPOUT_RATE: f64 = 0.1;
@@ -86,6 +88,56 @@ pub struct ParamBuffers {
     bufs: Vec<Vec<f32>>,
 }
 
+/// Typed refresh failure: [`Engine::upload_params_into`] found a device
+/// buffer whose shape does not match the incoming tensor — the persistent
+/// [`ParamBuffers`] was uploaded for a different manifest. Refreshes never
+/// silently reallocate device memory to fit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamShapeMismatch {
+    /// Name of the offending tensor (manifest order).
+    pub tensor: String,
+    /// Element count of the existing device buffer.
+    pub got: usize,
+    /// Element count the manifest (and the source tensor) expects.
+    pub expected: usize,
+}
+
+impl std::fmt::Display for ParamShapeMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "param '{}': device buffer holds {} elements but the refresh expects {} — \
+             ParamBuffers was uploaded for a different manifest shape",
+            self.tensor, self.got, self.expected
+        )
+    }
+}
+
+impl std::error::Error for ParamShapeMismatch {}
+
+/// A resolved kernel-variant handle: the accumulation chunk width plus
+/// whether the vectorized core was active at resolve time. Resolving once
+/// per (re)build hoists the variant-string lookup off the per-microbatch
+/// hot path; callers re-resolve when [`Engine::simd_enabled`] changes
+/// (the `lanes` flag makes that check one comparison).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelVariant {
+    chunk: usize,
+    lanes: bool,
+}
+
+impl KernelVariant {
+    /// Accumulation chunk width (0 = plain sequential, the D2 kernel).
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Whether this handle routes to the vectorized core.
+    pub fn lanes(&self) -> bool {
+        self.lanes
+    }
+}
+
 /// Reusable forward/backward workspace: the activation/softmax temporaries
 /// one EST microbatch needs (`e`, dropout mask, logits, probabilities,
 /// logit gradients). Owned by the caller — each executor worker holds one
@@ -100,6 +152,10 @@ pub struct FwdScratch {
     z: Vec<f32>,
     p: Vec<f32>,
     dz: Vec<f32>,
+    // vectorized-core only: logit accumulator and per-segment partials
+    // for the interchanged embed·head_w loop
+    acc: Vec<f32>,
+    part: Vec<f32>,
 }
 
 pub struct Engine {
@@ -108,6 +164,12 @@ pub struct Engine {
     /// Variants "compiled" (first-used) so far — mirrors the PJRT
     /// executable cache for the compile-once tests/benches.
     compiled: Mutex<BTreeSet<String>>,
+    /// Route staged fwd/bwd through the vectorized core. Bitwise-neutral
+    /// (both cores produce identical bits; pinned in tests) — a pure
+    /// performance knob, defaulting to the `EASYSCALE_SIMD` environment
+    /// setting. The buffered/allocating forms always use the scalar core,
+    /// which stays the oracle.
+    simd: AtomicBool,
 }
 
 impl Engine {
@@ -117,14 +179,36 @@ impl Engine {
     pub fn new(preset_dir: &Path) -> Result<Engine> {
         let manifest = Manifest::load(preset_dir)?;
         let layout = NativeLayout::from_manifest(&manifest)?;
-        Ok(Engine { manifest, layout, compiled: Mutex::new(BTreeSet::new()) })
+        Ok(Engine {
+            manifest,
+            layout,
+            compiled: Mutex::new(BTreeSet::new()),
+            simd: AtomicBool::new(simd::env_enabled()),
+        })
     }
 
     /// An engine over a fabricated in-memory manifest — no files needed.
     pub fn synthetic(preset: &str) -> Result<Engine> {
         let manifest = Manifest::synthetic(preset)?;
         let layout = NativeLayout::from_manifest(&manifest)?;
-        Ok(Engine { manifest, layout, compiled: Mutex::new(BTreeSet::new()) })
+        Ok(Engine {
+            manifest,
+            layout,
+            compiled: Mutex::new(BTreeSet::new()),
+            simd: AtomicBool::new(simd::env_enabled()),
+        })
+    }
+
+    /// Whether staged fwd/bwd runs the vectorized core. Bitwise-neutral.
+    pub fn simd_enabled(&self) -> bool {
+        self.simd.load(Ordering::Relaxed)
+    }
+
+    /// Toggle the vectorized core (benchmarks record both; CI pins both).
+    /// `EASYSCALE_SIMD=0` wins: the vectorized core then stays off even if
+    /// a caller asks for it, so the matrix leg exercises pure scalar.
+    pub fn set_simd_enabled(&self, on: bool) {
+        self.simd.store(on && simd::env_enabled(), Ordering::Relaxed);
     }
 
     /// Convenience: `artifacts_root/preset` when built, otherwise the
@@ -226,17 +310,37 @@ impl Engine {
 
     /// Refresh a persistent [`ParamBuffers`] in place after an optimizer
     /// step — the steady-state "upload": a copy into the existing device
-    /// buffers, zero heap allocation when shapes are unchanged.
+    /// buffers, zero heap allocation. A buffer set uploaded for a
+    /// different manifest shape is rejected with a typed
+    /// [`ParamShapeMismatch`] instead of being silently reallocated —
+    /// shared uploads make a wrong-shaped refresh a cross-job bug, not a
+    /// resize request.
     pub fn upload_params_into(&self, params: &[Vec<f32>], bufs: &mut ParamBuffers) -> Result<()> {
         self.check_params(params)?;
-        bufs.bufs.resize_with(params.len(), Vec::new);
-        for (dst, src) in bufs.bufs.iter_mut().zip(params) {
-            if dst.len() == src.len() {
-                dst.copy_from_slice(src);
-            } else {
-                dst.clear();
-                dst.extend_from_slice(src);
+        if bufs.bufs.is_empty() {
+            bufs.bufs = params.to_vec();
+            return Ok(());
+        }
+        if bufs.bufs.len() != params.len() {
+            return Err(ParamShapeMismatch {
+                tensor: "<arity>".to_string(),
+                got: bufs.bufs.len(),
+                expected: params.len(),
             }
+            .into());
+        }
+        for ((dst, src), info) in bufs.bufs.iter().zip(params).zip(&self.manifest.params) {
+            if dst.len() != src.len() {
+                return Err(ParamShapeMismatch {
+                    tensor: info.name.clone(),
+                    got: dst.len(),
+                    expected: src.len(),
+                }
+                .into());
+            }
+        }
+        for (dst, src) in bufs.bufs.iter_mut().zip(params) {
+            dst.copy_from_slice(src);
         }
         Ok(())
     }
@@ -255,6 +359,17 @@ impl Engine {
         Ok(self.fwd_bwd_impl(chunk, &params.bufs, tokens, Some(rng), true))
     }
 
+    /// Resolve a kernel-variant name to a [`KernelVariant`] handle:
+    /// validates against the manifest, marks the variant compiled, and
+    /// snapshots the current core selection. Do this once per trainer
+    /// (re)build — [`Engine::fwd_bwd_staged_k`] then runs with no string
+    /// lookup or compile-cache lock on the per-microbatch hot path.
+    pub fn resolve_variant(&self, variant: &str) -> Result<KernelVariant> {
+        let chunk = self.variant_chunk(variant)?;
+        self.mark_compiled(variant);
+        Ok(KernelVariant { chunk, lanes: self.simd_enabled() })
+    }
+
     /// The allocation-free hot-loop form: fwd/bwd against pre-uploaded
     /// parameters, writing the per-parameter gradients into caller-owned
     /// `grads` buffers (resized in place; manifest order) and using the
@@ -271,10 +386,31 @@ impl Engine {
         scratch: &mut FwdScratch,
         grads: &mut Vec<Vec<f32>>,
     ) -> Result<f32> {
-        let chunk = self.variant_chunk(variant)?;
-        self.mark_compiled(variant);
+        let k = self.resolve_variant(variant)?;
+        self.fwd_bwd_staged_k(&k, params, tokens, rng, scratch, grads)
+    }
+
+    /// [`Engine::fwd_bwd_staged`] with a pre-resolved [`KernelVariant`]:
+    /// the per-microbatch hot form. Routes to the vectorized core when
+    /// the handle was resolved with lanes enabled; both cores are bitwise
+    /// identical on every variant (pinned in tests), so the routing is
+    /// invisible to the results.
+    pub fn fwd_bwd_staged_k(
+        &self,
+        k: &KernelVariant,
+        params: &ParamBuffers,
+        tokens: &[i32],
+        rng: [u32; 2],
+        scratch: &mut FwdScratch,
+        grads: &mut Vec<Vec<f32>>,
+    ) -> Result<f32> {
         self.check_tokens(tokens)?;
-        Ok(self.fwd_bwd_core(chunk, &params.bufs, tokens, Some(rng), true, scratch, grads))
+        if k.lanes {
+            let bufs = &params.bufs;
+            Ok(self.fwd_bwd_core_vec(k.chunk, bufs, tokens, Some(rng), true, scratch, grads))
+        } else {
+            Ok(self.fwd_bwd_core(k.chunk, &params.bufs, tokens, Some(rng), true, scratch, grads))
+        }
     }
 
     /// One EST microbatch: fwd/bwd with the given kernel variant.
@@ -357,11 +493,9 @@ impl Engine {
             if p.len() != m.len() || p.len() != g.len() {
                 bail!("opt_update tensor length mismatch");
             }
-            for i in 0..p.len() {
-                let v = mu * m[i] + g[i];
-                m[i] = v;
-                p[i] -= lr * v;
-            }
+            // elementwise lane kernel: per-element op order identical to
+            // opt_update's scalar loop, so the bits match either way
+            simd::sgd_momentum(p, m, g, mu, lr);
         }
         Ok(())
     }
@@ -502,6 +636,157 @@ impl Engine {
         grads[self.layout.head_b] = g_b;
         loss_sum * inv_n
     }
+
+    /// The vectorized twin of [`Engine::fwd_bwd_core`] — same math, same
+    /// summation orders, bitwise-identical results on every kernel
+    /// variant (the scalar core stays the oracle; equality is pinned by
+    /// the dirty-buffer tests). Three restructurings, none touching bits:
+    ///
+    /// * **logits, loop interchange**: `head_w` is `[d, v]`, so the
+    ///   scalar per-`u` column walk strides by `v_sz`. Interchanged, each
+    ///   `dd` streams one contiguous row into full-width `axpy` lanes.
+    ///   The variant's chunk order over `dd` is preserved by carrying all
+    ///   `v_sz` partial sums at once (`scratch.part` per segment folded
+    ///   into `scratch.acc`), so each logit still sees exactly the scalar
+    ///   chunked fold.
+    /// * **softmax, exp hoisting**: the exponentials are materialized
+    ///   once into `p` and reused for both `zsum` (folded in the chunk
+    ///   order by `simd::fold_chunked`) and the probabilities — halving
+    ///   the `exp` calls, which dominate the scalar forward pass.
+    /// * **backward, lane kernels**: `dz` via `scale_into` (for `u ≠ tgt`
+    ///   the scalar `(p[u] - 0.0) * inv_n` is bitwise `p[u] * inv_n`),
+    ///   `g_b`/`g_w` rows via `add_assign`/`axpy`, and the `dz·head_w`
+    ///   projection via `simd::dot_chunked` (packed products, in-order
+    ///   lane fold). The oracle's `ed != 0.0` / `mask != 0.0` skips are
+    ///   replicated — they are part of the reference semantics.
+    #[allow(clippy::too_many_arguments)]
+    fn fwd_bwd_core_vec(
+        &self,
+        chunk: usize,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        dropout: Option<[u32; 2]>,
+        with_grads: bool,
+        scratch: &mut FwdScratch,
+        grads: &mut Vec<Vec<f32>>,
+    ) -> f32 {
+        let m = &self.manifest.model;
+        let (v_sz, d) = (m.vocab_size, m.d_model);
+        let (b, s) = (m.batch_per_est, m.seq_len);
+        let embed = &params[self.layout.embed];
+        let head_w = &params[self.layout.head_w];
+        let head_b = &params[self.layout.head_b];
+
+        grads.resize_with(params.len(), Vec::new);
+        for (idx, g) in grads.iter_mut().enumerate() {
+            g.clear();
+            if with_grads {
+                g.resize(params[idx].len(), 0.0);
+            }
+        }
+        let mut g_embed = std::mem::take(&mut grads[self.layout.embed]);
+        let mut g_w = std::mem::take(&mut grads[self.layout.head_w]);
+        let mut g_b = std::mem::take(&mut grads[self.layout.head_b]);
+
+        let n_tok = b * s;
+        let inv_n = 1.0f32 / n_tok as f32;
+        let key = dropout.map(|k| ((k[0] as u64) << 32) | k[1] as u64);
+        scratch.e.clear();
+        scratch.e.resize(d, 0.0);
+        scratch.mask.clear();
+        scratch.mask.resize(d, 1.0);
+        scratch.z.clear();
+        scratch.z.resize(v_sz, 0.0);
+        scratch.p.clear();
+        scratch.p.resize(v_sz, 0.0);
+        scratch.dz.clear();
+        scratch.dz.resize(v_sz, 0.0);
+        scratch.acc.clear();
+        scratch.acc.resize(v_sz, 0.0);
+        scratch.part.clear();
+        scratch.part.resize(v_sz, 0.0);
+        let e = &mut scratch.e;
+        let mask = &mut scratch.mask;
+        let z = &mut scratch.z;
+        let p = &mut scratch.p;
+        let dz = &mut scratch.dz;
+        let acc = &mut scratch.acc;
+        let part = &mut scratch.part;
+        let mut loss_sum = 0.0f32;
+
+        for bi in 0..b {
+            for si in 0..s {
+                let idx = bi * (s + 1) + si;
+                let tok = tokens[idx] as usize;
+                let tgt = tokens[idx + 1] as usize;
+
+                e.copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+                if let Some(key) = key {
+                    let mut r = SplitMix64::derive(key, &[0xD0, (bi * s + si) as u64]);
+                    for dd in 0..d {
+                        mask[dd] = if r.next_f64() < DROPOUT_RATE { 0.0 } else { INV_KEEP };
+                        e[dd] *= mask[dd];
+                    }
+                }
+
+                // logits = head_b + eᵀ·head_w, interchanged: all v_sz
+                // columns advance together; `±0.0` products are kept so
+                // the bits match the scalar column walk exactly
+                if chunk == 0 || chunk >= d {
+                    // plain order accumulates directly (no part epilogue)
+                    acc.fill(0.0);
+                    for dd in 0..d {
+                        simd::axpy(acc, e[dd], &head_w[dd * v_sz..(dd + 1) * v_sz]);
+                    }
+                } else {
+                    acc.fill(0.0);
+                    let mut lo = 0;
+                    while lo < d {
+                        let hi = (lo + chunk).min(d);
+                        part.fill(0.0);
+                        for dd in lo..hi {
+                            simd::axpy(part, e[dd], &head_w[dd * v_sz..(dd + 1) * v_sz]);
+                        }
+                        simd::add_assign(acc, part);
+                        lo = hi;
+                    }
+                }
+                simd::add_into(z, head_b, acc);
+
+                let zmax = z.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+                for (pu, &zu) in p.iter_mut().zip(z.iter()) {
+                    *pu = (zu - zmax).exp();
+                }
+                let zsum = simd::fold_chunked(p, chunk);
+                simd::div_by(p, zsum);
+                loss_sum += -(z[tgt] - zmax - zsum.ln());
+
+                if with_grads {
+                    // dz[u] = (p[u] − onehot)·inv_n; x − 0.0 ≡ x bitwise,
+                    // so only the target entry needs the subtraction
+                    simd::scale_into(dz, p, inv_n);
+                    dz[tgt] = (p[tgt] - 1.0) * inv_n;
+                    simd::add_assign(&mut g_b, dz);
+                    for dd in 0..d {
+                        let ed = e[dd];
+                        if ed != 0.0 {
+                            simd::axpy(&mut g_w[dd * v_sz..(dd + 1) * v_sz], ed, dz);
+                        }
+                        if mask[dd] != 0.0 {
+                            let de =
+                                simd::dot_chunked(dz, &head_w[dd * v_sz..(dd + 1) * v_sz], chunk);
+                            g_embed[tok * d + dd] += de * mask[dd];
+                        }
+                    }
+                }
+            }
+        }
+
+        grads[self.layout.embed] = g_embed;
+        grads[self.layout.head_w] = g_w;
+        grads[self.layout.head_b] = g_b;
+        loss_sum * inv_n
+    }
 }
 
 /// Sum `f(0..n)` with a fixed chunked accumulation order. `chunk == 0`
@@ -510,7 +795,7 @@ impl Engine {
 /// widths give bitwise-different, numerically-close results — the
 /// kernel-variant mechanism.
 #[inline]
-fn ordered_sum<F: Fn(usize) -> f32>(n: usize, chunk: usize, f: F) -> f32 {
+pub(crate) fn ordered_sum<F: Fn(usize) -> f32>(n: usize, chunk: usize, f: F) -> f32 {
     if chunk == 0 || chunk >= n {
         let mut acc = 0.0f32;
         for i in 0..n {
@@ -625,6 +910,74 @@ mod tests {
         assert_eq!(a.loss.to_bits(), b.loss.to_bits());
         // shape mismatch rejected, buffers untouched
         assert!(eng.upload_params_into(&updated[1..], &mut bufs).is_err());
+    }
+
+    /// Tentpole pin: the vectorized core == the scalar oracle core, bit
+    /// for bit, for every kernel variant, on dirty scratch/grad buffers —
+    /// with both cores forced explicitly so the test is independent of
+    /// the ambient EASYSCALE_SIMD default. (Under EASYSCALE_SIMD=0 the
+    /// vectorized handle degrades to scalar and the test pins scalar ==
+    /// scalar, keeping the CI matrix leg green.)
+    #[test]
+    fn vectorized_core_matches_scalar_core_bitwise_all_variants() {
+        let eng = engine();
+        let params = eng.manifest.load_init_params().unwrap();
+        let bufs = eng.upload_params(&params).unwrap();
+        let mut s_vec = FwdScratch::default();
+        let mut s_sca = FwdScratch::default();
+        let mut g_vec: Vec<Vec<f32>> = vec![vec![7.0; 5]; 2]; // dirty, wrong shape
+        let mut g_sca: Vec<Vec<f32>> = Vec::new();
+        for (i, variant) in ["det", "v100", "p100", "t4", "det"].iter().enumerate() {
+            let tokens = some_tokens(&eng, 20 + i as u64);
+            let key = dropout_key(5, i, 2 * i as u64);
+            eng.set_simd_enabled(true);
+            let k_vec = eng.resolve_variant(variant).unwrap();
+            eng.set_simd_enabled(false);
+            let k_sca = eng.resolve_variant(variant).unwrap();
+            assert!(!k_sca.lanes());
+            let lv =
+                eng.fwd_bwd_staged_k(&k_vec, &bufs, &tokens, key, &mut s_vec, &mut g_vec).unwrap();
+            let ls =
+                eng.fwd_bwd_staged_k(&k_sca, &bufs, &tokens, key, &mut s_sca, &mut g_sca).unwrap();
+            assert_eq!(lv.to_bits(), ls.to_bits(), "loss diverged ({variant})");
+            assert_eq!(g_vec.len(), g_sca.len());
+            for (a, b) in g_vec.iter().zip(&g_sca) {
+                assert_eq!(a.len(), b.len());
+                assert!(
+                    a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "gradients diverged ({variant})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_variant_hoists_chunk_and_snapshots_lanes() {
+        let eng = engine();
+        for (name, chunk) in [("det", 0usize), ("v100", 16), ("p100", 8), ("t4", 4)] {
+            let k = eng.resolve_variant(name).unwrap();
+            assert_eq!(k.chunk(), chunk, "{name}");
+            assert_eq!(k.lanes(), eng.simd_enabled(), "{name}");
+        }
+        assert!(eng.resolve_variant("a100").is_err());
+        // the handle snapshots the core selection at resolve time
+        eng.set_simd_enabled(false);
+        assert!(!eng.resolve_variant("det").unwrap().lanes());
+    }
+
+    /// A ParamBuffers uploaded for a different shape is rejected with the
+    /// typed [`ParamShapeMismatch`] instead of a silent reallocation.
+    #[test]
+    fn upload_params_into_rejects_shape_mismatch_with_typed_error() {
+        let eng = engine();
+        let params = eng.manifest.load_init_params().unwrap();
+        let mut bufs = eng.upload_params(&params).unwrap();
+        bufs.bufs[0].push(0.0); // simulate an upload from another manifest
+        let err = eng.upload_params_into(&params, &mut bufs).unwrap_err();
+        let m = err.downcast_ref::<ParamShapeMismatch>().expect("typed shape error");
+        assert_eq!(m.tensor, eng.manifest.params[0].name);
+        assert_eq!(m.expected, params[0].len());
+        assert_eq!(m.got, params[0].len() + 1);
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! Keyed, refcounted sharing of device parameter uploads across jobs.
+//!
+//! A multi-job [`crate::train::ClusterRuntime`] packs N elastic sessions
+//! onto one fleet; without sharing, every job keeps its own persistent
+//! [`ParamBuffers`], so steady-state device parameter memory grows O(jobs)
+//! even when the jobs train the *same* model shape. The [`UploadCache`]
+//! keys one shared upload per (tensor shapes, device type): jobs whose
+//! manifests agree check out the same refcounted buffer set, and each
+//! step refreshes it with that job's own parameters **under the handle's
+//! lock, held across the executor phase** — so sharing serializes
+//! same-shape jobs at the device but never mixes their bits (every
+//! consistency fingerprint stays identical to the private-upload run;
+//! pinned in the cluster tests).
+//!
+//! Ownership rules:
+//! * the cache holds one [`Arc`] per entry; every checked-out
+//!   [`UploadHandle`] holds another — an entry whose only owner is the
+//!   cache is garbage and is pruned on the next checkout or stats call;
+//! * a job re-keys (checks out a fresh handle) when a reconfiguration
+//!   moves it to a different device type; the old entry is pruned once
+//!   the last sharer leaves;
+//! * a refresh through a shared handle must match the uploaded shapes
+//!   exactly — `upload_params_into` rejects mismatches with a typed
+//!   error instead of resizing memory other jobs are using.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use anyhow::Result;
+
+use super::{Engine, ParamBuffers};
+use crate::exec::devices::DeviceType;
+
+/// Cache key: the per-tensor element counts (manifest order) plus the
+/// device type the upload targets.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct UploadKey {
+    sizes: Vec<usize>,
+    device: DeviceType,
+}
+
+/// One shared device upload; sharers serialize on the inner lock.
+struct SharedUpload {
+    bufs: Mutex<ParamBuffers>,
+    device: DeviceType,
+}
+
+/// A checked-out reference to a shared upload. Cloning shares; dropping
+/// the last job handle makes the entry collectable.
+#[derive(Clone)]
+pub struct UploadHandle {
+    shared: Arc<SharedUpload>,
+}
+
+impl UploadHandle {
+    /// Lock the shared buffers for refresh + use. Hold the guard across
+    /// the whole step phase that reads the buffers: the refresh wrote
+    /// *this* job's parameters, and another sharer's refresh must not
+    /// land in between.
+    pub fn lock(&self) -> MutexGuard<'_, ParamBuffers> {
+        self.shared.bufs.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Device type this upload was keyed under.
+    pub fn device(&self) -> DeviceType {
+        self.shared.device
+    }
+}
+
+/// Counters for the memory-frugality story (and its tests): `entries` is
+/// the number of live shared uploads — O(1) per (shape, device type), not
+/// per job.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct UploadStats {
+    /// Live entries (referenced by at least one job).
+    pub entries: usize,
+    /// High-water mark of live entries.
+    pub peak_entries: usize,
+    /// Checkouts served by an existing upload.
+    pub hits: u64,
+    /// Checkouts that had to upload.
+    pub misses: u64,
+}
+
+#[derive(Default)]
+struct CacheInner {
+    entries: BTreeMap<UploadKey, Arc<SharedUpload>>,
+    hits: u64,
+    misses: u64,
+    peak_entries: usize,
+}
+
+/// The per-cluster shared-upload registry. `Sync`; checkout is cheap
+/// (one small map lookup) and happens per job (re)build, not per step.
+#[derive(Default)]
+pub struct UploadCache {
+    inner: Mutex<CacheInner>,
+}
+
+impl UploadCache {
+    pub fn new() -> UploadCache {
+        UploadCache::default()
+    }
+
+    /// Check out the shared upload for (shapes of `params`, `device`),
+    /// uploading via `engine` on first use. The returned handle keeps the
+    /// entry alive; entries with no outstanding handle are pruned here.
+    pub fn checkout(
+        &self,
+        engine: &Engine,
+        device: DeviceType,
+        params: &[Vec<f32>],
+    ) -> Result<UploadHandle> {
+        let key = UploadKey { sizes: params.iter().map(|p| p.len()).collect(), device };
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        inner.entries.retain(|_, e| Arc::strong_count(e) > 1);
+        if let Some(entry) = inner.entries.get(&key) {
+            let shared = Arc::clone(entry);
+            inner.hits += 1;
+            return Ok(UploadHandle { shared });
+        }
+        inner.misses += 1;
+        let bufs = engine.upload_params(params)?;
+        let shared = Arc::new(SharedUpload { bufs: Mutex::new(bufs), device });
+        inner.entries.insert(key, Arc::clone(&shared));
+        let live = inner.entries.len();
+        inner.peak_entries = inner.peak_entries.max(live);
+        Ok(UploadHandle { shared })
+    }
+
+    /// Current counters; prunes dead entries first so `entries` counts
+    /// only uploads some job still references.
+    pub fn stats(&self) -> UploadStats {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        inner.entries.retain(|_, e| Arc::strong_count(e) > 1);
+        UploadStats {
+            entries: inner.entries.len(),
+            peak_entries: inner.peak_entries,
+            hits: inner.hits,
+            misses: inner.misses,
+        }
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    fn engine() -> Engine {
+        Engine::synthetic("tiny").unwrap()
+    }
+
+    #[test]
+    fn same_shape_same_device_shares_one_upload() {
+        let eng = engine();
+        let params = eng.manifest.load_init_params().unwrap();
+        let cache = UploadCache::new();
+        let a = cache.checkout(&eng, DeviceType::V100, &params).unwrap();
+        let b = cache.checkout(&eng, DeviceType::V100, &params).unwrap();
+        assert!(Arc::ptr_eq(&a.shared, &b.shared));
+        let st = cache.stats();
+        assert_eq!((st.entries, st.hits, st.misses), (1, 1, 1));
+    }
+
+    #[test]
+    fn device_type_keys_separate_uploads() {
+        let eng = engine();
+        let params = eng.manifest.load_init_params().unwrap();
+        let cache = UploadCache::new();
+        let a = cache.checkout(&eng, DeviceType::V100, &params).unwrap();
+        let b = cache.checkout(&eng, DeviceType::T4, &params).unwrap();
+        assert!(!Arc::ptr_eq(&a.shared, &b.shared));
+        assert_eq!(a.device(), DeviceType::V100);
+        assert_eq!(b.device(), DeviceType::T4);
+        assert_eq!(cache.stats().entries, 2);
+    }
+
+    #[test]
+    fn dropped_handles_are_pruned_but_peak_is_kept() {
+        let eng = engine();
+        let params = eng.manifest.load_init_params().unwrap();
+        let cache = UploadCache::new();
+        let a = cache.checkout(&eng, DeviceType::V100, &params).unwrap();
+        let b = cache.checkout(&eng, DeviceType::P100, &params).unwrap();
+        drop(b);
+        let st = cache.stats();
+        assert_eq!(st.entries, 1, "unreferenced entry must be pruned");
+        assert_eq!(st.peak_entries, 2);
+        drop(a);
+        assert_eq!(cache.stats().entries, 0);
+        // a fresh checkout after pruning re-uploads
+        let _c = cache.checkout(&eng, DeviceType::V100, &params).unwrap();
+        assert_eq!(cache.stats().misses, 3);
+    }
+
+    #[test]
+    fn refresh_through_handle_is_a_real_upload() {
+        let eng = engine();
+        let params = eng.manifest.load_init_params().unwrap();
+        let cache = UploadCache::new();
+        let h = cache.checkout(&eng, DeviceType::V100, &params).unwrap();
+        let updated: Vec<Vec<f32>> =
+            params.iter().map(|p| p.iter().map(|v| v + 1.0).collect()).collect();
+        {
+            let mut g = h.lock();
+            eng.upload_params_into(&updated, &mut g).unwrap();
+        }
+        // the shared buffers now hold `updated`: a fwd pass through them
+        // matches a private upload of `updated` bit for bit
+        let m = &eng.manifest.model;
+        let tokens: Vec<i32> = (0..m.batch_per_est * (m.seq_len + 1))
+            .map(|i| (i % m.vocab_size) as i32)
+            .collect();
+        let fresh = eng.upload_params(&updated).unwrap();
+        let want = eng.fwd_bwd_buffered("det", &fresh, &tokens, [1, 2]).unwrap();
+        let got = eng.fwd_bwd_buffered("det", &h.lock(), &tokens, [1, 2]).unwrap();
+        assert_eq!(want.loss.to_bits(), got.loss.to_bits());
+    }
+}

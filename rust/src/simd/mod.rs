@@ -1,0 +1,514 @@
+//! Explicit-width f32 lane kernels for the deterministic hot loops.
+//!
+//! EasyScale's kernel variants are *defined* by their float summation
+//! order (`runtime::native::ordered_sum`'s chunk width), so the one hard
+//! rule here is: **vectorize the work, never the fold order**. Products
+//! and elementwise ops may run 8 lanes at a time — IEEE-754 multiply,
+//! add, subtract and divide are exact per-lane operations, so a packed
+//! `vmulps` produces bitwise the same f32s as eight scalar multiplies —
+//! but every *reduction* folds its terms strictly left-to-right in the
+//! scalar chunked order. The result is bit-for-bit equal to the scalar
+//! engine on every kernel variant (pinned by unit + property tests and
+//! the dirty-buffer engine tests).
+//!
+//! Forbidden in this module, because each one changes bits:
+//! * horizontal SIMD adds / tree reductions (re-associates the fold);
+//! * FMA (`_mm256_fmadd_ps` keeps the infinitely-precise product, a
+//!   scalar `a * b + c` rounds twice);
+//! * skipping `±0.0` terms (the scalar oracle includes them, and
+//!   `0.0 + (-0.0) == +0.0` can flip a sign bit).
+//!
+//! Dispatch is two-level: this module picks the *instruction set* once
+//! per process ([`level`]), honoring the `EASYSCALE_SIMD=0` kill switch
+//! and falling back to scalar wherever AVX is unavailable; the engine's
+//! `simd_enabled` flag separately picks the *loop structure* (vectorized
+//! vs. oracle core). Both paths are bitwise identical, so either switch
+//! is a pure performance knob.
+
+use std::sync::OnceLock;
+
+/// Instruction set selected for the lane kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Plain scalar loops (also the non-x86_64 and `EASYSCALE_SIMD=0` path).
+    Scalar,
+    /// 256-bit AVX lanes, stable `std::arch` intrinsics.
+    Avx,
+}
+
+/// Whether SIMD is allowed by the environment: `EASYSCALE_SIMD=0` force-
+/// disables every vectorized path (the CI matrix leg), anything else —
+/// including unset — allows them.
+pub fn env_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| std::env::var("EASYSCALE_SIMD").map(|v| v != "0").unwrap_or(true))
+}
+
+/// The instruction set used by the kernels in this module, decided once
+/// per process: scalar when force-disabled or when the CPU lacks AVX.
+pub fn level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        if !env_enabled() {
+            return SimdLevel::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx") {
+            return SimdLevel::Avx;
+        }
+        SimdLevel::Scalar
+    })
+}
+
+const LANES: usize = 8;
+
+/// `dst[i] += src[i]` — the fixed-order reduction fold's elementwise body.
+#[inline]
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == SimdLevel::Avx {
+        unsafe { add_assign_avx(dst, src) };
+        return;
+    }
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += *s;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn add_assign_avx(dst: &mut [f32], src: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let mut i = 0;
+    while i + LANES <= n {
+        let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+        let s = _mm256_loadu_ps(src.as_ptr().add(i));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(d, s));
+        i += LANES;
+    }
+    for j in i..n {
+        dst[j] += src[j];
+    }
+}
+
+/// `dst[i] = a[i] + b[i]`.
+#[inline]
+pub fn add_into(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(dst.len(), a.len());
+    debug_assert_eq!(dst.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == SimdLevel::Avx {
+        unsafe { add_into_avx(dst, a, b) };
+        return;
+    }
+    for ((d, x), y) in dst.iter_mut().zip(a).zip(b) {
+        *d = *x + *y;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn add_into_avx(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let mut i = 0;
+    while i + LANES <= n {
+        let x = _mm256_loadu_ps(a.as_ptr().add(i));
+        let y = _mm256_loadu_ps(b.as_ptr().add(i));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(x, y));
+        i += LANES;
+    }
+    for j in i..n {
+        dst[j] = a[j] + b[j];
+    }
+}
+
+/// `dst[i] += s * src[i]` — product then add, never fused, so the bits
+/// match the scalar two-rounding sequence.
+#[inline]
+pub fn axpy(dst: &mut [f32], s: f32, src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == SimdLevel::Avx {
+        unsafe { axpy_avx(dst, s, src) };
+        return;
+    }
+    for (d, x) in dst.iter_mut().zip(src) {
+        *d += s * *x;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn axpy_avx(dst: &mut [f32], s: f32, src: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let vs = _mm256_set1_ps(s);
+    let mut i = 0;
+    while i + LANES <= n {
+        let x = _mm256_loadu_ps(src.as_ptr().add(i));
+        let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(d, _mm256_mul_ps(vs, x)));
+        i += LANES;
+    }
+    for j in i..n {
+        dst[j] += s * src[j];
+    }
+}
+
+/// `dst[i] = s * src[i]`.
+#[inline]
+pub fn scale_into(dst: &mut [f32], src: &[f32], s: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == SimdLevel::Avx {
+        unsafe { scale_into_avx(dst, src, s) };
+        return;
+    }
+    for (d, x) in dst.iter_mut().zip(src) {
+        *d = s * *x;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn scale_into_avx(dst: &mut [f32], src: &[f32], s: f32) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let vs = _mm256_set1_ps(s);
+    let mut i = 0;
+    while i + LANES <= n {
+        let x = _mm256_loadu_ps(src.as_ptr().add(i));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_mul_ps(vs, x));
+        i += LANES;
+    }
+    for j in i..n {
+        dst[j] = s * src[j];
+    }
+}
+
+/// `dst[i] /= s` — IEEE division is exact per lane, so `vdivps` by a
+/// broadcast divisor matches the scalar `x / s` bit for bit.
+#[inline]
+pub fn div_by(dst: &mut [f32], s: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if level() == SimdLevel::Avx {
+        unsafe { div_by_avx(dst, s) };
+        return;
+    }
+    for d in dst.iter_mut() {
+        *d /= s;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn div_by_avx(dst: &mut [f32], s: f32) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let vs = _mm256_set1_ps(s);
+    let mut i = 0;
+    while i + LANES <= n {
+        let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_div_ps(d, vs));
+        i += LANES;
+    }
+    for j in i..n {
+        dst[j] /= s;
+    }
+}
+
+/// Fused SGD-momentum body: `m[i] = mu*m[i] + g[i]; p[i] -= lr*m[i]` —
+/// the exact operation order of `Engine::opt_update`.
+#[inline]
+pub fn sgd_momentum(p: &mut [f32], m: &mut [f32], g: &[f32], mu: f32, lr: f32) {
+    debug_assert_eq!(p.len(), m.len());
+    debug_assert_eq!(p.len(), g.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == SimdLevel::Avx {
+        unsafe { sgd_momentum_avx(p, m, g, mu, lr) };
+        return;
+    }
+    for ((pi, mi), gi) in p.iter_mut().zip(m.iter_mut()).zip(g) {
+        let v = mu * *mi + *gi;
+        *mi = v;
+        *pi -= lr * v;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn sgd_momentum_avx(p: &mut [f32], m: &mut [f32], g: &[f32], mu: f32, lr: f32) {
+    use std::arch::x86_64::*;
+    let n = p.len();
+    let vmu = _mm256_set1_ps(mu);
+    let vlr = _mm256_set1_ps(lr);
+    let mut i = 0;
+    while i + LANES <= n {
+        let mi = _mm256_loadu_ps(m.as_ptr().add(i));
+        let gi = _mm256_loadu_ps(g.as_ptr().add(i));
+        let v = _mm256_add_ps(_mm256_mul_ps(vmu, mi), gi);
+        _mm256_storeu_ps(m.as_mut_ptr().add(i), v);
+        let pi = _mm256_loadu_ps(p.as_ptr().add(i));
+        _mm256_storeu_ps(p.as_mut_ptr().add(i), _mm256_sub_ps(pi, _mm256_mul_ps(vlr, v)));
+        i += LANES;
+    }
+    for j in i..n {
+        let v = mu * m[j] + g[j];
+        m[j] = v;
+        p[j] -= lr * v;
+    }
+}
+
+/// Sum a slice in the chunked accumulation order — identical semantics
+/// (and bits) to `ordered_sum(xs.len(), chunk, |i| xs[i])`. Purely
+/// scalar: the fold order *is* the kernel variant, so there is nothing
+/// to vectorize here; the win comes from materializing the terms (e.g.
+/// softmax exponentials) once instead of per use.
+#[inline]
+pub fn fold_chunked(xs: &[f32], chunk: usize) -> f32 {
+    let n = xs.len();
+    if chunk == 0 || chunk >= n {
+        // plain order accumulates directly: no `acc += part` epilogue,
+        // which would turn an all-(-0.0) sum into +0.0
+        let mut acc = 0.0f32;
+        for &x in xs {
+            acc += x;
+        }
+        return acc;
+    }
+    let mut acc = 0.0f32;
+    let mut i = 0;
+    while i < n {
+        let hi = (i + chunk).min(n);
+        let mut part = 0.0f32;
+        for &x in &xs[i..hi] {
+            part += x;
+        }
+        acc += part;
+        i = hi;
+    }
+    acc
+}
+
+/// Dot product in the chunked accumulation order — bitwise equal to
+/// `ordered_sum(n, chunk, |i| a[i] * b[i])`. The products are computed
+/// 8 lanes at a time (exact per lane); the lane results are then folded
+/// strictly left-to-right, so the summation order never changes.
+#[inline]
+pub fn dot_chunked(a: &[f32], b: &[f32], chunk: usize) -> f32 {
+    let n = a.len();
+    debug_assert_eq!(n, b.len());
+    if chunk == 0 || chunk >= n {
+        return dot_seg(a, b, 0.0);
+    }
+    let mut acc = 0.0f32;
+    let mut i = 0;
+    while i < n {
+        let hi = (i + chunk).min(n);
+        acc += dot_seg(&a[i..hi], &b[i..hi], 0.0);
+        i = hi;
+    }
+    acc
+}
+
+/// One fold segment of [`dot_chunked`]: `init + Σ a[i]*b[i]` left-to-right.
+#[inline]
+fn dot_seg(a: &[f32], b: &[f32], init: f32) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if level() == SimdLevel::Avx && a.len() >= LANES {
+        return unsafe { dot_seg_avx(a, b, init) };
+    }
+    let mut acc = init;
+    for (x, y) in a.iter().zip(b) {
+        acc += *x * *y;
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn dot_seg_avx(a: &[f32], b: &[f32], init: f32) -> f32 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let mut acc = init;
+    let mut prod = [0.0f32; LANES];
+    let mut i = 0;
+    while i + LANES <= n {
+        let x = _mm256_loadu_ps(a.as_ptr().add(i));
+        let y = _mm256_loadu_ps(b.as_ptr().add(i));
+        // packed products, then an in-order *scalar* lane fold — a
+        // horizontal add would re-associate the variant's sum order
+        _mm256_storeu_ps(prod.as_mut_ptr(), _mm256_mul_ps(x, y));
+        for &pr in &prod {
+            acc += pr;
+        }
+        i += LANES;
+    }
+    for j in i..n {
+        acc += a[j] * b[j];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::ordered_sum;
+    use crate::util::propcheck::{check, gen};
+    use crate::util::rng::SplitMix64;
+
+    fn bits_eq(a: f32, b: f32) -> bool {
+        a.to_bits() == b.to_bits()
+    }
+
+    const CHUNKS: &[usize] = &[0, 1, 3, 4, 5, 7, 8, 9, 16, 31, 1000];
+
+    #[test]
+    fn fold_chunked_matches_ordered_sum_bitwise() {
+        let mut rng = SplitMix64::new(42);
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 63, 64, 100] {
+            let xs: Vec<f32> = (0..n).map(|_| (rng.next_f32() - 0.5) * 8.0).collect();
+            for &chunk in CHUNKS {
+                let want = ordered_sum(n, chunk, |i| xs[i]);
+                let got = fold_chunked(&xs, chunk);
+                assert!(bits_eq(want, got), "fold n={n} chunk={chunk}: {want} vs {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_chunked_matches_ordered_sum_bitwise() {
+        let mut rng = SplitMix64::new(43);
+        for n in [0usize, 1, 7, 8, 9, 16, 24, 65, 128] {
+            let a: Vec<f32> = (0..n).map(|_| (rng.next_f32() - 0.5) * 4.0).collect();
+            let b: Vec<f32> = (0..n).map(|_| (rng.next_f32() - 0.5) * 4.0).collect();
+            for &chunk in CHUNKS {
+                let want = ordered_sum(n, chunk, |i| a[i] * b[i]);
+                let got = dot_chunked(&a, &b, chunk);
+                assert!(bits_eq(want, got), "dot n={n} chunk={chunk}: {want} vs {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn elementwise_kernels_match_scalar_reference_bitwise() {
+        let mut rng = SplitMix64::new(44);
+        // lengths straddle the 8-lane boundary to hit blocks + tails
+        for n in [0usize, 1, 5, 8, 11, 16, 29, 64, 77] {
+            let a: Vec<f32> = (0..n).map(|_| (rng.next_f32() - 0.5) * 3.0).collect();
+            let b: Vec<f32> = (0..n).map(|_| (rng.next_f32() - 0.5) * 3.0).collect();
+            let s = rng.next_f32() * 2.0 - 1.0;
+
+            let mut got = a.clone();
+            add_assign(&mut got, &b);
+            let want: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+            assert!(got.iter().zip(&want).all(|(x, y)| bits_eq(*x, *y)), "add_assign n={n}");
+
+            let mut got = vec![0.0f32; n];
+            add_into(&mut got, &a, &b);
+            assert!(got.iter().zip(&want).all(|(x, y)| bits_eq(*x, *y)), "add_into n={n}");
+
+            let mut got = a.clone();
+            axpy(&mut got, s, &b);
+            let want: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + s * y).collect();
+            assert!(got.iter().zip(&want).all(|(x, y)| bits_eq(*x, *y)), "axpy n={n}");
+
+            let mut got = vec![0.0f32; n];
+            scale_into(&mut got, &a, s);
+            let want: Vec<f32> = a.iter().map(|x| s * x).collect();
+            assert!(got.iter().zip(&want).all(|(x, y)| bits_eq(*x, *y)), "scale_into n={n}");
+
+            let mut got = a.clone();
+            div_by(&mut got, s);
+            let want: Vec<f32> = a.iter().map(|x| x / s).collect();
+            assert!(got.iter().zip(&want).all(|(x, y)| bits_eq(*x, *y)), "div_by n={n}");
+
+            let (mut p, mut m) = (a.clone(), b.clone());
+            sgd_momentum(&mut p, &mut m, &a, 0.9, 0.07);
+            for i in 0..n {
+                let v = 0.9 * b[i] + a[i];
+                assert!(bits_eq(m[i], v), "sgd m n={n}");
+                assert!(bits_eq(p[i], a[i] - 0.07 * v), "sgd p n={n}");
+            }
+        }
+    }
+
+    /// Satellite: vectorized fold == scalar `ordered_sum` over random
+    /// lengths, every supported chunk width, remainder tails, and
+    /// adversarial values — denormals, ±0.0, mixed-sign cancellation and
+    /// large-magnitude terms, where summation *order* actually shows.
+    #[test]
+    fn prop_folds_match_ordered_sum_on_adversarial_values() {
+        check("simd-fold==ordered-sum", 400, |rng| {
+            let n = gen::usize_in(rng, 0, 131);
+            let chunk = *gen::pick(rng, &[0usize, 1, 3, 4, 5, 8, 16, 200]);
+            let xs = gen::vec_f32_adversarial(rng, n);
+            let ys = gen::vec_f32_adversarial(rng, n);
+
+            let want = ordered_sum(n, chunk, |i| xs[i]);
+            let got = fold_chunked(&xs, chunk);
+            if !bits_eq(want, got) {
+                return Err(format!("fold n={n} chunk={chunk}: {want:?} != {got:?}"));
+            }
+
+            let want = ordered_sum(n, chunk, |i| xs[i] * ys[i]);
+            let got = dot_chunked(&xs, &ys, chunk);
+            if !bits_eq(want, got) {
+                return Err(format!("dot n={n} chunk={chunk}: {want:?} != {got:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// The elementwise kernels on adversarial values, same contract.
+    #[test]
+    fn prop_elementwise_kernels_exact_on_adversarial_values() {
+        check("simd-elementwise-exact", 300, |rng| {
+            let n = gen::usize_in(rng, 0, 67);
+            let a = gen::vec_f32_adversarial(rng, n);
+            let b = gen::vec_f32_adversarial(rng, n);
+            let s = gen::f32_adversarial(rng);
+
+            let mut got = a.clone();
+            axpy(&mut got, s, &b);
+            for i in 0..n {
+                let want = a[i] + s * b[i];
+                if !bits_eq(got[i], want) {
+                    return Err(format!("axpy[{i}] n={n}: {want:?} != {:?}", got[i]));
+                }
+            }
+            let mut got = a.clone();
+            add_assign(&mut got, &b);
+            for i in 0..n {
+                let want = a[i] + b[i];
+                if !bits_eq(got[i], want) {
+                    return Err(format!("add_assign[{i}] n={n}: {want:?} != {:?}", got[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn signed_zero_folds_match_the_oracle() {
+        // the 0.0 + (-0.0) = +0.0 rule: a fold seeded from +0.0 lands on
+        // +0.0 for an all-(-0.0) input, and the lane kernels must agree
+        // with the oracle bit for bit — including that sign bit
+        for &chunk in CHUNKS {
+            let xs = vec![-0.0f32; 12];
+            let want = ordered_sum(12, chunk, |i| xs[i]);
+            let got = fold_chunked(&xs, chunk);
+            assert_eq!(want.to_bits(), got.to_bits(), "chunk={chunk}");
+            assert_eq!(got.to_bits(), 0.0f32.to_bits(), "chunk={chunk}");
+            // products of mixed-sign zeros keep the hazard alive in dots
+            let a = vec![-0.0f32; 12];
+            let b = vec![0.5f32; 12];
+            let want = ordered_sum(12, chunk, |i| a[i] * b[i]);
+            let got = dot_chunked(&a, &b, chunk);
+            assert_eq!(want.to_bits(), got.to_bits(), "dot chunk={chunk}");
+        }
+    }
+}

@@ -26,13 +26,14 @@
 //! fixed-placement sequential reference no matter how the fleet was
 //! shuffled underneath it (`tests/cluster.rs`).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
 use crate::exec::{DeviceType, Placement, RunMode};
 use crate::model::workload::Workload;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, UploadCache, UploadStats};
 use crate::sched::cluster::{ClusterScheduler, JobPhase};
 use crate::sched::director::{placement_from_config, ElasticEvent, Mailbox, MailboxDirector};
 use crate::sched::plan::{GpuVector, JobSpec};
@@ -197,6 +198,10 @@ pub struct ClusterRuntime<'e> {
     /// Concurrent job threads between scheduling barriers: 1 = the
     /// round-robin driver, 0 = one thread per job, N = at most N at once.
     job_threads: usize,
+    /// Cluster-wide shared device-parameter uploads: jobs with identical
+    /// manifest shapes on the same device type check out one
+    /// `ParamBuffers` instead of each uploading a private copy.
+    uploads: Arc<UploadCache>,
 }
 
 impl<'e> ClusterRuntime<'e> {
@@ -211,7 +216,14 @@ impl<'e> ClusterRuntime<'e> {
             slots: Vec::new(),
             decide_every: decide_every.max(1),
             job_threads: 1,
+            uploads: Arc::new(UploadCache::new()),
         }
+    }
+
+    /// Shared-upload cache counters: entries/peak prove O(1) device
+    /// parameter memory per (shape, device type) across the whole run.
+    pub fn upload_stats(&self) -> UploadStats {
+        self.uploads.stats()
     }
 
     /// Step jobs **concurrently** between scheduling barriers: each placed
@@ -580,6 +592,7 @@ impl<'e> ClusterRuntime<'e> {
                     .steps(slot.job.steps)
                     .log_every(0)
                     .director(Box::new(MailboxDirector::new(slot.mailbox.clone())))
+                    .shared_uploads(Arc::clone(&self.uploads))
                     .build()?;
                 slot.session = Some(session);
                 slot.started = Some(Instant::now());

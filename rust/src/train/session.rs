@@ -22,13 +22,14 @@
 //! ```
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::exec::executor::Placement;
 use crate::metrics::MetricSink;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, UploadCache};
 use crate::sched::director::{
     ElasticEvent, ResourceDirector, StaticScheduleDirector, StepObservation,
 };
@@ -77,6 +78,7 @@ pub struct SessionBuilder<'e> {
     log_every: u64,
     director: Box<dyn ResourceDirector>,
     resume_from: Option<PathBuf>,
+    shared_uploads: Option<Arc<UploadCache>>,
 }
 
 impl<'e> SessionBuilder<'e> {
@@ -96,6 +98,7 @@ impl<'e> SessionBuilder<'e> {
             log_every: 10,
             director: Box::new(StaticScheduleDirector::empty()),
             resume_from: None,
+            shared_uploads: None,
         }
     }
 
@@ -144,6 +147,17 @@ impl<'e> SessionBuilder<'e> {
         self
     }
 
+    /// Check device-resident parameters out of a cluster-wide
+    /// [`UploadCache`] instead of a private upload: jobs with identical
+    /// manifest shapes on the same device type share one `ParamBuffers`
+    /// (O(1) device parameter memory per shape/device pair across a
+    /// cluster). Bitwise-neutral — each step refreshes the shared buffers
+    /// with this job's own parameters under the cache lock.
+    pub fn shared_uploads(mut self, cache: Arc<UploadCache>) -> Self {
+        self.shared_uploads = Some(cache);
+        self
+    }
+
     pub fn build(self) -> Result<ElasticSession<'e>> {
         let SessionBuilder {
             engine,
@@ -157,11 +171,15 @@ impl<'e> SessionBuilder<'e> {
             log_every,
             director,
             resume_from,
+            shared_uploads,
         } = self;
-        let trainer = match resume_from {
+        let mut trainer = match resume_from {
             Some(path) => Trainer::resume(engine, cfg, placement, &path)?,
             None => Trainer::new(engine, cfg, placement)?,
         };
+        if let Some(cache) = shared_uploads {
+            trainer.use_shared_uploads(engine, cache)?;
+        }
         let start_step = trainer.state.step;
         Ok(ElasticSession {
             engine,

@@ -31,12 +31,27 @@ use crate::comm::{
 use crate::data::loader::WorkItem;
 use crate::data::{DeterministicSampler, SharedDataWorkers, SyntheticCorpus};
 use crate::est::{EstContext, StagedGrads};
+use crate::exec::devices::DeviceType;
 use crate::exec::executor::{ExecTiming, KeyMode, Placement, PlacementDelta};
 use crate::exec::pool::{
     ExecutorOutput, ExecutorPool, ExecutorWorker, RunMode, SlotPlan, StepInputs,
 };
-use crate::runtime::{Engine, ParamBuffers};
+use crate::runtime::{Engine, ParamBuffers, UploadCache, UploadHandle};
 use crate::train::determinism::Determinism;
+
+use std::sync::Arc;
+
+/// Where the trainer's persistent device-resident parameters live: a
+/// private [`ParamBuffers`] (the default), or a shared upload checked out
+/// of a cluster-wide [`UploadCache`] so same-shape jobs on the same
+/// device type share one device copy. Shared jobs refresh the buffers
+/// with their own parameters each step under the handle's lock, held
+/// across the executor phase — sharers serialize at the device but never
+/// see each other's bits.
+enum ParamSource {
+    Private(ParamBuffers),
+    Shared(UploadHandle),
+}
 
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -119,8 +134,12 @@ pub struct Trainer {
     slot_table: SlotTable,
     ranked: Vec<StagedGrads>,
     /// persistent device-resident parameters, refreshed in place after
-    /// every optimizer step (the steady-state "upload" is a copy)
-    param_bufs: ParamBuffers,
+    /// every optimizer step (the steady-state "upload" is a copy);
+    /// either private or a shared checkout from a cluster upload cache
+    param_src: ParamSource,
+    /// the cluster upload cache this trainer checks out of, if any —
+    /// kept so placement moves to another device type can re-key
+    shared_cache: Option<Arc<UploadCache>>,
     /// reused per-step executor-output buffer (the barrier drains here)
     outs: Vec<ExecutorOutput>,
     /// spoils of the previous step, recycled into the workers between
@@ -164,7 +183,7 @@ impl Trainer {
         anyhow::ensure!(placement.max_p() == cfg.max_p, "placement hosts {} ESTs, cfg.max_p = {}",
             placement.max_p(), cfg.max_p);
         let params = engine.manifest.load_init_params()?;
-        let param_bufs = engine.upload_params(&params)?;
+        let param_src = ParamSource::Private(engine.upload_params(&params)?);
         let momenta: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
         let seed = cfg.effective_seed();
         let est_contexts: Vec<EstContext> =
@@ -194,7 +213,8 @@ impl Trainer {
             grad_bufs: Vec::new(),
             slot_table: SlotTable::new(0),
             ranked: Vec::new(),
-            param_bufs,
+            param_src,
+            shared_cache: None,
             outs: Vec::new(),
             spare_grads: Vec::new(),
             spare_timing: Vec::new(),
@@ -209,6 +229,30 @@ impl Trainer {
 
     fn key_mode(&self) -> KeyMode {
         if self.cfg.determinism.d0 { KeyMode::Virtual } else { KeyMode::Physical }
+    }
+
+    /// Device type the current placement uploads for: the first
+    /// executor's device (all jobs key uploads by it; a placement with no
+    /// executors is invalid, the fallback only keeps this total).
+    fn placement_device(&self) -> DeviceType {
+        self.placement
+            .executors
+            .first()
+            .map(|e| e.device)
+            .unwrap_or(DeviceType::V100)
+    }
+
+    /// Switch this trainer's device-resident parameters to a shared
+    /// checkout from `cache`: same-shape jobs on the same device type
+    /// share one `ParamBuffers`. The trainer refreshes the shared buffers
+    /// with its own parameters under the handle's lock every step, so
+    /// bits are unchanged; a later placement on a different device type
+    /// re-keys automatically at the next step.
+    pub fn use_shared_uploads(&mut self, engine: &Engine, cache: Arc<UploadCache>) -> Result<()> {
+        let handle = cache.checkout(engine, self.placement_device(), &self.state.params)?;
+        self.param_src = ParamSource::Shared(handle);
+        self.shared_cache = Some(cache);
+        Ok(())
     }
 
     /// (Re)build the per-executor workers from the current placement and
@@ -306,21 +350,50 @@ impl Trainer {
             spare_timing.extend(last_timing.drain(..));
         }
         self.pool.refill(&mut self.spare_grads, &mut self.spare_timing, &mut self.spare_staged);
+        // a placement move to another device type re-keys the shared
+        // checkout before this step touches the buffers
+        if let (ParamSource::Shared(handle), Some(cache)) =
+            (&self.param_src, &self.shared_cache)
+        {
+            let dev = self.placement_device();
+            if handle.device() != dev {
+                let cache = Arc::clone(cache);
+                let handle = cache.checkout(engine, dev, &self.state.params)?;
+                self.param_src = ParamSource::Shared(handle);
+            }
+        }
         // one device "upload" of the shared parameters per mini-batch —
         // a copy into the persistent buffers; every EST of every executor
         // reuses it (paper: parameters are shared and reused across
-        // EasyScaleThread switches)
-        engine.upload_params_into(&self.state.params, &mut self.param_bufs)?;
+        // EasyScaleThread switches). A shared checkout holds the upload
+        // lock across the executor phase: sharers serialize at the
+        // device but each step runs on its own refreshed bits.
+        let d2 = self.cfg.determinism.d2;
+        let key_mode = self.key_mode();
+        let aug_rate = self.cfg.aug_rate;
         {
+            let mut _guard: Option<std::sync::MutexGuard<'_, ParamBuffers>> = None;
+            let params: &ParamBuffers = match &mut self.param_src {
+                ParamSource::Private(bufs) => {
+                    engine.upload_params_into(&self.state.params, bufs)?;
+                    bufs
+                }
+                ParamSource::Shared(handle) => {
+                    let mut g = handle.lock();
+                    engine.upload_params_into(&self.state.params, &mut g)?;
+                    _guard = Some(g);
+                    _guard.as_deref().unwrap()
+                }
+            };
             let inp = StepInputs {
                 engine,
-                params: &self.param_bufs,
+                params,
                 corpus: &self.corpus,
                 seed,
                 step,
-                d2: self.cfg.determinism.d2,
-                key_mode: self.key_mode(),
-                aug_rate: self.cfg.aug_rate,
+                d2,
+                key_mode,
+                aug_rate,
             };
             self.pool.step_into(&inp, &mut self.outs)?;
         }

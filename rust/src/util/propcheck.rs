@@ -48,6 +48,29 @@ pub mod gen {
     pub fn pick<'a, T>(rng: &mut SplitMix64, items: &'a [T]) -> &'a T {
         &items[rng.next_below(items.len() as u64) as usize]
     }
+
+    /// An adversarial f32 for summation-order tests: denormals, signed
+    /// zeros, large-magnitude and tiny terms, and ordinary mixed-sign
+    /// values that cancel — the inputs where float accumulation *order*
+    /// actually changes the bits. All finite, so products of two such
+    /// values stay representable-or-infinite, never NaN from 0·inf.
+    pub fn f32_adversarial(rng: &mut SplitMix64) -> f32 {
+        let sign = if rng.next_below(2) == 0 { 1.0f32 } else { -1.0 };
+        match rng.next_below(6) {
+            // subnormal: random nonzero mantissa, zero exponent
+            0 => sign * f32::from_bits(rng.next_below((1 << 23) - 1) as u32 + 1),
+            1 => sign * 0.0,
+            2 => sign * (1.0 + rng.next_f32()) * 1e30,
+            3 => sign * (1.0 + rng.next_f32()) * 1e-30,
+            // near-unit pairs that cancel against each other
+            4 => sign * (1.0 + rng.next_f32() * 1e-6),
+            _ => (rng.next_f32() - 0.5) * 2.0,
+        }
+    }
+
+    pub fn vec_f32_adversarial(rng: &mut SplitMix64, len: usize) -> Vec<f32> {
+        (0..len).map(|_| f32_adversarial(rng)).collect()
+    }
 }
 
 #[cfg(test)]

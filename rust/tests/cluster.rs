@@ -176,6 +176,40 @@ fn concurrent_job_stepping_matches_round_robin_and_references_bitwise() {
     }
 }
 
+/// Shared uploads: four same-shape jobs on one fleet check out ONE device
+/// parameter buffer per device type actually used — O(1) param memory per
+/// (shape, device type) — and sharing is bitwise invisible: every job
+/// still lands exactly on its fixed-placement sequential reference.
+#[test]
+fn four_same_shape_jobs_share_one_upload_per_device_type() {
+    let Some(engine) = tiny() else { return };
+    let det = Determinism::D1;
+    let steps = 6u64;
+    // homogeneous V100 fleet + D1 jobs: every checkout keys to one
+    // (shape, V100) entry, so peak entries must be exactly 1
+    let mut rt = ClusterRuntime::new(&engine, [4, 0, 0], 2);
+    for i in 0..4u64 {
+        rt.submit(job(Workload::Bert, 200 + i, det, steps));
+    }
+    let report = rt.run().unwrap();
+    for j in &report.jobs {
+        assert_eq!(j.report.steps_run, steps, "job {} starved", j.job_id);
+        assert_eq!(
+            j.report.fingerprint,
+            reference_fingerprint(&engine, 200 + j.job_id as u64, det, steps),
+            "shared uploads changed job {}'s bits",
+            j.job_id
+        );
+    }
+    let stats = rt.upload_stats();
+    assert_eq!(
+        stats.peak_entries, 1,
+        "4 same-shape V100 jobs must share one uploaded ParamBuffers, got {stats:?}"
+    );
+    assert_eq!(stats.misses, 1, "only the first checkout uploads: {stats:?}");
+    assert!(stats.hits >= 3, "the other three jobs must hit the cache: {stats:?}");
+}
+
 /// An empty fleet cannot place anyone: the runtime errors instead of
 /// spinning forever.
 #[test]
