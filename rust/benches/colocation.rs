@@ -1,0 +1,198 @@
+//! Serving co-location bench (paper §5.3, Fig. 16, through the *real*
+//! runtime): three elastic jobs train on whatever a replayed 24h serving
+//! trace leaves of an 8-GPU machine fleet — the demand curve lends GPUs as
+//! traffic dips and reclaims them on peaks, forcing incremental shrinks
+//! and full checkpointed pauses — versus the classic static partition that
+//! carves out the trace's peak for serving around the clock.
+//!
+//! Every job in BOTH runs is asserted bitwise-equal to its undisturbed
+//! fixed-placement sequential reference before any number is recorded, and
+//! the elastic run must show real disruption (reclaims, shrinks, pauses,
+//! resumes all > 0) plus higher aggregate fleet utilization than the
+//! static baseline. The record is written to `rust/BENCH_colocation.json`.
+//!
+//!     cargo bench --bench colocation
+
+use std::path::PathBuf;
+
+use easyscale::model::workload::Workload;
+use easyscale::runtime::Engine;
+use easyscale::sim::ServingDemand;
+use easyscale::train::{
+    reference_fingerprint, ClusterJob, ClusterRuntime, Colocation, ColocationReport, Determinism,
+    ServingTrace, TrainConfig,
+};
+use easyscale::util::bench::Table;
+use easyscale::util::json::Json;
+
+/// The whole machine: serving + training share these 8 GPUs.
+const FLEET: [usize; 3] = [4, 2, 2];
+const DECIDE_EVERY: u64 = 2;
+const MAX_P: usize = 4;
+const WORKLOADS: [Workload; 3] = [Workload::Bert, Workload::Electra, Workload::NeuMf];
+const SEEDS: [u64; 3] = [42, 43, 44];
+const BUDGETS: [u64; 3] = [24, 28, 32];
+
+fn job_cfg(seed: u64) -> TrainConfig {
+    TrainConfig { seed, determinism: Determinism::D1_D2, aug_rate: 0.0, ..TrainConfig::new(MAX_P) }
+}
+
+/// The replayed day: a diurnal curve with bursty spikes sampled at minute
+/// resolution and bucketed to 24 decide epochs, plus two forced full-peak
+/// hours (morning rush, evening rush) that take all but one GPU — the
+/// epochs that drive jobs into checkpointed pauses.
+fn day_trace() -> ServingTrace {
+    let total: usize = FLEET.iter().sum();
+    let signal = ServingDemand::diurnal(total - 1, 2, 5, 5).with_spikes(0.03, 2, 45);
+    let mut trace = ServingTrace::from_demand(&signal, 1440, 24);
+    trace.demand[6] = total - 1;
+    trace.demand[17] = total - 1;
+    trace
+}
+
+/// One co-located run; returns (report, per-job fingerprints, per-job
+/// steps, wall seconds).
+fn run_colocated(
+    engine: &Engine,
+    colo: Colocation,
+    tag: &str,
+) -> (ColocationReport, Vec<u64>, Vec<u64>, f64) {
+    let dir = std::env::temp_dir().join(format!("easyscale_bench_colocation_{tag}"));
+    let mut rt = ClusterRuntime::new(engine, FLEET, DECIDE_EVERY)
+        .with_colocation(colo)
+        .with_pause_dir(dir.clone());
+    for i in 0..WORKLOADS.len() {
+        rt.submit(ClusterJob { workload: WORKLOADS[i], cfg: job_cfg(SEEDS[i]), steps: BUDGETS[i] });
+    }
+    let report = rt.run().unwrap();
+    let fps = report.jobs.iter().map(|j| j.report.fingerprint).collect();
+    let steps = report.jobs.iter().map(|j| j.report.steps_run).collect();
+    let colo = report.colocation.expect("a co-located run must report");
+    std::fs::remove_dir_all(&dir).ok();
+    (colo, fps, steps, report.wall_s)
+}
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = match Engine::open(&root, "tiny") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP colocation bench: no engine available ({e:#})");
+            return;
+        }
+    };
+    let trace = day_trace();
+    println!(
+        "== serving co-location: 24h trace over [V100:{} P100:{} T4:{}] (peak demand {}) ==",
+        FLEET[0],
+        FLEET[1],
+        FLEET[2],
+        trace.peak()
+    );
+    println!("trace: {:?}", trace.demand);
+
+    // the consistency gate: every job, in both modes, must land bitwise on
+    // its undisturbed fixed-placement sequential V100 reference
+    let refs: Vec<u64> = (0..WORKLOADS.len())
+        .map(|i| reference_fingerprint(&engine, &job_cfg(SEEDS[i]), BUDGETS[i]).unwrap())
+        .collect();
+
+    let (elastic, e_fps, e_steps, e_wall) =
+        run_colocated(&engine, Colocation::new(trace.clone()), "elastic");
+    let (fixed, s_fps, s_steps, s_wall) =
+        run_colocated(&engine, Colocation::static_partition(trace.clone()), "static");
+
+    for i in 0..WORKLOADS.len() {
+        assert_eq!(e_steps[i], BUDGETS[i], "elastic job {i} lost steps across pauses");
+        assert_eq!(s_steps[i], BUDGETS[i], "static job {i} lost steps");
+        assert_eq!(
+            e_fps[i], refs[i],
+            "elastic job {i} drifted from its undisturbed reference"
+        );
+        assert_eq!(
+            s_fps[i], refs[i],
+            "static job {i} drifted from its undisturbed reference"
+        );
+    }
+    // the elastic run must have been genuinely disrupted — a trace that
+    // never preempts proves nothing about accuracy-consistent reclaims
+    assert!(elastic.reclaims > 0, "trace must reclaim GPUs: {elastic:?}");
+    assert!(elastic.lends > 0, "trace must lend GPUs back: {elastic:?}");
+    assert!(elastic.shrinks > 0, "partial reclaims must shrink jobs: {elastic:?}");
+    assert!(elastic.pauses > 0, "the forced peaks must pause jobs: {elastic:?}");
+    assert!(elastic.resumes > 0, "paused jobs must come back: {elastic:?}");
+    assert!(
+        elastic.utilization_pct > fixed.utilization_pct,
+        "elastic co-location must beat the static partition: {:.1}% vs {:.1}%",
+        elastic.utilization_pct,
+        fixed.utilization_pct
+    );
+
+    let mut table = Table::new(&[
+        "mode",
+        "epochs",
+        "serving avg",
+        "training avg",
+        "util %",
+        "reclaims",
+        "shrinks",
+        "pauses",
+        "resumes",
+        "bitwise",
+    ]);
+    for r in [&elastic, &fixed] {
+        table.row(&[
+            format!("{}", r.mode),
+            format!("{}", r.epochs),
+            format!("{:.2}", r.avg_serving_gpus),
+            format!("{:.2}", r.avg_training_gpus),
+            format!("{:.1}", r.utilization_pct),
+            format!("{}", r.reclaims),
+            format!("{}", r.shrinks),
+            format!("{}", r.pauses),
+            format!("{}", r.resumes),
+            "identical".to_string(),
+        ]);
+    }
+    table.print();
+    println!(
+        "aggregate utilization: elastic {:.1}% vs static {:.1}% (+{:.1} points)",
+        elastic.utilization_pct,
+        fixed.utilization_pct,
+        elastic.utilization_pct - fixed.utilization_pct
+    );
+
+    let mode_record = |r: &ColocationReport, wall: f64| {
+        Json::obj(vec![
+            ("mode", Json::str(&format!("{}", r.mode))),
+            ("epochs", Json::num(r.epochs as f64)),
+            ("avg_serving_gpus", Json::num(r.avg_serving_gpus)),
+            ("avg_training_gpus", Json::num(r.avg_training_gpus)),
+            ("utilization_pct", Json::num(r.utilization_pct)),
+            ("lends", Json::num(r.lends as f64)),
+            ("reclaims", Json::num(r.reclaims as f64)),
+            ("shrinks", Json::num(r.shrinks as f64)),
+            ("pauses", Json::num(r.pauses as f64)),
+            ("resumes", Json::num(r.resumes as f64)),
+            ("wall_s", Json::num(wall)),
+        ])
+    };
+    let backend = if cfg!(feature = "pjrt") { "pjrt-sequential" } else { "native-parallel" };
+    let record = Json::obj(vec![
+        ("bench", Json::str("serving_colocation")),
+        ("backend", Json::str(backend)),
+        ("fleet", Json::str("v100:4,p100:2,t4:2")),
+        ("trace_epochs", Json::num(trace.len() as f64)),
+        ("trace_peak", Json::num(trace.peak() as f64)),
+        ("decide_every", Json::num(DECIDE_EVERY as f64)),
+        ("steps_per_job", Json::Arr(BUDGETS.iter().map(|&b| Json::num(b as f64)).collect())),
+        (
+            "utilization_gain_pts",
+            Json::num(elastic.utilization_pct - fixed.utilization_pct),
+        ),
+        ("results", Json::Arr(vec![mode_record(&elastic, e_wall), mode_record(&fixed, s_wall)])),
+    ]);
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_colocation.json");
+    std::fs::write(&out, record.dump() + "\n").unwrap();
+    println!("colocation record written to {}", out.display());
+}

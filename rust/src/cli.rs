@@ -28,11 +28,12 @@ use crate::sched::director::{
     parse_gpu_vector, AiMasterDirector, ResourceDirector, StaticScheduleDirector,
 };
 use crate::sched::plan::{enumerate_configs, JobSpec};
-use crate::sim::serving::{run_serving_sim, ServingSimConfig};
+use crate::sim::serving::{run_serving_sim, ServingDemand, ServingSimConfig};
 use crate::sim::simulator::{rate_scale_from_observation, ElasticSim, SchedulerKind};
 use crate::sim::trace::{gen_trace, read_trace_csv, write_trace_csv};
 use crate::train::{
-    reference_fingerprint, ClusterJob, ClusterRuntime, Determinism, SessionBuilder, TrainConfig,
+    reference_fingerprint, ClusterJob, ClusterRuntime, Colocation, Determinism, ServingTrace,
+    SessionBuilder, TrainConfig,
 };
 use crate::util::argparse::Args;
 
@@ -86,6 +87,17 @@ SUBCOMMANDS
     --trace-steps-cap N [trace] cap on per-job step budgets (default: 8)
     --trace-round-s S   [trace] trace seconds per cluster round (default:
                         auto — the schedule spans ~jobs*decide-every rounds)
+    --colocate        co-locate with a serving tier: a replayed demand trace
+                      lends/reclaims fleet GPUs at every decide epoch — jobs
+                      shrink through incremental reconfigure, pause to a
+                      checkpoint when reclaimed to zero, and resume
+                      bitwise-intact when demand recedes
+    --serving-trace F   [colocate] 'epoch,serving_gpus' CSV to replay
+                        (default: a generated diurnal curve scaled to the
+                        fleet, always leaving at least one training GPU)
+    --colocate-epochs N [colocate] epochs of the generated trace (default: 12)
+    --static-partition  [colocate] baseline: permanently reserve the trace's
+                        peak demand for serving instead of lending/reclaiming
   plan              print planner configurations for a workload
     --workload NAME   Table-1 model (default: Bert)
     --max-p N         (default: 8)  --gpus SPEC (default: v100:1,t4:1)
@@ -101,8 +113,8 @@ SUBCOMMANDS
 ";
 
 pub fn main_with(argv: Vec<String>) -> Result<()> {
-    let args = Args::parse(&argv, &["d2", "help", "sequential", "verify"])
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let flags = ["d2", "help", "sequential", "verify", "colocate", "static-partition"];
+    let args = Args::parse(&argv, &flags).map_err(|e| anyhow::anyhow!("{e}"))?;
     if args.flag("help") {
         println!("{USAGE}");
         return Ok(());
@@ -287,10 +299,50 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if trace_file.is_some() && args.flag("verify") {
         bail!("--verify applies to uniform --jobs runs, not --trace replays");
     }
+    let colocate = args.flag("colocate");
+    if !colocate
+        && (args.get("serving-trace").is_some()
+            || args.get("colocate-epochs").is_some()
+            || args.flag("static-partition"))
+    {
+        bail!("--serving-trace/--colocate-epochs/--static-partition require --colocate");
+    }
 
     let engine = Engine::open(&artifacts, &preset)?;
     let mut rt =
         ClusterRuntime::new(&engine, fleet, decide_every).with_job_threads(job_threads);
+    if colocate {
+        let trace = match args.get("serving-trace") {
+            Some(f) => ServingTrace::read_csv(Path::new(f))?,
+            None => {
+                // a fleet-scaled diurnal day with bursty spikes, capped one
+                // GPU below the fleet so a default run can always train
+                let total: usize = fleet.iter().sum();
+                let epochs = args.usize_or("colocate-epochs", 12)?.max(1);
+                let signal = ServingDemand::diurnal(
+                    total.saturating_sub(1),
+                    total / 4,
+                    total / 2,
+                    seed,
+                )
+                .with_spikes(0.02, (total / 4).max(1), 90);
+                ServingTrace::from_demand(&signal, 1440, epochs)
+            }
+        };
+        crate::info!(
+            "cluster",
+            "colocation: serving trace {:?} (peak {}), mode {}",
+            trace.demand,
+            trace.peak(),
+            if args.flag("static-partition") { "static" } else { "elastic" }
+        );
+        let colo = if args.flag("static-partition") {
+            Colocation::static_partition(trace)
+        } else {
+            Colocation::new(trace)
+        };
+        rt = rt.with_colocation(colo);
+    }
     if let Some(tf) = &trace_file {
         // replay a generated arrival schedule against real jobs: close the
         // loop between the analytic Fig. 14 clock and measured steps/s
@@ -365,6 +417,22 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         report.wall_s,
         report.aggregate_rate()
     );
+    if let Some(c) = &report.colocation {
+        println!(
+            "colocation [{}]: fleet {} GPUs over {} epochs | serving avg {:.1} | \
+             training avg {:.1} | aggregate utilization {:.1}%",
+            c.mode,
+            c.fleet_total,
+            c.epochs,
+            c.avg_serving_gpus,
+            c.avg_training_gpus,
+            c.utilization_pct
+        );
+        println!(
+            "  lends {} | reclaims {} | shrink reconfigs {} | pauses {} | resumes {}",
+            c.lends, c.reclaims, c.shrinks, c.pauses, c.resumes
+        );
+    }
 
     if args.flag("verify") {
         // each job's fixed-placement sequential V100 reference — the
@@ -619,6 +687,37 @@ mod tests {
         assert!(main_with(argv(&["cluster", "--jobs", "0"])).is_err());
         assert!(main_with(argv(&[
             "cluster", "--preset", "tiny", "--workloads", "NoSuchModel"
+        ]))
+        .is_err());
+    }
+
+    /// The serving co-location smoke: two jobs under a generated diurnal
+    /// trace that lends/reclaims fleet GPUs every decide epoch; `--verify`
+    /// pins every job bitwise to its undisturbed fixed-placement reference
+    /// through all the shrinks/pauses/resumes. The static-partition
+    /// baseline runs the same trace without moving GPUs.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn cluster_colocate_smoke_runs_and_verifies() {
+        assert!(main_with(argv(&[
+            "cluster", "--preset", "tiny", "--jobs", "2", "--steps", "6",
+            "--max-p", "4", "--fleet", "v100:2,p100:1,t4:1", "--decide-every", "2",
+            "--colocate", "--colocate-epochs", "4", "--sequential", "--verify",
+        ]))
+        .is_ok());
+        assert!(main_with(argv(&[
+            "cluster", "--preset", "tiny", "--jobs", "2", "--steps", "6",
+            "--max-p", "4", "--fleet", "v100:2,p100:1,t4:1", "--decide-every", "2",
+            "--colocate", "--static-partition", "--sequential",
+        ]))
+        .is_ok());
+        // colocation flags demand --colocate
+        assert!(main_with(argv(&[
+            "cluster", "--preset", "tiny", "--static-partition"
+        ]))
+        .is_err());
+        assert!(main_with(argv(&[
+            "cluster", "--preset", "tiny", "--serving-trace", "x.csv"
         ]))
         .is_err());
     }

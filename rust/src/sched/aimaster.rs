@@ -213,6 +213,17 @@ impl AiMaster {
             self.held[i] = self.held[i].saturating_sub(sub[i]);
         }
     }
+
+    /// Whole-job preemption (a fleet shrink took everything): drop the
+    /// entire holding and the fallback baseline — after a checkpointed
+    /// pause the pre-pause rate is stale, and comparing the first post-
+    /// resume observation against it would trigger a bogus fallback.
+    pub fn preempt_all(&mut self) -> GpuVector {
+        let held = self.held;
+        self.held = [0, 0, 0];
+        self.prev_rate = None;
+        held
+    }
 }
 
 #[cfg(test)]

@@ -27,6 +27,65 @@
 
 use super::aimaster::{AiMaster, Proposal};
 use super::plan::{best_config_any, GpuVector, JobSpec, PlanConfig};
+use crate::exec::devices::DEVICE_TYPES;
+
+/// Typed fleet-accounting failures. Before the fleet could shrink these
+/// were impossible by construction; with [`ClusterScheduler::reclaim`] in
+/// the picture, a stale `release` (GPUs handed back after the fleet they
+/// belonged to was reclaimed) or an oversized `reclaim` must surface as an
+/// error instead of silently corrupting the pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetError {
+    /// A release would push the free pool of a type above the fleet total
+    /// (double release, or a release of GPUs the fleet no longer owns).
+    OverRelease { ty: usize, fleet: usize, available: usize, release: usize },
+    /// A reclaim asked for more GPUs of a type than the whole fleet holds.
+    ReclaimExceedsFleet { ty: usize, fleet: usize, want: usize },
+    /// A reclaim could not be satisfied from the free pool plus managed
+    /// jobs — the shortfall is held by an external `reserve` the scheduler
+    /// cannot revoke.
+    ReclaimBlockedByReservation { ty: usize, short: usize },
+    /// A lend would overflow the per-type GPU counter.
+    LendOverflow { ty: usize },
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let name = |ty: usize| DEVICE_TYPES[ty].name();
+        match *self {
+            FleetError::OverRelease { ty, fleet, available, release } => write!(
+                f,
+                "over-release: {release} {} into a pool of {available} free / {fleet} total",
+                name(ty)
+            ),
+            FleetError::ReclaimExceedsFleet { ty, fleet, want } => {
+                write!(f, "reclaim wants {want} {} but the fleet holds {fleet}", name(ty))
+            }
+            FleetError::ReclaimBlockedByReservation { ty, short } => write!(
+                f,
+                "reclaim short {short} {}: held by an external reservation",
+                name(ty)
+            ),
+            FleetError::LendOverflow { ty } => {
+                write!(f, "lend overflows the {} counter", name(ty))
+            }
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+/// What [`ClusterScheduler::reclaim`] did to satisfy a fleet shrink.
+#[derive(Debug, Clone)]
+pub struct ReclaimOutcome {
+    /// GPUs taken straight from the free pool (no job disturbed).
+    pub from_free: GpuVector,
+    /// Jobs whose allocation changed, in job-id order, each with its full
+    /// new holding. `held == [0, 0, 0]` means the job was preempted whole
+    /// (FIFO-last) and demoted back to the queue — the caller must pause
+    /// it (checkpoint + teardown) until a later replan re-seeds it.
+    pub changed: Vec<Allocation>,
+}
 
 /// Lifecycle of a job under the cluster scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -183,15 +242,30 @@ impl ClusterScheduler {
         approved
     }
 
-    pub fn release(&mut self, gpus: GpuVector) {
+    /// Return GPUs to the free pool. Guarded: releasing more than the
+    /// fleet can reabsorb (a double release, or GPUs whose fleet share was
+    /// reclaimed while they were held) is a typed [`FleetError`] and the
+    /// pool is left untouched — never a silent wrap past the fleet total.
+    pub fn release(&mut self, gpus: GpuVector) -> Result<(), FleetError> {
+        for i in 0..3 {
+            if self.available[i] + gpus[i] > self.fleet[i] {
+                return Err(FleetError::OverRelease {
+                    ty: i,
+                    fleet: self.fleet[i],
+                    available: self.available[i],
+                    release: gpus[i],
+                });
+            }
+        }
         for i in 0..3 {
             self.available[i] += gpus[i];
         }
+        Ok(())
     }
 
     /// Take GPUs back for a high-priority owner (preemption). Returns what
-    /// was actually free to take; the rest must be revoked from jobs by the
-    /// caller.
+    /// was actually free to take — clamped to the free pool, so it can
+    /// never underflow; the rest must be revoked from jobs by the caller.
     pub fn reserve(&mut self, want: GpuVector) -> GpuVector {
         let mut got = [0, 0, 0];
         for i in 0..3 {
@@ -199,6 +273,149 @@ impl ClusterScheduler {
             self.available[i] -= got[i];
         }
         got
+    }
+
+    // -- fleet mutation (serving co-location) ------------------------------
+
+    /// Grow the fleet: a serving tier lends `add` idle GPUs to training.
+    /// They join the free pool immediately; the next replan hands them out.
+    pub fn lend(&mut self, add: GpuVector) -> Result<(), FleetError> {
+        for i in 0..3 {
+            if self.fleet[i].checked_add(add[i]).is_none() {
+                return Err(FleetError::LendOverflow { ty: i });
+            }
+        }
+        for i in 0..3 {
+            self.fleet[i] += add[i];
+            self.available[i] += add[i];
+        }
+        Ok(())
+    }
+
+    /// Shrink the fleet: the serving tier takes `want` GPUs back. Victim
+    /// selection is minP-aware, in three phases:
+    ///
+    /// 1. the free pool — no job disturbed;
+    /// 2. elastic shrink of running jobs, one GPU at a time, largest
+    ///    holding first (FIFO-last breaks ties), **never below
+    ///    `max(minP, 1)` GPUs** and never into an infeasible allocation;
+    /// 3. whole-job preemption, FIFO-last (latest arrival first): the job
+    ///    loses everything, returns to `Queued`, and its surplus GPU types
+    ///    go back to the (already shrunken) free pool. A job is never left
+    ///    with `0 < held < minP`.
+    ///
+    /// The caller turns each changed allocation into a live reconfigure,
+    /// or — for `held == [0, 0, 0]` — a checkpointed pause.
+    pub fn reclaim(&mut self, want: GpuVector) -> Result<ReclaimOutcome, FleetError> {
+        for i in 0..3 {
+            if want[i] > self.fleet[i] {
+                return Err(FleetError::ReclaimExceedsFleet {
+                    ty: i,
+                    fleet: self.fleet[i],
+                    want: want[i],
+                });
+            }
+        }
+        let before: Vec<GpuVector> = self.jobs.iter().map(|j| j.master.held).collect();
+        // phase 1: the free pool
+        let mut from_free = [0, 0, 0];
+        let mut need = [0, 0, 0];
+        for i in 0..3 {
+            from_free[i] = want[i].min(self.available[i]);
+            self.available[i] -= from_free[i];
+            self.fleet[i] -= from_free[i];
+            need[i] = want[i] - from_free[i];
+        }
+        // phase 2: elastic shrink above the minP floor, staying feasible
+        for ty in 0..3 {
+            while need[ty] > 0 {
+                let victim = self
+                    .jobs
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, j)| {
+                        j.phase == JobPhase::Running
+                            && j.master.held[ty] > 0
+                            && j.master.held.iter().sum::<usize>() > j.master.job.min_p.max(1)
+                    })
+                    .filter(|(_, j)| {
+                        // the post-shrink allocation must still be runnable
+                        let mut h = j.master.held;
+                        h[ty] -= 1;
+                        best_config_any(&j.master.job, h).is_some()
+                    })
+                    .max_by(|(ia, ja), (ib, jb)| {
+                        let sa: usize = ja.master.held.iter().sum();
+                        let sb: usize = jb.master.held.iter().sum();
+                        sa.cmp(&sb)
+                            .then(ja.arrival.partial_cmp(&jb.arrival).unwrap())
+                            .then(ia.cmp(ib))
+                    })
+                    .map(|(i, _)| i);
+                let Some(v) = victim else { break };
+                let mut give = [0, 0, 0];
+                give[ty] = 1;
+                self.jobs[v].master.revoke(give);
+                self.jobs[v].preemptions += 1;
+                self.fleet[ty] -= 1;
+                need[ty] -= 1;
+            }
+        }
+        // phase 3: whole-job preemption, FIFO-last — never leave a job
+        // between 0 and its minP
+        while need.iter().sum::<usize>() > 0 {
+            let victim = self
+                .jobs
+                .iter()
+                .enumerate()
+                .filter(|(_, j)| {
+                    j.phase == JobPhase::Running
+                        && (0..3).any(|i| need[i] > 0 && j.master.held[i] > 0)
+                })
+                .max_by(|(ia, ja), (ib, jb)| {
+                    ja.arrival.partial_cmp(&jb.arrival).unwrap().then(ia.cmp(ib))
+                })
+                .map(|(i, _)| i);
+            let Some(v) = victim else {
+                // the shortfall is pinned by an external reservation the
+                // scheduler cannot revoke: report it instead of wrapping
+                let ty = (0..3).find(|&i| need[i] > 0).unwrap();
+                return Err(FleetError::ReclaimBlockedByReservation { ty, short: need[ty] });
+            };
+            let held = self.jobs[v].master.held;
+            self.jobs[v].master.preempt_all();
+            self.jobs[v].preemptions += 1;
+            self.jobs[v].phase = JobPhase::Queued;
+            for i in 0..3 {
+                let taken = need[i].min(held[i]);
+                self.fleet[i] -= taken;
+                need[i] -= taken;
+                // surplus types return to the (already shrunken) pool
+                self.available[i] += held[i] - taken;
+            }
+        }
+        debug_assert!((0..3).all(|i| {
+            let held: usize = self.jobs.iter().map(|j| j.master.held[i]).sum();
+            held + self.available[i] <= self.fleet[i]
+        }));
+        let mut changed = Vec::new();
+        for (id, j) in self.jobs.iter().enumerate() {
+            let held = j.master.held;
+            if held == before[id] {
+                continue;
+            }
+            changed.push(Allocation {
+                job_id: id,
+                held,
+                config: if held.iter().sum::<usize>() > 0 {
+                    best_config_any(&j.master.job, held)
+                } else {
+                    None
+                },
+                change: AllocationChange::Preempted,
+            });
+        }
+        Ok(ReclaimOutcome { from_free, changed })
     }
 
     // -- managed-job lifecycle ---------------------------------------------
@@ -260,7 +477,7 @@ impl ClusterScheduler {
         let held = self.jobs[id].master.held;
         self.jobs[id].phase = JobPhase::Finished;
         self.jobs[id].master.revoke(held);
-        self.release(held);
+        self.release(held).expect("a finished job's GPUs fit back into the fleet");
         held
     }
 
@@ -284,25 +501,30 @@ impl ClusterScheduler {
         });
         for &id in &fifo {
             if self.jobs[id].phase == JobPhase::Queued {
+                // a queued job is seeded with its minP guarantee in one
+                // piece (at least 1 GPU): the scheduler never grants
+                // 0 < held < minP — not on a fresh start, and not when
+                // re-seeding a job the fleet shrink preempted whole
+                let need = self.jobs[id].master.job.seed_need();
                 // device types this queued job can actually run on (a
                 // workload whose MU does not fit a 16 GB type must neither
                 // be seeded on it nor cause it to be freed for nothing)
                 let feasible: Vec<usize> = (0..3)
                     .filter(|&ty| {
                         let mut take = [0, 0, 0];
-                        take[ty] = 1;
+                        take[ty] = need;
                         best_config_any(&self.jobs[id].master.job, take).is_some()
                     })
                     .collect();
-                if self.total_available() == 0 {
-                    // elastic scale-in: a job above its minP guarantee
-                    // yields one GPU so every job starts immediately (the
-                    // paper's "eliminate the mandatory waiting of gang
-                    // scheduling" — running jobs shrink in seconds). Jobs
-                    // at or below max(minP, 1) GPUs are never shrunk, and
-                    // only a GPU of a type the queued job can use is worth
-                    // freeing — otherwise the victim would just reabsorb it
-                    // next round while the queued job starves (livelock).
+                // elastic scale-in: jobs above their minP guarantee yield
+                // GPUs one at a time until the queued job's seed fits (the
+                // paper's "eliminate the mandatory waiting of gang
+                // scheduling" — running jobs shrink in seconds). Jobs at
+                // or below max(minP, 1) GPUs are never shrunk, and only a
+                // GPU of a type the queued job can use is worth freeing —
+                // otherwise the victim would just reabsorb it next round
+                // while the queued job starves (livelock).
+                while feasible.iter().all(|&ty| self.available[ty] < need) {
                     let victim = self
                         .jobs
                         .iter()
@@ -315,32 +537,32 @@ impl ClusterScheduler {
                         })
                         .max_by_key(|(_, j)| j.master.held.iter().sum::<usize>())
                         .map(|(i, _)| i);
-                    if let Some(v) = victim {
-                        let held = self.jobs[v].master.held;
-                        let ty = feasible
-                            .iter()
-                            .copied()
-                            .filter(|&t| held[t] > 0)
-                            .max_by_key(|&t| held[t])
-                            .unwrap();
-                        let mut give = [0, 0, 0];
-                        give[ty] = 1;
-                        self.jobs[v].master.revoke(give);
-                        self.jobs[v].preemptions += 1;
-                        self.release(give);
-                        if change[v].is_none() {
-                            change[v] = Some(AllocationChange::Preempted);
-                        }
+                    let Some(v) = victim else { break };
+                    let held = self.jobs[v].master.held;
+                    let ty = feasible
+                        .iter()
+                        .copied()
+                        .filter(|&t| held[t] > 0)
+                        .max_by_key(|&t| held[t])
+                        .unwrap();
+                    let mut give = [0, 0, 0];
+                    give[ty] = 1;
+                    self.jobs[v].master.revoke(give);
+                    self.jobs[v].preemptions += 1;
+                    self.release(give).expect("a scale-in yield fits back into the fleet");
+                    if change[v].is_none() {
+                        change[v] = Some(AllocationChange::Preempted);
                     }
                 }
-                // seed with the fastest available feasible type
+                // seed with the fastest feasible type holding the full
+                // minP seed
                 let mut seeded = false;
                 for ty in 0..3 {
-                    if self.available[ty] == 0 || !feasible.contains(&ty) {
+                    if self.available[ty] < need || !feasible.contains(&ty) {
                         continue;
                     }
                     let mut take = [0, 0, 0];
-                    take[ty] = 1;
+                    take[ty] = need;
                     self.reserve(take);
                     self.jobs[id].master.grant(take);
                     self.jobs[id].phase = JobPhase::Running;
@@ -388,7 +610,7 @@ impl ClusterScheduler {
                 best_replacement(&spec, pool, self.jobs[id].master.homogeneous_only)
             {
                 if rate > cur_rate * self.migrate_threshold && cand != held {
-                    self.release(held);
+                    self.release(held).expect("a migrating job's GPUs fit back into the fleet");
                     self.reserve(cand);
                     self.jobs[id].master.held = cand;
                     if change[id].is_none() {
@@ -511,8 +733,171 @@ mod tests {
         let got = cs.reserve([3, 1, 0]);
         assert_eq!(got, [2, 1, 0]);
         assert_eq!(cs.available, [0, 1, 2]);
-        cs.release([2, 1, 0]);
+        cs.release([2, 1, 0]).unwrap();
         assert_eq!(cs.available, [2, 2, 2]);
+    }
+
+    // -- fleet mutation (lend/reclaim) and the typed guards ----------------
+
+    #[test]
+    fn over_release_is_a_typed_error_not_a_silent_wrap() {
+        let mut cs = ClusterScheduler::new([2, 2, 2]);
+        let err = cs.release([1, 0, 0]).unwrap_err();
+        assert_eq!(
+            err,
+            FleetError::OverRelease { ty: 0, fleet: 2, available: 2, release: 1 }
+        );
+        // the failed release left the pool untouched
+        assert_eq!(cs.available, [2, 2, 2]);
+        assert_eq!(cs.fleet(), [2, 2, 2]);
+    }
+
+    #[test]
+    fn release_after_fleet_shrink_while_held_is_guarded() {
+        // the reclaim-while-held edge case: GPUs are reserved (held outside
+        // the managed jobs), the fleet shrinks underneath them, and the
+        // holder hands them back — the pool must reject the part the fleet
+        // no longer owns instead of wrapping past the total.
+        let mut cs = ClusterScheduler::new([2, 2, 2]);
+        assert_eq!(cs.reserve([0, 2, 0]), [0, 2, 0]);
+        // with the P100s reserved, serving reclaims the two free V100s,
+        // shrinking the fleet to [0, 2, 2]
+        cs.reclaim([2, 0, 0]).unwrap();
+        assert_eq!(cs.fleet(), [0, 2, 2]);
+        // the stale holder returns its P100s: fine, the fleet still owns them
+        cs.release([0, 2, 0]).unwrap();
+        assert_eq!(cs.available, [0, 2, 2]);
+        // a second (double) release must fail typed
+        assert!(matches!(
+            cs.release([0, 1, 0]),
+            Err(FleetError::OverRelease { ty: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn reclaim_of_externally_reserved_gpus_fails_typed() {
+        let mut cs = ClusterScheduler::new([2, 0, 0]);
+        assert_eq!(cs.reserve([2, 0, 0]), [2, 0, 0]);
+        // nothing free, no managed job to preempt: the reclaim must say so
+        assert!(matches!(
+            cs.reclaim([1, 0, 0]),
+            Err(FleetError::ReclaimBlockedByReservation { ty: 0, short: 1 })
+        ));
+        // more than the fleet holds is rejected up front
+        assert!(matches!(
+            cs.reclaim([3, 0, 0]),
+            Err(FleetError::ReclaimExceedsFleet { ty: 0, fleet: 2, want: 3 })
+        ));
+    }
+
+    #[test]
+    fn lend_grows_fleet_and_pool() {
+        let mut cs = ClusterScheduler::new([1, 0, 0]);
+        cs.lend([1, 2, 0]).unwrap();
+        assert_eq!(cs.fleet(), [2, 2, 0]);
+        assert_eq!(cs.available, [2, 2, 0]);
+        assert!(matches!(
+            cs.lend([usize::MAX, 0, 0]),
+            Err(FleetError::LendOverflow { ty: 0 })
+        ));
+    }
+
+    #[test]
+    fn reclaim_takes_free_pool_first_then_shrinks_jobs() {
+        let mut cs = managed([4, 0, 0], &[JobSpec::new(Workload::Bert, 2)]);
+        cs.arrive(0, 0.0);
+        cs.replan();
+        assert_eq!(cs.held(0), [2, 0, 0]);
+        assert_eq!(cs.available, [2, 0, 0]);
+        // 3 wanted: 2 from the free pool, 1 shrunk off the job (floor 1)
+        let out = cs.reclaim([3, 0, 0]).unwrap();
+        assert_eq!(out.from_free, [2, 0, 0]);
+        assert_eq!(out.changed.len(), 1);
+        assert_eq!(out.changed[0].held, [1, 0, 0]);
+        assert_eq!(out.changed[0].change, AllocationChange::Preempted);
+        assert!(out.changed[0].config.is_some());
+        assert_eq!(cs.fleet(), [1, 0, 0]);
+        assert_eq!(cs.held(0), [1, 0, 0]);
+        assert_eq!(cs.preemptions(0), 1);
+    }
+
+    /// The satellite guarantee: a fleet shrink never leaves a job between
+    /// 0 and its minP — a minP job is either untouched or preempted whole
+    /// (FIFO-last), and the elastic shrink stops at the floor.
+    #[test]
+    fn reclaim_never_grants_below_min_p_preempts_fifo_last_instead() {
+        let mut first = JobSpec::new(Workload::Bert, 4);
+        first.min_p = 2;
+        let specs = vec![first, JobSpec::new(Workload::Electra, 4)];
+        let mut cs = managed([4, 0, 0], &specs);
+        cs.arrive(0, 0.0);
+        cs.replan();
+        cs.arrive(1, 1.0);
+        cs.replan();
+        assert_eq!(cs.held(0).iter().sum::<usize>() + cs.held(1).iter().sum::<usize>(), 4);
+        let held0 = cs.held(0).iter().sum::<usize>();
+        assert!(held0 >= 2, "minP seed: job 0 must hold at least 2, got {held0}");
+        // reclaim half the fleet: job 1 (FIFO-last, fully elastic) absorbs
+        // the shrink down to 1 and then the whole-job preemption; job 0 is
+        // NEVER left below its minP of 2
+        let out = cs.reclaim([2, 0, 0]).unwrap();
+        let held0 = cs.held(0).iter().sum::<usize>();
+        assert!(
+            held0 == 0 || held0 >= 2,
+            "job 0 left below its minP guarantee: {held0}"
+        );
+        assert!(held0 >= 2, "the elastic job 1 must be the victim, not the minP job");
+        assert_eq!(cs.fleet(), [2, 0, 0]);
+        // a job driven to zero is queued again, not stuck half-granted
+        for a in &out.changed {
+            let total: usize = a.held.iter().sum();
+            if total == 0 {
+                assert_eq!(cs.phase(a.job_id), JobPhase::Queued);
+                assert!(a.config.is_none());
+            }
+        }
+        // accounting still balances against the shrunken fleet
+        let held_total: usize =
+            (0..cs.n_jobs()).map(|j| cs.held(j).iter().sum::<usize>()).sum();
+        assert_eq!(held_total + cs.total_available(), 2);
+    }
+
+    #[test]
+    fn reclaim_to_zero_pauses_every_job_and_lend_reseeds() {
+        let specs =
+            vec![JobSpec::new(Workload::Bert, 4), JobSpec::new(Workload::Electra, 4)];
+        let mut cs = managed([2, 0, 0], &specs);
+        cs.arrive(0, 0.0);
+        cs.arrive(1, 0.0);
+        cs.replan();
+        let out = cs.reclaim([2, 0, 0]).unwrap();
+        assert_eq!(cs.fleet(), [0, 0, 0]);
+        assert!(out.changed.iter().all(|a| a.held == [0, 0, 0]));
+        assert_eq!(cs.phase(0), JobPhase::Queued);
+        assert_eq!(cs.phase(1), JobPhase::Queued);
+        // replanning over an empty fleet seeds nobody
+        assert!(cs.replan().is_empty());
+        // the demand dip returns the GPUs: both jobs come back in FIFO order
+        cs.lend([2, 0, 0]).unwrap();
+        let allocs = cs.replan();
+        assert_eq!(cs.phase(0), JobPhase::Running);
+        assert_eq!(cs.phase(1), JobPhase::Running);
+        assert!(allocs.iter().all(|a| a.change == AllocationChange::Started));
+    }
+
+    #[test]
+    fn queued_min_p_job_waits_for_its_full_seed() {
+        let mut spec = JobSpec::new(Workload::Bert, 4);
+        spec.min_p = 2;
+        let mut cs = managed([1, 0, 0], &[spec]);
+        cs.arrive(0, 0.0);
+        assert!(cs.replan().is_empty(), "1 free GPU cannot carry a minP=2 seed");
+        assert_eq!(cs.phase(0), JobPhase::Queued);
+        assert_eq!(cs.held(0), [0, 0, 0]);
+        cs.lend([1, 0, 0]).unwrap();
+        cs.replan();
+        assert_eq!(cs.phase(0), JobPhase::Running);
+        assert!(cs.held(0).iter().sum::<usize>() >= 2);
     }
 
     #[test]

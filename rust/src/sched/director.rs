@@ -509,6 +509,13 @@ impl Mailbox {
     pub fn is_empty(&self) -> bool {
         self.lock().is_empty()
     }
+
+    /// Drop every undelivered event — a paused job's mailbox may hold a
+    /// reconfigure addressed to the placement that just got reclaimed;
+    /// applying it after resume would be wrong twice over.
+    pub fn clear(&self) {
+        self.lock().clear();
+    }
 }
 
 /// Drains its [`Mailbox`] before every mini-batch, in pushed order.

@@ -10,7 +10,10 @@ pub mod director;
 pub mod plan;
 
 pub use aimaster::{AiMaster, Proposal};
-pub use cluster::{best_replacement, Allocation, AllocationChange, ClusterScheduler, JobPhase};
+pub use cluster::{
+    best_replacement, Allocation, AllocationChange, ClusterScheduler, FleetError, JobPhase,
+    ReclaimOutcome,
+};
 pub use director::{
     parse_gpu_vector, placement_from_config, AiMasterDirector, ElasticEvent, Mailbox,
     MailboxDirector, ResourceDirector, ScriptedDirector, StaticScheduleDirector, StepObservation,

@@ -51,6 +51,13 @@ impl JobSpec {
     pub fn memory_gb(&self) -> f64 {
         self.workload.profile().memory_gb
     }
+
+    /// GPUs a first grant must carry: the minP guarantee in one piece
+    /// (never `0 < held < minP`), at least 1, and never more than maxP —
+    /// the floor both FIFO seeding and fleet-shrink victim selection honor.
+    pub fn seed_need(&self) -> usize {
+        self.min_p.clamp(1, self.max_p.max(1))
+    }
 }
 
 /// One candidate configuration: `<nums, executors, threads, waste, perf>`

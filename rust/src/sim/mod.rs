@@ -13,5 +13,6 @@ pub mod yarn;
 
 pub use engine::EventQueue;
 pub use jobs::{JobState, SimJob};
+pub use serving::{run_serving_sim, DemandIter, ServingDemand, ServingSimConfig};
 pub use simulator::{ElasticSim, SchedulerKind, SimOutcome};
 pub use trace::{gen_trace, TraceJob};

@@ -60,16 +60,125 @@ pub struct ServingOutcome {
     pub failed_jobs: u64,
 }
 
-/// Serving demand at minute `m` of a day: double-peaked diurnal curve with
-/// small noise — the Fig. 1 shape.
-fn serving_demand(cfg: &ServingSimConfig, rng: &mut SplitMix64, minute: f64) -> usize {
-    let day = 1440.0;
-    let phase = 2.0 * std::f64::consts::PI * (minute % day) / day;
-    // peaks at ~11:00 and ~21:00
-    let shape = 0.6 * (phase - 2.9).sin().max(0.0) + 0.7 * (phase - 5.5).sin().max(0.0);
-    let noise = (rng.next_f64() - 0.5) * 0.05;
-    let d = cfg.serving_base as f64 + cfg.serving_amp as f64 * (shape + noise).clamp(0.0, 1.0);
-    (d as usize).min(cfg.fleet)
+/// The reusable serving-demand signal: the Fig. 1 double-peaked diurnal
+/// curve with small noise, optional bursty traffic spikes, and a
+/// configurable SLO headroom. The analytic Fig. 16 simulator and the real
+/// co-location runtime ([`crate::train::colocate`]) share this one
+/// generator, so the curve a `cluster --colocate` run replays is exactly
+/// the curve the paper figure is drawn from.
+#[derive(Debug, Clone)]
+pub struct ServingDemand {
+    /// Hard cap on the signal (the serving tier never demands more GPUs
+    /// than this).
+    pub fleet: usize,
+    /// Demand floor, GPUs.
+    pub base: usize,
+    /// Diurnal amplitude, GPUs.
+    pub amp: usize,
+    /// SLO headroom: the serving tier reserves this fraction on top of
+    /// raw demand (0.0 = none).
+    pub headroom: f64,
+    /// Per-minute probability that a bursty traffic spike starts (0.0 =
+    /// spikes off — and the spike RNG draw is skipped entirely, keeping
+    /// the noise stream bit-identical to the spike-free curve).
+    pub spike_prob: f64,
+    /// Extra GPUs a spike demands while it lasts.
+    pub spike_gpus: usize,
+    /// Spike duration, minutes.
+    pub spike_minutes: u32,
+    pub seed: u64,
+}
+
+impl ServingDemand {
+    /// The plain diurnal curve: no spikes, no headroom.
+    pub fn diurnal(fleet: usize, base: usize, amp: usize, seed: u64) -> ServingDemand {
+        ServingDemand {
+            fleet,
+            base,
+            amp,
+            headroom: 0.0,
+            spike_prob: 0.0,
+            spike_gpus: 0,
+            spike_minutes: 0,
+            seed,
+        }
+    }
+
+    pub fn with_spikes(mut self, prob: f64, gpus: usize, minutes: u32) -> ServingDemand {
+        self.spike_prob = prob;
+        self.spike_gpus = gpus;
+        self.spike_minutes = minutes;
+        self
+    }
+
+    pub fn with_headroom(mut self, headroom: f64) -> ServingDemand {
+        self.headroom = headroom;
+        self
+    }
+
+    /// Serving demand at minute `m`. Callers owning their RNG (the Fig. 16
+    /// simulator interleaves demand noise with scale-in samples on one
+    /// stream) thread it through here; everyone else uses [`Self::iter`].
+    /// `spike_left` carries the remaining minutes of an in-flight spike.
+    pub fn demand_at(&self, rng: &mut SplitMix64, minute: f64, spike_left: &mut u32) -> usize {
+        let day = 1440.0;
+        let phase = 2.0 * std::f64::consts::PI * (minute % day) / day;
+        // peaks at ~11:00 and ~21:00
+        let shape = 0.6 * (phase - 2.9).sin().max(0.0) + 0.7 * (phase - 5.5).sin().max(0.0);
+        let noise = (rng.next_f64() - 0.5) * 0.05;
+        let mut d =
+            self.base as f64 + self.amp as f64 * (shape + noise).clamp(0.0, 1.0);
+        if self.spike_prob > 0.0 {
+            if *spike_left > 0 {
+                *spike_left -= 1;
+                d += self.spike_gpus as f64;
+            } else if rng.next_f64() < self.spike_prob {
+                *spike_left = self.spike_minutes;
+                d += self.spike_gpus as f64;
+            }
+        }
+        if self.headroom > 0.0 {
+            d *= 1.0 + self.headroom;
+        }
+        (d as usize).min(self.fleet)
+    }
+
+    /// A deterministic minute-resolution iterator over the signal (own
+    /// derived RNG stream, infinite — `take(n)` a window).
+    pub fn iter(&self) -> DemandIter<'_> {
+        DemandIter {
+            demand: self,
+            rng: SplitMix64::derive(self.seed, &[0x5E21]),
+            minute: 0,
+            spike_left: 0,
+        }
+    }
+}
+
+/// Iterator form of [`ServingDemand`]: one sample per minute.
+#[derive(Debug, Clone)]
+pub struct DemandIter<'a> {
+    demand: &'a ServingDemand,
+    rng: SplitMix64,
+    minute: u64,
+    spike_left: u32,
+}
+
+impl Iterator for DemandIter<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        let d = self.demand.demand_at(&mut self.rng, self.minute as f64, &mut self.spike_left);
+        self.minute += 1;
+        Some(d)
+    }
+}
+
+impl ServingSimConfig {
+    /// The demand signal this simulation runs against.
+    pub fn demand(&self) -> ServingDemand {
+        ServingDemand::diurnal(self.fleet, self.serving_base, self.serving_amp, self.seed)
+    }
 }
 
 /// Per-GPU SM utilization assumptions: serving replicas are provisioned for
@@ -78,6 +187,8 @@ const SERVING_SM_UTIL: f64 = 0.30;
 const TRAINING_SM_UTIL: f64 = 0.92;
 
 pub fn run_serving_sim(cfg: &ServingSimConfig) -> ServingOutcome {
+    let demand = cfg.demand();
+    let mut spike_left = 0u32;
     let mut rng = SplitMix64::derive(cfg.seed, &[0x5E21]);
     let mut serving_alloc = Series::new("serving_gpus");
     let mut training_alloc = Series::new("training_gpus");
@@ -94,7 +205,7 @@ pub fn run_serving_sim(cfg: &ServingSimConfig) -> ServingOutcome {
     for minute in 0..2880u32 {
         let t = minute as f64;
         let after = minute >= 1440; // EasyScale deployed on day 2
-        let serving = serving_demand(cfg, &mut rng, t);
+        let serving = demand.demand_at(&mut rng, t, &mut spike_left);
 
         if after {
             let idle = cfg.fleet - serving;
@@ -208,5 +319,51 @@ mod tests {
         let b = run_serving_sim(&ServingSimConfig::default());
         assert_eq!(a.preemptions, b.preemptions);
         assert_eq!(a.day_alloc_ratio, b.day_alloc_ratio);
+    }
+
+    #[test]
+    fn demand_iterator_is_deterministic_and_clamped() {
+        let d = ServingDemand::diurnal(6, 2, 8, 7).with_spikes(0.05, 3, 30);
+        let a: Vec<usize> = d.iter().take(1440).collect();
+        let b: Vec<usize> = d.iter().take(1440).collect();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&g| g <= 6), "demand never exceeds the fleet");
+        assert!(a.iter().any(|&g| g > 2), "diurnal peak rises above the base");
+    }
+
+    #[test]
+    fn spikes_raise_demand_above_the_plain_curve() {
+        let plain = ServingDemand::diurnal(100, 10, 40, 3);
+        let spiky = plain.clone().with_spikes(0.02, 25, 20);
+        let a: f64 = plain.iter().take(1440).map(|g| g as f64).sum();
+        let b: f64 = spiky.iter().take(1440).map(|g| g as f64).sum();
+        assert!(b > a, "spiky day {b} should demand more GPU-minutes than plain {a}");
+    }
+
+    #[test]
+    fn headroom_is_monotone() {
+        let base = ServingDemand::diurnal(1000, 100, 400, 11);
+        let padded = base.clone().with_headroom(0.25);
+        for (a, b) in base.iter().take(1440).zip(padded.iter().take(1440)) {
+            assert!(b >= a, "headroom never lowers demand ({b} < {a})");
+        }
+        let sum_a: usize = base.iter().take(1440).sum();
+        let sum_b: usize = padded.iter().take(1440).sum();
+        assert!(sum_b > sum_a);
+    }
+
+    #[test]
+    fn sim_demand_matches_the_extracted_signal() {
+        // run_serving_sim draws its curve from the shared generator; the
+        // first simulated day must equal the iterator replay sample-for-sample
+        // (same seed tag, same draw order).
+        let cfg = ServingSimConfig::default();
+        let out = run_serving_sim(&cfg);
+        let replay: Vec<usize> = cfg.demand().iter().take(1440).collect();
+        for (minute, ((_, s), &r)) in
+            out.serving_alloc.points.iter().zip(&replay).enumerate()
+        {
+            assert_eq!(*s as usize, r, "minute {minute}");
+        }
     }
 }

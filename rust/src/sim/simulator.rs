@@ -159,7 +159,7 @@ impl ElasticSim {
                     }
                     j.state = JobState::Done { finish: now };
                     if self.kind == SchedulerKind::YarnCs {
-                        cs.release(j.held);
+                        cs.release(j.held).expect("gang release stays within the fleet");
                     } else {
                         cs.finish(id);
                     }

@@ -26,6 +26,8 @@
 //! fixed-placement sequential reference no matter how the fleet was
 //! shuffled underneath it (`tests/cluster.rs`).
 
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -37,6 +39,7 @@ use crate::runtime::{Engine, UploadCache, UploadStats};
 use crate::sched::cluster::{ClusterScheduler, JobPhase};
 use crate::sched::director::{placement_from_config, ElasticEvent, Mailbox, MailboxDirector};
 use crate::sched::plan::{GpuVector, JobSpec};
+use crate::train::colocate::{Colocation, ColocationReport, PauseRecord};
 use crate::train::session::{ElasticSession, SessionReport};
 use crate::train::{SessionBuilder, TrainConfig, Trainer};
 
@@ -88,6 +91,9 @@ pub struct ClusterReport {
     pub decisions: u64,
     /// Reconfigurations mailed to running sessions.
     pub reconfigs: u64,
+    /// Serving co-location outcome, when the run was co-located
+    /// ([`ClusterRuntime::with_colocation`]).
+    pub colocation: Option<ColocationReport>,
 }
 
 impl ClusterReport {
@@ -119,6 +125,28 @@ struct Slot<'e> {
     /// Last step rate reported by the job's runner thread (the concurrent
     /// driver's substitute for reading the session directly).
     observed_rate: f64,
+    /// Set while the job is fully paused by a serving reclaim: the
+    /// checkpoint its next session will resume from.
+    paused_ckpt: Option<PathBuf>,
+    /// Progress accumulated by sessions torn down at pauses, merged back
+    /// into the final report at retirement.
+    prior_steps: u64,
+    prior_reconfigs: u64,
+    prior_evals: u64,
+    prior_first_loss: Option<f32>,
+}
+
+/// What one serving-fleet retune did. The scheduler side (lend/reclaim,
+/// shrink mail) is already done; executing the physical pauses is the
+/// driver's job, because only the driver knows where each session lives
+/// (slot vs. runner thread).
+#[derive(Default)]
+struct RetuneOutcome {
+    /// Jobs reclaimed to zero GPUs — checkpoint + tear down each before
+    /// the next replan.
+    pauses: Vec<usize>,
+    /// Shrink reconfigures mailed to surviving sessions.
+    mailed: u64,
 }
 
 /// What the concurrent driver sends a persistent job-runner thread.
@@ -126,6 +154,9 @@ struct Slot<'e> {
 enum RunnerCmd {
     /// Step the session up to this many rounds, then report back.
     Run(u64),
+    /// Serving reclaim took every GPU: checkpoint to `path`, report the
+    /// segment run so far, tear the session down and exit.
+    Pause { path: PathBuf },
     /// Assemble the final report (with the driver-measured wall-clock)
     /// and exit.
     Retire { wall_s: f64 },
@@ -135,6 +166,7 @@ enum RunnerCmd {
 #[cfg(not(feature = "pjrt"))]
 enum RunnerReply {
     Ran { finished: bool, rate: f64, error: Option<anyhow::Error> },
+    Paused { report: Box<SessionReport>, error: Option<anyhow::Error> },
     Retired(Box<SessionReport>),
 }
 
@@ -179,6 +211,14 @@ fn job_runner(
                     return; // driver gone; nobody left to report to
                 }
             }
+            RunnerCmd::Pause { path } => {
+                // checkpoint first (it syncs executor contexts), then cut
+                // the segment report; the session dies with this thread
+                let error = session.trainer.checkpoint(&path).err();
+                let report = session.report(0.0);
+                let _ = replies.send(RunnerReply::Paused { report: Box::new(report), error });
+                return;
+            }
             RunnerCmd::Retire { wall_s } => {
                 let report = session.report(wall_s);
                 let _ = replies.send(RunnerReply::Retired(Box::new(report)));
@@ -202,7 +242,18 @@ pub struct ClusterRuntime<'e> {
     /// manifest shapes on the same device type check out one
     /// `ParamBuffers` instead of each uploading a private copy.
     uploads: Arc<UploadCache>,
+    /// Serving co-location policy: a replayed demand trace retunes the
+    /// fleet (lend/reclaim) at every decide boundary.
+    colocation: Option<Colocation>,
+    /// Oracle knob: sessions apply reconfigures via the full rebuild path.
+    full_rebuild: bool,
+    /// Where pause checkpoints land (a fresh temp dir by default).
+    pause_dir: Option<PathBuf>,
 }
+
+/// Distinguishes concurrent runtimes' default pause directories within one
+/// process (tests run many runtimes in parallel).
+static PAUSE_SEQ: AtomicU64 = AtomicU64::new(0);
 
 impl<'e> ClusterRuntime<'e> {
     /// A runtime over `engine` arbitrating `fleet` GPUs, replanning every
@@ -217,7 +268,39 @@ impl<'e> ClusterRuntime<'e> {
             decide_every: decide_every.max(1),
             job_threads: 1,
             uploads: Arc::new(UploadCache::new()),
+            colocation: None,
+            full_rebuild: false,
+            pause_dir: None,
         }
+    }
+
+    /// Co-locate with a serving tier: the policy's trace drives per-epoch
+    /// fleet lend/reclaim. The fleet passed to [`ClusterRuntime::new`] is
+    /// the *whole machine* (serving + training); the policy carves the
+    /// serving share out of it at every decide boundary.
+    pub fn with_colocation(mut self, mut colocation: Colocation) -> Self {
+        colocation.attach(self.scheduler.fleet());
+        self.colocation = Some(colocation);
+        self
+    }
+
+    /// Route every session's reconfigures through
+    /// [`Trainer::reconfigure_full`] — the bitwise oracle the incremental
+    /// fast path is pinned against in `tests/colocate.rs`.
+    pub fn with_full_rebuild(mut self, on: bool) -> Self {
+        self.full_rebuild = on;
+        self
+    }
+
+    /// Directory for pause checkpoints (default: a fresh temp dir).
+    pub fn with_pause_dir(mut self, dir: PathBuf) -> Self {
+        self.pause_dir = Some(dir);
+        self
+    }
+
+    /// The co-location outcome accumulated so far (final after `run`).
+    pub fn colocation_report(&self) -> Option<ColocationReport> {
+        self.colocation.as_ref().map(|c| c.report())
     }
 
     /// Shared-upload cache counters: entries/peak prove O(1) device
@@ -271,6 +354,11 @@ impl<'e> ClusterRuntime<'e> {
             arrival_round,
             arrived: false,
             observed_rate: 0.0,
+            paused_ckpt: None,
+            prior_steps: 0,
+            prior_reconfigs: 0,
+            prior_evals: 0,
+            prior_first_loss: None,
         });
         id
     }
@@ -333,6 +421,14 @@ impl<'e> ClusterRuntime<'e> {
             // fire in the same round, double-counting `decisions`
             let mut decided_this_round = false;
             if round % self.decide_every == 0 || need_decide {
+                // serving first: the fleet must reflect this epoch's demand
+                // (and reclaimed-to-zero jobs must be physically paused)
+                // before replanning can hand GPUs out
+                let retune = self.retune_fleet(round)?;
+                for id in retune.pauses {
+                    self.pause_job_inline(id, round)?;
+                }
+                reconfigs += retune.mailed;
                 reconfigs += self.decide(round, &mut decisions)?;
                 need_decide = false;
                 decided_this_round = true;
@@ -361,6 +457,20 @@ impl<'e> ClusterRuntime<'e> {
                         // the cluster clock instead of spinning
                         round = round.max(next);
                         need_decide = true;
+                        continue;
+                    }
+                    let epoch = (round / self.decide_every) as usize;
+                    if self.slots.iter().any(|s| s.report.is_none() && s.paused_ckpt.is_some())
+                        || self.colocation.as_ref().is_some_and(|c| epoch < c.trace.len())
+                    {
+                        // the serving tier holds too much of the fleet for
+                        // any live job right now (every live job is paused
+                        // on disk, or queued jobs cannot fit their minP
+                        // seed): jump the cluster clock to the next decide
+                        // boundary, where the trace may hand GPUs back —
+                        // past its end it returns them all, so a job that
+                        // still cannot place then is a genuine stall
+                        round = (round / self.decide_every + 1) * self.decide_every;
                         continue;
                     }
                 }
@@ -405,6 +515,35 @@ impl<'e> ClusterRuntime<'e> {
             loop {
                 let round = epoch * rounds;
                 self.admit(round);
+                // serving first: retune the fleet and physically pause any
+                // job reclaimed to zero before the replanning barrier below
+                // can hand GPUs back out. Runners are idle between barriers,
+                // so the Pause command is answered immediately.
+                let retune = self.retune_fleet(round)?;
+                for id in retune.pauses {
+                    let path = self.pause_path(id, round)?;
+                    let runner = runners[id]
+                        .take()
+                        .ok_or_else(|| anyhow::anyhow!("paused job {id} has no runner"))?;
+                    runner
+                        .cmd
+                        .send(RunnerCmd::Pause { path: path.clone() })
+                        .map_err(|_| anyhow::anyhow!("job {id} runner thread is gone"))?;
+                    match runner.reply.recv() {
+                        Ok(RunnerReply::Paused { report, error }) => {
+                            if let Some(e) = error {
+                                return Err(e);
+                            }
+                            self.note_pause(id, path, &report);
+                        }
+                        _ => {
+                            return Err(anyhow::anyhow!(
+                                "job {id} runner failed to acknowledge its pause"
+                            ));
+                        }
+                    }
+                }
+                reconfigs += retune.mailed;
                 // the scheduling barrier: observe rates, replan, mail events
                 reconfigs += self.decide(round, &mut decisions)?;
                 // newly placed sessions move onto fresh persistent runners
@@ -423,6 +562,25 @@ impl<'e> ClusterRuntime<'e> {
                     if let Some(next) = self.next_arrival_round() {
                         // idle gap before the next arrival: fast-forward
                         epoch = epoch.max(next.div_ceil(rounds.max(1)));
+                        continue;
+                    }
+                    let paused = self
+                        .slots
+                        .iter()
+                        .any(|s| s.report.is_none() && s.paused_ckpt.is_some());
+                    let trace_live = self
+                        .colocation
+                        .as_ref()
+                        .is_some_and(|c| (epoch as usize) < c.trace.len());
+                    if paused || trace_live {
+                        // the serving tier holds too much of the fleet for
+                        // any live job right now (live jobs paused on disk,
+                        // or queued jobs that cannot fit their minP seed):
+                        // advance to the next epoch, where the trace may
+                        // hand GPUs back — past its end it returns them
+                        // all, so a job that still cannot place then is a
+                        // genuine stall
+                        epoch += 1;
                         continue;
                     }
                     anyhow::bail!("cluster stalled: no job can be placed on the fleet");
@@ -451,9 +609,9 @@ impl<'e> ClusterRuntime<'e> {
                                     finished.push(id);
                                 }
                             }
-                            Ok(RunnerReply::Retired(_)) => {
+                            Ok(_) => {
                                 return Err(anyhow::anyhow!(
-                                    "job {id} runner retired unexpectedly"
+                                    "job {id} runner sent an unexpected reply"
                                 ));
                             }
                             Err(_) => {
@@ -478,7 +636,7 @@ impl<'e> ClusterRuntime<'e> {
                         .map_err(|_| anyhow::anyhow!("job {id} runner thread is gone"))?;
                     match runner.reply.recv() {
                         Ok(RunnerReply::Retired(report)) => {
-                            self.slots[id].report = Some(*report);
+                            self.slots[id].report = Some(self.merged_report(id, *report));
                         }
                         _ => {
                             return Err(anyhow::anyhow!(
@@ -516,9 +674,27 @@ impl<'e> ClusterRuntime<'e> {
         self.slots[id].final_gpus = self.scheduler.held(id);
         let session = self.slots[id].session.take().unwrap();
         let wall = self.slots[id].started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
-        self.slots[id].report = Some(session.report(wall));
+        self.slots[id].report = Some(self.merged_report(id, session.report(wall)));
         let released = self.scheduler.finish(id);
         crate::info!("cluster", "job {id} finished, released {released:?} GPUs");
+    }
+
+    /// Fold progress from sessions torn down at serving pauses into the
+    /// final session's report, so a paused-and-resumed job reports its
+    /// whole life (steps, reconfigs, evals, first loss), not just the last
+    /// segment.
+    fn merged_report(&self, id: usize, mut report: SessionReport) -> SessionReport {
+        let slot = &self.slots[id];
+        report.steps_run += slot.prior_steps;
+        report.reconfigs += slot.prior_reconfigs;
+        report.evals += slot.prior_evals;
+        if let Some(first) = slot.prior_first_loss {
+            report.first_loss = first;
+        }
+        if report.wall_s > 0.0 {
+            report.observed_rate = report.steps_run as f64 / report.wall_s;
+        }
+        report
     }
 
     fn final_report(
@@ -537,7 +713,130 @@ impl<'e> ClusterRuntime<'e> {
                 final_gpus: slot.final_gpus,
             });
         }
-        Ok(ClusterReport { jobs, wall_s, decisions, reconfigs })
+        Ok(ClusterReport {
+            jobs,
+            wall_s,
+            decisions,
+            reconfigs,
+            colocation: self.colocation.as_ref().map(|c| c.report()),
+        })
+    }
+
+    /// Where job `id`'s pause checkpoint for this round lands.
+    fn pause_path(&mut self, id: usize, round: u64) -> Result<PathBuf> {
+        if self.pause_dir.is_none() {
+            let n = PAUSE_SEQ.fetch_add(1, Ordering::Relaxed);
+            self.pause_dir = Some(
+                std::env::temp_dir()
+                    .join(format!("easyscale_pause_{}_{n}", std::process::id())),
+            );
+        }
+        let dir = self.pause_dir.as_ref().unwrap();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating pause dir {}", dir.display()))?;
+        Ok(dir.join(format!("job{id}_round{round}.ckpt")))
+    }
+
+    /// Bookkeeping shared by both drivers once a job's session has been
+    /// checkpointed and torn down for a serving pause.
+    fn note_pause(&mut self, id: usize, path: PathBuf, report: &SessionReport) {
+        let slot = &mut self.slots[id];
+        slot.prior_steps += report.steps_run;
+        slot.prior_reconfigs += report.reconfigs;
+        slot.prior_evals += report.evals;
+        if slot.prior_first_loss.is_none() && !report.first_loss.is_nan() {
+            slot.prior_first_loss = Some(report.first_loss);
+        }
+        // a paused job neither reports rates nor wants the reconfigure
+        // that shrank it to zero delivered on resume
+        slot.observed_rate = 0.0;
+        slot.mailbox.clear();
+        slot.paused_ckpt = Some(path.clone());
+        crate::info!(
+            "cluster",
+            "job {id} paused at step {} -> {}",
+            report.final_step,
+            path.display()
+        );
+        if let Some(c) = self.colocation.as_mut() {
+            c.note_pause(PauseRecord { job_id: id, step: report.final_step, checkpoint: path });
+        }
+    }
+
+    /// Pause a job under the round-robin driver, where the session lives
+    /// in the slot: checkpoint, cut the segment report, tear down.
+    fn pause_job_inline(&mut self, id: usize, round: u64) -> Result<()> {
+        let path = self.pause_path(id, round)?;
+        let mut session = self.slots[id]
+            .session
+            .take()
+            .with_context(|| format!("paused job {id} has no live session"))?;
+        session.trainer.checkpoint(&path)?;
+        let report = session.report(0.0);
+        drop(session);
+        self.note_pause(id, path, &report);
+        Ok(())
+    }
+
+    /// Retune the training fleet to this round's serving demand: lend what
+    /// the serving tier released, reclaim what it took, and mail the
+    /// shrink placements the reclaim forced on surviving jobs. Runs
+    /// *before* [`Self::decide`] at every boundary so replanning sees the
+    /// post-serving fleet — and so jobs reclaimed to zero are physically
+    /// paused before replan could re-grant them GPUs.
+    fn retune_fleet(&mut self, round: u64) -> Result<RetuneOutcome> {
+        let mut out = RetuneOutcome::default();
+        let epoch = (round / self.decide_every) as usize;
+        let target = match self.colocation.as_ref() {
+            Some(c) => c.target_fleet(epoch),
+            None => return Ok(out),
+        };
+        let current = self.scheduler.fleet();
+        let mut lend = [0usize; 3];
+        let mut take = [0usize; 3];
+        for ty in 0..3 {
+            lend[ty] = target[ty].saturating_sub(current[ty]);
+            take[ty] = current[ty].saturating_sub(target[ty]);
+        }
+        if lend.iter().any(|&n| n > 0) {
+            self.scheduler.lend(lend)?;
+            crate::info!(
+                "cluster",
+                "round {round}: serving released {lend:?}, fleet now {:?}",
+                self.scheduler.fleet()
+            );
+            self.colocation.as_mut().expect("colocation checked above").lends += 1;
+        }
+        if take.iter().any(|&n| n > 0) {
+            let outcome = self.scheduler.reclaim(take)?;
+            crate::info!(
+                "cluster",
+                "round {round}: serving reclaimed {take:?} ({:?} from the free pool), fleet now {:?}",
+                outcome.from_free,
+                self.scheduler.fleet()
+            );
+            let mut shrinks = 0u64;
+            for alloc in &outcome.changed {
+                let id = alloc.job_id;
+                if alloc.held == [0, 0, 0] {
+                    out.pauses.push(id);
+                    continue;
+                }
+                let Some(config) = alloc.config.clone() else {
+                    anyhow::bail!("job {id}: shrink to {:?} has no feasible plan", alloc.held);
+                };
+                let spec = self.scheduler.master(id).job.clone();
+                let placement = placement_from_config(&spec, &config)
+                    .with_context(|| format!("lowering shrink {:?} for job {id}", alloc.held))?;
+                self.slots[id].mailbox.push(ElasticEvent::Reconfigure(placement));
+                out.mailed += 1;
+                shrinks += 1;
+            }
+            let colo = self.colocation.as_mut().expect("colocation checked above");
+            colo.reclaims += 1;
+            colo.shrinks += shrinks;
+        }
+        Ok(out)
     }
 
     /// One scheduling round: observe throughput, replan the fleet, lower
@@ -587,15 +886,43 @@ impl<'e> ClusterRuntime<'e> {
                     alloc.held,
                     placement.n_gpus()
                 );
+                let full_rebuild = self.full_rebuild;
                 let slot = &mut self.slots[id];
                 let session = SessionBuilder::new(self.engine, slot.job.cfg.clone(), placement)
                     .steps(slot.job.steps)
                     .log_every(0)
                     .director(Box::new(MailboxDirector::new(slot.mailbox.clone())))
                     .shared_uploads(Arc::clone(&self.uploads))
+                    .full_rebuild(full_rebuild)
                     .build()?;
                 slot.session = Some(session);
                 slot.started = Some(Instant::now());
+            } else if self.slots[id].session.is_none() && self.slots[id].paused_ckpt.is_some() {
+                // a paused job won GPUs back: rebuild its session from the
+                // pause checkpoint under the new placement (the restart
+                // half of elastic reconfiguration, paper §3.2)
+                debug_assert_eq!(self.scheduler.phase(id), JobPhase::Running);
+                crate::info!(
+                    "cluster",
+                    "round {round}: job {id} resumes on {:?} ({} executors)",
+                    alloc.held,
+                    placement.n_gpus()
+                );
+                let full_rebuild = self.full_rebuild;
+                let slot = &mut self.slots[id];
+                let path = slot.paused_ckpt.take().expect("paused_ckpt checked above");
+                let session = SessionBuilder::new(self.engine, slot.job.cfg.clone(), placement)
+                    .steps(slot.job.steps)
+                    .log_every(0)
+                    .director(Box::new(MailboxDirector::new(slot.mailbox.clone())))
+                    .shared_uploads(Arc::clone(&self.uploads))
+                    .full_rebuild(full_rebuild)
+                    .resume_from(path)
+                    .build()?;
+                slot.session = Some(session);
+                if let Some(c) = self.colocation.as_mut() {
+                    c.resumes += 1;
+                }
             } else {
                 crate::info!(
                     "cluster",
@@ -607,6 +934,15 @@ impl<'e> ClusterRuntime<'e> {
                 self.slots[id].mailbox.push(ElasticEvent::Reconfigure(placement));
                 mailed += 1;
             }
+        }
+        if self.colocation.is_some() {
+            // one utilization sample per decide epoch (idempotent — a
+            // mid-epoch replan just refreshes the held total)
+            let training: usize = (0..self.slots.len())
+                .map(|id| self.scheduler.held(id).iter().sum::<usize>())
+                .sum();
+            let epoch = (round / self.decide_every) as usize;
+            self.colocation.as_mut().unwrap().record_epoch(epoch, training);
         }
         Ok(mailed)
     }

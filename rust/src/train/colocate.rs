@@ -1,0 +1,387 @@
+//! Serving co-location (paper §5.3, Fig. 16) over *real* training jobs.
+//!
+//! The analytic simulator in [`crate::sim::serving`] models the
+//! production-cluster deployment with closed-form utilization curves. This
+//! module runs the same scenario through the actual elastic runtime: a
+//! replayed serving-demand trace drives per-epoch
+//! [`crate::sched::ClusterScheduler::lend`] / `reclaim` calls on the
+//! training fleet, forcing live jobs to shrink through the incremental
+//! reconfigure fast path — down to a full checkpointed pause when the
+//! serving tier takes everything — while every job stays bitwise-identical
+//! to an undisturbed fixed-placement run.
+//!
+//! The pieces here are the *policy* side: the replayable trace, the
+//! elastic-vs-static partition modes, and the bookkeeping that becomes a
+//! [`ColocationReport`]. The mechanism (pausing sessions, resuming from
+//! checkpoints, mailing shrink reconfigures) lives in
+//! [`crate::train::cluster::ClusterRuntime`].
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::sched::GpuVector;
+use crate::sim::ServingDemand;
+use anyhow::{bail, Context, Result};
+
+/// A serving-demand trace at *decide-epoch* resolution: entry `e` is the
+/// number of GPUs the serving tier holds during training epoch `e`. Past
+/// the end of the trace demand is zero — serving traffic has gone home and
+/// training reabsorbs the whole fleet, so every job can run to completion.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServingTrace {
+    pub demand: Vec<usize>,
+}
+
+impl ServingTrace {
+    pub fn new(demand: Vec<usize>) -> ServingTrace {
+        ServingTrace { demand }
+    }
+
+    /// Sample a [`ServingDemand`] signal over `minutes` simulated minutes
+    /// and downsample it to `epochs` entries, keeping the *peak* of each
+    /// bucket (the serving tier must be provisioned for its worst minute
+    /// within a decide window, not the average).
+    pub fn from_demand(signal: &ServingDemand, minutes: usize, epochs: usize) -> ServingTrace {
+        assert!(epochs > 0, "a trace needs at least one epoch");
+        let samples: Vec<usize> = signal.iter().take(minutes.max(epochs)).collect();
+        let per = samples.len().div_ceil(epochs);
+        let demand = samples
+            .chunks(per.max(1))
+            .map(|c| c.iter().copied().max().unwrap_or(0))
+            .collect();
+        ServingTrace { demand }
+    }
+
+    /// Serving demand during epoch `e`; zero past the end of the trace.
+    pub fn demand_at(&self, epoch: usize) -> usize {
+        self.demand.get(epoch).copied().unwrap_or(0)
+    }
+
+    /// The worst-case demand anywhere in the trace — what a static
+    /// partition must reserve for serving around the clock.
+    pub fn peak(&self) -> usize {
+        self.demand.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.demand.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.demand.is_empty()
+    }
+
+    /// Write the trace as `epoch,serving_gpus` CSV.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut out = String::from("epoch,serving_gpus\n");
+        for (e, d) in self.demand.iter().enumerate() {
+            out.push_str(&format!("{e},{d}\n"));
+        }
+        std::fs::write(path, out)
+            .with_context(|| format!("writing serving trace {}", path.display()))
+    }
+
+    /// Read a trace written by [`Self::write_csv`] (header optional; epochs
+    /// must appear in order).
+    pub fn read_csv(path: &Path) -> Result<ServingTrace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading serving trace {}", path.display()))?;
+        let mut demand = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with("epoch") {
+                continue;
+            }
+            let mut cols = line.split(',');
+            let (Some(e), Some(d)) = (cols.next(), cols.next()) else {
+                bail!("{}:{}: expected `epoch,serving_gpus`", path.display(), lineno + 1);
+            };
+            let e: usize = e
+                .trim()
+                .parse()
+                .with_context(|| format!("{}:{}: bad epoch", path.display(), lineno + 1))?;
+            if e != demand.len() {
+                bail!(
+                    "{}:{}: epoch {} out of order (expected {})",
+                    path.display(),
+                    lineno + 1,
+                    e,
+                    demand.len()
+                );
+            }
+            let d: usize = d.trim().parse().with_context(|| {
+                format!("{}:{}: bad serving_gpus", path.display(), lineno + 1)
+            })?;
+            demand.push(d);
+        }
+        if demand.is_empty() {
+            bail!("{}: empty serving trace", path.display());
+        }
+        Ok(ServingTrace { demand })
+    }
+}
+
+/// How the fleet is split between serving and training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionMode {
+    /// The training fleet tracks the trace epoch by epoch: lend when
+    /// serving demand falls, reclaim when it rises.
+    Elastic,
+    /// The classic alternative: carve out the trace's *peak* demand for
+    /// serving once and never move GPUs again. Training keeps a constant
+    /// (smaller) fleet; the serving slice idles off-peak.
+    Static,
+}
+
+impl fmt::Display for PartitionMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PartitionMode::Elastic => write!(f, "elastic"),
+            PartitionMode::Static => write!(f, "static"),
+        }
+    }
+}
+
+/// One checkpointed full pause: the serving tier took every GPU a job
+/// held, so the runtime wrote its state to disk and tore the session down.
+#[derive(Debug, Clone)]
+pub struct PauseRecord {
+    pub job_id: usize,
+    /// Training step the checkpoint was cut at.
+    pub step: u64,
+    pub checkpoint: PathBuf,
+}
+
+/// Per-epoch utilization sample: what serving demanded and what training
+/// actually held.
+#[derive(Debug, Clone, Copy)]
+struct EpochSample {
+    epoch: usize,
+    serving: usize,
+    training: usize,
+}
+
+/// The co-location policy attached to a
+/// [`crate::train::cluster::ClusterRuntime`]: replays a [`ServingTrace`],
+/// computes the training fleet each epoch is entitled to, and accumulates
+/// the utilization/disruption statistics for the final report.
+#[derive(Debug, Clone)]
+pub struct Colocation {
+    pub trace: ServingTrace,
+    pub mode: PartitionMode,
+    /// Full machine fleet (serving + training), fixed at attach time.
+    total: GpuVector,
+    /// Static mode only: the constant training partition.
+    static_fleet: GpuVector,
+    attached: bool,
+    samples: Vec<EpochSample>,
+    pub lends: u64,
+    pub reclaims: u64,
+    pub shrinks: u64,
+    pub pauses: u64,
+    pub resumes: u64,
+    pub pause_log: Vec<PauseRecord>,
+}
+
+/// Remove `n` GPUs from `total`, consuming device types in index order
+/// (V100 first — the serving tier prefers the fastest cards, mirroring the
+/// production deployment in the paper).
+fn carve(total: GpuVector, n: usize) -> GpuVector {
+    let mut left = n;
+    let mut out = total;
+    for slot in out.iter_mut() {
+        let take = (*slot).min(left);
+        *slot -= take;
+        left -= take;
+    }
+    out
+}
+
+impl Colocation {
+    pub fn new(trace: ServingTrace) -> Colocation {
+        Colocation {
+            trace,
+            mode: PartitionMode::Elastic,
+            total: [0, 0, 0],
+            static_fleet: [0, 0, 0],
+            attached: false,
+            samples: Vec::new(),
+            lends: 0,
+            reclaims: 0,
+            shrinks: 0,
+            pauses: 0,
+            resumes: 0,
+            pause_log: Vec::new(),
+        }
+    }
+
+    /// The static-partition baseline over the same trace.
+    pub fn static_partition(trace: ServingTrace) -> Colocation {
+        let mut c = Colocation::new(trace);
+        c.mode = PartitionMode::Static;
+        c
+    }
+
+    /// Bind the policy to the full machine fleet. Called once by the
+    /// runtime before the first epoch.
+    pub fn attach(&mut self, total: GpuVector) {
+        self.total = total;
+        self.static_fleet = carve(total, self.trace.peak());
+        self.attached = true;
+    }
+
+    /// The training fleet epoch `e` is entitled to.
+    pub fn target_fleet(&self, epoch: usize) -> GpuVector {
+        debug_assert!(self.attached, "Colocation::attach must run first");
+        match self.mode {
+            PartitionMode::Elastic => carve(self.total, self.trace.demand_at(epoch)),
+            PartitionMode::Static => self.static_fleet,
+        }
+    }
+
+    /// Record one epoch's utilization sample (idempotent per epoch — the
+    /// runtime may decide several times within one epoch). `training` is
+    /// the GPU total jobs actually held after replanning. The *serving*
+    /// side always records real demand, so elastic and static runs are
+    /// compared against the same traffic.
+    pub fn record_epoch(&mut self, epoch: usize, training: usize) {
+        let serving = self.trace.demand_at(epoch);
+        match self.samples.iter_mut().find(|s| s.epoch == epoch) {
+            Some(s) => s.training = training,
+            None => self.samples.push(EpochSample { epoch, serving, training }),
+        }
+    }
+
+    pub fn note_pause(&mut self, rec: PauseRecord) {
+        self.pauses += 1;
+        self.pause_log.push(rec);
+    }
+
+    pub fn report(&self) -> ColocationReport {
+        let total: usize = self.total.iter().sum();
+        let n = self.samples.len().max(1) as f64;
+        let avg_serving = self.samples.iter().map(|s| s.serving as f64).sum::<f64>() / n;
+        let avg_training = self.samples.iter().map(|s| s.training as f64).sum::<f64>() / n;
+        let utilization_pct = if total == 0 {
+            0.0
+        } else {
+            100.0 * (avg_serving + avg_training) / total as f64
+        };
+        ColocationReport {
+            mode: self.mode,
+            fleet_total: total,
+            epochs: self.samples.len(),
+            lends: self.lends,
+            reclaims: self.reclaims,
+            shrinks: self.shrinks,
+            pauses: self.pauses,
+            resumes: self.resumes,
+            avg_serving_gpus: avg_serving,
+            avg_training_gpus: avg_training,
+            utilization_pct,
+            pause_log: self.pause_log.clone(),
+        }
+    }
+}
+
+/// Aggregate outcome of a co-located run, for the bench/CLI layers.
+#[derive(Debug, Clone)]
+pub struct ColocationReport {
+    pub mode: PartitionMode,
+    /// Full machine fleet size (serving + training), GPUs.
+    pub fleet_total: usize,
+    /// Decide epochs the run spanned (with at least one utilization sample).
+    pub epochs: usize,
+    pub lends: u64,
+    pub reclaims: u64,
+    /// Incremental shrink reconfigures forced by reclaims.
+    pub shrinks: u64,
+    /// Full checkpointed pauses (job held → 0).
+    pub pauses: u64,
+    pub resumes: u64,
+    pub avg_serving_gpus: f64,
+    pub avg_training_gpus: f64,
+    /// Aggregate fleet utilization: (serving demand + training held) / total.
+    pub utilization_pct: f64,
+    pub pause_log: Vec<PauseRecord>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_resamples_by_bucket_peak_and_zeroes_past_the_end() {
+        let signal = ServingDemand::diurnal(8, 1, 6, 5).with_spikes(0.05, 3, 10);
+        let trace = ServingTrace::from_demand(&signal, 1440, 24);
+        assert_eq!(trace.len(), 24);
+        let minutes: Vec<usize> = signal.iter().take(1440).collect();
+        for (e, &d) in trace.demand.iter().enumerate() {
+            let bucket = &minutes[e * 60..(e + 1) * 60];
+            assert_eq!(d, bucket.iter().copied().max().unwrap(), "epoch {e}");
+        }
+        assert_eq!(trace.demand_at(24), 0);
+        assert_eq!(trace.demand_at(1000), 0);
+        assert_eq!(trace.peak(), trace.demand.iter().copied().max().unwrap());
+    }
+
+    #[test]
+    fn trace_csv_roundtrip() {
+        let trace = ServingTrace::new(vec![0, 3, 5, 2, 0, 4]);
+        let dir = std::env::temp_dir().join("easyscale_trace_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.csv");
+        trace.write_csv(&path).unwrap();
+        let back = ServingTrace::read_csv(&path).unwrap();
+        assert_eq!(back, trace);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_csv_rejects_garbage() {
+        let dir = std::env::temp_dir().join("easyscale_trace_csv_bad_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "epoch,serving_gpus\n1,4\n").unwrap();
+        assert!(ServingTrace::read_csv(&path).is_err(), "out-of-order epoch");
+        std::fs::write(&path, "epoch,serving_gpus\n").unwrap();
+        assert!(ServingTrace::read_csv(&path).is_err(), "empty trace");
+        std::fs::write(&path, "0,many\n").unwrap();
+        assert!(ServingTrace::read_csv(&path).is_err(), "non-numeric demand");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn elastic_target_carves_fast_devices_first() {
+        let mut c = Colocation::new(ServingTrace::new(vec![0, 3, 5, 9]));
+        c.attach([4, 2, 2]);
+        assert_eq!(c.target_fleet(0), [4, 2, 2], "no demand, full fleet");
+        assert_eq!(c.target_fleet(1), [1, 2, 2], "serving takes V100s first");
+        assert_eq!(c.target_fleet(2), [0, 1, 2], "then P100s");
+        assert_eq!(c.target_fleet(3), [0, 0, 0], "demand above total empties it");
+        assert_eq!(c.target_fleet(4), [4, 2, 2], "past the trace, all back");
+    }
+
+    #[test]
+    fn static_partition_reserves_the_peak_forever() {
+        let mut c = Colocation::static_partition(ServingTrace::new(vec![0, 3, 5, 1]));
+        c.attach([4, 2, 2]);
+        for e in 0..6 {
+            assert_eq!(c.target_fleet(e), [0, 1, 2], "epoch {e}: constant carve of 5");
+        }
+    }
+
+    #[test]
+    fn utilization_report_counts_real_demand_plus_held() {
+        let mut c = Colocation::new(ServingTrace::new(vec![4, 0]));
+        c.attach([4, 0, 0]);
+        c.record_epoch(0, 0);
+        c.record_epoch(1, 2);
+        c.record_epoch(1, 3); // later decide within the epoch wins
+        let r = c.report();
+        assert_eq!(r.epochs, 2);
+        assert!((r.avg_serving_gpus - 2.0).abs() < 1e-12);
+        assert!((r.avg_training_gpus - 1.5).abs() < 1e-12);
+        assert!((r.utilization_pct - 100.0 * 3.5 / 4.0).abs() < 1e-9);
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod checkpoint;
 pub mod cluster;
+pub mod colocate;
 pub mod determinism;
 pub mod session;
 pub mod trainer;
@@ -14,6 +15,7 @@ pub use checkpoint::Checkpoint;
 pub use cluster::{
     reference_fingerprint, ClusterJob, ClusterJobReport, ClusterReport, ClusterRuntime,
 };
+pub use colocate::{Colocation, ColocationReport, PartitionMode, PauseRecord, ServingTrace};
 pub use determinism::Determinism;
 pub use session::{ElasticSession, SessionBuilder, SessionReport};
 pub use trainer::{TrainConfig, Trainer};

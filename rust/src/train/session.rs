@@ -79,6 +79,7 @@ pub struct SessionBuilder<'e> {
     director: Box<dyn ResourceDirector>,
     resume_from: Option<PathBuf>,
     shared_uploads: Option<Arc<UploadCache>>,
+    full_rebuild: bool,
 }
 
 impl<'e> SessionBuilder<'e> {
@@ -99,6 +100,7 @@ impl<'e> SessionBuilder<'e> {
             director: Box::new(StaticScheduleDirector::empty()),
             resume_from: None,
             shared_uploads: None,
+            full_rebuild: false,
         }
     }
 
@@ -158,6 +160,15 @@ impl<'e> SessionBuilder<'e> {
         self
     }
 
+    /// Apply [`ElasticEvent::Reconfigure`] via the full teardown-and-rebuild
+    /// path ([`Trainer::reconfigure_full`]) instead of the incremental one.
+    /// An oracle knob: tests run the same schedule both ways to pin the
+    /// incremental fast path against the rebuild semantics, bit for bit.
+    pub fn full_rebuild(mut self, on: bool) -> Self {
+        self.full_rebuild = on;
+        self
+    }
+
     pub fn build(self) -> Result<ElasticSession<'e>> {
         let SessionBuilder {
             engine,
@@ -172,6 +183,7 @@ impl<'e> SessionBuilder<'e> {
             director,
             resume_from,
             shared_uploads,
+            full_rebuild,
         } = self;
         let mut trainer = match resume_from {
             Some(path) => Trainer::resume(engine, cfg, placement, &path)?,
@@ -196,6 +208,7 @@ impl<'e> SessionBuilder<'e> {
             evals: 0,
             stopped: false,
             start_step,
+            full_rebuild,
         })
     }
 }
@@ -226,6 +239,8 @@ pub struct ElasticSession<'e> {
     /// Global step the trainer was built at (0 fresh, >0 on resume) — the
     /// baseline `steps_run` is measured against.
     start_step: u64,
+    /// Oracle knob: route reconfigures through the full-rebuild path.
+    full_rebuild: bool,
 }
 
 impl<'e> ElasticSession<'e> {
@@ -330,7 +345,11 @@ impl<'e> ElasticSession<'e> {
                     placement.n_gpus(),
                     placement.device_counts()
                 );
-                self.trainer.reconfigure(placement)?;
+                if self.full_rebuild {
+                    self.trainer.reconfigure_full(placement)?;
+                } else {
+                    self.trainer.reconfigure(placement)?;
+                }
                 self.reconfigs += 1;
                 self.sink.push("gpus", step as f64, self.trainer.placement.n_gpus() as f64);
             }

@@ -1,0 +1,212 @@
+//! Serving co-location end to end: a replayed demand trace lends and
+//! reclaims fleet GPUs out from under real elastic jobs — shrinks through
+//! the incremental reconfigure fast path, full checkpointed pauses when
+//! the serving tier takes everything, resumes when it recedes — and every
+//! job must still land bitwise on its undisturbed fixed-placement
+//! sequential reference (the paper's accuracy-consistency guarantee under
+//! the §5.3 deployment scenario).
+
+use easyscale::exec::{DeviceType, Placement, RunMode};
+use easyscale::model::workload::Workload;
+use easyscale::runtime::Engine;
+use easyscale::train::{
+    Checkpoint, ClusterJob, ClusterReport, ClusterRuntime, Colocation, Determinism, ServingTrace,
+    TrainConfig, Trainer,
+};
+
+#[cfg(not(feature = "pjrt"))]
+fn tiny() -> Option<Engine> {
+    Some(Engine::synthetic("tiny").unwrap())
+}
+
+#[cfg(feature = "pjrt")]
+fn tiny() -> Option<Engine> {
+    let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !d.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/tiny not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(&d).unwrap())
+}
+
+fn job(workload: Workload, seed: u64, steps: u64) -> ClusterJob {
+    let cfg = TrainConfig {
+        seed,
+        determinism: Determinism::D1_D2,
+        run_mode: RunMode::Sequential,
+        ..TrainConfig::new(4)
+    };
+    ClusterJob { workload, cfg, steps }
+}
+
+fn reference_fingerprint(engine: &Engine, seed: u64, steps: u64) -> u64 {
+    let cfg = job(Workload::Bert, seed, steps).cfg;
+    easyscale::train::reference_fingerprint(engine, &cfg, steps).unwrap()
+}
+
+/// The adversarial schedule: the serving tier moves every single decide
+/// round, including taking the whole fleet (4 GPUs) and handing it all
+/// back the very next round.
+fn storm_trace() -> ServingTrace {
+    ServingTrace::new(vec![0, 4, 0, 3, 1, 4, 0, 2, 3, 0, 4, 1, 0])
+}
+
+const BUDGETS: [u64; 3] = [6, 9, 12];
+const SEEDS: [u64; 3] = [42, 43, 44];
+
+fn run_storm(engine: &Engine, full_rebuild: bool, job_threads: usize, tag: &str) -> ClusterReport {
+    let dir = std::env::temp_dir().join(format!("easyscale_colocate_storm_{tag}"));
+    let workloads = [Workload::Bert, Workload::Electra, Workload::NeuMf];
+    let mut rt = ClusterRuntime::new(engine, [2, 1, 1], 1)
+        .with_job_threads(job_threads)
+        .with_full_rebuild(full_rebuild)
+        .with_colocation(Colocation::new(storm_trace()))
+        .with_pause_dir(dir);
+    for (i, w) in workloads.iter().enumerate() {
+        rt.submit(job(*w, SEEDS[i], BUDGETS[i]));
+    }
+    rt.run().unwrap()
+}
+
+/// The tentpole acceptance property: under a preemption storm — reclaim
+/// every round, down to zero and immediately re-granted — every job
+/// completes its budget and lands bitwise on its undisturbed reference,
+/// with the incremental-reconfigure path agreeing with the full-rebuild
+/// oracle and with real pauses/resumes in the log.
+#[test]
+fn preemption_storm_is_bitwise_equal_to_oracle_and_references() {
+    let Some(engine) = tiny() else { return };
+    let incremental = run_storm(&engine, false, 1, "incremental");
+    let oracle = run_storm(&engine, true, 1, "oracle");
+
+    for (inc, full) in incremental.jobs.iter().zip(&oracle.jobs) {
+        assert_eq!(
+            inc.report.steps_run, BUDGETS[inc.job_id],
+            "job {} lost steps across pauses",
+            inc.job_id
+        );
+        assert_eq!(
+            inc.report.fingerprint, full.report.fingerprint,
+            "job {}: incremental shrink path diverged from the full-rebuild oracle",
+            inc.job_id
+        );
+        let reference = reference_fingerprint(&engine, SEEDS[inc.job_id], BUDGETS[inc.job_id]);
+        assert_eq!(
+            inc.report.fingerprint, reference,
+            "job {} drifted from its undisturbed fixed-placement reference",
+            inc.job_id
+        );
+    }
+
+    let c = incremental.colocation.as_ref().expect("co-located run must report");
+    assert!(c.reclaims >= 3, "storm must reclaim repeatedly: {c:?}");
+    assert!(c.lends >= 3, "storm must lend repeatedly: {c:?}");
+    assert!(c.pauses >= 3, "demand==fleet must pause every job: {c:?}");
+    assert!(c.resumes >= 3, "paused jobs must resume: {c:?}");
+    assert!(c.shrinks >= 1, "partial reclaims must shrink incrementally: {c:?}");
+    assert_eq!(c.pauses, c.pause_log.len() as u64);
+    assert!(c.utilization_pct > 0.0);
+
+    // the checkpoint a pause wrote is a faithful snapshot: (a) it
+    // load->save roundtrips byte-identically, and (b) its params/momenta
+    // are bitwise equal to the undisturbed sequential reference trainer
+    // run to the same step — so a paused job carries exactly the state an
+    // untouched job would have
+    let rec = c
+        .pause_log
+        .iter()
+        .find(|r| r.step > 0)
+        .expect("at least one pause lands after some progress");
+    let state = Checkpoint::load(&rec.checkpoint).unwrap();
+    assert_eq!(state.step, rec.step);
+    let resaved = rec.checkpoint.with_extension("resaved");
+    Checkpoint::save(&resaved, &state).unwrap();
+    assert_eq!(
+        std::fs::read(&rec.checkpoint).unwrap(),
+        std::fs::read(&resaved).unwrap(),
+        "pause checkpoint must roundtrip byte-identically"
+    );
+
+    let cfg = TrainConfig {
+        run_mode: RunMode::Sequential,
+        ..job(Workload::Bert, SEEDS[rec.job_id], BUDGETS[rec.job_id]).cfg
+    };
+    let placement = Placement::homogeneous(DeviceType::V100, cfg.max_p, cfg.max_p);
+    let mut reference = Trainer::new(&engine, cfg, placement).unwrap();
+    reference.run(&engine, rec.step).unwrap();
+    let bits = |vs: &Vec<Vec<f32>>| -> Vec<Vec<u32>> {
+        vs.iter().map(|v| v.iter().map(|x| x.to_bits()).collect()).collect()
+    };
+    assert_eq!(
+        bits(&state.params),
+        bits(&reference.state.params),
+        "paused params differ bitwise from the undisturbed reference at step {}",
+        rec.step
+    );
+    assert_eq!(
+        bits(&state.momenta),
+        bits(&reference.state.momenta),
+        "paused momenta differ bitwise from the undisturbed reference at step {}",
+        rec.step
+    );
+
+    for tag in ["incremental", "oracle"] {
+        std::fs::remove_dir_all(std::env::temp_dir().join(format!(
+            "easyscale_colocate_storm_{tag}"
+        )))
+        .ok();
+    }
+}
+
+/// The storm under the concurrent driver (persistent runner threads,
+/// pause/resume via the runner command channel) is bitwise identical to
+/// the round-robin driver. Native-only: under `pjrt` sessions are not
+/// `Send` and the round-robin driver always runs.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn concurrent_storm_matches_round_robin_bitwise() {
+    let Some(engine) = tiny() else { return };
+    let round_robin = run_storm(&engine, false, 1, "rr");
+    for (job_threads, tag) in [(0usize, "conc0"), (2, "conc2")] {
+        let concurrent = run_storm(&engine, false, job_threads, tag);
+        for (a, b) in round_robin.jobs.iter().zip(&concurrent.jobs) {
+            assert_eq!(a.report.steps_run, b.report.steps_run, "job {}", a.job_id);
+            assert_eq!(
+                a.report.fingerprint, b.report.fingerprint,
+                "job {}: --job-threads {job_threads} drifted under the storm",
+                a.job_id
+            );
+        }
+        let c = concurrent.colocation.as_ref().unwrap();
+        assert!(c.pauses >= 3 && c.resumes >= 3, "concurrent storm must pause/resume: {c:?}");
+        std::fs::remove_dir_all(std::env::temp_dir().join(format!(
+            "easyscale_colocate_storm_{tag}"
+        )))
+        .ok();
+    }
+    std::fs::remove_dir_all(std::env::temp_dir().join("easyscale_colocate_storm_rr")).ok();
+}
+
+/// A paused-and-resumed job's merged report still counts its whole life:
+/// steps across all segments sum to the budget, and the static-partition
+/// baseline (which cannot pause) runs the same jobs with zero disruptions.
+#[test]
+fn static_partition_baseline_never_disrupts() {
+    let Some(engine) = tiny() else { return };
+    // peak demand 3 leaves a constant 1-GPU training partition
+    let trace = ServingTrace::new(vec![0, 3, 0, 3, 0]);
+    let mut rt = ClusterRuntime::new(&engine, [2, 1, 1], 1)
+        .with_colocation(Colocation::static_partition(trace));
+    rt.submit(job(Workload::Bert, 9, 5));
+    let report = rt.run().unwrap();
+    assert_eq!(report.jobs[0].report.steps_run, 5);
+    assert_eq!(
+        report.jobs[0].report.fingerprint,
+        reference_fingerprint(&engine, 9, 5)
+    );
+    let c = report.colocation.as_ref().unwrap();
+    assert_eq!(c.pauses + c.resumes + c.shrinks, 0, "static partition never moves GPUs: {c:?}");
+    // only the initial carve-out touches the fleet
+    assert!(c.reclaims <= 1, "{c:?}");
+    assert_eq!(c.lends, 0, "{c:?}");
+}
