@@ -19,8 +19,7 @@ use std::path::PathBuf;
 use easyscale::model::workload::Workload;
 use easyscale::runtime::Engine;
 use easyscale::train::{reference_fingerprint, ClusterJob, ClusterRuntime, Determinism, TrainConfig};
-use easyscale::util::bench::Table;
-use easyscale::util::json::Json;
+use easyscale::util::bench::{BenchRecord, Table};
 
 const FLEET: [usize; 3] = [2, 1, 1];
 const STEPS: u64 = 10;
@@ -80,7 +79,11 @@ fn main() {
         "mt/rr",
         "bitwise",
     ]);
-    let mut rows = Vec::new();
+    let mut rec = BenchRecord::new("cluster_runtime");
+    rec.str_field("fleet", "v100:2,p100:1,t4:1")
+        .u64_field("steps_per_job", STEPS)
+        .usize_field("max_p", MAX_P)
+        .usize_field("decide_every", 2);
     for n_jobs in [1usize, 2, MAX_JOBS] {
         let (homo_rate, _homo_fps) = run_cluster(&engine, n_jobs, Determinism::D1, 1);
         let (heter_rate, heter_fps) = run_cluster(&engine, n_jobs, Determinism::D1_D2, 1);
@@ -104,26 +107,16 @@ fn main() {
             format!("{:.2}x", mt_rate / heter_rate.max(1e-12)),
             "identical".to_string(),
         ]);
-        rows.push(Json::obj(vec![
-            ("jobs", Json::num(n_jobs as f64)),
-            ("homo_steps_per_s", Json::num(homo_rate)),
-            ("hetero_steps_per_s", Json::num(heter_rate)),
-            ("hetero_jobthreads_steps_per_s", Json::num(mt_rate)),
-        ]));
+        rec.row(|r| {
+            r.usize("jobs", n_jobs)
+                .f64("homo_steps_per_s", homo_rate)
+                .f64("hetero_steps_per_s", heter_rate)
+                .f64("hetero_jobthreads_steps_per_s", mt_rate);
+        });
     }
     table.print();
 
-    let backend = if cfg!(feature = "pjrt") { "pjrt-sequential" } else { "native-parallel" };
-    let record = Json::obj(vec![
-        ("bench", Json::str("cluster_runtime")),
-        ("backend", Json::str(backend)),
-        ("fleet", Json::str("v100:2,p100:1,t4:1")),
-        ("steps_per_job", Json::num(STEPS as f64)),
-        ("max_p", Json::num(MAX_P as f64)),
-        ("decide_every", Json::num(2.0)),
-        ("results", Json::Arr(rows)),
-    ]);
     let out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_cluster.json");
-    std::fs::write(&out, record.dump() + "\n").unwrap();
+    rec.finish(&out).unwrap();
     println!("cluster record written to {}", out.display());
 }

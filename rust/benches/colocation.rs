@@ -22,8 +22,7 @@ use easyscale::train::{
     reference_fingerprint, ClusterJob, ClusterRuntime, Colocation, ColocationReport, Determinism,
     ServingTrace, TrainConfig,
 };
-use easyscale::util::bench::Table;
-use easyscale::util::json::Json;
+use easyscale::util::bench::{BenchRecord, Table};
 
 /// The whole machine: serving + training share these 8 GPUs.
 const FLEET: [usize; 3] = [4, 2, 2];
@@ -162,37 +161,29 @@ fn main() {
         elastic.utilization_pct - fixed.utilization_pct
     );
 
-    let mode_record = |r: &ColocationReport, wall: f64| {
-        Json::obj(vec![
-            ("mode", Json::str(&format!("{}", r.mode))),
-            ("epochs", Json::num(r.epochs as f64)),
-            ("avg_serving_gpus", Json::num(r.avg_serving_gpus)),
-            ("avg_training_gpus", Json::num(r.avg_training_gpus)),
-            ("utilization_pct", Json::num(r.utilization_pct)),
-            ("lends", Json::num(r.lends as f64)),
-            ("reclaims", Json::num(r.reclaims as f64)),
-            ("shrinks", Json::num(r.shrinks as f64)),
-            ("pauses", Json::num(r.pauses as f64)),
-            ("resumes", Json::num(r.resumes as f64)),
-            ("wall_s", Json::num(wall)),
-        ])
-    };
-    let backend = if cfg!(feature = "pjrt") { "pjrt-sequential" } else { "native-parallel" };
-    let record = Json::obj(vec![
-        ("bench", Json::str("serving_colocation")),
-        ("backend", Json::str(backend)),
-        ("fleet", Json::str("v100:4,p100:2,t4:2")),
-        ("trace_epochs", Json::num(trace.len() as f64)),
-        ("trace_peak", Json::num(trace.peak() as f64)),
-        ("decide_every", Json::num(DECIDE_EVERY as f64)),
-        ("steps_per_job", Json::Arr(BUDGETS.iter().map(|&b| Json::num(b as f64)).collect())),
-        (
-            "utilization_gain_pts",
-            Json::num(elastic.utilization_pct - fixed.utilization_pct),
-        ),
-        ("results", Json::Arr(vec![mode_record(&elastic, e_wall), mode_record(&fixed, s_wall)])),
-    ]);
+    let mut rec = BenchRecord::new("serving_colocation");
+    rec.str_field("fleet", "v100:4,p100:2,t4:2")
+        .usize_field("trace_epochs", trace.len())
+        .usize_field("trace_peak", trace.peak())
+        .u64_field("decide_every", DECIDE_EVERY)
+        .u64s_field("steps_per_job", &BUDGETS)
+        .f64_field("utilization_gain_pts", elastic.utilization_pct - fixed.utilization_pct);
+    for (r, wall) in [(&elastic, e_wall), (&fixed, s_wall)] {
+        rec.row(|row| {
+            row.str("mode", &format!("{}", r.mode))
+                .usize("epochs", r.epochs)
+                .f64("avg_serving_gpus", r.avg_serving_gpus)
+                .f64("avg_training_gpus", r.avg_training_gpus)
+                .f64("utilization_pct", r.utilization_pct)
+                .u64("lends", r.lends)
+                .u64("reclaims", r.reclaims)
+                .u64("shrinks", r.shrinks)
+                .u64("pauses", r.pauses)
+                .u64("resumes", r.resumes)
+                .f64("wall_s", wall);
+        });
+    }
     let out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_colocation.json");
-    std::fs::write(&out, record.dump() + "\n").unwrap();
+    rec.finish(&out).unwrap();
     println!("colocation record written to {}", out.display());
 }

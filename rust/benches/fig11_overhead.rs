@@ -21,8 +21,7 @@ use easyscale::exec::{DeviceType, Placement, RunMode};
 use easyscale::model::workload::WORKLOADS;
 use easyscale::runtime::Engine;
 use easyscale::train::{Determinism, TrainConfig, Trainer};
-use easyscale::util::bench::{time_it, Table};
-use easyscale::util::json::Json;
+use easyscale::util::bench::{time_it, BenchRecord, Table};
 use easyscale::util::rng::dropout_key;
 
 fn main() {
@@ -98,7 +97,13 @@ fn main() {
     );
     let mut table =
         Table::new(&["executors", "sequential steps/s", "parallel steps/s", "speedup", "bitwise"]);
-    let mut rows = Vec::new();
+    // Under the pjrt feature RunMode::Parallel executes sequentially (the
+    // PJRT client is not Sync), so the record carries the backend tag to
+    // keep the perf trajectory comparable across builds.
+    let mut rec = BenchRecord::new("fig11_parallel_runtime");
+    rec.str_field("preset", &m.preset)
+        .usize_field("max_p", max_p)
+        .usize_field("host_threads", host_threads);
     for n_exec in [1usize, 2, 4, 8] {
         let run = |mode: RunMode| {
             let cfg = TrainConfig {
@@ -131,28 +136,16 @@ fn main() {
             format!("{}", if bitwise { "identical" } else { "DRIFT!" }),
         ]);
         assert!(bitwise, "parallel runtime drifted from sequential at {n_exec} executors");
-        rows.push(Json::obj(vec![
-            ("executors", Json::num(n_exec as f64)),
-            ("seq_steps_per_s", Json::num(seq_rate)),
-            ("par_steps_per_s", Json::num(par_rate)),
-            ("speedup", Json::num(speedup)),
-        ]));
+        rec.row(|r| {
+            r.usize("executors", n_exec)
+                .f64("seq_steps_per_s", seq_rate)
+                .f64("par_steps_per_s", par_rate)
+                .f64("speedup", speedup);
+        });
     }
     table.print();
 
-    // Under the pjrt feature RunMode::Parallel executes sequentially (the
-    // PJRT client is not Sync), so tag the record with the backend to keep
-    // the perf trajectory comparable across builds.
-    let backend = if cfg!(feature = "pjrt") { "pjrt-sequential" } else { "native-parallel" };
-    let record = Json::obj(vec![
-        ("bench", Json::str("fig11_parallel_runtime")),
-        ("backend", Json::str(backend)),
-        ("preset", Json::str(m.preset.clone())),
-        ("max_p", Json::num(max_p as f64)),
-        ("host_threads", Json::num(host_threads as f64)),
-        ("results", Json::Arr(rows)),
-    ]);
     let out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_parallel.json");
-    std::fs::write(&out, record.dump() + "\n").unwrap();
+    rec.finish(&out).unwrap();
     println!("parallel-runtime record written to {}", out.display());
 }

@@ -1,0 +1,164 @@
+//! JSON I/O-plane throughput bench (the streaming-plane gate): parse
+//! and re-serialize a synthetic 1M-event scheduler trace through the
+//! DOM path (`Json::parse` + `dump`) and the zero-copy pull path
+//! (`PullParser` + `copy_value`), recording MB/s, heap allocations and
+//! peak live heap bytes per pass into `rust/BENCH_json.json`.
+//!
+//! Both paths must emit byte-identical output (which also equals the
+//! canonical input — numbers echo as raw slices), and the pull path
+//! must beat the DOM on throughput AND allocations — asserted before
+//! anything is recorded, so the artifact only ever holds numbers for a
+//! parser proven faithful.
+//!
+//!     cargo bench --bench json_throughput
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use easyscale::util::bench::{
+    heap_allocs, heap_peak_bytes, reset_heap_peak, BenchRecord, CountingAlloc, Table,
+};
+use easyscale::util::json::{copy_value, Json, JsonWriter, PullParser};
+use easyscale::util::rng::SplitMix64;
+
+// Tallies heap traffic so the bench can report allocations and peak
+// bytes per parse+serialize pass.
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const TRIALS: usize = 3;
+
+fn n_events() -> usize {
+    std::env::var("EASYSCALE_JSON_BENCH_EVENTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_000_000)
+}
+
+/// One synthetic scheduler event per array element. Keys are emitted in
+/// sorted order and every value in canonical form, so the DOM re-dump
+/// and the pull transcode both reproduce the input bytes exactly.
+fn synth_trace(n: usize) -> String {
+    let kinds = ["grow", "shrink", "migrate", "pause", "resume"];
+    let mut rng = SplitMix64::new(0xE55);
+    let mut out: Vec<u8> = Vec::with_capacity(n * 48);
+    let mut w = JsonWriter::new(&mut out);
+    w.begin_arr().unwrap();
+    for id in 0..n {
+        w.begin_obj().unwrap();
+        w.key("id").unwrap();
+        w.uint(id as u64).unwrap();
+        w.key("kind").unwrap();
+        w.str(kinds[rng.next_below(kinds.len() as u64) as usize]).unwrap();
+        w.key("p").unwrap();
+        w.uint(1 + rng.next_below(32)).unwrap();
+        w.key("t").unwrap();
+        w.f64(rng.next_below(86_400_000) as f64 / 1e3).unwrap();
+        w.end_obj().unwrap();
+    }
+    w.end_arr().unwrap();
+    drop(w);
+    String::from_utf8(out).unwrap()
+}
+
+struct Pass {
+    mb_per_s: f64,
+    allocs: u64,
+    peak_bytes: u64,
+}
+
+/// Best-of-`TRIALS` parse+serialize timing of `f`; heap stats come from
+/// the fastest trial. `f` returns the serialized output bytes so the
+/// caller can check faithfulness.
+fn measure(input_len: usize, mut f: impl FnMut() -> Vec<u8>) -> (Pass, Vec<u8>) {
+    let mut best = Pass { mb_per_s: 0.0, allocs: u64::MAX, peak_bytes: u64::MAX };
+    let mut out = Vec::new();
+    for _ in 0..TRIALS {
+        reset_heap_peak();
+        let peak0 = heap_peak_bytes();
+        let allocs0 = heap_allocs();
+        let t0 = Instant::now();
+        let bytes = f();
+        let secs = t0.elapsed().as_secs_f64();
+        let allocs = heap_allocs() - allocs0;
+        let peak = heap_peak_bytes().saturating_sub(peak0);
+        let mb_per_s = (input_len + bytes.len()) as f64 / 1e6 / secs.max(1e-12);
+        if mb_per_s > best.mb_per_s {
+            best = Pass { mb_per_s, allocs, peak_bytes: peak };
+        }
+        out = bytes;
+    }
+    (best, out)
+}
+
+fn main() {
+    let n = n_events();
+    let text = synth_trace(n);
+    let mb = text.len() as f64 / 1e6;
+    println!("== JSON I/O plane: {n} events, {mb:.1} MB, parse+serialize x {TRIALS} trials ==");
+
+    // DOM: build the full tree, then dump it
+    let (dom, dom_out) = measure(text.len(), || {
+        let v = Json::parse(&text).unwrap();
+        v.dump().into_bytes()
+    });
+    // pull: event stream transcoded straight into the writer, no tree
+    let (pull, pull_out) = measure(text.len(), || {
+        let mut p = PullParser::from_str(&text);
+        let mut w = JsonWriter::new(Vec::with_capacity(text.len()));
+        copy_value(&mut p, &mut w).unwrap();
+        p.expect_done().unwrap();
+        w.into_inner()
+    });
+
+    // faithfulness gates before any number is trusted
+    assert_eq!(dom_out, text.as_bytes(), "DOM re-dump diverged from canonical input");
+    assert_eq!(pull_out, text.as_bytes(), "pull transcode diverged from canonical input");
+
+    let mut table = Table::new(&["path", "MB/s", "allocs", "peak heap MB", "output"]);
+    for (name, p) in [("dom", &dom), ("pull", &pull)] {
+        table.row(&[
+            name.to_string(),
+            format!("{:.1}", p.mb_per_s),
+            format!("{}", p.allocs),
+            format!("{:.1}", p.peak_bytes as f64 / 1e6),
+            "identical".to_string(),
+        ]);
+    }
+    table.print();
+    println!(
+        "pull vs dom: {:.2}x MB/s, {:.1}x fewer allocs",
+        pull.mb_per_s / dom.mb_per_s.max(1e-12),
+        dom.allocs as f64 / pull.allocs.max(1) as f64
+    );
+
+    // the tentpole claim: the streaming parser wins on both axes
+    assert!(
+        pull.mb_per_s > dom.mb_per_s,
+        "pull path must out-run the DOM: {:.1} vs {:.1} MB/s",
+        pull.mb_per_s,
+        dom.mb_per_s
+    );
+    assert!(
+        pull.allocs < dom.allocs,
+        "pull path must allocate less than the DOM: {} vs {}",
+        pull.allocs,
+        dom.allocs
+    );
+
+    let mut rec = BenchRecord::new("json_throughput");
+    rec.usize_field("events", n)
+        .f64_field("input_mb", mb)
+        .usize_field("trials", TRIALS);
+    for (name, p) in [("dom", &dom), ("pull", &pull)] {
+        rec.row(|r| {
+            r.str("path", name)
+                .f64("mb_per_s", p.mb_per_s)
+                .u64("allocs", p.allocs)
+                .u64("peak_heap_bytes", p.peak_bytes);
+        });
+    }
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_json.json");
+    rec.finish(&out).unwrap();
+    println!("json-throughput record written to {}", out.display());
+}

@@ -36,8 +36,7 @@ use easyscale::est::EstContext;
 use easyscale::exec::pool::{run_step, ExecutorOutput, ExecutorPool, StepInputs};
 use easyscale::exec::{DeviceType, ExecTiming, ExecutorWorker, KeyMode, Placement, RunMode};
 use easyscale::runtime::Engine;
-use easyscale::util::bench::{heap_allocs, CountingAlloc, Table};
-use easyscale::util::json::Json;
+use easyscale::util::bench::{heap_allocs, BenchRecord, CountingAlloc, Table};
 
 // Counts every heap allocation (alloc/realloc/alloc_zeroed) so the bench
 // can report steady-state allocations per step.
@@ -149,7 +148,12 @@ fn main() {
         "pool allocs/step",
         "bitwise",
     ]);
-    let mut rows = Vec::new();
+    let mut rec = BenchRecord::new("pool_overhead");
+    rec.str_field("preset", &engine.manifest.model.preset)
+        .usize_field("max_p", MAX_P)
+        .u64_field("steps", STEPS)
+        .usize_field("trials", TRIALS)
+        .usize_field("host_threads", host_threads);
     for n_exec in [1usize, 2, 4, 8] {
         // (1) prove every implementation bitwise-equivalent at this size:
         // the forced-scalar sequential loop is the oracle; the spawning
@@ -246,31 +250,20 @@ fn main() {
             format!("{allocs_per_step:.2}"),
             "identical".to_string(),
         ]);
-        rows.push(Json::obj(vec![
-            ("executors", Json::num(n_exec as f64)),
-            ("spawn_steps_per_s", Json::num(spawn_rate)),
-            ("pool_steps_per_s", Json::num(pool_rate)),
-            ("pool_scalar_steps_per_s", Json::num(pool_scalar_rate)),
-            ("simd_speedup", Json::num(simd_speedup)),
-            ("pool_steps_per_s_per_core", Json::num(per_core)),
-            ("speedup", Json::num(speedup)),
-            ("pool_allocs_per_step", Json::num(allocs_per_step)),
-        ]));
+        rec.row(|r| {
+            r.usize("executors", n_exec)
+                .f64("spawn_steps_per_s", spawn_rate)
+                .f64("pool_steps_per_s", pool_rate)
+                .f64("pool_scalar_steps_per_s", pool_scalar_rate)
+                .f64("simd_speedup", simd_speedup)
+                .f64("pool_steps_per_s_per_core", per_core)
+                .f64("speedup", speedup)
+                .f64("pool_allocs_per_step", allocs_per_step);
+        });
     }
     table.print();
 
-    let backend = if cfg!(feature = "pjrt") { "pjrt-sequential" } else { "native-parallel" };
-    let record = Json::obj(vec![
-        ("bench", Json::str("pool_overhead")),
-        ("backend", Json::str(backend)),
-        ("preset", Json::str(engine.manifest.model.preset.clone())),
-        ("max_p", Json::num(MAX_P as f64)),
-        ("steps", Json::num(STEPS as f64)),
-        ("trials", Json::num(TRIALS as f64)),
-        ("host_threads", Json::num(host_threads as f64)),
-        ("results", Json::Arr(rows)),
-    ]);
     let out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_pool.json");
-    std::fs::write(&out, record.dump() + "\n").unwrap();
+    rec.finish(&out).unwrap();
     println!("pool-overhead record written to {}", out.display());
 }

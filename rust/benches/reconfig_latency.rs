@@ -24,8 +24,7 @@ use easyscale::exec::executor::ExecutorSpec;
 use easyscale::exec::{DeviceType, Placement};
 use easyscale::runtime::Engine;
 use easyscale::train::{Determinism, TrainConfig, Trainer};
-use easyscale::util::bench::Table;
-use easyscale::util::json::Json;
+use easyscale::util::bench::{BenchRecord, Table};
 
 const TRIALS: usize = 3;
 const CYCLES: usize = 8; // A->B->A round trips per trial
@@ -107,7 +106,10 @@ fn main() {
         "speedup",
         "bitwise",
     ]);
-    let mut rows = Vec::new();
+    let mut rec = BenchRecord::new("reconfig_latency");
+    rec.str_field("preset", &engine.manifest.model.preset)
+        .usize_field("cycles", CYCLES)
+        .usize_field("trials", TRIALS);
     for max_p in [4usize, 8, 16] {
         for (name, a, b) in transitions(max_p) {
             let mk = |placement: &Placement| -> Trainer {
@@ -151,13 +153,13 @@ fn main() {
                 format!("{speedup:.2}x"),
                 "identical".to_string(),
             ]);
-            rows.push(Json::obj(vec![
-                ("max_p", Json::num(max_p as f64)),
-                ("transition", Json::str(name)),
-                ("full_ms", Json::num(full_ms)),
-                ("incremental_ms", Json::num(inc_ms)),
-                ("speedup", Json::num(speedup)),
-            ]));
+            rec.row(|r| {
+                r.usize("max_p", max_p)
+                    .str("transition", name)
+                    .f64("full_ms", full_ms)
+                    .f64("incremental_ms", inc_ms)
+                    .f64("speedup", speedup);
+            });
         }
     }
     table.print();
@@ -166,16 +168,7 @@ fn main() {
          the incremental path removes the worker/thread/queue rebuild from it."
     );
 
-    let backend = if cfg!(feature = "pjrt") { "pjrt-sequential" } else { "native-parallel" };
-    let record = Json::obj(vec![
-        ("bench", Json::str("reconfig_latency")),
-        ("backend", Json::str(backend)),
-        ("preset", Json::str(engine.manifest.model.preset.clone())),
-        ("cycles", Json::num(CYCLES as f64)),
-        ("trials", Json::num(TRIALS as f64)),
-        ("results", Json::Arr(rows)),
-    ]);
     let out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_reconfig.json");
-    std::fs::write(&out, record.dump() + "\n").unwrap();
+    rec.finish(&out).unwrap();
     println!("reconfig-latency record written to {}", out.display());
 }

@@ -30,7 +30,7 @@ use crate::sched::director::{
 use crate::sched::plan::{enumerate_configs, JobSpec};
 use crate::sim::serving::{run_serving_sim, ServingDemand, ServingSimConfig};
 use crate::sim::simulator::{rate_scale_from_observation, ElasticSim, SchedulerKind};
-use crate::sim::trace::{gen_trace, read_trace_csv, write_trace_csv};
+use crate::sim::trace::{gen_trace, write_trace_csv, TraceCsvReader};
 use crate::train::{
     reference_fingerprint, ClusterJob, ClusterRuntime, Colocation, Determinism, ServingTrace,
     SessionBuilder, TrainConfig,
@@ -345,24 +345,35 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     if let Some(tf) = &trace_file {
         // replay a generated arrival schedule against real jobs: close the
-        // loop between the analytic Fig. 14 clock and measured steps/s
-        let tjobs = read_trace_csv(Path::new(tf))?;
+        // loop between the analytic Fig. 14 clock and measured steps/s.
+        // Two streaming passes over the CSV — the schedule is never
+        // materialized as a Vec. Pass 1 folds the count and arrival span
+        // (needed to auto-size the round clock) ...
         let steps_cap = args.usize_or("trace-steps-cap", 8)? as u64;
         let max_p_cap = args.usize_or("trace-max-p", 8)?.max(1);
-        let span = tjobs.iter().map(|j| j.arrival_s).fold(0.0f64, f64::max);
+        let (mut n_trace_jobs, mut span) = (0usize, 0.0f64);
+        for t in TraceCsvReader::open(Path::new(tf))? {
+            span = span.max(t?.arrival_s);
+            n_trace_jobs += 1;
+        }
+        if n_trace_jobs == 0 {
+            bail!("trace {tf} holds no jobs");
+        }
         let auto_round_s =
-            (span / (tjobs.len() as f64 * decide_every as f64)).max(1e-9);
+            (span / (n_trace_jobs as f64 * decide_every as f64)).max(1e-9);
         let round_s = args.f64_or("trace-round-s", auto_round_s)?;
         if !round_s.is_finite() || round_s <= 0.0 {
             bail!("--trace-round-s must be a positive finite number");
         }
         crate::info!(
             "cluster",
-            "trace replay: {} jobs from {tf}, fleet=[V100:{} P100:{} T4:{}] det={} \
-             decide-every={decide_every} round-s={round_s:.2}",
-            tjobs.len(), fleet[0], fleet[1], fleet[2], det
+            "trace replay: {n_trace_jobs} jobs from {tf}, fleet=[V100:{} P100:{} T4:{}] \
+             det={} decide-every={decide_every} round-s={round_s:.2}",
+            fleet[0], fleet[1], fleet[2], det
         );
-        for t in &tjobs {
+        // ... pass 2 submits each job as it is parsed.
+        for t in TraceCsvReader::open(Path::new(tf))? {
+            let t = t?;
             let job_max_p = t.max_p.clamp(1, max_p_cap);
             let cfg = TrainConfig {
                 seed: seed + t.id as u64,

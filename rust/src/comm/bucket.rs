@@ -11,7 +11,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonWriter, PullParser};
 use crate::util::rng::SplitMix64;
 
 pub const DEFAULT_BUCKET_BYTES: usize = 25 << 20; // PyTorch DDP default 25MB
@@ -86,6 +86,56 @@ impl BucketPlan {
                 })),
             ),
         ])
+    }
+
+    /// Stream the plan into a JSON writer. Keys are emitted in sorted
+    /// order so the bytes are identical to `to_json().dump()` — the
+    /// checkpoint header containing this object must stay byte-stable.
+    pub fn write_json<W: std::io::Write>(&self, w: &mut JsonWriter<W>) -> std::io::Result<()> {
+        w.begin_obj()?;
+        w.key("buckets")?;
+        w.begin_arr()?;
+        for b in &self.buckets {
+            w.begin_arr()?;
+            for &p in b {
+                w.uint(p as u64)?;
+            }
+            w.end_arr()?;
+        }
+        w.end_arr()?;
+        w.key("cap_bytes")?;
+        w.uint(self.cap_bytes as u64)?;
+        w.end_obj()
+    }
+
+    /// Typed pull reader: consume one bucket-plan object from the event
+    /// stream without building a tree. Accepts any key order.
+    pub fn from_pull(p: &mut PullParser<'_>) -> Result<BucketPlan> {
+        p.expect_obj_start()?;
+        let mut cap_bytes = None;
+        let mut buckets: Option<Vec<Vec<usize>>> = None;
+        while let Some(k) = p.next_key()? {
+            match k.as_ref() {
+                "cap_bytes" => cap_bytes = Some(p.expect_usize()?),
+                "buckets" => {
+                    let mut bs = Vec::new();
+                    p.expect_arr_start()?;
+                    while p.arr_next()? {
+                        let mut b = Vec::new();
+                        p.expect_arr_start()?;
+                        while p.arr_next()? {
+                            b.push(p.expect_usize()?);
+                        }
+                        bs.push(b);
+                    }
+                    buckets = Some(bs);
+                }
+                _ => p.skip_value()?,
+            }
+        }
+        let Some(buckets) = buckets else { bail!("bucket plan missing buckets") };
+        let Some(cap_bytes) = cap_bytes else { bail!("bucket plan missing cap_bytes") };
+        Ok(BucketPlan { buckets, cap_bytes })
     }
 
     pub fn from_json(j: &Json) -> Result<BucketPlan> {
@@ -183,6 +233,31 @@ mod tests {
         let j = plan.to_json();
         let back = BucketPlan::from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
         assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn streaming_write_matches_dom_and_pull_roundtrips() {
+        let plan = BucketPlan::build(&[5, 6, 7, 8, 9], 4 * 12);
+        let mut out = Vec::new();
+        let mut w = JsonWriter::new(&mut out);
+        plan.write_json(&mut w).unwrap();
+        drop(w);
+        let streamed = String::from_utf8(out).unwrap();
+        assert_eq!(streamed, plan.to_json().dump(), "streaming bytes must match the DOM");
+
+        let mut p = PullParser::from_str(&streamed);
+        let back = BucketPlan::from_pull(&mut p).unwrap();
+        p.expect_done().unwrap();
+        assert_eq!(back, plan);
+
+        // the pull reader is key-order independent
+        let reordered = format!(
+            "{{\"cap_bytes\":{},\"buckets\":{}}}",
+            plan.cap_bytes,
+            plan.to_json().get("buckets").dump()
+        );
+        let mut p = PullParser::from_str(&reordered);
+        assert_eq!(BucketPlan::from_pull(&mut p).unwrap(), plan);
     }
 
     #[test]

@@ -4,9 +4,9 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::util::json::Json;
+use crate::util::json::PullParser;
 
 /// One named tensor in an artifact signature.
 #[derive(Debug, Clone, PartialEq)]
@@ -73,61 +73,181 @@ pub struct Manifest {
     pub synthetic_seed: Option<u64>,
 }
 
-fn parse_sig(j: &Json) -> Result<ArtifactSig> {
-    let tensors = |key: &str| -> Result<Vec<TensorSig>> {
-        j.req_arr(key)?
-            .iter()
-            .map(|t| {
-                Ok(TensorSig {
-                    name: t.req_str("name")?.to_string(),
-                    shape: t
-                        .req_arr("shape")?
-                        .iter()
-                        .map(|d| d.as_usize().context("bad dim"))
-                        .collect::<Result<_>>()?,
-                    dtype: t.req_str("dtype")?.to_string(),
-                })
-            })
-            .collect()
+fn pull_usize_arr(p: &mut PullParser<'_>) -> Result<Vec<usize>> {
+    let mut v = Vec::new();
+    p.expect_arr_start()?;
+    while p.arr_next()? {
+        v.push(p.expect_usize()?);
+    }
+    Ok(v)
+}
+
+fn pull_tensor_sig(p: &mut PullParser<'_>) -> Result<TensorSig> {
+    p.expect_obj_start()?;
+    let (mut name, mut shape, mut dtype) = (None, None, None);
+    while let Some(k) = p.next_key()? {
+        match k.as_ref() {
+            "name" => name = Some(p.expect_str()?.into_owned()),
+            "shape" => shape = Some(pull_usize_arr(p)?),
+            "dtype" => dtype = Some(p.expect_str()?.into_owned()),
+            _ => p.skip_value()?,
+        }
+    }
+    Ok(TensorSig {
+        name: name.ok_or_else(|| anyhow!("tensor sig missing name"))?,
+        shape: shape.ok_or_else(|| anyhow!("tensor sig missing shape"))?,
+        dtype: dtype.ok_or_else(|| anyhow!("tensor sig missing dtype"))?,
+    })
+}
+
+/// One artifact entry as it appears in the manifest: an in/out signature
+/// plus either a single `file` or a `variants` name->path map.
+#[derive(Default)]
+struct RawArtifact {
+    inputs: Option<Vec<TensorSig>>,
+    outputs: Option<Vec<TensorSig>>,
+    file: Option<String>,
+    variants: BTreeMap<String, String>,
+}
+
+fn pull_artifact(p: &mut PullParser<'_>, what: &str) -> Result<RawArtifact> {
+    let mut art = RawArtifact::default();
+    let tensors = |p: &mut PullParser<'_>| -> Result<Vec<TensorSig>> {
+        let mut v = Vec::new();
+        p.expect_arr_start()?;
+        while p.arr_next()? {
+            v.push(pull_tensor_sig(p)?);
+        }
+        Ok(v)
     };
-    Ok(ArtifactSig { inputs: tensors("inputs")?, outputs: tensors("outputs")? })
+    p.expect_obj_start()
+        .with_context(|| format!("artifact '{what}' is not an object"))?;
+    while let Some(k) = p.next_key()? {
+        match k.as_ref() {
+            "inputs" => art.inputs = Some(tensors(p)?),
+            "outputs" => art.outputs = Some(tensors(p)?),
+            "file" => art.file = Some(p.expect_str()?.into_owned()),
+            "variants" => {
+                p.expect_obj_start()?;
+                while let Some(name) = p.next_key()? {
+                    let path = p.expect_str()?.into_owned();
+                    art.variants.insert(name.into_owned(), path);
+                }
+            }
+            _ => p.skip_value()?,
+        }
+    }
+    Ok(art)
+}
+
+impl RawArtifact {
+    fn sig(&self, what: &str) -> Result<ArtifactSig> {
+        Ok(ArtifactSig {
+            inputs: self
+                .inputs
+                .clone()
+                .ok_or_else(|| anyhow!("artifact '{what}' missing inputs"))?,
+            outputs: self
+                .outputs
+                .clone()
+                .ok_or_else(|| anyhow!("artifact '{what}' missing outputs"))?,
+        })
+    }
 }
 
 impl Manifest {
     /// Load `dir/manifest.json` (a preset directory, e.g. `artifacts/tiny`).
+    /// Deserialized with a typed pull reader: keys and escape-free strings
+    /// borrow from the file buffer, no JSON tree is built, and unknown
+    /// fields are skipped without materialization.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading manifest in {}", dir.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut p = PullParser::from_str(&text);
 
-        let m = j.get("model");
+        let mut preset = None;
+        let mut init_params = None;
+        let mut params: Option<Vec<ParamInfo>> = None;
+        let mut fwd: Option<RawArtifact> = None;
+        let mut opt: Option<RawArtifact> = None;
+        let mut eval: Option<RawArtifact> = None;
+        // model fields
+        let (mut vocab_size, mut d_model, mut n_layers, mut seq_len) = (None, None, None, None);
+        let (mut batch_per_est, mut momentum, mut init_seed, mut n_params) =
+            (None, None, None, None);
+
+        p.expect_obj_start()?;
+        while let Some(key) = p.next_key()? {
+            match key.as_ref() {
+                "preset" => preset = Some(p.expect_str()?.into_owned()),
+                "init_params" => init_params = Some(p.expect_str()?.into_owned()),
+                "model" => {
+                    p.expect_obj_start()?;
+                    while let Some(k) = p.next_key()? {
+                        match k.as_ref() {
+                            "vocab_size" => vocab_size = Some(p.expect_usize()?),
+                            "d_model" => d_model = Some(p.expect_usize()?),
+                            "n_layers" => n_layers = Some(p.expect_usize()?),
+                            "seq_len" => seq_len = Some(p.expect_usize()?),
+                            "batch_per_est" => batch_per_est = Some(p.expect_usize()?),
+                            "momentum" => momentum = Some(p.expect_f64()?),
+                            "init_seed" => init_seed = Some(p.expect_u64()?),
+                            "n_params" => n_params = Some(p.expect_usize()?),
+                            _ => p.skip_value()?,
+                        }
+                    }
+                }
+                "params" => {
+                    let mut v = Vec::new();
+                    p.expect_arr_start()?;
+                    while p.arr_next()? {
+                        p.expect_obj_start()?;
+                        let (mut name, mut shape, mut size) = (None, None, None);
+                        while let Some(k) = p.next_key()? {
+                            match k.as_ref() {
+                                "name" => name = Some(p.expect_str()?.into_owned()),
+                                "shape" => shape = Some(pull_usize_arr(&mut p)?),
+                                "size" => size = Some(p.expect_usize()?),
+                                _ => p.skip_value()?,
+                            }
+                        }
+                        v.push(ParamInfo {
+                            name: name.ok_or_else(|| anyhow!("param missing name"))?,
+                            shape: shape.ok_or_else(|| anyhow!("param missing shape"))?,
+                            size: size.ok_or_else(|| anyhow!("param missing size"))?,
+                        });
+                    }
+                    params = Some(v);
+                }
+                "artifacts" => {
+                    p.expect_obj_start()?;
+                    while let Some(k) = p.next_key()? {
+                        match k.as_ref() {
+                            "fwd_bwd" => fwd = Some(pull_artifact(&mut p, "fwd_bwd")?),
+                            "opt_update" => opt = Some(pull_artifact(&mut p, "opt_update")?),
+                            "eval_loss" => eval = Some(pull_artifact(&mut p, "eval_loss")?),
+                            _ => p.skip_value()?,
+                        }
+                    }
+                }
+                _ => p.skip_value()?,
+            }
+        }
+        p.expect_done()?;
+
         let model = ModelMeta {
-            preset: j.req_str("preset")?.to_string(),
-            vocab_size: m.req_usize("vocab_size")?,
-            d_model: m.req_usize("d_model")?,
-            n_layers: m.req_usize("n_layers")?,
-            seq_len: m.req_usize("seq_len")?,
-            batch_per_est: m.req_usize("batch_per_est")?,
-            momentum: m.req_f64("momentum")?,
-            init_seed: m.req_usize("init_seed")? as u64,
-            n_params: m.req_usize("n_params")?,
+            preset: preset.ok_or_else(|| anyhow!("manifest missing preset"))?,
+            vocab_size: vocab_size.ok_or_else(|| anyhow!("model missing vocab_size"))?,
+            d_model: d_model.ok_or_else(|| anyhow!("model missing d_model"))?,
+            n_layers: n_layers.ok_or_else(|| anyhow!("model missing n_layers"))?,
+            seq_len: seq_len.ok_or_else(|| anyhow!("model missing seq_len"))?,
+            batch_per_est: batch_per_est.ok_or_else(|| anyhow!("model missing batch_per_est"))?,
+            momentum: momentum.ok_or_else(|| anyhow!("model missing momentum"))?,
+            init_seed: init_seed.ok_or_else(|| anyhow!("model missing init_seed"))?,
+            n_params: n_params.ok_or_else(|| anyhow!("model missing n_params"))?,
         };
 
-        let params: Vec<ParamInfo> = j
-            .req_arr("params")?
-            .iter()
-            .map(|p| {
-                Ok(ParamInfo {
-                    name: p.req_str("name")?.to_string(),
-                    shape: p
-                        .req_arr("shape")?
-                        .iter()
-                        .map(|d| d.as_usize().context("bad dim"))
-                        .collect::<Result<_>>()?,
-                    size: p.req_usize("size")?,
-                })
-            })
-            .collect::<Result<_>>()?;
+        let params = params.ok_or_else(|| anyhow!("manifest missing params"))?;
         if params.is_empty() {
             bail!("manifest has no params");
         }
@@ -136,17 +256,14 @@ impl Manifest {
             bail!("param sizes sum {total} != n_params {}", model.n_params);
         }
 
-        let arts = j.get("artifacts");
-        let fwd = arts.get("fwd_bwd");
-        let mut fwd_bwd_variants = BTreeMap::new();
-        if let Some(vars) = fwd.get("variants").as_obj() {
-            for (k, v) in vars {
-                fwd_bwd_variants.insert(
-                    k.clone(),
-                    dir.join(v.as_str().context("variant path not a string")?),
-                );
-            }
-        }
+        let fwd = fwd.ok_or_else(|| anyhow!("manifest missing fwd_bwd artifact"))?;
+        let opt = opt.ok_or_else(|| anyhow!("manifest missing opt_update artifact"))?;
+        let eval = eval.ok_or_else(|| anyhow!("manifest missing eval_loss artifact"))?;
+        let fwd_bwd_variants: BTreeMap<String, PathBuf> = fwd
+            .variants
+            .iter()
+            .map(|(k, v)| (k.clone(), dir.join(v)))
+            .collect();
         if fwd_bwd_variants.is_empty() {
             bail!("manifest lists no fwd_bwd variants");
         }
@@ -155,13 +272,18 @@ impl Manifest {
             dir: dir.to_path_buf(),
             model,
             params,
-            fwd_bwd: parse_sig(fwd)?,
+            fwd_bwd: fwd.sig("fwd_bwd")?,
             fwd_bwd_variants,
-            opt_update: parse_sig(arts.get("opt_update"))?,
-            opt_update_file: dir.join(arts.get("opt_update").req_str("file")?),
-            eval_loss: parse_sig(arts.get("eval_loss"))?,
-            eval_loss_file: dir.join(arts.get("eval_loss").req_str("file")?),
-            init_params_file: dir.join(j.req_str("init_params")?),
+            opt_update: opt.sig("opt_update")?,
+            opt_update_file: dir.join(
+                opt.file.as_deref().ok_or_else(|| anyhow!("opt_update missing file"))?,
+            ),
+            eval_loss: eval.sig("eval_loss")?,
+            eval_loss_file: dir.join(
+                eval.file.as_deref().ok_or_else(|| anyhow!("eval_loss missing file"))?,
+            ),
+            init_params_file: dir
+                .join(init_params.ok_or_else(|| anyhow!("manifest missing init_params"))?),
             synthetic_seed: None,
         })
     }
@@ -370,6 +492,71 @@ mod tests {
     #[test]
     fn missing_manifest_errors() {
         assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+
+    /// The typed pull reader, driven end-to-end from a synthetic on-disk
+    /// manifest: arbitrary key order, unknown fields skipped, paths
+    /// resolved against the preset directory.
+    #[test]
+    fn pull_reader_parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("easyscale_manifest_pull_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{
+            "future_field": {"nested": [1, 2, {"deep": true}]},
+            "artifacts": {
+                "eval_loss": {"inputs": [], "outputs": [], "file": "eval.hlo"},
+                "opt_update": {"file": "opt.hlo", "inputs": [], "outputs": []},
+                "fwd_bwd": {
+                    "variants": {"det": "fwd_bwd.det.hlo", "t4": "fwd_bwd.t4.hlo"},
+                    "inputs": [{"name": "embed", "shape": [4, 2], "dtype": "f32"}],
+                    "outputs": [{"dtype": "f32", "shape": [], "name": "loss"}]
+                }
+            },
+            "params": [{"name": "embed", "shape": [4, 2], "size": 8}],
+            "model": {
+                "n_params": 8, "vocab_size": 4, "d_model": 2, "n_layers": 1,
+                "seq_len": 3, "batch_per_est": 1, "momentum": 0.9, "init_seed": 7
+            },
+            "init_params": "init_params.bin",
+            "preset": "unit"
+        }"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.preset, "unit");
+        assert_eq!(m.model.momentum, 0.9);
+        assert_eq!(m.model.init_seed, 7);
+        assert_eq!(m.params.len(), 1);
+        assert_eq!(m.params[0].shape, vec![4, 2]);
+        assert_eq!(m.fwd_bwd.inputs[0].name, "embed");
+        assert_eq!(m.fwd_bwd.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(m.fwd_bwd_variants.len(), 2);
+        assert_eq!(m.fwd_bwd_variants["det"], dir.join("fwd_bwd.det.hlo"));
+        assert_eq!(m.opt_update_file, dir.join("opt.hlo"));
+        assert_eq!(m.init_params_file, dir.join("init_params.bin"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A manifest whose param sizes disagree with n_params must fail
+    /// validation in the streaming path too.
+    #[test]
+    fn pull_reader_rejects_inconsistent_sizes() {
+        let dir = std::env::temp_dir().join("easyscale_manifest_badsize_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{
+            "preset": "unit", "init_params": "x.bin",
+            "model": {"n_params": 99, "vocab_size": 4, "d_model": 2, "n_layers": 1,
+                      "seq_len": 3, "batch_per_est": 1, "momentum": 0.9, "init_seed": 7},
+            "params": [{"name": "embed", "shape": [4, 2], "size": 8}],
+            "artifacts": {
+                "fwd_bwd": {"inputs": [], "outputs": [], "variants": {"det": "a"}},
+                "opt_update": {"inputs": [], "outputs": [], "file": "b"},
+                "eval_loss": {"inputs": [], "outputs": [], "file": "c"}
+            }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("n_params"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -114,53 +114,90 @@ impl TraceJob {
 }
 
 /// Write an arrival schedule as CSV (with header) — the file format
-/// `easyscale cluster --trace` replays against real jobs.
+/// `easyscale cluster --trace` replays against real jobs. Streams one
+/// line at a time through a buffered writer.
 pub fn write_trace_csv(path: &std::path::Path, jobs: &[TraceJob]) -> std::io::Result<()> {
-    let mut out = String::from("id,workload,arrival_s,max_p,min_p,duration_s\n");
+    use std::io::Write;
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    out.write_all(b"id,workload,arrival_s,max_p,min_p,duration_s\n")?;
     for j in jobs {
-        out.push_str(&j.to_csv_line());
-        out.push('\n');
+        writeln!(out, "{}", j.to_csv_line())?;
     }
-    std::fs::write(path, out)
+    out.flush()
+}
+
+fn parse_trace_line(line: &str, ln: usize) -> anyhow::Result<TraceJob> {
+    let parts: Vec<&str> = line.split(',').map(|p| p.trim()).collect();
+    if parts.len() != 6 {
+        anyhow::bail!("trace line {ln}: expected 6 fields, got {}", parts.len());
+    }
+    let workload = Workload::by_name(parts[1])
+        .ok_or_else(|| anyhow::anyhow!("trace line {ln}: unknown workload '{}'", parts[1]))?;
+    Ok(TraceJob {
+        id: parts[0].parse().map_err(|e| anyhow::anyhow!("trace line {ln}: bad id: {e}"))?,
+        workload,
+        arrival_s: parts[2]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("trace line {ln}: bad arrival: {e}"))?,
+        max_p: parts[3]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("trace line {ln}: bad max_p: {e}"))?,
+        min_p: parts[4]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("trace line {ln}: bad min_p: {e}"))?,
+        duration_s: parts[5]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("trace line {ln}: bad duration: {e}"))?,
+    })
+}
+
+/// Streaming trace reader: yields one [`TraceJob`] per CSV line (header
+/// and blank lines skipped) without materializing the file or the job
+/// list — `cluster --trace` replay feeds jobs straight off this
+/// iterator. One reusable line buffer; I/O is buffered.
+pub struct TraceCsvReader {
+    r: std::io::BufReader<std::fs::File>,
+    buf: String,
+    line_no: usize,
+}
+
+impl TraceCsvReader {
+    pub fn open(path: &std::path::Path) -> anyhow::Result<TraceCsvReader> {
+        let f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("reading trace {}: {e}", path.display()))?;
+        Ok(TraceCsvReader { r: std::io::BufReader::new(f), buf: String::new(), line_no: 0 })
+    }
+}
+
+impl Iterator for TraceCsvReader {
+    type Item = anyhow::Result<TraceJob>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        use std::io::BufRead;
+        loop {
+            self.buf.clear();
+            match self.r.read_line(&mut self.buf) {
+                Ok(0) => return None,
+                Ok(_) => {}
+                Err(e) => {
+                    return Some(Err(anyhow::anyhow!("trace line {}: {e}", self.line_no + 1)))
+                }
+            }
+            self.line_no += 1;
+            let line = self.buf.trim();
+            if line.is_empty() || line.starts_with("id,") {
+                continue;
+            }
+            return Some(parse_trace_line(line, self.line_no));
+        }
+    }
 }
 
 /// Parse a trace CSV written by [`write_trace_csv`] (header optional,
-/// blank lines ignored).
+/// blank lines ignored) into a vector. Thin collect over
+/// [`TraceCsvReader`] for callers that want the whole schedule.
 pub fn read_trace_csv(path: &std::path::Path) -> anyhow::Result<Vec<TraceJob>> {
-    let text = std::fs::read_to_string(path)
-        .map_err(|e| anyhow::anyhow!("reading trace {}: {e}", path.display()))?;
-    let mut out = Vec::new();
-    for (ln, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() || line.starts_with("id,") {
-            continue;
-        }
-        let parts: Vec<&str> = line.split(',').map(|p| p.trim()).collect();
-        if parts.len() != 6 {
-            anyhow::bail!("trace line {}: expected 6 fields, got {}", ln + 1, parts.len());
-        }
-        let workload = Workload::by_name(parts[1]).ok_or_else(|| {
-            anyhow::anyhow!("trace line {}: unknown workload '{}'", ln + 1, parts[1])
-        })?;
-        out.push(TraceJob {
-            id: parts[0]
-                .parse()
-                .map_err(|e| anyhow::anyhow!("trace line {}: bad id: {e}", ln + 1))?,
-            workload,
-            arrival_s: parts[2]
-                .parse()
-                .map_err(|e| anyhow::anyhow!("trace line {}: bad arrival: {e}", ln + 1))?,
-            max_p: parts[3]
-                .parse()
-                .map_err(|e| anyhow::anyhow!("trace line {}: bad max_p: {e}", ln + 1))?,
-            min_p: parts[4]
-                .parse()
-                .map_err(|e| anyhow::anyhow!("trace line {}: bad min_p: {e}", ln + 1))?,
-            duration_s: parts[5]
-                .parse()
-                .map_err(|e| anyhow::anyhow!("trace line {}: bad duration: {e}", ln + 1))?,
-        });
-    }
+    let out = TraceCsvReader::open(path)?.collect::<anyhow::Result<Vec<_>>>()?;
     anyhow::ensure!(!out.is_empty(), "trace {} holds no jobs", path.display());
     Ok(out)
 }
@@ -220,6 +257,37 @@ mod tests {
             assert!(w[0].replay_steps(12) <= w[1].replay_steps(12));
         }
         assert!(read_trace_csv(std::path::Path::new("/nonexistent/trace.csv")).is_err());
+    }
+
+    #[test]
+    fn streaming_reader_matches_collect_and_tags_bad_lines() {
+        let jobs = gen_trace(11, 15, 45.0);
+        let path = std::env::temp_dir().join("easyscale_trace_stream_test.csv");
+        write_trace_csv(&path, &jobs).unwrap();
+
+        // one job at a time, no Vec: identical to the collecting reader
+        let collected = read_trace_csv(&path).unwrap();
+        let mut n = 0usize;
+        for (it, want) in TraceCsvReader::open(&path).unwrap().zip(&collected) {
+            let got = it.unwrap();
+            assert_eq!(got.id, want.id);
+            assert_eq!(got.workload, want.workload);
+            assert_eq!(got.max_p, want.max_p);
+            n += 1;
+        }
+        assert_eq!(n, collected.len());
+
+        // a malformed line mid-file surfaces with its 1-based line number
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("not,a,job\n");
+        std::fs::write(&path, text).unwrap();
+        let err = TraceCsvReader::open(&path)
+            .unwrap()
+            .collect::<anyhow::Result<Vec<_>>>()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(&format!("trace line {}", jobs.len() + 2)), "got: {err}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -8,75 +8,126 @@
 //!
 //! Format (custom; serde unavailable):
 //!   magic "ESCK1\n" | u64 LE header length | JSON header | raw f32 LE
-//!   params (manifest order) | raw f32 LE momenta. The JSON header is
-//!   deterministic (sorted keys), so identical states produce identical
-//!   bytes — checkpoint round-trips are bitwise.
+//!   params (manifest order) | raw f32 LE momenta.
+//!
+//! The header is *streamed*: written through `JsonWriter` with keys in
+//! sorted order (byte-identical to the historical `BTreeMap` DOM
+//! serializer — pinned by `streaming_header_matches_dom_serializer`) and
+//! parsed back with a `PullParser` whose keys borrow straight from the
+//! header buffer. No JSON tree is ever materialized on either path, and
+//! identical states still produce identical bytes — checkpoint round
+//! trips stay bitwise (D1).
 
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::comm::BucketPlan;
 use crate::data::loader::WorkItem;
 use crate::est::EstContext;
 use crate::train::trainer::TrainState;
-use crate::util::json::Json;
+use crate::util::json::{JsonWriter, PullParser};
 
 const MAGIC: &[u8] = b"ESCK1\n";
+
+/// `format!("{:016x}")` without the allocation — the header hot loop
+/// emits one of these per EST context and data item.
+fn hex16(v: u64) -> [u8; 16] {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut out = [0u8; 16];
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = HEX[((v >> (60 - 4 * i)) & 0xf) as usize];
+    }
+    out
+}
+
+fn parse_hex16(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).context("bad hex state")
+}
 
 #[derive(Debug)]
 pub struct Checkpoint;
 
 impl Checkpoint {
     pub fn save(path: &Path, state: &TrainState) -> Result<()> {
-        let header = Json::obj(vec![
-            ("step", Json::num(state.step as f64)),
-            ("restart_count", Json::num(state.restart_count as f64)),
-            (
-                "param_sizes",
-                Json::arr(state.params.iter().map(|p| Json::num(p.len() as f64))),
-            ),
-            ("bucket_plan", state.bucket_plan.to_json()),
-            (
-                "est_contexts",
-                Json::arr(state.est_contexts.iter().map(|c| {
-                    Json::obj(vec![
-                        ("virtual_rank", Json::num(c.virtual_rank as f64)),
-                        ("step", Json::num(c.step as f64)),
-                        ("aug_rng_state", Json::str(format!("{:016x}", c.aug_rng_state))),
-                    ])
-                })),
-            ),
-            (
-                "data_items",
-                Json::arr(state.data_items.iter().map(|w| {
-                    Json::obj(vec![
-                        ("step", Json::num(w.step as f64)),
-                        ("rank", Json::num(w.rank as f64)),
-                        ("rng_state", Json::str(format!("{:016x}", w.rng_state))),
-                    ])
-                })),
-            ),
-        ])
-        .dump();
-
+        let header = Self::header_bytes(state);
         let mut f = std::io::BufWriter::new(
             std::fs::File::create(path)
                 .with_context(|| format!("creating checkpoint {}", path.display()))?,
         );
         f.write_all(MAGIC)?;
         f.write_all(&(header.len() as u64).to_le_bytes())?;
-        f.write_all(header.as_bytes())?;
+        f.write_all(&header)?;
+        // stream tensor bytes through one bounded scratch buffer instead
+        // of materializing a Vec<u8> per tensor
+        let mut buf = Vec::with_capacity(4 * 4096);
         for set in [&state.params, &state.momenta] {
             for p in set {
-                // bulk write per tensor
-                let bytes: Vec<u8> = p.iter().flat_map(|v| v.to_le_bytes()).collect();
-                f.write_all(&bytes)?;
+                for chunk in p.chunks(4096) {
+                    buf.clear();
+                    for v in chunk {
+                        buf.extend_from_slice(&v.to_le_bytes());
+                    }
+                    f.write_all(&buf)?;
+                }
             }
         }
         f.flush()?;
         Ok(())
+    }
+
+    /// The JSON header, streamed with keys in sorted order. The order is
+    /// load-bearing: it reproduces the old `BTreeMap` DOM serializer
+    /// byte-for-byte, so checkpoints written before and after the
+    /// streaming migration are identical for identical states.
+    fn header_bytes(state: &TrainState) -> Vec<u8> {
+        fn emit(state: &TrainState, w: &mut JsonWriter<&mut Vec<u8>>) -> std::io::Result<()> {
+            w.begin_obj()?;
+            w.key("bucket_plan")?;
+            state.bucket_plan.write_json(w)?;
+            w.key("data_items")?;
+            w.begin_arr()?;
+            for it in &state.data_items {
+                w.begin_obj()?;
+                w.key("rank")?;
+                w.uint(it.rank as u64)?;
+                w.key("rng_state")?;
+                w.str(std::str::from_utf8(&hex16(it.rng_state)).unwrap())?;
+                w.key("step")?;
+                w.uint(it.step)?;
+                w.end_obj()?;
+            }
+            w.end_arr()?;
+            w.key("est_contexts")?;
+            w.begin_arr()?;
+            for c in &state.est_contexts {
+                w.begin_obj()?;
+                w.key("aug_rng_state")?;
+                w.str(std::str::from_utf8(&hex16(c.aug_rng_state)).unwrap())?;
+                w.key("step")?;
+                w.uint(c.step)?;
+                w.key("virtual_rank")?;
+                w.uint(c.virtual_rank as u64)?;
+                w.end_obj()?;
+            }
+            w.end_arr()?;
+            w.key("param_sizes")?;
+            w.begin_arr()?;
+            for p in &state.params {
+                w.uint(p.len() as u64)?;
+            }
+            w.end_arr()?;
+            w.key("restart_count")?;
+            w.uint(state.restart_count)?;
+            w.key("step")?;
+            w.uint(state.step)?;
+            w.end_obj()
+        }
+        let mut out = Vec::with_capacity(256);
+        let mut w = JsonWriter::new(&mut out);
+        emit(state, &mut w).expect("in-memory write cannot fail");
+        out
     }
 
     pub fn load(path: &Path) -> Result<TrainState> {
@@ -93,43 +144,94 @@ impl Checkpoint {
         f.read_exact(&mut len)?;
         let mut header = vec![0u8; u64::from_le_bytes(len) as usize];
         f.read_exact(&mut header)?;
-        let j = Json::parse(std::str::from_utf8(&header)?)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
 
-        let step = j.req_usize("step")? as u64;
-        let restart_count = j.req_usize("restart_count")? as u64;
-        let sizes: Vec<usize> = j
-            .req_arr("param_sizes")?
-            .iter()
-            .map(|s| s.as_usize().context("bad size"))
-            .collect::<Result<_>>()?;
-        let bucket_plan = BucketPlan::from_json(j.get("bucket_plan"))?;
+        // typed pull read: keys borrow from `header`, no tree is built,
+        // and any key order is accepted
+        let mut p = PullParser::new(&header);
+        p.expect_obj_start()?;
+        let mut step = None;
+        let mut restart_count = None;
+        let mut sizes: Option<Vec<usize>> = None;
+        let mut bucket_plan = None;
+        let mut est_contexts: Option<Vec<EstContext>> = None;
+        let mut data_items: Option<Vec<WorkItem>> = None;
+        while let Some(key) = p.next_key()? {
+            match key.as_ref() {
+                "step" => step = Some(p.expect_u64()?),
+                "restart_count" => restart_count = Some(p.expect_u64()?),
+                "param_sizes" => {
+                    let mut v = Vec::new();
+                    p.expect_arr_start()?;
+                    while p.arr_next()? {
+                        v.push(p.expect_usize()?);
+                    }
+                    sizes = Some(v);
+                }
+                "bucket_plan" => bucket_plan = Some(BucketPlan::from_pull(&mut p)?),
+                "est_contexts" => {
+                    let mut v = Vec::new();
+                    p.expect_arr_start()?;
+                    while p.arr_next()? {
+                        p.expect_obj_start()?;
+                        let (mut vr, mut st, mut aug) = (None, None, None);
+                        while let Some(k) = p.next_key()? {
+                            match k.as_ref() {
+                                "virtual_rank" => vr = Some(p.expect_usize()?),
+                                "step" => st = Some(p.expect_u64()?),
+                                "aug_rng_state" => {
+                                    aug = Some(parse_hex16(p.expect_str()?.as_ref())?)
+                                }
+                                _ => p.skip_value()?,
+                            }
+                        }
+                        v.push(EstContext {
+                            virtual_rank: vr.ok_or_else(|| anyhow!("est context missing virtual_rank"))?,
+                            step: st.ok_or_else(|| anyhow!("est context missing step"))?,
+                            aug_rng_state: aug
+                                .ok_or_else(|| anyhow!("est context missing aug_rng_state"))?,
+                        });
+                    }
+                    est_contexts = Some(v);
+                }
+                "data_items" => {
+                    let mut v = Vec::new();
+                    p.expect_arr_start()?;
+                    while p.arr_next()? {
+                        p.expect_obj_start()?;
+                        let (mut st, mut rank, mut rng) = (None, None, None);
+                        while let Some(k) = p.next_key()? {
+                            match k.as_ref() {
+                                "step" => st = Some(p.expect_u64()?),
+                                "rank" => rank = Some(p.expect_usize()?),
+                                "rng_state" => {
+                                    rng = Some(parse_hex16(p.expect_str()?.as_ref())?)
+                                }
+                                _ => p.skip_value()?,
+                            }
+                        }
+                        v.push(WorkItem {
+                            step: st.ok_or_else(|| anyhow!("data item missing step"))?,
+                            rank: rank.ok_or_else(|| anyhow!("data item missing rank"))?,
+                            rng_state: rng.ok_or_else(|| anyhow!("data item missing rng_state"))?,
+                        });
+                    }
+                    data_items = Some(v);
+                }
+                _ => p.skip_value()?,
+            }
+        }
+        p.expect_done()?;
 
-        let hex = |s: &str| -> Result<u64> {
-            u64::from_str_radix(s, 16).context("bad hex state")
-        };
-        let est_contexts: Vec<EstContext> = j
-            .req_arr("est_contexts")?
-            .iter()
-            .map(|c| {
-                Ok(EstContext {
-                    virtual_rank: c.req_usize("virtual_rank")?,
-                    step: c.req_usize("step")? as u64,
-                    aug_rng_state: hex(c.req_str("aug_rng_state")?)?,
-                })
-            })
-            .collect::<Result<_>>()?;
-        let data_items: Vec<WorkItem> = j
-            .req_arr("data_items")?
-            .iter()
-            .map(|w| {
-                Ok(WorkItem {
-                    step: w.req_usize("step")? as u64,
-                    rank: w.req_usize("rank")?,
-                    rng_state: hex(w.req_str("rng_state")?)?,
-                })
-            })
-            .collect::<Result<_>>()?;
+        let step = step.ok_or_else(|| anyhow!("checkpoint header missing step"))?;
+        let restart_count =
+            restart_count.ok_or_else(|| anyhow!("checkpoint header missing restart_count"))?;
+        let sizes = sizes.ok_or_else(|| anyhow!("checkpoint header missing param_sizes"))?;
+        let bucket_plan =
+            bucket_plan.ok_or_else(|| anyhow!("checkpoint header missing bucket_plan"))?;
+        let est_contexts =
+            est_contexts.ok_or_else(|| anyhow!("checkpoint header missing est_contexts"))?;
+        let data_items =
+            data_items.ok_or_else(|| anyhow!("checkpoint header missing data_items"))?;
 
         let mut read_set = |sizes: &[usize]| -> Result<Vec<Vec<f32>>> {
             let mut out = Vec::with_capacity(sizes.len());
@@ -163,6 +265,7 @@ impl Checkpoint {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::json::Json;
 
     fn sample_state() -> TrainState {
         TrainState {
@@ -206,6 +309,84 @@ mod tests {
         Checkpoint::save(&p1, &state).unwrap();
         Checkpoint::save(&p2, &state).unwrap();
         assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    }
+
+    /// The pin for the streaming migration: the header the `JsonWriter`
+    /// path emits must be byte-identical to what the historical DOM
+    /// serializer (sorted `BTreeMap` keys) produced for the same state.
+    #[test]
+    fn streaming_header_matches_dom_serializer() {
+        let state = sample_state();
+        let dom = Json::obj(vec![
+            ("step", Json::num(state.step as f64)),
+            ("restart_count", Json::num(state.restart_count as f64)),
+            (
+                "param_sizes",
+                Json::arr(state.params.iter().map(|p| Json::num(p.len() as f64))),
+            ),
+            ("bucket_plan", state.bucket_plan.to_json()),
+            (
+                "est_contexts",
+                Json::arr(state.est_contexts.iter().map(|c| {
+                    Json::obj(vec![
+                        ("virtual_rank", Json::num(c.virtual_rank as f64)),
+                        ("step", Json::num(c.step as f64)),
+                        ("aug_rng_state", Json::str(format!("{:016x}", c.aug_rng_state))),
+                    ])
+                })),
+            ),
+            (
+                "data_items",
+                Json::arr(state.data_items.iter().map(|w| {
+                    Json::obj(vec![
+                        ("step", Json::num(w.step as f64)),
+                        ("rank", Json::num(w.rank as f64)),
+                        ("rng_state", Json::str(format!("{:016x}", w.rng_state))),
+                    ])
+                })),
+            ),
+        ])
+        .dump();
+        let streamed = Checkpoint::header_bytes(&state);
+        assert_eq!(std::str::from_utf8(&streamed).unwrap(), dom);
+    }
+
+    #[test]
+    fn load_accepts_any_header_key_order() {
+        let dir = std::env::temp_dir().join("easyscale_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("d.ckpt");
+        let state = sample_state();
+        Checkpoint::save(&path, &state).unwrap();
+
+        // rewrite the file with the header keys in reversed (unsorted)
+        // order; the pull reader must still load the identical state
+        let bytes = std::fs::read(&path).unwrap();
+        let hlen = u64::from_le_bytes(bytes[6..14].try_into().unwrap()) as usize;
+        let header = std::str::from_utf8(&bytes[14..14 + hlen]).unwrap();
+        let tree = Json::parse(header).unwrap();
+        let obj = tree.as_obj().unwrap();
+        let mut reordered = String::from("{");
+        for (i, (k, v)) in obj.iter().rev().enumerate() {
+            if i > 0 {
+                reordered.push(',');
+            }
+            reordered.push_str(&format!("{:?}:{}", k, v.dump()));
+        }
+        reordered.push('}');
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(reordered.len() as u64).to_le_bytes());
+        out.extend_from_slice(reordered.as_bytes());
+        out.extend_from_slice(&bytes[14 + hlen..]);
+        let path2 = dir.join("d2.ckpt");
+        std::fs::write(&path2, &out).unwrap();
+
+        let loaded = Checkpoint::load(&path2).unwrap();
+        assert_eq!(loaded.step, state.step);
+        assert_eq!(loaded.bucket_plan, state.bucket_plan);
+        assert_eq!(loaded.est_contexts, state.est_contexts);
+        assert_eq!(loaded.data_items, state.data_items);
     }
 
     #[test]

@@ -6,8 +6,11 @@
 //! output can be compared side by side with the paper's reported rows.
 
 use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::path::Path;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::time::Instant;
+
+use super::json::JsonWriter;
 
 #[derive(Debug, Clone)]
 pub struct Stats {
@@ -97,6 +100,139 @@ impl Table {
     }
 }
 
+/// The engine-backend tag every bench record carries.
+pub fn backend() -> &'static str {
+    if cfg!(feature = "pjrt") {
+        "pjrt-sequential"
+    } else {
+        "native-parallel"
+    }
+}
+
+/// Streaming `BENCH_*.json` emitter shared by every bench binary: one
+/// top-level object of scalar metadata fields followed by a `results`
+/// array of row objects, written through [`JsonWriter`] — no JSON tree
+/// is built. Scalar fields must be written before the first [`row`];
+/// [`finish`] closes the record and writes `<file>` with a trailing
+/// newline.
+///
+/// [`row`]: BenchRecord::row
+/// [`finish`]: BenchRecord::finish
+pub struct BenchRecord {
+    w: JsonWriter<Vec<u8>>,
+    results_open: bool,
+}
+
+/// One row inside the `results` array (see [`BenchRecord::row`]).
+pub struct BenchRow<'a> {
+    w: &'a mut JsonWriter<Vec<u8>>,
+}
+
+impl BenchRecord {
+    pub fn new(bench: &str) -> BenchRecord {
+        let mut w = JsonWriter::new(Vec::with_capacity(512));
+        w.begin_obj().expect("in-memory write cannot fail");
+        w.key("bench").unwrap();
+        w.str(bench).unwrap();
+        w.key("backend").unwrap();
+        w.str(backend()).unwrap();
+        BenchRecord { w, results_open: false }
+    }
+
+    fn scalar_key(&mut self, key: &str) {
+        assert!(
+            !self.results_open,
+            "scalar field '{key}' written after the results array opened"
+        );
+        self.w.key(key).unwrap();
+    }
+
+    pub fn str_field(&mut self, key: &str, v: &str) -> &mut Self {
+        self.scalar_key(key);
+        self.w.str(v).unwrap();
+        self
+    }
+
+    pub fn u64_field(&mut self, key: &str, v: u64) -> &mut Self {
+        self.scalar_key(key);
+        self.w.uint(v).unwrap();
+        self
+    }
+
+    pub fn usize_field(&mut self, key: &str, v: usize) -> &mut Self {
+        self.u64_field(key, v as u64)
+    }
+
+    pub fn f64_field(&mut self, key: &str, v: f64) -> &mut Self {
+        self.scalar_key(key);
+        self.w.f64(v).unwrap();
+        self
+    }
+
+    /// A scalar array field, e.g. per-job step budgets.
+    pub fn u64s_field(&mut self, key: &str, vs: &[u64]) -> &mut Self {
+        self.scalar_key(key);
+        self.w.begin_arr().unwrap();
+        for &v in vs {
+            self.w.uint(v).unwrap();
+        }
+        self.w.end_arr().unwrap();
+        self
+    }
+
+    /// Append one result row; fields are streamed inside the closure.
+    pub fn row(&mut self, fill: impl FnOnce(&mut BenchRow<'_>)) -> &mut Self {
+        if !self.results_open {
+            self.w.key("results").unwrap();
+            self.w.begin_arr().unwrap();
+            self.results_open = true;
+        }
+        self.w.begin_obj().unwrap();
+        fill(&mut BenchRow { w: &mut self.w });
+        self.w.end_obj().unwrap();
+        self
+    }
+
+    /// Close the record and write it to `path` (with trailing newline).
+    pub fn finish(mut self, path: &Path) -> std::io::Result<()> {
+        if !self.results_open {
+            self.w.key("results").unwrap();
+            self.w.begin_arr().unwrap();
+        }
+        self.w.end_arr().unwrap();
+        self.w.end_obj().unwrap();
+        let mut bytes = self.w.into_inner();
+        bytes.push(b'\n');
+        std::fs::write(path, bytes)
+    }
+}
+
+impl BenchRow<'_> {
+    pub fn str(&mut self, key: &str, v: &str) -> &mut Self {
+        self.w.key(key).unwrap();
+        self.w.str(v).unwrap();
+        self
+    }
+    pub fn u64(&mut self, key: &str, v: u64) -> &mut Self {
+        self.w.key(key).unwrap();
+        self.w.uint(v).unwrap();
+        self
+    }
+    pub fn usize(&mut self, key: &str, v: usize) -> &mut Self {
+        self.u64(key, v as u64)
+    }
+    pub fn f64(&mut self, key: &str, v: f64) -> &mut Self {
+        self.w.key(key).unwrap();
+        self.w.f64(v).unwrap();
+        self
+    }
+    pub fn bool(&mut self, key: &str, v: bool) -> &mut Self {
+        self.w.key(key).unwrap();
+        self.w.bool(v).unwrap();
+        self
+    }
+}
+
 /// A heap-allocation-counting global allocator for the zero-allocation
 /// pins (`tests/alloc.rs`, `benches/pool_overhead.rs`): every
 /// alloc/realloc/alloc_zeroed bumps a process-global counter read via
@@ -112,26 +248,48 @@ impl Table {
 pub struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static LIVE_BYTES: AtomicI64 = AtomicI64::new(0);
+static PEAK_BYTES: AtomicI64 = AtomicI64::new(0);
 
 /// Heap allocations observed so far (see [`CountingAlloc`]).
 pub fn heap_allocs() -> u64 {
     ALLOCS.load(Ordering::Relaxed)
 }
 
+/// High-water mark of live heap bytes since the last
+/// [`reset_heap_peak`] (approximate under concurrent allocation, exact
+/// single-threaded — what the parse-throughput bench measures).
+pub fn heap_peak_bytes() -> u64 {
+    PEAK_BYTES.load(Ordering::Relaxed).max(0) as u64
+}
+
+/// Restart the peak-bytes window at the current live size.
+pub fn reset_heap_peak() {
+    PEAK_BYTES.store(LIVE_BYTES.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+fn track_alloc(bytes: usize) {
+    ALLOCS.fetch_add(1, Ordering::Relaxed);
+    let live = LIVE_BYTES.fetch_add(bytes as i64, Ordering::Relaxed) + bytes as i64;
+    PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
+}
+
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        track_alloc(layout.size());
         System.alloc(layout)
     }
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE_BYTES.fetch_sub(layout.size() as i64, Ordering::Relaxed);
         System.dealloc(ptr, layout)
     }
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        LIVE_BYTES.fetch_sub(layout.size() as i64, Ordering::Relaxed);
+        track_alloc(new_size);
         System.realloc(ptr, layout, new_size)
     }
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        track_alloc(layout.size());
         System.alloc_zeroed(layout)
     }
 }

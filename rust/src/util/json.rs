@@ -1,20 +1,896 @@
-//! Minimal JSON parser/serializer (serde is not in the offline vendor set).
+//! Streaming JSON I/O plane (serde is not in the offline vendor set).
 //!
-//! Supports the full JSON grammar minus exotic number forms; numbers are
-//! kept as f64 with an i64 fast path (sufficient for manifests, configs,
-//! checkpoints and metric dumps).
+//! Three layers, in the style of hifijson's zero-copy slice readers and
+//! picojson's event-driven pull API:
+//!
+//! 1. [`PullParser`] — an event-driven pull lexer/parser over `&[u8]`.
+//!    Strings borrow from the input (`Cow::Borrowed`) whenever they hold
+//!    no escapes; numbers are returned as raw slices ([`Number`]) so
+//!    i64/u64/f64 values round-trip *exactly* — nothing is forced through
+//!    an f64 cast. Iterative (no recursion), so nesting depth is bounded
+//!    by memory, not the stack. Typed helpers (`next_key`, `expect_*`,
+//!    `skip_value`) support streaming deserialization in any key order.
+//! 2. [`JsonWriter`] — a push streaming serializer over any `io::Write`.
+//!    Its byte output is pinned identical to the historical DOM
+//!    serializer (the DOM's `dump` is now implemented *on* it), because
+//!    checkpoint headers must stay byte-stable for the D1 bitwise
+//!    round-trip guarantee. Callers control key order; checkpoint code
+//!    emits keys sorted to match the old `BTreeMap` output.
+//! 3. [`Json`] — the old DOM tree, kept as a thin compatibility shim
+//!    rebuilt from the pull API so remaining consumers migrate
+//!    incrementally. Its number variant is now an exact [`Num`]
+//!    (i64/u64/f64) — values above 2^53 no longer corrupt silently.
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io::{self, Write};
 
-/// A JSON value. Objects use `BTreeMap` so serialization is deterministic —
-/// checkpoints containing JSON headers must be byte-stable (D1 requires
-/// bitwise-reproducible checkpoint round trips).
+// ---------------------------------------------------------------------------
+// errors
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct JsonError {
+    pub msg: String,
+}
+
+impl JsonError {
+    fn new(msg: impl Into<String>) -> Self {
+        JsonError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+// ---------------------------------------------------------------------------
+// numbers
+// ---------------------------------------------------------------------------
+
+/// The largest f64 below which every integral value is exactly
+/// representable (2^53): integer<->float conversions are only trusted
+/// inside this window.
+const EXACT_F64_INT: f64 = 9_007_199_254_740_992.0;
+
+/// A number as it appeared in the input: a raw, grammar-validated slice.
+/// Integer accessors parse the raw text directly, so `i64::MAX`,
+/// `u64::MAX` and 2^53+1 survive exactly; `as_f64` is the only lossy view.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Number<'a> {
+    raw: &'a str,
+}
+
+impl<'a> Number<'a> {
+    pub fn raw(&self) -> &'a str {
+        self.raw
+    }
+
+    /// Exact integer value. Integral floats ("1e3", "5.0") still convert
+    /// when they sit inside the exactly-representable window; anything
+    /// that would round returns `None` instead of corrupting.
+    pub fn as_i64(&self) -> Option<i64> {
+        if let Ok(v) = self.raw.parse::<i64>() {
+            return Some(v);
+        }
+        let f = self.as_f64();
+        (f.fract() == 0.0 && f.abs() <= EXACT_F64_INT).then_some(f as i64)
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        if let Ok(v) = self.raw.parse::<u64>() {
+            return Some(v);
+        }
+        let f = self.as_f64();
+        (f.fract() == 0.0 && (0.0..=EXACT_F64_INT).contains(&f)).then_some(f as u64)
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub fn as_f64(&self) -> f64 {
+        // the grammar scan guarantees `raw` is f64-parseable
+        self.raw.parse::<f64>().unwrap_or(f64::NAN)
+    }
+
+    /// Owned exact representation for the DOM shim: i64 if it fits, else
+    /// u64, else f64.
+    pub fn to_num(&self) -> Num {
+        if let Ok(v) = self.raw.parse::<i64>() {
+            Num::I(v)
+        } else if let Ok(v) = self.raw.parse::<u64>() {
+            Num::U(v)
+        } else {
+            Num::F(self.as_f64())
+        }
+    }
+}
+
+/// Owned exact number for the [`Json`] DOM. Equality is numeric across
+/// representations (`I(5) == F(5.0)`), but only where the comparison is
+/// exact — an f64 never equals an integer it cannot represent.
+#[derive(Debug, Clone, Copy)]
+pub enum Num {
+    I(i64),
+    U(u64),
+    F(f64),
+}
+
+impl Num {
+    pub fn as_f64(self) -> f64 {
+        match self {
+            Num::I(v) => v as f64,
+            Num::U(v) => v as f64,
+            Num::F(v) => v,
+        }
+    }
+    pub fn as_i64(self) -> Option<i64> {
+        match self {
+            Num::I(v) => Some(v),
+            Num::U(v) => i64::try_from(v).ok(),
+            Num::F(f) => (f.fract() == 0.0 && f.abs() <= EXACT_F64_INT).then_some(f as i64),
+        }
+    }
+    pub fn as_u64(self) -> Option<u64> {
+        match self {
+            Num::I(v) => u64::try_from(v).ok(),
+            Num::U(v) => Some(v),
+            Num::F(f) => {
+                (f.fract() == 0.0 && (0.0..=EXACT_F64_INT).contains(&f)).then_some(f as u64)
+            }
+        }
+    }
+    pub fn as_usize(self) -> Option<usize> {
+        self.as_u64().and_then(|v| usize::try_from(v).ok())
+    }
+}
+
+impl PartialEq for Num {
+    fn eq(&self, other: &Num) -> bool {
+        use Num::*;
+        match (*self, *other) {
+            (I(a), I(b)) => a == b,
+            (U(a), U(b)) => a == b,
+            (F(a), F(b)) => a == b,
+            (I(a), U(b)) | (U(b), I(a)) => a >= 0 && a as u64 == b,
+            (I(a), F(f)) | (F(f), I(a)) => {
+                f.fract() == 0.0 && f.abs() <= EXACT_F64_INT && f as i64 == a
+            }
+            (U(a), F(f)) | (F(f), U(a)) => {
+                f.fract() == 0.0 && (0.0..=EXACT_F64_INT).contains(&f) && f as u64 == a
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pull parser
+// ---------------------------------------------------------------------------
+
+/// One parse event. Strings and keys are `Cow::Borrowed` straight from
+/// the input unless they contained escapes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonEvent<'a> {
+    ObjStart,
+    ObjEnd,
+    ArrStart,
+    ArrEnd,
+    Key(Cow<'a, str>),
+    Str(Cow<'a, str>),
+    Num(Number<'a>),
+    Bool(bool),
+    Null,
+}
+
+fn event_kind(ev: Option<&JsonEvent<'_>>) -> &'static str {
+    match ev {
+        None => "end of document",
+        Some(JsonEvent::ObjStart) => "'{'",
+        Some(JsonEvent::ObjEnd) => "'}'",
+        Some(JsonEvent::ArrStart) => "'['",
+        Some(JsonEvent::ArrEnd) => "']'",
+        Some(JsonEvent::Key(_)) => "object key",
+        Some(JsonEvent::Str(_)) => "string",
+        Some(JsonEvent::Num(_)) => "number",
+        Some(JsonEvent::Bool(_)) => "bool",
+        Some(JsonEvent::Null) => "null",
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ctx {
+    Obj,
+    Arr,
+}
+
+/// `allow_end` marks the position right after an opening bracket, where
+/// an immediately-closing bracket (empty container) is legal but a
+/// trailing comma's phantom element is not.
+#[derive(Debug, Clone, Copy)]
+enum State {
+    Value { allow_end: bool },
+    Key { allow_end: bool },
+    Post,
+    Done,
+}
+
+/// Event-driven pull parser over a byte slice. No recursion anywhere —
+/// container depth lives in an explicit `Vec`.
+pub struct PullParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    stack: Vec<Ctx>,
+    state: State,
+    peeked: Option<JsonEvent<'a>>,
+}
+
+impl<'a> PullParser<'a> {
+    pub fn new(bytes: &'a [u8]) -> PullParser<'a> {
+        PullParser {
+            bytes,
+            pos: 0,
+            stack: Vec::new(),
+            state: State::Value { allow_end: false },
+            peeked: None,
+        }
+    }
+
+    pub fn from_str(text: &'a str) -> PullParser<'a> {
+        PullParser::new(text.as_bytes())
+    }
+
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError::new(format!("{msg} at byte {}", self.pos))
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn after_value(&self) -> State {
+        if self.stack.is_empty() {
+            State::Done
+        } else {
+            State::Post
+        }
+    }
+
+    /// Next event, or `Ok(None)` once the document is complete (trailing
+    /// whitespace consumed, anything else is an error).
+    pub fn next_event(&mut self) -> Result<Option<JsonEvent<'a>>, JsonError> {
+        if let Some(ev) = self.peeked.take() {
+            return Ok(Some(ev));
+        }
+        loop {
+            self.skip_ws();
+            match self.state {
+                State::Done => {
+                    return if self.pos == self.bytes.len() {
+                        Ok(None)
+                    } else {
+                        Err(self.err("trailing characters"))
+                    };
+                }
+                State::Value { allow_end } => {
+                    let Some(c) = self.peek() else {
+                        return Err(self.err("unexpected end of input"));
+                    };
+                    return match c {
+                        b']' if allow_end => {
+                            self.pos += 1;
+                            self.stack.pop();
+                            self.state = self.after_value();
+                            Ok(Some(JsonEvent::ArrEnd))
+                        }
+                        b'{' => {
+                            self.pos += 1;
+                            self.stack.push(Ctx::Obj);
+                            self.state = State::Key { allow_end: true };
+                            Ok(Some(JsonEvent::ObjStart))
+                        }
+                        b'[' => {
+                            self.pos += 1;
+                            self.stack.push(Ctx::Arr);
+                            self.state = State::Value { allow_end: true };
+                            Ok(Some(JsonEvent::ArrStart))
+                        }
+                        b'"' => {
+                            let s = self.string()?;
+                            self.state = self.after_value();
+                            Ok(Some(JsonEvent::Str(s)))
+                        }
+                        b't' => {
+                            self.lit(b"true")?;
+                            self.state = self.after_value();
+                            Ok(Some(JsonEvent::Bool(true)))
+                        }
+                        b'f' => {
+                            self.lit(b"false")?;
+                            self.state = self.after_value();
+                            Ok(Some(JsonEvent::Bool(false)))
+                        }
+                        b'n' => {
+                            self.lit(b"null")?;
+                            self.state = self.after_value();
+                            Ok(Some(JsonEvent::Null))
+                        }
+                        b'-' | b'0'..=b'9' => {
+                            let n = self.number()?;
+                            self.state = self.after_value();
+                            Ok(Some(JsonEvent::Num(n)))
+                        }
+                        _ => Err(self.err("unexpected character")),
+                    };
+                }
+                State::Key { allow_end } => {
+                    let Some(c) = self.peek() else {
+                        return Err(self.err("unexpected end of input in object"));
+                    };
+                    return match c {
+                        b'}' if allow_end => {
+                            self.pos += 1;
+                            self.stack.pop();
+                            self.state = self.after_value();
+                            Ok(Some(JsonEvent::ObjEnd))
+                        }
+                        b'"' => {
+                            let k = self.string()?;
+                            self.skip_ws();
+                            if self.peek() != Some(b':') {
+                                return Err(self.err("expected ':'"));
+                            }
+                            self.pos += 1;
+                            self.state = State::Value { allow_end: false };
+                            Ok(Some(JsonEvent::Key(k)))
+                        }
+                        _ => Err(self.err("expected object key")),
+                    };
+                }
+                State::Post => {
+                    let Some(c) = self.peek() else {
+                        return Err(self.err("unexpected end of input"));
+                    };
+                    match (c, self.stack.last().copied()) {
+                        (b',', Some(Ctx::Arr)) => {
+                            self.pos += 1;
+                            self.state = State::Value { allow_end: false };
+                        }
+                        (b',', Some(Ctx::Obj)) => {
+                            self.pos += 1;
+                            self.state = State::Key { allow_end: false };
+                        }
+                        (b']', Some(Ctx::Arr)) => {
+                            self.pos += 1;
+                            self.stack.pop();
+                            self.state = self.after_value();
+                            return Ok(Some(JsonEvent::ArrEnd));
+                        }
+                        (b'}', Some(Ctx::Obj)) => {
+                            self.pos += 1;
+                            self.stack.pop();
+                            self.state = self.after_value();
+                            return Ok(Some(JsonEvent::ObjEnd));
+                        }
+                        _ => return Err(self.err("expected ',' or container end")),
+                    }
+                }
+            }
+        }
+    }
+
+    fn lit(&mut self, word: &[u8]) -> Result<(), JsonError> {
+        if self.bytes[self.pos..].starts_with(word) {
+            self.pos += word.len();
+            Ok(())
+        } else {
+            Err(self.err("invalid literal"))
+        }
+    }
+
+    /// Strict-enough JSON number grammar: `-? digits+ (.digits+)?
+    /// ([eE][+-]?digits+)?`. The raw slice is returned untouched.
+    fn number(&mut self) -> Result<Number<'a>, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let digits = |p: &mut Self| {
+            let d0 = p.pos;
+            while matches!(p.peek(), Some(c) if c.is_ascii_digit()) {
+                p.pos += 1;
+            }
+            p.pos > d0
+        };
+        if !digits(self) {
+            return Err(self.err("invalid number"));
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            if !digits(self) {
+                return Err(self.err("invalid number"));
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            if !digits(self) {
+                return Err(self.err("invalid number"));
+            }
+        }
+        // the scan admits only ASCII, so the slice is valid UTF-8
+        let raw = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        Ok(Number { raw })
+    }
+
+    fn hex4_at(&self, p: usize) -> Result<u32, JsonError> {
+        let Some(h) = self.bytes.get(p..p + 4) else {
+            return Err(self.err("bad \\u escape"));
+        };
+        let s = std::str::from_utf8(h).map_err(|_| self.err("bad \\u escape"))?;
+        u32::from_str_radix(s, 16).map_err(|_| self.err("bad \\u escape"))
+    }
+
+    /// Zero-copy string scan: escape-free strings borrow from the input;
+    /// only escaped ones allocate. Surrogate pairs (`\uD83D\uDE00`)
+    /// combine into their astral code point; lone surrogates become
+    /// U+FFFD.
+    fn string(&mut self) -> Result<Cow<'a, str>, JsonError> {
+        debug_assert_eq!(self.peek(), Some(b'"'));
+        self.pos += 1;
+        let start = self.pos;
+        let mut i = self.pos;
+        while i < self.bytes.len() {
+            match self.bytes[i] {
+                b'"' => {
+                    let s = std::str::from_utf8(&self.bytes[start..i])
+                        .map_err(|_| self.err("invalid utf8 in string"))?;
+                    self.pos = i + 1;
+                    return Ok(Cow::Borrowed(s));
+                }
+                b'\\' => break,
+                _ => i += 1,
+            }
+        }
+        if i >= self.bytes.len() {
+            self.pos = i;
+            return Err(self.err("unterminated string"));
+        }
+        // slow path: at least one escape
+        let mut out = String::with_capacity(i - start + 16);
+        out.push_str(
+            std::str::from_utf8(&self.bytes[start..i])
+                .map_err(|_| self.err("invalid utf8 in string"))?,
+        );
+        self.pos = i;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(Cow::Owned(out));
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let hi = self.hex4_at(self.pos + 1)?;
+                            self.pos += 4; // now on the last hex digit
+                            let cp = if (0xD800..0xDC00).contains(&hi)
+                                && self.bytes.get(self.pos + 1) == Some(&b'\\')
+                                && self.bytes.get(self.pos + 2) == Some(&b'u')
+                            {
+                                let lo = self.hex4_at(self.pos + 3)?;
+                                if (0xDC00..0xE000).contains(&lo) {
+                                    self.pos += 6;
+                                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                                } else {
+                                    hi // lone high surrogate -> U+FFFD below
+                                }
+                            } else {
+                                hi
+                            };
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // copy a run of unescaped bytes; '"' and '\\' are
+                    // ASCII so the run always ends on a char boundary
+                    let run = self.pos;
+                    while matches!(self.peek(), Some(c) if c != b'"' && c != b'\\') {
+                        self.pos += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.bytes[run..self.pos])
+                            .map_err(|_| self.err("invalid utf8 in string"))?,
+                    );
+                }
+            }
+        }
+    }
+
+    // -- typed pull helpers -------------------------------------------------
+
+    /// Look at the next event without consuming it. Errors at document end
+    /// (every legal caller expects more input).
+    pub fn peek_event(&mut self) -> Result<&JsonEvent<'a>, JsonError> {
+        if self.peeked.is_none() {
+            let ev = self
+                .next_event()?
+                .ok_or_else(|| JsonError::new("unexpected end of document"))?;
+            self.peeked = Some(ev);
+        }
+        Ok(self.peeked.as_ref().unwrap())
+    }
+
+    fn unexpected(&self, want: &str, got: Option<JsonEvent<'_>>) -> JsonError {
+        self.err(&format!("expected {want}, got {}", event_kind(got.as_ref())))
+    }
+
+    pub fn expect_obj_start(&mut self) -> Result<(), JsonError> {
+        match self.next_event()? {
+            Some(JsonEvent::ObjStart) => Ok(()),
+            other => Err(self.unexpected("'{'", other)),
+        }
+    }
+
+    pub fn expect_arr_start(&mut self) -> Result<(), JsonError> {
+        match self.next_event()? {
+            Some(JsonEvent::ArrStart) => Ok(()),
+            other => Err(self.unexpected("'['", other)),
+        }
+    }
+
+    /// Inside an object: the next key (borrowed when escape-free), or
+    /// `None` once the closing `}` has been consumed.
+    pub fn next_key(&mut self) -> Result<Option<Cow<'a, str>>, JsonError> {
+        match self.next_event()? {
+            Some(JsonEvent::Key(k)) => Ok(Some(k)),
+            Some(JsonEvent::ObjEnd) => Ok(None),
+            other => Err(self.unexpected("object key or '}'", other)),
+        }
+    }
+
+    /// Inside an array: `true` if another element follows; consumes the
+    /// closing `]` and returns `false` at the end.
+    pub fn arr_next(&mut self) -> Result<bool, JsonError> {
+        if matches!(self.peek_event()?, JsonEvent::ArrEnd) {
+            self.next_event()?;
+            Ok(false)
+        } else {
+            Ok(true)
+        }
+    }
+
+    pub fn expect_str(&mut self) -> Result<Cow<'a, str>, JsonError> {
+        match self.next_event()? {
+            Some(JsonEvent::Str(s)) => Ok(s),
+            other => Err(self.unexpected("string", other)),
+        }
+    }
+
+    pub fn expect_num(&mut self) -> Result<Number<'a>, JsonError> {
+        match self.next_event()? {
+            Some(JsonEvent::Num(n)) => Ok(n),
+            other => Err(self.unexpected("number", other)),
+        }
+    }
+
+    pub fn expect_bool(&mut self) -> Result<bool, JsonError> {
+        match self.next_event()? {
+            Some(JsonEvent::Bool(b)) => Ok(b),
+            other => Err(self.unexpected("bool", other)),
+        }
+    }
+
+    pub fn expect_u64(&mut self) -> Result<u64, JsonError> {
+        let n = self.expect_num()?;
+        n.as_u64()
+            .ok_or_else(|| self.err(&format!("number '{}' is not an exact u64", n.raw())))
+    }
+
+    pub fn expect_i64(&mut self) -> Result<i64, JsonError> {
+        let n = self.expect_num()?;
+        n.as_i64()
+            .ok_or_else(|| self.err(&format!("number '{}' is not an exact i64", n.raw())))
+    }
+
+    pub fn expect_usize(&mut self) -> Result<usize, JsonError> {
+        let n = self.expect_num()?;
+        n.as_usize()
+            .ok_or_else(|| self.err(&format!("number '{}' is not an exact usize", n.raw())))
+    }
+
+    pub fn expect_f64(&mut self) -> Result<f64, JsonError> {
+        Ok(self.expect_num()?.as_f64())
+    }
+
+    /// Consume one complete value (scalar or whole container), without
+    /// building anything.
+    pub fn skip_value(&mut self) -> Result<(), JsonError> {
+        let mut depth = 0usize;
+        loop {
+            match self.next_event()? {
+                None => return Err(JsonError::new("unexpected end of document in skip")),
+                Some(JsonEvent::ObjStart | JsonEvent::ArrStart) => depth += 1,
+                Some(JsonEvent::ObjEnd | JsonEvent::ArrEnd) => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+                Some(JsonEvent::Key(_)) => {}
+                Some(_) if depth == 0 => return Ok(()),
+                Some(_) => {}
+            }
+        }
+    }
+
+    /// Assert the document is complete: exactly one value, nothing but
+    /// whitespace after it.
+    pub fn expect_done(&mut self) -> Result<(), JsonError> {
+        match self.next_event()? {
+            None => Ok(()),
+            other => Err(self.unexpected("end of document", other)),
+        }
+    }
+}
+
+/// Transcode one complete value from a parser to a writer, event by
+/// event, with no intermediate tree. Numbers pass through as their raw
+/// input slices, so the echo is faithful byte-for-byte on canonical
+/// input.
+pub fn copy_value<W: Write>(
+    p: &mut PullParser<'_>,
+    w: &mut JsonWriter<W>,
+) -> Result<(), JsonError> {
+    let werr = |e: io::Error| JsonError::new(format!("write failed: {e}"));
+    let mut depth = 0usize;
+    loop {
+        let ev = p
+            .next_event()?
+            .ok_or_else(|| JsonError::new("unexpected end of document in copy"))?;
+        match &ev {
+            JsonEvent::ObjStart => {
+                w.begin_obj().map_err(werr)?;
+                depth += 1;
+            }
+            JsonEvent::ArrStart => {
+                w.begin_arr().map_err(werr)?;
+                depth += 1;
+            }
+            JsonEvent::ObjEnd => {
+                w.end_obj().map_err(werr)?;
+                depth -= 1;
+            }
+            JsonEvent::ArrEnd => {
+                w.end_arr().map_err(werr)?;
+                depth -= 1;
+            }
+            JsonEvent::Key(k) => w.key(k).map_err(werr)?,
+            JsonEvent::Str(s) => w.str(s).map_err(werr)?,
+            JsonEvent::Num(n) => w.raw_num(n).map_err(werr)?,
+            JsonEvent::Bool(b) => w.bool(*b).map_err(werr)?,
+            JsonEvent::Null => w.null().map_err(werr)?,
+        }
+        let scalar_done = !matches!(
+            ev,
+            JsonEvent::ObjStart | JsonEvent::ArrStart | JsonEvent::Key(_)
+        );
+        if depth == 0 && scalar_done {
+            return Ok(());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// streaming writer
+// ---------------------------------------------------------------------------
+
+/// f64 text form pinned identical to the historical DOM serializer:
+/// integral values inside ±9e15 print as integers, everything else via
+/// `Display` (shortest round-trip, no exponent).
+pub fn write_f64<W: Write>(out: &mut W, n: f64) -> io::Result<()> {
+    if n.fract() == 0.0 && n.abs() < 9.0e15 {
+        write!(out, "{}", n as i64)
+    } else {
+        write!(out, "{n}")
+    }
+}
+
+fn write_escaped<W: Write>(s: &str, out: &mut W) -> io::Result<()> {
+    out.write_all(b"\"")?;
+    let bytes = s.as_bytes();
+    let mut start = 0;
+    for (i, &b) in bytes.iter().enumerate() {
+        let rep: &[u8] = match b {
+            b'"' => b"\\\"",
+            b'\\' => b"\\\\",
+            b'\n' => b"\\n",
+            b'\r' => b"\\r",
+            b'\t' => b"\\t",
+            c if c < 0x20 => b"", // marker: numeric escape below
+            _ => continue,
+        };
+        out.write_all(&bytes[start..i])?;
+        if rep.is_empty() {
+            write!(out, "\\u{:04x}", b)?;
+        } else {
+            out.write_all(rep)?;
+        }
+        start = i + 1;
+    }
+    out.write_all(&bytes[start..])?;
+    out.write_all(b"\"")
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Level {
+    is_obj: bool,
+    has_elems: bool,
+}
+
+/// Push-style streaming JSON serializer over any `io::Write`. Commas are
+/// managed automatically; the caller supplies keys (and their order —
+/// byte-stable consumers like the checkpoint emit keys sorted).
+pub struct JsonWriter<W: Write> {
+    out: W,
+    stack: Vec<Level>,
+    after_key: bool,
+}
+
+impl<W: Write> JsonWriter<W> {
+    pub fn new(out: W) -> JsonWriter<W> {
+        JsonWriter { out, stack: Vec::new(), after_key: false }
+    }
+
+    /// Finish and hand back the sink. Debug-asserts every container was
+    /// closed.
+    pub fn into_inner(self) -> W {
+        debug_assert!(self.stack.is_empty(), "unclosed container in JsonWriter");
+        debug_assert!(!self.after_key, "dangling key in JsonWriter");
+        self.out
+    }
+
+    fn pre_value(&mut self) -> io::Result<()> {
+        if self.after_key {
+            self.after_key = false;
+            return Ok(());
+        }
+        if let Some(l) = self.stack.last_mut() {
+            debug_assert!(!l.is_obj, "object values need key() first");
+            if l.has_elems {
+                self.out.write_all(b",")?;
+            }
+            l.has_elems = true;
+        }
+        Ok(())
+    }
+
+    pub fn begin_obj(&mut self) -> io::Result<()> {
+        self.pre_value()?;
+        self.out.write_all(b"{")?;
+        self.stack.push(Level { is_obj: true, has_elems: false });
+        Ok(())
+    }
+
+    pub fn end_obj(&mut self) -> io::Result<()> {
+        let l = self.stack.pop();
+        debug_assert!(matches!(l, Some(Level { is_obj: true, .. })) && !self.after_key);
+        self.out.write_all(b"}")
+    }
+
+    pub fn begin_arr(&mut self) -> io::Result<()> {
+        self.pre_value()?;
+        self.out.write_all(b"[")?;
+        self.stack.push(Level { is_obj: false, has_elems: false });
+        Ok(())
+    }
+
+    pub fn end_arr(&mut self) -> io::Result<()> {
+        let l = self.stack.pop();
+        debug_assert!(matches!(l, Some(Level { is_obj: false, .. })) && !self.after_key);
+        self.out.write_all(b"]")
+    }
+
+    pub fn key(&mut self, k: &str) -> io::Result<()> {
+        let l = self.stack.last_mut().expect("key() outside an object");
+        debug_assert!(l.is_obj && !self.after_key, "key() in a bad position");
+        if l.has_elems {
+            self.out.write_all(b",")?;
+        }
+        l.has_elems = true;
+        write_escaped(k, &mut self.out)?;
+        self.out.write_all(b":")?;
+        self.after_key = true;
+        Ok(())
+    }
+
+    pub fn str(&mut self, s: &str) -> io::Result<()> {
+        self.pre_value()?;
+        write_escaped(s, &mut self.out)
+    }
+
+    pub fn bool(&mut self, b: bool) -> io::Result<()> {
+        self.pre_value()?;
+        self.out.write_all(if b { b"true" } else { b"false" })
+    }
+
+    pub fn null(&mut self) -> io::Result<()> {
+        self.pre_value()?;
+        self.out.write_all(b"null")
+    }
+
+    pub fn int(&mut self, v: i64) -> io::Result<()> {
+        self.pre_value()?;
+        write!(self.out, "{v}")
+    }
+
+    pub fn uint(&mut self, v: u64) -> io::Result<()> {
+        self.pre_value()?;
+        write!(self.out, "{v}")
+    }
+
+    pub fn f64(&mut self, v: f64) -> io::Result<()> {
+        self.pre_value()?;
+        write_f64(&mut self.out, v)
+    }
+
+    pub fn num(&mut self, n: Num) -> io::Result<()> {
+        match n {
+            Num::I(v) => self.int(v),
+            Num::U(v) => self.uint(v),
+            Num::F(v) => self.f64(v),
+        }
+    }
+
+    /// Echo a parsed number back out exactly as it appeared in the input.
+    pub fn raw_num(&mut self, n: &Number<'_>) -> io::Result<()> {
+        self.pre_value()?;
+        self.out.write_all(n.raw().as_bytes())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DOM compatibility shim
+// ---------------------------------------------------------------------------
+
+/// A JSON value tree — the compatibility shim over the pull API. Objects
+/// use `BTreeMap` so serialization is deterministic (checkpoints
+/// containing JSON headers must be byte-stable; D1 requires bitwise
+/// checkpoint round trips). Prefer [`PullParser`]/[`JsonWriter`] in new
+/// code: the tree exists for small configs and tests.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
     Bool(bool),
-    Num(f64),
+    Num(Num),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
@@ -22,29 +898,93 @@ pub enum Json {
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
-        p.skip_ws();
-        let v = p.value()?;
-        p.skip_ws();
-        if p.pos != p.bytes.len() {
-            return Err(p.err("trailing characters"));
-        }
+        let mut p = PullParser::from_str(text);
+        let v = Json::from_pull(&mut p)?;
+        p.expect_done()?;
         Ok(v)
+    }
+
+    /// Build a tree from the next complete value on a pull parser.
+    /// Iterative — deep documents cost heap, not stack.
+    pub fn from_pull(p: &mut PullParser<'_>) -> Result<Json, JsonError> {
+        enum Slot {
+            Arr(Vec<Json>),
+            Obj(BTreeMap<String, Json>, Option<String>),
+        }
+        let mut stack: Vec<Slot> = Vec::new();
+        loop {
+            let ev = p
+                .next_event()?
+                .ok_or_else(|| JsonError::new("unexpected end of document"))?;
+            let complete: Option<Json> = match ev {
+                JsonEvent::ObjStart => {
+                    stack.push(Slot::Obj(BTreeMap::new(), None));
+                    None
+                }
+                JsonEvent::ArrStart => {
+                    stack.push(Slot::Arr(Vec::new()));
+                    None
+                }
+                JsonEvent::Key(k) => {
+                    match stack.last_mut() {
+                        Some(Slot::Obj(_, pending)) => *pending = Some(k.into_owned()),
+                        _ => unreachable!("parser emits Key only inside objects"),
+                    }
+                    None
+                }
+                JsonEvent::ObjEnd => match stack.pop() {
+                    Some(Slot::Obj(m, _)) => Some(Json::Obj(m)),
+                    _ => unreachable!("parser balances ObjEnd"),
+                },
+                JsonEvent::ArrEnd => match stack.pop() {
+                    Some(Slot::Arr(v)) => Some(Json::Arr(v)),
+                    _ => unreachable!("parser balances ArrEnd"),
+                },
+                JsonEvent::Str(s) => Some(Json::Str(s.into_owned())),
+                JsonEvent::Num(n) => Some(Json::Num(n.to_num())),
+                JsonEvent::Bool(b) => Some(Json::Bool(b)),
+                JsonEvent::Null => Some(Json::Null),
+            };
+            if let Some(v) = complete {
+                match stack.last_mut() {
+                    None => return Ok(v),
+                    Some(Slot::Arr(items)) => items.push(v),
+                    Some(Slot::Obj(m, pending)) => {
+                        let k = pending.take().expect("parser emits Key before value");
+                        m.insert(k, v);
+                    }
+                }
+            }
+        }
     }
 
     // -- typed accessors ---------------------------------------------------
 
     pub fn as_f64(&self) -> Option<f64> {
         match self {
-            Json::Num(n) => Some(*n),
+            Json::Num(n) => Some(n.as_f64()),
             _ => None,
         }
     }
+    /// Exact: values that cannot be represented as i64 return `None`
+    /// instead of rounding through an f64 cast.
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().map(|f| f as i64)
+        match self {
+            Json::Num(n) => n.as_i64(),
+            _ => None,
+        }
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) => n.as_u64(),
+            _ => None,
+        }
     }
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|f| f as usize)
+        match self {
+            Json::Num(n) => n.as_usize(),
+            _ => None,
+        }
     }
     pub fn as_str(&self) -> Option<&str> {
         match self {
@@ -78,7 +1018,7 @@ impl Json {
             _ => &NULL,
         }
     }
-    /// Required-field helpers used by manifest/config loaders.
+    /// Required-field helpers used by config loaders.
     pub fn req_str(&self, key: &str) -> Result<&str, JsonError> {
         self.get(key)
             .as_str()
@@ -109,260 +1049,48 @@ impl Json {
         Json::Arr(items.into_iter().collect())
     }
     pub fn num<N: Into<f64>>(n: N) -> Json {
-        Json::Num(n.into())
+        Json::Num(Num::F(n.into()))
+    }
+    pub fn int(n: i64) -> Json {
+        Json::Num(Num::I(n))
+    }
+    pub fn uint(n: u64) -> Json {
+        Json::Num(Num::U(n))
     }
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
     /// Compact serialization (deterministic: object keys are sorted).
+    /// Implemented on [`JsonWriter`], so DOM and streaming output are the
+    /// same bytes by construction.
     pub fn dump(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
+        let mut out = Vec::with_capacity(64);
+        let mut w = JsonWriter::new(&mut out);
+        self.write_value(&mut w).expect("in-memory write cannot fail");
+        String::from_utf8(out).expect("JsonWriter emits UTF-8")
     }
 
-    fn write(&self, out: &mut String) {
+    pub fn write_value<W: Write>(&self, w: &mut JsonWriter<W>) -> io::Result<()> {
         match self {
-            Json::Null => out.push_str("null"),
-            Json::Bool(true) => out.push_str("true"),
-            Json::Bool(false) => out.push_str("false"),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9.0e15 {
-                    out.push_str(&format!("{}", *n as i64));
-                } else {
-                    out.push_str(&format!("{n}"));
-                }
-            }
-            Json::Str(s) => write_escaped(s, out),
+            Json::Null => w.null(),
+            Json::Bool(b) => w.bool(*b),
+            Json::Num(n) => w.num(*n),
+            Json::Str(s) => w.str(s),
             Json::Arr(a) => {
-                out.push('[');
-                for (i, v) in a.iter().enumerate() {
-                    if i > 0 {
-                        out.push(',');
-                    }
-                    v.write(out);
+                w.begin_arr()?;
+                for v in a {
+                    v.write_value(w)?;
                 }
-                out.push(']');
+                w.end_arr()
             }
             Json::Obj(o) => {
-                out.push('{');
-                for (i, (k, v)) in o.iter().enumerate() {
-                    if i > 0 {
-                        out.push(',');
-                    }
-                    write_escaped(k, out);
-                    out.push(':');
-                    v.write(out);
+                w.begin_obj()?;
+                for (k, v) in o {
+                    w.key(k)?;
+                    v.write_value(w)?;
                 }
-                out.push('}');
-            }
-        }
-    }
-}
-
-fn write_escaped(s: &str, out: &mut String) {
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-}
-
-#[derive(Debug, Clone)]
-pub struct JsonError {
-    pub msg: String,
-}
-
-impl JsonError {
-    fn new(msg: impl Into<String>) -> Self {
-        JsonError { msg: msg.into() }
-    }
-}
-
-impl fmt::Display for JsonError {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "json error: {}", self.msg)
-    }
-}
-
-impl std::error::Error for JsonError {}
-
-struct Parser<'a> {
-    bytes: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Parser<'a> {
-    fn err(&self, msg: &str) -> JsonError {
-        JsonError::new(format!("{msg} at byte {}", self.pos))
-    }
-
-    fn skip_ws(&mut self) {
-        while self.pos < self.bytes.len()
-            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
-        {
-            self.pos += 1;
-        }
-    }
-
-    fn peek(&self) -> Option<u8> {
-        self.bytes.get(self.pos).copied()
-    }
-
-    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
-        if self.peek() == Some(b) {
-            self.pos += 1;
-            Ok(())
-        } else {
-            Err(self.err(&format!("expected '{}'", b as char)))
-        }
-    }
-
-    fn value(&mut self) -> Result<Json, JsonError> {
-        self.skip_ws();
-        match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
-            Some(b't') => self.lit("true", Json::Bool(true)),
-            Some(b'f') => self.lit("false", Json::Bool(false)),
-            Some(b'n') => self.lit("null", Json::Null),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            _ => Err(self.err("unexpected character")),
-        }
-    }
-
-    fn lit(&mut self, word: &str, val: Json) -> Result<Json, JsonError> {
-        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
-            self.pos += word.len();
-            Ok(val)
-        } else {
-            Err(self.err("invalid literal"))
-        }
-    }
-
-    fn number(&mut self) -> Result<Json, JsonError> {
-        let start = self.pos;
-        if self.peek() == Some(b'-') {
-            self.pos += 1;
-        }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
-        {
-            self.pos += 1;
-        }
-        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        s.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("invalid number"))
-    }
-
-    fn string(&mut self) -> Result<String, JsonError> {
-        self.expect(b'"')?;
-        let mut out = String::new();
-        loop {
-            match self.peek() {
-                None => return Err(self.err("unterminated string")),
-                Some(b'"') => {
-                    self.pos += 1;
-                    return Ok(out);
-                }
-                Some(b'\\') => {
-                    self.pos += 1;
-                    match self.peek() {
-                        Some(b'"') => out.push('"'),
-                        Some(b'\\') => out.push('\\'),
-                        Some(b'/') => out.push('/'),
-                        Some(b'n') => out.push('\n'),
-                        Some(b't') => out.push('\t'),
-                        Some(b'r') => out.push('\r'),
-                        Some(b'b') => out.push('\u{8}'),
-                        Some(b'f') => out.push('\u{c}'),
-                        Some(b'u') => {
-                            if self.pos + 4 >= self.bytes.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.pos += 4;
-                        }
-                        _ => return Err(self.err("bad escape")),
-                    }
-                    self.pos += 1;
-                }
-                Some(_) => {
-                    // advance over one UTF-8 char
-                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
-                        .map_err(|_| self.err("invalid utf8"))?;
-                    let c = rest.chars().next().unwrap();
-                    out.push(c);
-                    self.pos += c.len_utf8();
-                }
-            }
-        }
-    }
-
-    fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
-        let mut items = Vec::new();
-        self.skip_ws();
-        if self.peek() == Some(b']') {
-            self.pos += 1;
-            return Ok(Json::Arr(items));
-        }
-        loop {
-            items.push(self.value()?);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => {
-                    self.pos += 1;
-                }
-                Some(b']') => {
-                    self.pos += 1;
-                    return Ok(Json::Arr(items));
-                }
-                _ => return Err(self.err("expected ',' or ']'")),
-            }
-        }
-    }
-
-    fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
-        let mut map = BTreeMap::new();
-        self.skip_ws();
-        if self.peek() == Some(b'}') {
-            self.pos += 1;
-            return Ok(Json::Obj(map));
-        }
-        loop {
-            self.skip_ws();
-            let key = self.string()?;
-            self.skip_ws();
-            self.expect(b':')?;
-            let val = self.value()?;
-            map.insert(key, val);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => {
-                    self.pos += 1;
-                }
-                Some(b'}') => {
-                    self.pos += 1;
-                    return Ok(Json::Obj(map));
-                }
-                _ => return Err(self.err("expected ',' or '}'")),
+                w.end_obj()
             }
         }
     }
@@ -371,14 +1099,18 @@ impl<'a> Parser<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::propcheck::{check, gen};
+    use crate::util::rng::SplitMix64;
+
+    // -- DOM shim ----------------------------------------------------------
 
     #[test]
     fn parse_scalars() {
         assert_eq!(Json::parse("null").unwrap(), Json::Null);
         assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
         assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
-        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
-        assert_eq!(Json::parse("-1.5e3").unwrap(), Json::Num(-1500.0));
+        assert_eq!(Json::parse("42").unwrap(), Json::num(42.0));
+        assert_eq!(Json::parse("-1.5e3").unwrap(), Json::num(-1500.0));
         assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
     }
 
@@ -397,13 +1129,29 @@ mod tests {
     }
 
     #[test]
+    fn parse_surrogate_pairs() {
+        let v = Json::parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "😀");
+        let v = Json::parse(r#""\uD834\uDD1E""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "𝄞");
+        // lone surrogates degrade to U+FFFD, never panic
+        let v = Json::parse(r#""\ud800""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{fffd}");
+        let v = Json::parse(r#""\udc00z""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{fffd}z");
+        let v = Json::parse(r#""\ud800\u0041""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{fffd}A");
+    }
+
+    #[test]
     fn parse_errors() {
-        assert!(Json::parse("").is_err());
-        assert!(Json::parse("{").is_err());
-        assert!(Json::parse("[1,]").is_err());
-        assert!(Json::parse("tru").is_err());
-        assert!(Json::parse("1 2").is_err());
-        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+        for bad in [
+            "", "{", "[", "[1,]", "{\"a\":1,}", "tru", "nul", "1 2", "{\"a\" 1}", "+1", ".5",
+            "1.", "--1", "1e", "1e+", "01x", "\"abc", "\"\\q\"", "\"\\u12\"", "{\"a\"",
+            "{\"a\":", "[}", "{]", "]", "}", ",",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
     }
 
     #[test]
@@ -411,6 +1159,7 @@ mod tests {
         let src = r#"{"arr":[1,2.5,"s",true,null],"n":-3,"obj":{"k":"v"}}"#;
         let v = Json::parse(src).unwrap();
         let dumped = v.dump();
+        assert_eq!(dumped, src);
         assert_eq!(Json::parse(&dumped).unwrap(), v);
     }
 
@@ -438,10 +1187,392 @@ mod tests {
         assert!(v.req_usize("missing").is_err());
     }
 
+    // -- exact number preservation (the old as_i64-through-f64 bug) --------
+
+    #[test]
+    fn i64_max_survives_exactly() {
+        // regression: 9223372036854775807 used to round-trip through f64
+        // and come back as ...5808 (or worse after the usize cast)
+        let txt = format!("{}", i64::MAX);
+        let v = Json::parse(&txt).unwrap();
+        assert_eq!(v.as_i64(), Some(i64::MAX));
+        assert_eq!(v.dump(), txt);
+
+        let txt = format!("{}", i64::MIN);
+        let v = Json::parse(&txt).unwrap();
+        assert_eq!(v.as_i64(), Some(i64::MIN));
+        assert_eq!(v.dump(), txt);
+
+        let txt = format!("{}", u64::MAX);
+        let v = Json::parse(&txt).unwrap();
+        assert_eq!(v.as_u64(), Some(u64::MAX));
+        assert_eq!(v.as_i64(), None, "u64::MAX must not round into an i64");
+        assert_eq!(v.dump(), txt);
+
+        // 2^53 + 1: the first integer an f64 cannot represent
+        let v = Json::parse("9007199254740993").unwrap();
+        assert_eq!(v.as_i64(), Some(9007199254740993));
+        assert_eq!(v.as_usize(), Some(9007199254740993));
+        assert_eq!(v.dump(), "9007199254740993");
+    }
+
+    #[test]
+    fn integral_floats_still_convert() {
+        // compat: manifests may carry "1e3"-style integral values
+        let v = Json::parse("1e3").unwrap();
+        assert_eq!(v.as_i64(), Some(1000));
+        let v = Json::parse("2.5").unwrap();
+        assert_eq!(v.as_i64(), None, "no more silent truncation of 2.5");
+        assert_eq!(v.as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn num_equality_is_numeric_and_exact() {
+        assert_eq!(Num::I(5), Num::F(5.0));
+        assert_eq!(Num::I(5), Num::U(5));
+        assert_eq!(Num::F(-0.0), Num::I(0));
+        assert_ne!(Num::I(i64::MAX), Num::F(i64::MAX as f64));
+        assert_ne!(Num::I(-1), Num::U(u64::MAX));
+        assert_ne!(Num::F(2.5), Num::I(2));
+    }
+
     #[test]
     fn large_int_precision() {
         let v = Json::parse("136448").unwrap();
         assert_eq!(v.as_usize().unwrap(), 136448);
         assert_eq!(v.dump(), "136448");
+    }
+
+    // -- pull parser -------------------------------------------------------
+
+    #[test]
+    fn pull_event_stream() {
+        let mut p = PullParser::from_str(r#"{"a":[1,"x"],"b":true}"#);
+        use JsonEvent::*;
+        let mut evs = Vec::new();
+        while let Some(ev) = p.next_event().unwrap() {
+            evs.push(ev);
+        }
+        assert_eq!(
+            evs,
+            vec![
+                ObjStart,
+                Key(Cow::Borrowed("a")),
+                ArrStart,
+                Num(Number { raw: "1" }),
+                Str(Cow::Borrowed("x")),
+                ArrEnd,
+                Key(Cow::Borrowed("b")),
+                Bool(true),
+                ObjEnd,
+            ]
+        );
+    }
+
+    #[test]
+    fn pull_strings_borrow_when_escape_free() {
+        let text = r#"["plain","esc\n"]"#;
+        let mut p = PullParser::from_str(text);
+        p.expect_arr_start().unwrap();
+        assert!(matches!(p.next_event().unwrap(), Some(JsonEvent::Str(Cow::Borrowed("plain")))));
+        match p.next_event().unwrap() {
+            Some(JsonEvent::Str(Cow::Owned(s))) => assert_eq!(s, "esc\n"),
+            other => panic!("expected owned string, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pull_number_raw_preserved() {
+        let mut p = PullParser::from_str("[1e2,2E-2,3.5e+2,-0.0,9223372036854775807]");
+        p.expect_arr_start().unwrap();
+        let mut raws = Vec::new();
+        while p.arr_next().unwrap() {
+            raws.push(p.expect_num().unwrap().raw().to_string());
+        }
+        assert_eq!(raws, ["1e2", "2E-2", "3.5e+2", "-0.0", "9223372036854775807"]);
+        p.expect_done().unwrap();
+    }
+
+    #[test]
+    fn pull_typed_helpers_and_skip() {
+        let text = r#"{"skip":{"deep":[1,{"x":[]}]},"n":7,"arr":[1,2,3],"s":"v"}"#;
+        let mut p = PullParser::from_str(text);
+        p.expect_obj_start().unwrap();
+        let mut n = None;
+        let mut sum = 0usize;
+        let mut s = None;
+        while let Some(k) = p.next_key().unwrap() {
+            match k.as_ref() {
+                "n" => n = Some(p.expect_usize().unwrap()),
+                "arr" => {
+                    p.expect_arr_start().unwrap();
+                    while p.arr_next().unwrap() {
+                        sum += p.expect_usize().unwrap();
+                    }
+                }
+                "s" => s = Some(p.expect_str().unwrap().into_owned()),
+                _ => p.skip_value().unwrap(),
+            }
+        }
+        p.expect_done().unwrap();
+        assert_eq!(n, Some(7));
+        assert_eq!(sum, 6);
+        assert_eq!(s.as_deref(), Some("v"));
+    }
+
+    #[test]
+    fn pull_handles_100k_nesting_without_recursion() {
+        let depth = 100_000;
+        let mut text = String::with_capacity(2 * depth + 1);
+        for _ in 0..depth {
+            text.push('[');
+        }
+        text.push('1');
+        for _ in 0..depth {
+            text.push(']');
+        }
+        let mut p = PullParser::from_str(&text);
+        let mut events = 0usize;
+        while p.next_event().unwrap().is_some() {
+            events += 1;
+        }
+        assert_eq!(events, 2 * depth + 1);
+    }
+
+    #[test]
+    fn copy_value_is_byte_faithful_on_canonical_input() {
+        let src = r#"{"a":[1,2.5,"s\n",true,null],"big":9223372036854775807,"n":-3}"#;
+        let mut p = PullParser::from_str(src);
+        let mut out = Vec::new();
+        let mut w = JsonWriter::new(&mut out);
+        copy_value(&mut p, &mut w).unwrap();
+        p.expect_done().unwrap();
+        drop(w);
+        assert_eq!(std::str::from_utf8(&out).unwrap(), src);
+    }
+
+    // -- streaming writer --------------------------------------------------
+
+    #[test]
+    fn writer_matches_dom_dump() {
+        let mut out = Vec::new();
+        let mut w = JsonWriter::new(&mut out);
+        w.begin_obj().unwrap();
+        w.key("a").unwrap();
+        w.begin_arr().unwrap();
+        w.int(1).unwrap();
+        w.f64(2.5).unwrap();
+        w.str("s").unwrap();
+        w.bool(true).unwrap();
+        w.null().unwrap();
+        w.end_arr().unwrap();
+        w.key("n").unwrap();
+        w.int(-3).unwrap();
+        w.key("obj").unwrap();
+        w.begin_obj().unwrap();
+        w.key("k").unwrap();
+        w.str("v").unwrap();
+        w.end_obj().unwrap();
+        w.end_obj().unwrap();
+        drop(w);
+        let streamed = String::from_utf8(out).unwrap();
+        let dom = Json::parse(&streamed).unwrap().dump();
+        assert_eq!(streamed, dom);
+        assert_eq!(streamed, r#"{"a":[1,2.5,"s",true,null],"n":-3,"obj":{"k":"v"}}"#);
+    }
+
+    #[test]
+    fn writer_f64_format_is_pinned() {
+        let mut out = Vec::new();
+        {
+            let mut w = JsonWriter::new(&mut out);
+            w.begin_arr().unwrap();
+            for v in [5.0, -0.0, 2.5, 1.0e15, 9.1e15, 0.1] {
+                w.f64(v).unwrap();
+            }
+            w.end_arr().unwrap();
+        }
+        assert_eq!(
+            std::str::from_utf8(&out).unwrap(),
+            "[5,0,2.5,1000000000000000,9100000000000000,0.1]"
+        );
+    }
+
+    #[test]
+    fn writer_empty_containers() {
+        let mut out = Vec::new();
+        {
+            let mut w = JsonWriter::new(&mut out);
+            w.begin_obj().unwrap();
+            w.key("a").unwrap();
+            w.begin_arr().unwrap();
+            w.end_arr().unwrap();
+            w.key("b").unwrap();
+            w.begin_obj().unwrap();
+            w.end_obj().unwrap();
+            w.end_obj().unwrap();
+        }
+        assert_eq!(std::str::from_utf8(&out).unwrap(), r#"{"a":[],"b":{}}"#);
+    }
+
+    // -- round-trip fuzz ---------------------------------------------------
+
+    /// Adversarial number pool: exact-integer edges, signed zero, extreme
+    /// magnitudes, denormals.
+    const NUM_POOL: &[&str] = &[
+        "0",
+        "-0",
+        "-0.0",
+        "1",
+        "-1",
+        "9223372036854775807",
+        "-9223372036854775808",
+        "18446744073709551615",
+        "9007199254740992",
+        "9007199254740993",
+        "1e308",
+        "5e-324",
+        "2.2250738585072014e-308",
+        "0.1",
+        "-2.25e-7",
+        "1234.5678",
+        "3.5e+2",
+        "2E-2",
+    ];
+
+    fn gen_string(rng: &mut SplitMix64) -> String {
+        const POOL: &[char] =
+            &['a', 'Z', '"', '\\', '\n', '\t', '\r', '\u{1}', '\u{1f}', 'é', 'ж', '😀', '𝄞', ' '];
+        let len = gen::usize_in(rng, 0, 12);
+        (0..len).map(|_| *gen::pick(rng, POOL)).collect()
+    }
+
+    fn gen_value(rng: &mut SplitMix64, depth: usize) -> Json {
+        let pick = if depth == 0 { rng.next_below(4) } else { rng.next_below(6) };
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_below(2) == 0),
+            2 => {
+                let raw = *gen::pick(rng, NUM_POOL);
+                Json::Num(Number { raw }.to_num())
+            }
+            3 => Json::Str(gen_string(rng)),
+            4 => {
+                let n = gen::usize_in(rng, 0, 4);
+                Json::Arr((0..n).map(|_| gen_value(rng, depth - 1)).collect())
+            }
+            _ => {
+                let n = gen::usize_in(rng, 0, 4);
+                Json::Obj(
+                    (0..n).map(|_| (gen_string(rng), gen_value(rng, depth - 1))).collect(),
+                )
+            }
+        }
+    }
+
+    /// parse -> serialize -> parse: value- and byte-equality, for the DOM
+    /// shim and the pull parser, over adversarial trees.
+    #[test]
+    fn prop_roundtrip_value_and_byte_equality() {
+        check("json-roundtrip", 200, |rng| {
+            let v = gen_value(rng, 3);
+            let s1 = v.dump();
+            let p1 = Json::parse(&s1).map_err(|e| format!("reparse failed: {e}\n{s1}"))?;
+            if p1 != v {
+                return Err(format!("value drift:\n  {v:?}\n  {p1:?}\n  via {s1}"));
+            }
+            let s2 = p1.dump();
+            if s1 != s2 {
+                return Err(format!("byte drift:\n  {s1}\n  {s2}"));
+            }
+            // the pull parser must accept the same bytes, event-complete
+            let mut p = PullParser::from_str(&s1);
+            let mut events = 0usize;
+            loop {
+                match p.next_event().map_err(|e| format!("pull reject: {e}\n{s1}"))? {
+                    Some(_) => events += 1,
+                    None => break,
+                }
+            }
+            if events == 0 {
+                return Err("pull parser produced no events".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Truncations of container documents must error (never panic), and
+    /// trailing garbage after a complete document must error.
+    #[test]
+    fn prop_truncation_and_trailing_garbage() {
+        check("json-truncate", 100, |rng| {
+            let mut v = gen_value(rng, 3);
+            // root at a container so every proper prefix is incomplete
+            if !matches!(v, Json::Arr(_) | Json::Obj(_)) {
+                v = Json::arr([v]);
+            }
+            let s = v.dump();
+            let cut = gen::usize_in(rng, 0, s.len().saturating_sub(1));
+            if s.is_char_boundary(cut) {
+                let prefix = &s[..cut];
+                if Json::parse(prefix).is_ok() {
+                    return Err(format!("accepted truncation {prefix:?} of {s:?}"));
+                }
+                let mut p = PullParser::from_str(prefix);
+                loop {
+                    match p.next_event() {
+                        Ok(Some(_)) => {}
+                        Ok(None) => {
+                            return Err(format!("pull accepted truncation {prefix:?}"))
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }
+            for garbage in ["x", "{}", " ]"] {
+                let bad = format!("{s}{garbage}");
+                if Json::parse(&bad).is_ok() {
+                    return Err(format!("accepted trailing garbage {bad:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Raw adversarial inputs (canonical and non-canonical forms) parse
+    /// identically under DOM and pull, and stabilize after one dump.
+    #[test]
+    fn adversarial_inputs_stabilize() {
+        let inputs = [
+            r#"{"a":[],"b":{},"c":[[[]]]}"#,
+            r#""\ud83d\ude00\uD834\uDD1E""#,
+            r#"[1e2,2E-2,3.5e+2,-0.0,0.1,5e-324,1e308]"#,
+            "[9223372036854775807,-9223372036854775808,18446744073709551615,9007199254740993]",
+            "  [ 1 , {\"k\" : \"v\"} ]  ",
+            "3",
+            "\"\"",
+        ];
+        for src in inputs {
+            let v = Json::parse(src).unwrap_or_else(|e| panic!("{src:?}: {e}"));
+            let s1 = v.dump();
+            let v2 = Json::parse(&s1).unwrap();
+            assert_eq!(v, v2, "value drift for {src:?}");
+            assert_eq!(s1, v2.dump(), "byte drift for {src:?}");
+        }
+    }
+
+    #[test]
+    fn dom_nesting_1000_deep() {
+        let depth = 1000;
+        let mut text = String::new();
+        for _ in 0..depth {
+            text.push('[');
+        }
+        text.push('7');
+        for _ in 0..depth {
+            text.push(']');
+        }
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.dump(), text);
     }
 }

@@ -1,0 +1,81 @@
+//! Checkpoint byte-stability across the streaming-JSON migration.
+//!
+//! `tests/data/pre_migration.ckpt` was written by the pre-migration
+//! DOM-serializer checkpoint path for a known state. The streaming
+//! reader must load it, and the streaming writer must reproduce it
+//! byte-for-byte — the D1 guarantee (identical states => identical
+//! checkpoint bytes) has to survive the I/O-plane rebuild.
+
+use std::path::PathBuf;
+
+use easyscale::comm::BucketPlan;
+use easyscale::data::loader::WorkItem;
+use easyscale::est::EstContext;
+use easyscale::train::trainer::TrainState;
+use easyscale::train::Checkpoint;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/pre_migration.ckpt")
+}
+
+/// The exact state the fixture encodes.
+fn golden_state() -> TrainState {
+    TrainState {
+        step: 17,
+        restart_count: 2,
+        params: vec![vec![1.5f32, -2.25, 0.0]],
+        momenta: vec![vec![0.1f32, 0.2, 0.3]],
+        est_contexts: vec![EstContext {
+            virtual_rank: 0,
+            step: 17,
+            aug_rng_state: 0x0123_4567_89ab_cdef,
+        }],
+        bucket_plan: BucketPlan { buckets: vec![vec![0]], cap_bytes: 1024 },
+        data_items: vec![WorkItem { step: 17, rank: 1, rng_state: 0xDEAD_BEEF }],
+    }
+}
+
+#[test]
+fn streaming_reader_loads_pre_migration_checkpoint() {
+    let loaded = Checkpoint::load(&fixture_path()).unwrap();
+    let want = golden_state();
+    assert_eq!(loaded.step, want.step);
+    assert_eq!(loaded.restart_count, want.restart_count);
+    assert_eq!(loaded.bucket_plan, want.bucket_plan);
+    assert_eq!(loaded.est_contexts, want.est_contexts);
+    assert_eq!(loaded.data_items, want.data_items);
+    assert_eq!(loaded.params.len(), 1);
+    for (a, b) in loaded.params[0].iter().zip(&want.params[0]) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    for (a, b) in loaded.momenta[0].iter().zip(&want.momenta[0]) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn streaming_writer_reproduces_pre_migration_bytes() {
+    let golden = std::fs::read(fixture_path()).unwrap();
+
+    // (a) writing the directly-constructed state hits the old bytes
+    let dir = std::env::temp_dir().join("easyscale_ckpt_bytes_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("resaved.ckpt");
+    Checkpoint::save(&out, &golden_state()).unwrap();
+    assert_eq!(
+        std::fs::read(&out).unwrap(),
+        golden,
+        "streaming writer diverged from the pre-migration serializer"
+    );
+
+    // (b) a full round trip through the new reader+writer is identity
+    let loaded = Checkpoint::load(&fixture_path()).unwrap();
+    let out2 = dir.join("roundtrip.ckpt");
+    Checkpoint::save(&out2, &loaded).unwrap();
+    assert_eq!(
+        std::fs::read(&out2).unwrap(),
+        golden,
+        "load->save round trip changed checkpoint bytes"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
