@@ -1,0 +1,207 @@
+//! Chaos bench: what fault recovery costs, and what it saves.
+//!
+//! Two measurements, both gated on the bitwise guarantee (a recovered run
+//! that drifted from its unfailed reference records nothing):
+//!
+//! 1. **Recovery latency**, split detect → rollback → replay, for a
+//!    mid-run executor kill under both recovery modes — the pre-step
+//!    snapshot (zero committed steps lost) and the classic
+//!    checkpoint-cadence restart (replays the gap since the last
+//!    checkpoint).
+//! 2. **Goodput under a day-long fault trace**: a seeded schedule of kills
+//!    and delays (`FaultPlan::generate`, the chaos analogue of
+//!    `gen_trace`) over a full run, elastic-with-recovery (snapshot)
+//!    versus the fail-stop-style checkpoint/restart baseline. Goodput is
+//!    committed steps over committed + replayed — the rollback tax.
+//!
+//! The record is written to `rust/BENCH_chaos.json`.
+//!
+//!     cargo bench --bench chaos
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use easyscale::exec::{DeviceType, Fault, FaultKind, FaultPlan, Placement};
+use easyscale::runtime::Engine;
+use easyscale::train::{
+    reference_fingerprint, Determinism, RecoveryMode, RecoveryStats, SessionBuilder, SessionReport,
+    TrainConfig,
+};
+use easyscale::util::bench::{BenchRecord, Table};
+
+const V: DeviceType = DeviceType::V100;
+const MAX_P: usize = 4;
+const LATENCY_STEPS: u64 = 24;
+const TRACE_STEPS: u64 = 48;
+const CKPT_EVERY: u64 = 8;
+
+fn cfg() -> TrainConfig {
+    TrainConfig { determinism: Determinism::D1, ..TrainConfig::new(MAX_P) }
+}
+
+fn mode_name(mode: RecoveryMode) -> &'static str {
+    match mode {
+        RecoveryMode::Snapshot => "snapshot_recovery",
+        RecoveryMode::Checkpoint => "checkpoint_restart",
+        RecoveryMode::Off => "off",
+    }
+}
+
+/// One faulted run to `steps` under `mode`; checkpoint cadence only where
+/// the mode needs one. Returns the report and the recovery latency split.
+fn run_faulted(
+    engine: &Engine,
+    plan: Arc<FaultPlan>,
+    mode: RecoveryMode,
+    steps: u64,
+    tag: &str,
+) -> (SessionReport, RecoveryStats) {
+    let dir = std::env::temp_dir().join(format!("easyscale_bench_chaos_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut builder = SessionBuilder::new(engine, cfg(), Placement::homogeneous(V, 2, MAX_P))
+        .steps(steps)
+        .log_every(0)
+        .fault_plan(plan)
+        .recovery(mode);
+    if mode == RecoveryMode::Checkpoint {
+        builder = builder.checkpoint_every(CKPT_EVERY, dir.clone());
+    }
+    let mut session = builder.build().unwrap();
+    let report = session.run().unwrap();
+    let stats = session.recovery_stats();
+    std::fs::remove_dir_all(&dir).ok();
+    (report, stats)
+}
+
+/// Committed steps over committed + replayed: 1.0 means recovery lost no
+/// already-done work.
+fn goodput(report: &SessionReport) -> f64 {
+    let committed = report.steps_run as f64;
+    committed / (committed + report.replayed_steps as f64)
+}
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = match Engine::open(&root, "tiny") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP chaos bench: no engine available ({e:#})");
+            return;
+        }
+    };
+
+    // ---- 1. recovery latency: one kill mid-run, both recovery modes ----
+    let reference = reference_fingerprint(&engine, &cfg(), LATENCY_STEPS).unwrap();
+    let kill = || {
+        Arc::new(FaultPlan::new(vec![Fault {
+            executor: 1,
+            step: 18,
+            kind: FaultKind::Kill,
+        }]))
+    };
+    println!("== recovery latency: kill executor 1 at step 18 of {LATENCY_STEPS} ==");
+    let mut latency = Vec::new();
+    for mode in [RecoveryMode::Snapshot, RecoveryMode::Checkpoint] {
+        let (report, stats) = run_faulted(&engine, kill(), mode, LATENCY_STEPS, mode_name(mode));
+        assert_eq!(report.recoveries, 1, "{}: the kill must recover once", mode_name(mode));
+        assert_eq!(
+            report.fingerprint,
+            reference,
+            "{}: recovered run drifted from the unfailed reference",
+            mode_name(mode)
+        );
+        latency.push((mode, report, stats));
+    }
+    // snapshot recovery replays nothing; the checkpoint restart replays
+    // the committed gap since step 16 (cadence 8, kill at 18)
+    assert_eq!(latency[0].1.replayed_steps, 0, "snapshot recovery loses no committed step");
+    assert_eq!(latency[1].1.replayed_steps, 2, "checkpoint restart replays the cadence gap");
+
+    let mut table = Table::new(&[
+        "mode", "recoveries", "replayed", "detect ms", "rollback ms", "replay ms", "total ms",
+    ]);
+    for (mode, report, stats) in &latency {
+        table.row(&[
+            mode_name(*mode).to_string(),
+            format!("{}", report.recoveries),
+            format!("{}", report.replayed_steps),
+            format!("{:.3}", stats.detect_s * 1e3),
+            format!("{:.3}", stats.rollback_s * 1e3),
+            format!("{:.3}", stats.replay_s * 1e3),
+            format!("{:.3}", stats.total_s() * 1e3),
+        ]);
+    }
+    table.print();
+
+    // ---- 2. goodput under a generated day of faults ----
+    let trace_reference = reference_fingerprint(&engine, &cfg(), TRACE_STEPS).unwrap();
+    // the chaos analogue of gen_trace: seeded kills + delays over the run
+    let trace = || Arc::new(FaultPlan::generate(11, 2, TRACE_STEPS, 4, 4));
+    let n_faults = trace().len();
+    println!("== goodput: {n_faults} seeded faults over {TRACE_STEPS} steps ==");
+    let mut goodputs = Vec::new();
+    for mode in [RecoveryMode::Snapshot, RecoveryMode::Checkpoint] {
+        let tag = format!("trace_{}", mode_name(mode));
+        let (report, stats) = run_faulted(&engine, trace(), mode, TRACE_STEPS, &tag);
+        assert!(report.recoveries >= 1, "{tag}: the generated kills must fire");
+        assert_eq!(
+            report.fingerprint,
+            trace_reference,
+            "{tag}: faulted run drifted from the unfailed reference"
+        );
+        assert_eq!(report.steps_run, TRACE_STEPS);
+        goodputs.push((mode, report, stats));
+    }
+    let snap_goodput = goodput(&goodputs[0].1);
+    let ckpt_goodput = goodput(&goodputs[1].1);
+    assert!(
+        snap_goodput >= ckpt_goodput,
+        "elastic snapshot recovery must not lose more work than the restart baseline: \
+         {snap_goodput:.3} vs {ckpt_goodput:.3}"
+    );
+
+    let mut table = Table::new(&["mode", "steps", "recoveries", "replayed", "goodput", "wall s"]);
+    for (mode, report, _) in &goodputs {
+        table.row(&[
+            mode_name(*mode).to_string(),
+            format!("{}", report.steps_run),
+            format!("{}", report.recoveries),
+            format!("{}", report.replayed_steps),
+            format!("{:.3}", goodput(report)),
+            format!("{:.3}", report.wall_s),
+        ]);
+    }
+    table.print();
+    println!(
+        "goodput: snapshot recovery {snap_goodput:.3} vs checkpoint restart {ckpt_goodput:.3}"
+    );
+
+    let mut rec = BenchRecord::new("chaos");
+    rec.str_field("placement", "v100:2")
+        .u64_field("latency_steps", LATENCY_STEPS)
+        .u64_field("trace_steps", TRACE_STEPS)
+        .u64_field("checkpoint_every", CKPT_EVERY)
+        .usize_field("trace_faults", n_faults)
+        .f64_field("goodput_snapshot", snap_goodput)
+        .f64_field("goodput_checkpoint_restart", ckpt_goodput);
+    for (mode, report, stats) in latency.iter().chain(&goodputs) {
+        let phase = if report.steps_run == LATENCY_STEPS { "latency" } else { "trace" };
+        rec.row(|row| {
+            row.str("phase", phase)
+                .str("mode", mode_name(*mode))
+                .u64("steps", report.steps_run)
+                .u64("recoveries", report.recoveries)
+                .u64("replayed_steps", report.replayed_steps)
+                .f64("detect_s", stats.detect_s)
+                .f64("rollback_s", stats.rollback_s)
+                .f64("replay_s", stats.replay_s)
+                .f64("recovery_total_s", stats.total_s())
+                .f64("goodput", goodput(report))
+                .f64("wall_s", report.wall_s);
+        });
+    }
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_chaos.json");
+    rec.finish(&out).unwrap();
+    println!("chaos record written to {}", out.display());
+}

@@ -98,6 +98,12 @@ SUBCOMMANDS
     --colocate-epochs N [colocate] epochs of the generated trace (default: 12)
     --static-partition  [colocate] baseline: permanently reserve the trace's
                         peak demand for serving instead of lending/reclaiming
+    --faults FILE     inject a deterministic fault schedule ('executor,step,
+                      kind,factor' CSV, kinds kill|delay|torn); killed steps
+                      recover from a pre-step snapshot and replay bitwise
+    --straggler-factor F  flag an executor Degraded when its EWMA step wall
+                      exceeds F x the median for 3 consecutive decide
+                      epochs; the next replan migrates the job off it
   plan              print planner configurations for a workload
     --workload NAME   Table-1 model (default: Bert)
     --max-p N         (default: 8)  --gpus SPEC (default: v100:1,t4:1)
@@ -311,6 +317,23 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let engine = Engine::open(&artifacts, &preset)?;
     let mut rt =
         ClusterRuntime::new(&engine, fleet, decide_every).with_job_threads(job_threads);
+    let chaos = args.get("faults").is_some();
+    if let Some(f) = args.get("faults") {
+        let plan = crate::exec::read_fault_csv(Path::new(f))?;
+        crate::info!(
+            "cluster",
+            "chaos: injecting {} fault(s) from {f} (snapshot recovery armed)",
+            plan.len()
+        );
+        rt = rt.with_faults(std::sync::Arc::new(plan));
+    }
+    if let Some(s) = args.get("straggler-factor") {
+        let factor = args.f64_or("straggler-factor", 0.0)?;
+        if !factor.is_finite() || factor < 1.0 {
+            bail!("--straggler-factor must be a finite number >= 1.0 (got {s})");
+        }
+        rt = rt.with_straggler(factor);
+    }
     if colocate {
         let trace = match args.get("serving-trace") {
             Some(f) => ServingTrace::read_csv(Path::new(f))?,
@@ -428,6 +451,13 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         report.wall_s,
         report.aggregate_rate()
     );
+    if chaos {
+        println!(
+            "chaos: {} recovery(ies), {} replayed step(s)",
+            report.total_recoveries(),
+            report.total_replayed()
+        );
+    }
     if let Some(c) = &report.colocation {
         println!(
             "colocation [{}]: fleet {} GPUs over {} epochs | serving avg {:.1} | \
@@ -729,6 +759,39 @@ mod tests {
         .is_err());
         assert!(main_with(argv(&[
             "cluster", "--preset", "tiny", "--serving-trace", "x.csv"
+        ]))
+        .is_err());
+    }
+
+    /// The chaos leg: a kill + a delay from a `--faults` CSV, snapshot
+    /// recovery armed, straggler watch on — and `--verify` still pins
+    /// every job bitwise to its undisturbed fixed-placement reference.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn cluster_chaos_smoke_recovers_and_verifies() {
+        use crate::exec::{write_fault_csv, Fault, FaultKind, FaultPlan};
+        let path = std::env::temp_dir().join("easyscale_cli_chaos_test.csv");
+        let path_s = path.to_str().unwrap().to_string();
+        let plan = FaultPlan::new(vec![
+            Fault { executor: 0, step: 2, kind: FaultKind::Kill },
+            Fault { executor: 1, step: 3, kind: FaultKind::Delay(6.0) },
+        ]);
+        write_fault_csv(&path, &plan).unwrap();
+        let run = main_with(argv(&[
+            "cluster", "--preset", "tiny", "--jobs", "2", "--steps", "6",
+            "--max-p", "4", "--fleet", "v100:2,p100:1,t4:1", "--decide-every", "2",
+            "--sequential", "--faults", &path_s, "--straggler-factor", "3.0",
+            "--verify",
+        ]));
+        assert!(run.is_ok(), "chaos run drifted or failed: {run:?}");
+        std::fs::remove_file(&path).ok();
+        // a straggler factor below 1 is meaningless
+        assert!(main_with(argv(&[
+            "cluster", "--preset", "tiny", "--straggler-factor", "0.5"
+        ]))
+        .is_err());
+        assert!(main_with(argv(&[
+            "cluster", "--preset", "tiny", "--faults", "/nonexistent/faults.csv"
         ]))
         .is_err());
     }

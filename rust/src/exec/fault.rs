@@ -1,0 +1,358 @@
+//! Deterministic fault-injection plane (the chaos side of elasticity).
+//!
+//! EasyScale's accuracy-consistency guarantee is only meaningful if a
+//! worker that dies mid-mini-batch, straggles at 10x step time, or tears
+//! a checkpoint on the way down still yields the exact bit pattern of an
+//! undisturbed run after recovery. A [`FaultPlan`] is a seeded or
+//! CSV-parsed schedule of such faults, injected into [`ExecutorPool`]
+//! workers through a lightweight hook on the mini-batch path
+//! ([`StepInputs::fault`]); every fault fires exactly once (interior
+//! atomic markers keep a shared `&FaultPlan` `Sync`), so a recovered
+//! replay of the same step is undisturbed.
+//!
+//! Worker death surfaces as the typed [`StepError::ExecutorLost`] — never
+//! a hung or poisoned barrier — so the trainer always learns *which*
+//! executor (and which virtual ranks) it lost.
+//!
+//! [`ExecutorPool`]: super::pool::ExecutorPool
+//! [`StepInputs::fault`]: super::pool::StepInputs
+
+use std::fmt;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::util::rng::SplitMix64;
+
+/// What an injected fault does to its target executor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The executor dies mid-mini-batch: its worker panics and the loss
+    /// surfaces as [`StepError::ExecutorLost`] at the step barrier.
+    Kill,
+    /// The executor completes the mini-batch bit-exactly but `factor`
+    /// times slower — the reported wall time is scaled, the computation
+    /// untouched, exactly like a correct-but-slow device. Feeds the
+    /// straggler EWMA.
+    Delay(f64),
+    /// The next checkpoint write at or after `step` is truncated
+    /// mid-stream, simulating a crash between write and rename.
+    TornCheckpoint,
+}
+
+/// One scheduled fault: `kind` fires on `executor` at global step `step`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fault {
+    /// Pool slot index the fault targets (ignored for `TornCheckpoint`).
+    pub executor: usize,
+    /// Global mini-batch step at which the fault fires.
+    pub step: u64,
+    pub kind: FaultKind,
+}
+
+impl Fault {
+    /// One CSV line: `executor,step,kind,factor` (factor is only
+    /// meaningful for `delay`; written as 0 otherwise).
+    pub fn to_csv_line(&self) -> String {
+        match self.kind {
+            FaultKind::Kill => format!("{},{},kill,0", self.executor, self.step),
+            FaultKind::Delay(f) => format!("{},{},delay,{:.3}", self.executor, self.step, f),
+            FaultKind::TornCheckpoint => format!("{},{},torn,0", self.executor, self.step),
+        }
+    }
+}
+
+/// A deterministic schedule of faults with fire-once semantics.
+///
+/// The fired markers are interior atomics so a `&FaultPlan` shared across
+/// executor threads (through `StepInputs`) stays `Sync`, and so that a
+/// rolled-back replay of the faulted step runs undisturbed.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+    fired: Vec<AtomicBool>,
+}
+
+impl FaultPlan {
+    pub fn new(faults: Vec<Fault>) -> FaultPlan {
+        let fired = faults.iter().map(|_| AtomicBool::new(false)).collect();
+        FaultPlan { faults, fired }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// Re-arm every fault (a fresh run over the same schedule).
+    pub fn reset(&self) {
+        for f in &self.fired {
+            f.store(false, Ordering::Release);
+        }
+    }
+
+    /// Faults that have not fired yet.
+    pub fn pending(&self) -> usize {
+        self.fired.iter().filter(|f| !f.load(Ordering::Acquire)).count()
+    }
+
+    /// Fire the first un-fired `Kill`/`Delay` aimed at `(slot, step)`.
+    /// Exactly one caller wins each fault (compare-exchange), so a
+    /// post-recovery replay of the same step sees nothing.
+    pub fn fire(&self, slot: usize, step: u64) -> Option<FaultKind> {
+        for (i, f) in self.faults.iter().enumerate() {
+            if f.executor != slot || f.step != step {
+                continue;
+            }
+            if matches!(f.kind, FaultKind::TornCheckpoint) {
+                continue;
+            }
+            if self.fired[i]
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return Some(f.kind);
+            }
+        }
+        None
+    }
+
+    /// Fire the first un-fired `TornCheckpoint` scheduled at or before
+    /// `step` — the checkpoint writer asks this right before committing.
+    pub fn fire_torn(&self, step: u64) -> bool {
+        for (i, f) in self.faults.iter().enumerate() {
+            if !matches!(f.kind, FaultKind::TornCheckpoint) || f.step > step {
+                continue;
+            }
+            if self.fired[i]
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// A seeded random fault trace over `n_exec` executors and `steps`
+    /// mini-batches: `kills` kill faults and `delays` delay faults
+    /// (factor log-uniform in [2, 16]), deterministic from `seed` — the
+    /// chaos-bench analogue of `gen_trace`.
+    pub fn generate(seed: u64, n_exec: usize, steps: u64, kills: usize, delays: usize) -> FaultPlan {
+        let mut rng = SplitMix64::derive(seed, &[0xFA_017]);
+        let n_exec = n_exec.max(1) as u64;
+        let steps = steps.max(1);
+        let mut faults = Vec::with_capacity(kills + delays);
+        for _ in 0..kills {
+            faults.push(Fault {
+                executor: rng.next_below(n_exec) as usize,
+                step: rng.next_below(steps),
+                kind: FaultKind::Kill,
+            });
+        }
+        for _ in 0..delays {
+            let factor = (2.0f64.ln() + rng.next_f64() * (16.0f64.ln() - 2.0f64.ln())).exp();
+            faults.push(Fault {
+                executor: rng.next_below(n_exec) as usize,
+                step: rng.next_below(steps),
+                kind: FaultKind::Delay(factor),
+            });
+        }
+        faults.sort_by_key(|f| (f.step, f.executor));
+        FaultPlan::new(faults)
+    }
+}
+
+/// Write a fault schedule as CSV (with header) — the file format
+/// `easyscale cluster --faults` replays.
+pub fn write_fault_csv(path: &Path, plan: &FaultPlan) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    out.write_all(b"executor,step,kind,factor\n")?;
+    for f in plan.faults() {
+        writeln!(out, "{}", f.to_csv_line())?;
+    }
+    out.flush()
+}
+
+fn parse_fault_line(line: &str, ln: usize) -> anyhow::Result<Fault> {
+    let parts: Vec<&str> = line.split(',').map(|p| p.trim()).collect();
+    if parts.len() != 4 {
+        anyhow::bail!("fault line {ln}: expected 4 fields, got {}", parts.len());
+    }
+    let executor: usize =
+        parts[0].parse().map_err(|e| anyhow::anyhow!("fault line {ln}: bad executor: {e}"))?;
+    let step: u64 =
+        parts[1].parse().map_err(|e| anyhow::anyhow!("fault line {ln}: bad step: {e}"))?;
+    let factor: f64 =
+        parts[3].parse().map_err(|e| anyhow::anyhow!("fault line {ln}: bad factor: {e}"))?;
+    let kind = match parts[2] {
+        "kill" => FaultKind::Kill,
+        "delay" => {
+            anyhow::ensure!(factor > 0.0, "fault line {ln}: delay factor must be > 0");
+            FaultKind::Delay(factor)
+        }
+        "torn" => FaultKind::TornCheckpoint,
+        other => anyhow::bail!("fault line {ln}: unknown kind '{other}'"),
+    };
+    Ok(Fault { executor, step, kind })
+}
+
+/// Parse a fault CSV written by [`write_fault_csv`] (header optional,
+/// blank lines ignored).
+pub fn read_fault_csv(path: &Path) -> anyhow::Result<FaultPlan> {
+    use std::io::BufRead;
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("reading faults {}: {e}", path.display()))?;
+    let mut r = std::io::BufReader::new(f);
+    let mut buf = String::new();
+    let mut line_no = 0usize;
+    let mut faults = Vec::new();
+    loop {
+        buf.clear();
+        match r.read_line(&mut buf) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(e) => anyhow::bail!("fault line {}: {e}", line_no + 1),
+        }
+        line_no += 1;
+        let line = buf.trim();
+        if line.is_empty() || line.starts_with("executor,") {
+            continue;
+        }
+        faults.push(parse_fault_line(line, line_no)?);
+    }
+    anyhow::ensure!(!faults.is_empty(), "faults {} holds no faults", path.display());
+    Ok(FaultPlan::new(faults))
+}
+
+/// Typed step-barrier failure: the trainer always learns *which*
+/// executor died (and which virtual ranks it hosted) instead of hanging
+/// on a poisoned barrier. Travels through `anyhow` and is recovered by
+/// `ElasticSession` via `downcast_ref`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StepError {
+    /// An executor's worker died (panic, injected kill, or dead channel)
+    /// during the mini-batch.
+    ExecutorLost { slot: usize, ranks: Vec<usize>, reason: String },
+    /// The completion barrier timed out: `missing` slots never reported
+    /// after `waited_s` seconds — the liveness backstop for a wedged
+    /// (neither dead nor returning) worker.
+    BarrierTimeout { missing: Vec<usize>, waited_s: f64 },
+}
+
+impl fmt::Display for StepError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StepError::ExecutorLost { slot, ranks, reason } => {
+                write!(f, "executor {slot} lost (virtual ranks {ranks:?}): {reason}")
+            }
+            StepError::BarrierTimeout { missing, waited_s } => {
+                write!(f, "step barrier timed out after {waited_s:.1}s; executors {missing:?} never reported")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StepError {}
+
+impl StepError {
+    /// The slots this error implicates (single lost slot or all missing).
+    pub fn slots(&self) -> Vec<usize> {
+        match self {
+            StepError::ExecutorLost { slot, .. } => vec![*slot],
+            StepError::BarrierTimeout { missing, .. } => missing.clone(),
+        }
+    }
+}
+
+// A &FaultPlan rides inside StepInputs across worker threads.
+const _FAULT_PLAN_IS_SYNC: () = {
+    const fn assert_sync<T: Sync + Send>() {}
+    assert_sync::<FaultPlan>()
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fire_once_semantics() {
+        let plan = FaultPlan::new(vec![
+            Fault { executor: 1, step: 5, kind: FaultKind::Kill },
+            Fault { executor: 0, step: 5, kind: FaultKind::Delay(4.0) },
+            Fault { executor: 0, step: 2, kind: FaultKind::TornCheckpoint },
+        ]);
+        assert_eq!(plan.fire(1, 4), None);
+        assert_eq!(plan.fire(0, 5), Some(FaultKind::Delay(4.0)));
+        assert_eq!(plan.fire(0, 5), None, "a fault fires exactly once");
+        assert_eq!(plan.fire(1, 5), Some(FaultKind::Kill));
+        assert_eq!(plan.fire(1, 5), None, "replay of the faulted step is undisturbed");
+        assert!(!plan.fire_torn(1), "torn fault not due yet");
+        assert!(plan.fire_torn(3));
+        assert!(!plan.fire_torn(3), "torn fault fires once");
+        assert_eq!(plan.pending(), 0);
+        plan.reset();
+        assert_eq!(plan.pending(), 3);
+        assert_eq!(plan.fire(1, 5), Some(FaultKind::Kill));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let plan = FaultPlan::generate(9, 4, 100, 3, 2);
+        assert_eq!(plan.len(), 5);
+        let path = std::env::temp_dir().join("easyscale_fault_csv_test.csv");
+        write_fault_csv(&path, &plan).unwrap();
+        let back = read_fault_csv(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.len(), plan.len());
+        for (a, b) in plan.faults().iter().zip(back.faults()) {
+            assert_eq!(a.executor, b.executor);
+            assert_eq!(a.step, b.step);
+            match (a.kind, b.kind) {
+                (FaultKind::Delay(x), FaultKind::Delay(y)) => {
+                    assert!((x - y).abs() < 1e-3, "delay factor survives csv: {x} vs {y}")
+                }
+                (x, y) => assert_eq!(x, y),
+            }
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic() {
+        let a = FaultPlan::generate(7, 4, 200, 4, 4);
+        let b = FaultPlan::generate(7, 4, 200, 4, 4);
+        assert_eq!(a.faults(), b.faults());
+        let c = FaultPlan::generate(8, 4, 200, 4, 4);
+        assert_ne!(a.faults(), c.faults());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(parse_fault_line("1,2,kill", 1).is_err());
+        assert!(parse_fault_line("1,2,boom,0", 1).is_err());
+        assert!(parse_fault_line("x,2,kill,0", 1).is_err());
+        assert!(parse_fault_line("1,2,delay,0", 1).is_err());
+        assert!(parse_fault_line("1,2,delay,3.5", 1).is_ok());
+    }
+
+    #[test]
+    fn step_error_displays_identity() {
+        let e = StepError::ExecutorLost {
+            slot: 2,
+            ranks: vec![4, 5],
+            reason: "injected kill".into(),
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("executor 2") && msg.contains("[4, 5]"), "{msg}");
+        assert_eq!(e.slots(), vec![2]);
+        let t = StepError::BarrierTimeout { missing: vec![0, 3], waited_s: 30.0 };
+        assert_eq!(t.slots(), vec![0, 3]);
+    }
+}

@@ -3,10 +3,12 @@
 
 pub mod devices;
 pub mod executor;
+pub mod fault;
 pub mod memory;
 pub mod pool;
 
 pub use devices::DeviceType;
+pub use fault::{read_fault_csv, write_fault_csv, Fault, FaultKind, FaultPlan, StepError};
 pub use executor::{ExecTiming, ExecutorSpec, KeyMode, Placement, PlacementDelta};
 pub use memory::MemoryModel;
 pub use pool::{ExecutorOutput, ExecutorPool, ExecutorWorker, RunMode, SlotPlan, StepInputs};

@@ -34,10 +34,10 @@
 //! to the spawning driver (asserted below).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -47,6 +47,7 @@ use crate::runtime::{Engine, FwdScratch, KernelVariant, ParamBuffers};
 use crate::util::rng::dropout_key;
 
 use super::executor::{ExecTiming, ExecutorSpec, KeyMode};
+use super::fault::{FaultKind, FaultPlan, StepError};
 
 // The pool threads share one `&StepInputs` (engine, uploaded parameters,
 // corpus) through an erased pointer, which is only sound when everything
@@ -99,6 +100,10 @@ pub struct StepInputs<'a> {
     pub d2: bool,
     pub key_mode: KeyMode,
     pub aug_rate: f64,
+    /// Chaos hook: a deterministic fault schedule consulted once per
+    /// (executor, step) on the mini-batch path. `None` in production runs;
+    /// the plan's interior atomics keep the shared reference `Sync`.
+    pub fault: Option<&'a FaultPlan>,
 }
 
 /// One executor's mini-batch result, tagged with its physical slot.
@@ -196,6 +201,21 @@ impl ExecutorWorker {
     /// performs zero heap allocation (`tests/alloc.rs`).
     pub fn run_minibatch(&mut self, inp: &StepInputs<'_>) -> Result<ExecutorOutput> {
         let t_start = Instant::now();
+        // chaos hook: fire any fault scheduled for this (executor, step).
+        // Kill dies the way a real worker dies — a panic mid-mini-batch —
+        // which the pool converts into a typed `StepError::ExecutorLost`.
+        // Delay completes bit-exactly but reports a scaled wall time (a
+        // correct-but-slow device), feeding the straggler EWMA.
+        let mut delay_factor = 1.0f64;
+        if let Some(plan) = inp.fault {
+            match plan.fire(self.slot, inp.step) {
+                Some(FaultKind::Kill) => {
+                    panic!("injected fault: kill executor {} at step {}", self.slot, inp.step)
+                }
+                Some(FaultKind::Delay(f)) => delay_factor = f,
+                _ => {}
+            }
+        }
         // satellite: variant resolution hoisted off the per-EST hot path —
         // the cached handle is reused until d2 or the engine's core
         // selection changes (both are (re)build-time events in practice)
@@ -257,7 +277,7 @@ impl ExecutorWorker {
             slot: self.slot,
             staged,
             timing,
-            wall_s: t_start.elapsed().as_secs_f64(),
+            wall_s: t_start.elapsed().as_secs_f64() * delay_factor,
         })
     }
 }
@@ -344,8 +364,10 @@ unsafe impl Send for StepPtr {}
 
 /// A long-lived pool worker thread: waits for jobs, runs its executor's
 /// mini-batch, reports on the shared completion channel. Panics inside a
-/// mini-batch are converted into an `Err` result so the step barrier can
-/// never deadlock waiting for a dead worker.
+/// mini-batch are converted into a typed [`StepError::ExecutorLost`]
+/// carrying the panic payload and the executor's identity (slot + hosted
+/// virtual ranks), so the step barrier can never deadlock waiting for a
+/// dead worker and the trainer always learns *which* rank died.
 fn worker_loop(
     worker: Arc<Mutex<ExecutorWorker>>,
     jobs: Receiver<Job>,
@@ -358,11 +380,46 @@ fn worker_loop(
             let inp: &StepInputs<'_> = unsafe { &*ptr.0 };
             lock_ignore_poison(&worker).run_minibatch(inp)
         }))
-        .unwrap_or_else(|_| Err(anyhow::anyhow!("executor worker thread panicked")));
+        .unwrap_or_else(|payload| {
+            let w = lock_ignore_poison(&worker);
+            Err(StepError::ExecutorLost {
+                slot: w.slot,
+                ranks: w.spec.est_ranks.clone(),
+                reason: panic_reason(payload.as_ref()),
+            }
+            .into())
+        });
         if results.send(res).is_err() {
             break; // pool gone; nobody left to report to
         }
     }
+}
+
+/// Best-effort stringification of a panic payload (`panic!` with a
+/// message yields `&str` or `String`; anything else is tagged opaque).
+fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked with a non-string payload".to_string()
+    }
+}
+
+/// How long the step barrier waits for one executor before declaring it
+/// wedged (neither dead nor returning). Generous next to ms-scale steps;
+/// override with `EASYSCALE_BARRIER_TIMEOUT_S` (read once per process).
+fn barrier_timeout() -> Duration {
+    static TIMEOUT: OnceLock<Duration> = OnceLock::new();
+    *TIMEOUT.get_or_init(|| {
+        let secs = std::env::var("EASYSCALE_BARRIER_TIMEOUT_S")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .filter(|v| *v > 0.0)
+            .unwrap_or(30.0);
+        Duration::from_secs_f64(secs)
+    })
 }
 
 /// Pool locks are only ever taken between steps (by the trainer) or by the
@@ -383,6 +440,10 @@ struct PoolSlot {
     /// None for inline slots (sequential mode, single-executor pools, or
     /// the pjrt backend).
     thread: Option<PoolThread>,
+    /// Set when the step barrier timed out on this slot: its thread may be
+    /// wedged mid-step, so teardown detaches instead of joining and the
+    /// pool refuses further steps until rebuilt (recovery path).
+    lost: bool,
 }
 
 /// How [`ExecutorPool::install_delta`] treats each slot of the new
@@ -407,6 +468,9 @@ pub enum SlotPlan {
 pub struct ExecutorPool {
     mode: RunMode,
     slots: Vec<PoolSlot>,
+    /// Per-wave liveness accounting: slots that have reported this wave
+    /// (reused across steps; capacity only, never values).
+    reported: Vec<usize>,
     /// The completion channel, present iff this pool runs threads. Created
     /// once per install, reused by every step — and across delta installs,
     /// so surviving threads keep their sender clones.
@@ -419,7 +483,7 @@ pub struct ExecutorPool {
 impl ExecutorPool {
     /// An empty pool; call [`ExecutorPool::install`] to populate it.
     pub fn new(mode: RunMode) -> ExecutorPool {
-        ExecutorPool { mode, slots: Vec::new(), results: None, res_tx: None }
+        ExecutorPool { mode, slots: Vec::new(), reported: Vec::new(), results: None, res_tx: None }
     }
 
     /// Whether a worker set of `n` executors gets long-lived threads:
@@ -455,7 +519,7 @@ impl ExecutorPool {
                 .map(|w| {
                     let worker = Arc::new(Mutex::new(w));
                     let thread = Some(Self::spawn_thread(&worker, &res_tx));
-                    PoolSlot { worker, thread }
+                    PoolSlot { worker, thread, lost: false }
                 })
                 .collect();
             self.results = Some(res_rx);
@@ -463,7 +527,7 @@ impl ExecutorPool {
         } else {
             self.slots = workers
                 .into_iter()
-                .map(|w| PoolSlot { worker: Arc::new(Mutex::new(w)), thread: None })
+                .map(|w| PoolSlot { worker: Arc::new(Mutex::new(w)), thread: None, lost: false })
                 .collect();
         }
     }
@@ -501,7 +565,7 @@ impl ExecutorPool {
                     .and_then(Option::take)
                     .expect("SlotPlan::Keep references a missing or reused old slot"),
                 SlotPlan::Fresh(w) => {
-                    PoolSlot { worker: Arc::new(Mutex::new(*w)), thread: None }
+                    PoolSlot { worker: Arc::new(Mutex::new(*w)), thread: None, lost: false }
                 }
             };
             if now_threaded && slot.thread.is_none() {
@@ -510,8 +574,13 @@ impl ExecutorPool {
             } else if !now_threaded {
                 if let Some(th) = slot.thread.take() {
                     let _ = th.jobs.send(Job::Stop);
-                    let _ = th.join.join();
+                    if slot.lost {
+                        drop(th.join); // possibly wedged: detach, never block
+                    } else {
+                        let _ = th.join.join();
+                    }
                 }
+                slot.lost = false;
             }
             lock_ignore_poison(&slot.worker).slot = new_slot;
             new_slots.push(slot);
@@ -520,18 +589,28 @@ impl ExecutorPool {
         for slot in old.into_iter().flatten() {
             if let Some(t) = slot.thread {
                 let _ = t.jobs.send(Job::Stop);
-                let _ = t.join.join();
+                if slot.lost {
+                    drop(t.join); // possibly wedged: detach, never block
+                } else {
+                    let _ = t.join.join();
+                }
             }
         }
         self.slots = new_slots;
     }
 
-    /// Stop and join all worker threads, dropping the workers.
+    /// Stop and join all worker threads, dropping the workers. Slots lost
+    /// to a barrier timeout are detached instead of joined — their thread
+    /// may be wedged mid-step and teardown must never block on it.
     fn teardown(&mut self) {
         for slot in &mut self.slots {
             if let Some(t) = slot.thread.take() {
                 let _ = t.jobs.send(Job::Stop);
-                let _ = t.join.join();
+                if slot.lost {
+                    drop(t.join);
+                } else {
+                    let _ = t.join.join();
+                }
             }
         }
         self.slots.clear();
@@ -618,51 +697,116 @@ impl ExecutorPool {
         outs.clear();
         outs.reserve(self.slots.len());
         let Some(results) = self.results.as_ref() else {
-            for slot in &self.slots {
-                outs.push(lock_ignore_poison(&slot.worker).run_minibatch(inp)?);
+            for (i, slot) in self.slots.iter().enumerate() {
+                // inline slots get the same panic → typed-error discipline
+                // as pool threads: a killed worker surfaces as
+                // `StepError::ExecutorLost`, never an unwinding panic
+                let res = catch_unwind(AssertUnwindSafe(|| {
+                    lock_ignore_poison(&slot.worker).run_minibatch(inp)
+                }))
+                .unwrap_or_else(|payload| {
+                    let w = lock_ignore_poison(&slot.worker);
+                    Err(StepError::ExecutorLost {
+                        slot: i,
+                        ranks: w.spec.est_ranks.clone(),
+                        reason: panic_reason(payload.as_ref()),
+                    }
+                    .into())
+                });
+                outs.push(res?);
             }
             return Ok(());
         };
+        // a pool that timed out on a worker cannot safely dispatch again —
+        // the wedged thread still holds its job queue; recovery rebuilds
+        if self.slots.iter().any(|s| s.lost) {
+            anyhow::bail!("executor pool lost workers to a barrier timeout; rebuild before stepping");
+        }
         let wave = match self.mode {
             RunMode::Parallel { max_threads } if max_threads > 0 => max_threads,
             _ => self.slots.len(),
         };
         let ptr = inp as *const StepInputs<'_> as *const StepInputs<'static>;
+        let timeout = barrier_timeout();
         let mut first_err: Option<anyhow::Error> = None;
-        for chunk in self.slots.chunks(wave.max(1)) {
+        let n = self.slots.len();
+        let wave_n = wave.max(1);
+        let mut start = 0usize;
+        'waves: while start < n {
+            let end = (start + wave_n).min(n);
+            self.reported.clear();
             let mut dispatched = 0usize;
-            for slot in chunk {
-                let t = slot.thread.as_ref().expect("threaded pool slot without thread");
+            for i in start..end {
+                let t = self.slots[i].thread.as_ref().expect("threaded pool slot without thread");
                 if t.jobs.send(Job::Step(StepPtr(ptr))).is_ok() {
                     dispatched += 1;
-                } else if first_err.is_none() {
-                    first_err =
-                        Some(anyhow::anyhow!("executor worker thread exited unexpectedly"));
+                } else {
+                    // the worker loop already exited: typed loss carrying
+                    // the executor's identity (slot + hosted ranks)
+                    self.reported.push(i);
+                    if first_err.is_none() {
+                        let w = lock_ignore_poison(&self.slots[i].worker);
+                        first_err = Some(
+                            StepError::ExecutorLost {
+                                slot: i,
+                                ranks: w.spec.est_ranks.clone(),
+                                reason: "worker thread exited before the step".into(),
+                            }
+                            .into(),
+                        );
+                    }
                 }
             }
             // The step barrier: wait for exactly this wave's results before
             // dispatching the next (preserves `--threads N` wave semantics)
             // and before returning (the StepPtr safety invariant). On error
             // the remaining results are still drained — never left behind
-            // to corrupt a later step's barrier.
+            // to corrupt a later step's barrier. `recv_timeout` plus the
+            // per-wave liveness ledger is the backstop for a wedged worker:
+            // the trainer learns exactly which slots never reported.
+            let t_barrier = Instant::now();
             for _ in 0..dispatched {
-                match results.recv() {
-                    Ok(Ok(out)) => outs.push(out),
+                match results.recv_timeout(timeout) {
+                    Ok(Ok(out)) => {
+                        self.reported.push(out.slot);
+                        outs.push(out);
+                    }
                     Ok(Err(e)) => {
+                        if let Some(se) = e.downcast_ref::<StepError>() {
+                            for s in se.slots() {
+                                self.reported.push(s);
+                            }
+                        }
                         if first_err.is_none() {
                             first_err = Some(e);
                         }
                     }
-                    Err(_) => {
+                    Err(RecvTimeoutError::Timeout) => {
+                        let waited_s = t_barrier.elapsed().as_secs_f64();
+                        let mut missing = Vec::new();
+                        for i in start..end {
+                            if !self.reported.contains(&i) {
+                                missing.push(i);
+                                self.slots[i].lost = true;
+                            }
+                        }
+                        if first_err.is_none() {
+                            first_err =
+                                Some(StepError::BarrierTimeout { missing, waited_s }.into());
+                        }
+                        break 'waves;
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
                         if first_err.is_none() {
                             first_err = Some(anyhow::anyhow!(
-                                "executor worker thread exited unexpectedly"
+                                "executor worker completion channel closed"
                             ));
                         }
-                        break;
+                        break 'waves;
                     }
                 }
             }
+            start = end;
         }
         match first_err {
             None => Ok(()),
@@ -742,6 +886,7 @@ mod tests {
             d2: false,
             key_mode: KeyMode::Virtual,
             aug_rate: 0.02,
+            fault: None,
         }
     }
 
@@ -796,6 +941,7 @@ mod tests {
             d2: true,
             key_mode: KeyMode::Virtual,
             aug_rate: 0.0,
+            fault: None,
         };
         let mut workers = mk_workers(&engine, 3, 8);
         // steps 0..3 were never consumed; prefill starts at the step given
@@ -1047,6 +1193,115 @@ mod tests {
         pool.refill(&mut spare_grads, &mut spare_timing, &mut spare_staged);
         pool.for_each(|w| assert_eq!(w.arena_len(), w.contexts.len()));
         assert!(spare_grads.is_empty(), "all grad sets back in the arenas");
+    }
+
+    /// An injected kill must surface at the step barrier as a typed
+    /// `StepError::ExecutorLost` naming the dead slot and its hosted
+    /// virtual ranks — never a hang, a poisoned barrier, or an opaque
+    /// panic — on both the threaded and the inline (sequential) path.
+    /// The surviving executors' results still drain, so the next install
+    /// starts from a clean barrier.
+    #[test]
+    fn injected_kill_surfaces_as_typed_executor_lost() {
+        let engine = Engine::synthetic("tiny").unwrap();
+        let params = engine.manifest.load_init_params().unwrap();
+        let corpus = SyntheticCorpus::new(
+            1,
+            engine.manifest.model.vocab_size,
+            engine.manifest.model.seq_len,
+        );
+        let handle = shared_upload(&engine, &params);
+        let bufs = handle.lock();
+        for mode in [RunMode::parallel(), RunMode::Sequential] {
+            let plan = FaultPlan::new(vec![super::super::fault::Fault {
+                executor: 1,
+                step: 2,
+                kind: FaultKind::Kill,
+            }]);
+            let mut pool = ExecutorPool::new(mode);
+            pool.install(mk_workers(&engine, 3, 6));
+            for step in 0..2u64 {
+                let mut inp = mk_inputs(&engine, &bufs, &corpus, step);
+                inp.fault = Some(&plan);
+                pool.step(&inp).unwrap();
+            }
+            let mut inp = mk_inputs(&engine, &bufs, &corpus, 2);
+            inp.fault = Some(&plan);
+            let err = match pool.step(&inp) {
+                Ok(_) => panic!("the kill must surface ({mode:?})"),
+                Err(e) => e,
+            };
+            let se = err
+                .downcast_ref::<StepError>()
+                .unwrap_or_else(|| panic!("untyped step error ({mode:?}): {err:#}"));
+            match se {
+                StepError::ExecutorLost { slot, ranks, reason } => {
+                    assert_eq!(*slot, 1, "{mode:?}");
+                    assert_eq!(ranks.as_slice(), [1, 4], "{mode:?}");
+                    assert!(reason.contains("injected fault"), "{mode:?}: {reason}");
+                }
+                other => panic!("expected ExecutorLost, got {other:?}"),
+            }
+            assert_eq!(plan.pending(), 0, "the kill fired exactly once");
+            // the fault is consumed: a rebuilt pool replays undisturbed
+            let mut fresh = mk_workers(&engine, 3, 6);
+            for w in fresh.iter_mut() {
+                for c in w.contexts.iter_mut() {
+                    c.step = 2;
+                }
+                w.data.prefill(2, &w.spec.est_ranks);
+            }
+            pool.install(fresh);
+            let outs = pool.step(&inp).expect("replay of the faulted step is undisturbed");
+            assert_eq!(outs.len(), 3);
+        }
+    }
+
+    /// A panic payload raised inside a worker travels through the result
+    /// channel verbatim (satellite: panics must be distinguishable from
+    /// slow workers and from each other).
+    #[test]
+    fn panic_payload_is_forwarded_with_identity() {
+        assert_eq!(panic_reason(&"boom" as &(dyn std::any::Any + Send)), "boom");
+        let s: Box<dyn std::any::Any + Send> = Box::new(String::from("kaboom"));
+        assert_eq!(panic_reason(s.as_ref()), "kaboom");
+        let i: Box<dyn std::any::Any + Send> = Box::new(7usize);
+        assert!(panic_reason(i.as_ref()).contains("non-string"));
+    }
+
+    /// A delay fault changes no bits — only the reported wall time.
+    #[test]
+    fn injected_delay_is_bitwise_neutral_but_visible_in_wall() {
+        let engine = Engine::synthetic("tiny").unwrap();
+        let params = engine.manifest.load_init_params().unwrap();
+        let corpus = SyntheticCorpus::new(
+            1,
+            engine.manifest.model.vocab_size,
+            engine.manifest.model.seq_len,
+        );
+        let handle = shared_upload(&engine, &params);
+        let bufs = handle.lock();
+        let plan = FaultPlan::new(vec![super::super::fault::Fault {
+            executor: 0,
+            step: 0,
+            kind: FaultKind::Delay(1e6),
+        }]);
+        let mut inp = mk_inputs(&engine, &bufs, &corpus, 0);
+        inp.fault = Some(&plan);
+        let mut delayed = mk_workers(&engine, 2, 4);
+        let outs = run_step(&mut delayed, &inp, RunMode::Sequential).unwrap();
+        let mut clean = mk_workers(&engine, 2, 4);
+        let base = mk_inputs(&engine, &bufs, &corpus, 0);
+        let ref_outs = run_step(&mut clean, &base, RunMode::Sequential).unwrap();
+        assert_eq!(staged_bits(&ref_outs), staged_bits(&outs));
+        let slow = outs.iter().find(|o| o.slot == 0).unwrap();
+        let fast = outs.iter().find(|o| o.slot == 1).unwrap();
+        assert!(
+            slow.wall_s > fast.wall_s * 100.0,
+            "delay must inflate the reported wall: {} vs {}",
+            slow.wall_s,
+            fast.wall_s
+        );
     }
 
     /// Between steps the trainer reads worker state back (context sync,

@@ -126,6 +126,10 @@ struct Managed {
     phase: JobPhase,
     arrival: f64,
     preemptions: u64,
+    /// Flagged by the runtime when the job sits on a persistently slow
+    /// device (straggler EWMA over threshold): the next replan treats it
+    /// as a migration candidate ahead of the thresholded upgrade pass.
+    degraded: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -431,6 +435,7 @@ impl ClusterScheduler {
             phase: JobPhase::Pending,
             arrival: 0.0,
             preemptions: 0,
+            degraded: false,
         });
         id
     }
@@ -456,6 +461,24 @@ impl ClusterScheduler {
     /// Times this job yielded a GPU to seed another (elastic scale-in).
     pub fn preemptions(&self, id: usize) -> u64 {
         self.jobs[id].preemptions
+    }
+
+    /// Flag a job as degraded (persistent straggler on its current
+    /// devices, as detected by the runtime's [`StragglerTracker`]): the
+    /// next [`ClusterScheduler::replan`] tries to migrate it onto *free*
+    /// GPUs of a different type mix, with no 1.2x improvement required —
+    /// the analytic estimate of its held allocation is a lie while a slow
+    /// device drags the barrier.
+    ///
+    /// [`StragglerTracker`]: crate::sched::director::StragglerTracker
+    pub fn mark_degraded(&mut self, id: usize) {
+        self.jobs[id].degraded = true;
+    }
+
+    /// Whether a job is currently flagged degraded (cleared by a
+    /// successful migration).
+    pub fn is_degraded(&self, id: usize) -> bool {
+        self.jobs[id].degraded
     }
 
     /// A pending job enters the queue. `arrival` orders the FIFO pass
@@ -573,6 +596,42 @@ impl ClusterScheduler {
                 if !seeded {
                     continue;
                 }
+            }
+            // degraded-first migration: a job flagged by the runtime's
+            // straggler detector moves onto *free* GPUs ahead of (and
+            // unguarded by) the 1.2x-thresholded upgrade pass below. Only
+            // the free pool is considered — the point is to leave the
+            // suspect devices behind, and the analytic model cannot see
+            // the degradation that makes its held-allocation estimate a
+            // lie. A same-mix candidate is no move at this type-level
+            // granularity, so the flag survives until a different mix
+            // frees up.
+            let mut fled_degraded = false;
+            if self.jobs[id].degraded && self.jobs[id].phase == JobPhase::Running {
+                let held = self.jobs[id].master.held;
+                let spec = self.jobs[id].master.job.clone();
+                let pool = self.restrict_to_pin(id, self.available);
+                if let Some((cand, _)) =
+                    best_replacement(&spec, pool, self.jobs[id].master.homogeneous_only)
+                {
+                    if cand != held {
+                        self.release(held)
+                            .expect("a migrating job's GPUs fit back into the fleet");
+                        self.reserve(cand);
+                        self.jobs[id].master.held = cand;
+                        self.jobs[id].degraded = false;
+                        // the grow and upgrade passes are skipped this
+                        // round: both see the just-released suspect GPUs
+                        // as free and would hand them right back
+                        fled_degraded = true;
+                        if change[id].is_none() {
+                            change[id] = Some(AllocationChange::Reallocated);
+                        }
+                    }
+                }
+            }
+            if fled_degraded {
+                continue;
             }
             // grow this job until its proposals dry up or the pool is
             // exhausted (Algorithm 1 over its own top-K proposals); a
@@ -1069,6 +1128,38 @@ mod tests {
             "D2 job should absorb the freed V100s, held {:?}",
             cs.held(job)
         );
+    }
+
+    /// The straggler-driven inter-job path: a healthy job on the
+    /// analytically-best GPUs never migrates (the free alternative is
+    /// below the 1.2x threshold), but a `Degraded` flag moves it onto the
+    /// free type mix with no threshold at all — ahead of the growth pass,
+    /// and without handing the suspect GPUs right back to itself.
+    #[test]
+    fn degraded_job_migrates_ahead_of_threshold() {
+        let mut cs = managed([2, 2, 0], &[JobSpec::new(Workload::Bert, 2)]);
+        cs.arrive(0, 0.0);
+        cs.replan();
+        assert_eq!(cs.held(0), [2, 0, 0], "seeds onto the fastest type");
+        assert!(cs.replan().is_empty(), "healthy job stays put");
+
+        cs.mark_degraded(0);
+        assert!(cs.is_degraded(0));
+        let allocs = cs.replan();
+        assert_eq!(cs.held(0), [0, 2, 0], "fled onto the free P100s");
+        assert!(!cs.is_degraded(0), "a successful migration clears the flag");
+        assert_eq!(allocs.len(), 1);
+        assert_eq!(allocs[0].change, AllocationChange::Reallocated);
+        assert_eq!(allocs[0].held, [0, 2, 0]);
+        // the suspect V100s are back in the pool, accounting balances
+        assert_eq!(cs.available, [2, 0, 0]);
+
+        // no alternative mix free -> the flag survives for a later round
+        cs.mark_degraded(0);
+        cs.reserve([2, 0, 0]);
+        assert!(cs.replan().is_empty());
+        assert!(cs.is_degraded(0), "nowhere to flee: the flag must persist");
+        cs.release([2, 0, 0]).unwrap();
     }
 
     #[test]

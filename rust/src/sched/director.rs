@@ -68,6 +68,11 @@ pub struct StepObservation<'a> {
     pub placement: &'a Placement,
     /// Reconfigurations applied so far in this session.
     pub reconfigs: u64,
+    /// Per-executor wall-clock of the previous mini-batch, indexed by
+    /// pool slot (empty before the first step). The straggler signal:
+    /// one slot persistently slower than the median is a degraded
+    /// device, not a slow job.
+    pub exec_wall_s: &'a [f64],
 }
 
 /// The intra-job control plane: consulted between every two mini-batches,
@@ -154,6 +159,118 @@ pub fn placement_from_config(job: &JobSpec, config: &PlanConfig) -> Result<Place
     let placement = Placement { executors };
     placement.validate()?;
     Ok(placement)
+}
+
+/// Per-executor EWMA of mini-batch wall-clock with streak accounting: a
+/// slot whose smoothed wall stays above `factor` x the placement median
+/// for `k` consecutive checks is a *persistent* straggler (one slow step
+/// is noise; a slow device is a trend). Reused by [`AiMasterDirector`]
+/// (intra-job migration) and the cluster runtime (inter-job `Degraded`
+/// flagging).
+#[derive(Debug, Clone)]
+pub struct StragglerTracker {
+    factor: f64,
+    k: u32,
+    ewma: Vec<f64>,
+    streaks: Vec<u32>,
+}
+
+impl StragglerTracker {
+    pub fn new(factor: f64, k: u32) -> StragglerTracker {
+        StragglerTracker {
+            factor: factor.max(1.0),
+            k: k.max(1),
+            ewma: Vec::new(),
+            streaks: Vec::new(),
+        }
+    }
+
+    /// Fold one mini-batch's per-executor wall times in (same 0.7/0.3
+    /// smoothing as [`AiMaster::observe`]). A changed executor count
+    /// means a reconfiguration happened — slot identities shifted, so
+    /// all history resets.
+    pub fn observe(&mut self, exec_wall_s: &[f64]) {
+        if exec_wall_s.is_empty() {
+            return;
+        }
+        if self.ewma.len() != exec_wall_s.len() {
+            self.ewma.clear();
+            self.ewma.extend_from_slice(exec_wall_s);
+            self.streaks.clear();
+            self.streaks.resize(exec_wall_s.len(), 0);
+            return;
+        }
+        for (e, &w) in self.ewma.iter_mut().zip(exec_wall_s) {
+            *e = 0.7 * *e + 0.3 * w;
+        }
+    }
+
+    /// Decide-epoch check: advance per-slot streaks against the
+    /// `factor` x median rule and return the slowest slot whose streak
+    /// reached `k`, if any. Needs >= 2 executors — there is no median to
+    /// straggle against on a single device. A hit resets all history
+    /// (the caller is about to migrate, shifting slot identities).
+    pub fn check(&mut self) -> Option<usize> {
+        if self.ewma.len() < 2 {
+            return None;
+        }
+        let mut sorted = self.ewma.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let median = sorted[sorted.len() / 2];
+        if median <= 0.0 {
+            return None;
+        }
+        let mut worst = usize::MAX;
+        let mut worst_wall = f64::NEG_INFINITY;
+        for (i, &e) in self.ewma.iter().enumerate() {
+            if e > self.factor * median {
+                self.streaks[i] += 1;
+                if self.streaks[i] >= self.k && e > worst_wall {
+                    worst = i;
+                    worst_wall = e;
+                }
+            } else {
+                self.streaks[i] = 0;
+            }
+        }
+        if worst == usize::MAX {
+            return None;
+        }
+        self.ewma.clear();
+        self.streaks.clear();
+        Some(worst)
+    }
+
+    /// Consecutive over-threshold decide epochs for `slot` so far.
+    pub fn streak(&self, slot: usize) -> u32 {
+        self.streaks.get(slot).copied().unwrap_or(0)
+    }
+}
+
+/// Drop executor `slot` from `placement` and deal its EST ranks
+/// round-robin onto the survivors — the "migrate ESTs off the slow
+/// device" reconfiguration. Bitwise-safe by construction: EST streams are
+/// keyed by virtual rank, not by host executor (paper §3.1), so any
+/// re-placement of the same rank set trains identically. Returns `None`
+/// for single-executor placements (nowhere to migrate to).
+pub fn migrate_off(placement: &Placement, slot: usize) -> Option<Placement> {
+    if placement.executors.len() < 2 || slot >= placement.executors.len() {
+        return None;
+    }
+    let mut executors: Vec<ExecutorSpec> = placement
+        .executors
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| i != slot)
+        .map(|(_, e)| e.clone())
+        .collect();
+    let n = executors.len();
+    for (j, &rank) in placement.executors[slot].est_ranks.iter().enumerate() {
+        executors[j % n].est_ranks.push(rank);
+    }
+    let migrated = Placement { executors };
+    migrated.validate().ok()?;
+    Some(migrated)
 }
 
 /// A fixed elastic schedule: reconfigure at the listed steps. Subsumes the
@@ -279,6 +396,11 @@ pub struct AiMasterDirector {
     /// kind right after a slowdown; the cooldown (not a permanent ban)
     /// still lets scale-out retry later instead of freezing forever.
     banned_types: Vec<(usize, u64)>,
+    /// Persistent-straggler detector ([`AiMasterDirector::with_straggler`]);
+    /// `None` disables the migration path.
+    straggler: Option<StragglerTracker>,
+    /// Straggler migrations performed so far.
+    migrations: u64,
 }
 
 impl AiMasterDirector {
@@ -318,7 +440,23 @@ impl AiMasterDirector {
             last_add: None,
             check_fallback: false,
             banned_types: Vec::new(),
+            straggler: None,
+            migrations: 0,
         }
+    }
+
+    /// Enable persistent-straggler migration: an executor whose EWMA wall
+    /// stays above `factor` x the placement median for 3 consecutive
+    /// decide epochs gets its ESTs dealt off to the surviving executors
+    /// and its device banned from re-grant for a cooldown.
+    pub fn with_straggler(mut self, factor: f64) -> AiMasterDirector {
+        self.straggler = Some(StragglerTracker::new(factor, 3));
+        self
+    }
+
+    /// Straggler migrations performed so far.
+    pub fn migrations(&self) -> u64 {
+        self.migrations
     }
 
     /// The job spec the master plans with (workload profile, maxP, D2).
@@ -357,6 +495,9 @@ impl ResourceDirector for AiMasterDirector {
         if obs.wall_s > 0.0 {
             self.window_wall_s += obs.wall_s;
             self.window_steps += 1;
+            if let Some(t) = &mut self.straggler {
+                t.observe(obs.exec_wall_s);
+            }
         }
         let due = obs.step > 0
             && obs.step - self.last_decision_step >= self.decide_every
@@ -371,6 +512,37 @@ impl ResourceDirector for AiMasterDirector {
         self.last_decision_step = obs.step;
         self.master.observe(observed_rate);
         self.banned_types.retain(|&(_, until)| until > obs.step);
+
+        // Straggler migration outranks grow/fallback at a decision point:
+        // scaling onto more GPUs while one device drags the barrier only
+        // compounds the waste.
+        if let Some(slot) = self.straggler.as_mut().and_then(|t| t.check()) {
+            if let Some(migrated) = migrate_off(obs.placement, slot) {
+                let dev = obs.placement.executors[slot].device;
+                let mut lost: GpuVector = [0, 0, 0];
+                lost[dev.index()] = 1;
+                self.master.revoke(lost);
+                // the slow GPU is suspect, not free: it does not return to
+                // `available`, and its type is cooled down like a reverted
+                // grant so the next proposal doesn't grab it right back
+                self.banned_types.push((dev.index(), obs.step + 4 * self.decide_every));
+                // a migration is a shrink, not a grant — nothing to fall
+                // back to
+                self.prev_placement = None;
+                self.last_add = None;
+                self.check_fallback = false;
+                self.migrations += 1;
+                crate::warnlog!(
+                    "aimaster",
+                    "step {}: executor {slot} ({}) is a persistent straggler — \
+                     migrating its ESTs onto {} surviving executor(s)",
+                    obs.step,
+                    dev.name(),
+                    migrated.executors.len()
+                );
+                return vec![ElasticEvent::Reconfigure(migrated)];
+            }
+        }
 
         // Fig. 9: "once the performance slowdown is observed after
         // reconfiguration, we fall back to using previous resources".
@@ -566,6 +738,7 @@ mod tests {
             wall_s,
             placement,
             reconfigs: 0,
+            exec_wall_s: &[],
         }
     }
 

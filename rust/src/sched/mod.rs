@@ -15,7 +15,8 @@ pub use cluster::{
     ReclaimOutcome,
 };
 pub use director::{
-    parse_gpu_vector, placement_from_config, AiMasterDirector, ElasticEvent, Mailbox,
+    migrate_off, parse_gpu_vector, placement_from_config, AiMasterDirector, ElasticEvent, Mailbox,
     MailboxDirector, ResourceDirector, ScriptedDirector, StaticScheduleDirector, StepObservation,
+    StragglerTracker,
 };
 pub use plan::{best_config, enumerate_configs, GpuVector, JobSpec, PlanConfig};

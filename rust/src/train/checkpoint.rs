@@ -21,7 +21,7 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::comm::BucketPlan;
 use crate::data::loader::WorkItem;
@@ -30,6 +30,33 @@ use crate::train::trainer::TrainState;
 use crate::util::json::{JsonWriter, PullParser};
 
 const MAGIC: &[u8] = b"ESCK1\n";
+
+/// Typed checkpoint-file failures, distinguishable through `anyhow`
+/// downcasts so recovery can *skip* a torn file (crash mid-write) and
+/// fall back to an older checkpoint instead of dying on a parse error.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// The file ends before its own header/tensors do — a write that
+    /// crashed between create and rename (or a pre-atomic-writer crash).
+    Torn { path: std::path::PathBuf, detail: String },
+    /// Not a checkpoint at all.
+    BadMagic { path: std::path::PathBuf },
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Torn { path, detail } => {
+                write!(f, "torn checkpoint {}: {detail}", path.display())
+            }
+            CheckpointError::BadMagic { path } => {
+                write!(f, "bad checkpoint magic: {}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
 
 /// `format!("{:016x}")` without the allocation — the header hot loop
 /// emits one of these per EST context and data item.
@@ -50,13 +77,27 @@ fn parse_hex16(s: &str) -> Result<u64> {
 pub struct Checkpoint;
 
 impl Checkpoint {
+    /// The temporary sibling a checkpoint streams into before the atomic
+    /// rename commits it.
+    fn tmp_path(path: &Path) -> std::path::PathBuf {
+        let name = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .unwrap_or("checkpoint.ckpt");
+        path.with_file_name(format!("{name}.tmp"))
+    }
+
+    /// Crash-atomic save: stream to `<path>.tmp`, fsync, then rename over
+    /// the destination. A crash at any point leaves either the old
+    /// checkpoint or a stray `.tmp` — never a torn file under `path`.
     pub fn save(path: &Path, state: &TrainState) -> Result<()> {
-        let header = Self::header_bytes(state);
+        let tmp = Self::tmp_path(path);
         let mut f = std::io::BufWriter::new(
-            std::fs::File::create(path)
-                .with_context(|| format!("creating checkpoint {}", path.display()))?,
+            std::fs::File::create(&tmp)
+                .with_context(|| format!("creating checkpoint {}", tmp.display()))?,
         );
         f.write_all(MAGIC)?;
+        let header = Self::header_bytes(state);
         f.write_all(&(header.len() as u64).to_le_bytes())?;
         f.write_all(&header)?;
         // stream tensor bytes through one bounded scratch buffer instead
@@ -74,6 +115,37 @@ impl Checkpoint {
             }
         }
         f.flush()?;
+        let file = f
+            .into_inner()
+            .map_err(|e| anyhow!("flushing checkpoint {}: {e}", tmp.display()))?;
+        file.sync_all()
+            .with_context(|| format!("fsyncing checkpoint {}", tmp.display()))?;
+        drop(file);
+        std::fs::rename(&tmp, path).with_context(|| {
+            format!("committing checkpoint {} -> {}", tmp.display(), path.display())
+        })?;
+        Ok(())
+    }
+
+    /// Chaos injection: write a deliberately *torn* file at `path` — a
+    /// valid prefix (magic, header, part of the tensors) with the tail
+    /// missing, exactly what a crash mid-write produced before the atomic
+    /// tmp+rename path. [`Checkpoint::load`] must reject it as
+    /// [`CheckpointError::Torn`].
+    pub fn save_torn(path: &Path, state: &TrainState) -> Result<()> {
+        let header = Self::header_bytes(state);
+        let mut out = Vec::with_capacity(MAGIC.len() + 8 + header.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        out.extend_from_slice(&header);
+        // half the first tensor, then "crash"
+        if let Some(p) = state.params.first() {
+            for v in p.iter().take(p.len() / 2) {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        std::fs::write(path, &out)
+            .with_context(|| format!("writing torn checkpoint {}", path.display()))?;
         Ok(())
     }
 
@@ -135,15 +207,30 @@ impl Checkpoint {
             std::fs::File::open(path)
                 .with_context(|| format!("opening checkpoint {}", path.display()))?,
         );
+        // short reads are *typed*: a file that ends before its own
+        // structure does is a torn write, which recovery may skip —
+        // distinct from garbage (BadMagic) and from version-skew parse
+        // errors (plain anyhow)
+        let torn = |what: &str, e: std::io::Error| -> anyhow::Error {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                CheckpointError::Torn {
+                    path: path.to_path_buf(),
+                    detail: format!("file ends inside {what}"),
+                }
+                .into()
+            } else {
+                anyhow::Error::new(e).context(format!("reading checkpoint {what}"))
+            }
+        };
         let mut magic = [0u8; 6];
-        f.read_exact(&mut magic)?;
+        f.read_exact(&mut magic).map_err(|e| torn("magic", e))?;
         if magic != MAGIC {
-            bail!("bad checkpoint magic");
+            return Err(CheckpointError::BadMagic { path: path.to_path_buf() }.into());
         }
         let mut len = [0u8; 8];
-        f.read_exact(&mut len)?;
+        f.read_exact(&mut len).map_err(|e| torn("header length", e))?;
         let mut header = vec![0u8; u64::from_le_bytes(len) as usize];
-        f.read_exact(&mut header)?;
+        f.read_exact(&mut header).map_err(|e| torn("header", e))?;
 
         // typed pull read: keys borrow from `header`, no tree is built,
         // and any key order is accepted
@@ -237,7 +324,7 @@ impl Checkpoint {
             let mut out = Vec::with_capacity(sizes.len());
             for &n in sizes {
                 let mut bytes = vec![0u8; 4 * n];
-                f.read_exact(&mut bytes)?;
+                f.read_exact(&mut bytes).map_err(|e| torn("tensor data", e))?;
                 out.push(
                     bytes
                         .chunks_exact(4)
@@ -395,6 +482,52 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("c.ckpt");
         std::fs::write(&path, b"not a checkpoint").unwrap();
-        assert!(Checkpoint::load(&path).is_err());
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<CheckpointError>(), Some(CheckpointError::BadMagic { .. })),
+            "garbage must surface as a typed BadMagic, got: {err:#}"
+        );
+    }
+
+    #[test]
+    fn torn_file_is_a_typed_error() {
+        let dir = std::env::temp_dir().join("easyscale_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.ckpt");
+        let state = sample_state();
+        Checkpoint::save_torn(&path, &state).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        match err.downcast_ref::<CheckpointError>() {
+            Some(CheckpointError::Torn { detail, .. }) => {
+                assert!(detail.contains("tensor data"), "detail: {detail}");
+            }
+            other => panic!("expected Torn, got {other:?} ({err:#})"),
+        }
+
+        // truncation inside the header is torn too, not a parse panic
+        let good = dir.join("good.ckpt");
+        Checkpoint::save(&good, &state).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        let short = dir.join("short.ckpt");
+        std::fs::write(&short, &bytes[..10]).unwrap();
+        let err = Checkpoint::load(&short).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<CheckpointError>(),
+            Some(CheckpointError::Torn { .. })
+        ));
+    }
+
+    #[test]
+    fn save_commits_atomically_without_tmp_residue() {
+        let dir = std::env::temp_dir().join("easyscale_ckpt_atomic_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("e.ckpt");
+        Checkpoint::save(&path, &sample_state()).unwrap();
+        assert!(path.exists());
+        assert!(
+            !Checkpoint::tmp_path(&path).exists(),
+            "the .tmp staging file must be renamed away on success"
+        );
+        Checkpoint::load(&path).unwrap();
     }
 }

@@ -33,14 +33,16 @@ use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::exec::{DeviceType, Placement, RunMode};
+use crate::exec::{DeviceType, FaultPlan, Placement, RunMode};
 use crate::model::workload::Workload;
 use crate::runtime::{Engine, UploadCache, UploadStats};
 use crate::sched::cluster::{ClusterScheduler, JobPhase};
-use crate::sched::director::{placement_from_config, ElasticEvent, Mailbox, MailboxDirector};
+use crate::sched::director::{
+    placement_from_config, ElasticEvent, Mailbox, MailboxDirector, StragglerTracker,
+};
 use crate::sched::plan::{GpuVector, JobSpec};
 use crate::train::colocate::{Colocation, ColocationReport, PauseRecord};
-use crate::train::session::{ElasticSession, SessionReport};
+use crate::train::session::{ElasticSession, RecoveryMode, SessionReport};
 use crate::train::{SessionBuilder, TrainConfig, Trainer};
 
 /// The paper's consistency oracle for one job configuration: `max_p`
@@ -105,6 +107,17 @@ impl ClusterReport {
         }
         self.jobs.iter().map(|j| j.report.steps_run).sum::<u64>() as f64 / self.wall_s
     }
+
+    /// Fault recoveries across every job (0 when no faults were injected).
+    pub fn total_recoveries(&self) -> u64 {
+        self.jobs.iter().map(|j| j.report.recoveries).sum()
+    }
+
+    /// Previously-committed steps re-run during recoveries, cluster-wide —
+    /// the goodput tax of rollback.
+    pub fn total_replayed(&self) -> u64 {
+        self.jobs.iter().map(|j| j.report.replayed_steps).sum()
+    }
 }
 
 struct Slot<'e> {
@@ -125,6 +138,13 @@ struct Slot<'e> {
     /// Last step rate reported by the job's runner thread (the concurrent
     /// driver's substitute for reading the session directly).
     observed_rate: f64,
+    /// Per-executor wall of the job's last mini-batch, reported by its
+    /// runner thread at the epoch barrier (round-robin jobs are read
+    /// directly from their session) — the straggler-detection signal.
+    exec_wall_s: Vec<f64>,
+    /// Persistent-straggler detector, created lazily when
+    /// [`ClusterRuntime::with_straggler`] armed one.
+    straggler: Option<StragglerTracker>,
     /// Set while the job is fully paused by a serving reclaim: the
     /// checkpoint its next session will resume from.
     paused_ckpt: Option<PathBuf>,
@@ -134,6 +154,8 @@ struct Slot<'e> {
     prior_reconfigs: u64,
     prior_evals: u64,
     prior_first_loss: Option<f32>,
+    prior_recoveries: u64,
+    prior_replayed: u64,
 }
 
 /// What one serving-fleet retune did. The scheduler side (lend/reclaim,
@@ -165,7 +187,13 @@ enum RunnerCmd {
 /// What a job-runner thread reports back to the driver.
 #[cfg(not(feature = "pjrt"))]
 enum RunnerReply {
-    Ran { finished: bool, rate: f64, error: Option<anyhow::Error> },
+    Ran {
+        finished: bool,
+        rate: f64,
+        /// Per-executor wall of the last mini-batch (straggler signal).
+        exec_wall_s: Vec<f64>,
+        error: Option<anyhow::Error>,
+    },
     Paused { report: Box<SessionReport>, error: Option<anyhow::Error> },
     Retired(Box<SessionReport>),
 }
@@ -207,7 +235,9 @@ fn job_runner(
                     Err(_) => (false, Some(anyhow::anyhow!("job runner thread panicked"))),
                 };
                 let rate = session.trainer.last_step_rate();
-                if replies.send(RunnerReply::Ran { finished, rate, error }).is_err() {
+                let exec_wall_s = session.trainer.last_exec_wall_s.clone();
+                let reply = RunnerReply::Ran { finished, rate, exec_wall_s, error };
+                if replies.send(reply).is_err() {
                     return; // driver gone; nobody left to report to
                 }
             }
@@ -249,6 +279,13 @@ pub struct ClusterRuntime<'e> {
     full_rebuild: bool,
     /// Where pause checkpoints land (a fresh temp dir by default).
     pause_dir: Option<PathBuf>,
+    /// Fleet-level chaos schedule ([`ClusterRuntime::with_faults`]):
+    /// shared by every job's trainer, fire-once across the whole run.
+    faults: Option<Arc<FaultPlan>>,
+    /// Persistent-straggler threshold ([`ClusterRuntime::with_straggler`]):
+    /// a job whose slowest executor EWMA exceeds `factor` x its median for
+    /// 3 consecutive decide epochs is flagged `Degraded` to the scheduler.
+    straggler_factor: Option<f64>,
 }
 
 /// Distinguishes concurrent runtimes' default pause directories within one
@@ -271,7 +308,30 @@ impl<'e> ClusterRuntime<'e> {
             colocation: None,
             full_rebuild: false,
             pause_dir: None,
+            faults: None,
+            straggler_factor: None,
         }
+    }
+
+    /// Inject a deterministic chaos schedule (kills, delays, torn
+    /// checkpoints) into every job's mini-batch path. The plan is shared:
+    /// each fault fires once across the whole run, in whichever job hits
+    /// its (executor, step) first. Sessions are built with
+    /// [`RecoveryMode::Snapshot`] so an injected kill rolls back and
+    /// replays instead of sinking the run.
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Arm persistent-straggler detection: at every decide boundary each
+    /// running job's per-executor walls feed a [`StragglerTracker`]
+    /// (EWMA, `factor` x median, 3 consecutive epochs); a hit flags the
+    /// job [`ClusterScheduler::mark_degraded`], making it a migration
+    /// candidate ahead of the thresholded upgrade pass.
+    pub fn with_straggler(mut self, factor: f64) -> Self {
+        self.straggler_factor = Some(factor);
+        self
     }
 
     /// Co-locate with a serving tier: the policy's trace drives per-epoch
@@ -354,11 +414,15 @@ impl<'e> ClusterRuntime<'e> {
             arrival_round,
             arrived: false,
             observed_rate: 0.0,
+            exec_wall_s: Vec::new(),
+            straggler: None,
             paused_ckpt: None,
             prior_steps: 0,
             prior_reconfigs: 0,
             prior_evals: 0,
             prior_first_loss: None,
+            prior_recoveries: 0,
+            prior_replayed: 0,
         });
         id
     }
@@ -600,11 +664,12 @@ impl<'e> ClusterRuntime<'e> {
                     for &id in chunk {
                         let runner = runners[id].as_ref().expect("active job without runner");
                         match runner.reply.recv() {
-                            Ok(RunnerReply::Ran { finished: done, rate, error }) => {
+                            Ok(RunnerReply::Ran { finished: done, rate, exec_wall_s, error }) => {
                                 if let Some(e) = error {
                                     return Err(e);
                                 }
                                 self.slots[id].observed_rate = rate;
+                                self.slots[id].exec_wall_s = exec_wall_s;
                                 if done {
                                     finished.push(id);
                                 }
@@ -688,6 +753,8 @@ impl<'e> ClusterRuntime<'e> {
         report.steps_run += slot.prior_steps;
         report.reconfigs += slot.prior_reconfigs;
         report.evals += slot.prior_evals;
+        report.recoveries += slot.prior_recoveries;
+        report.replayed_steps += slot.prior_replayed;
         if let Some(first) = slot.prior_first_loss {
             report.first_loss = first;
         }
@@ -744,6 +811,8 @@ impl<'e> ClusterRuntime<'e> {
         slot.prior_steps += report.steps_run;
         slot.prior_reconfigs += report.reconfigs;
         slot.prior_evals += report.evals;
+        slot.prior_recoveries += report.recoveries;
+        slot.prior_replayed += report.replayed_steps;
         if slot.prior_first_loss.is_none() && !report.first_loss.is_nan() {
             slot.prior_first_loss = Some(report.first_loss);
         }
@@ -859,6 +928,35 @@ impl<'e> ClusterRuntime<'e> {
                 self.scheduler.master_mut(id).observe(rate);
             }
         }
+        // straggler pass: one EWMA observation + streak check per decide
+        // epoch, so "K consecutive decide epochs over threshold" is exactly
+        // what trips the Degraded flag
+        if let Some(factor) = self.straggler_factor {
+            for id in 0..self.slots.len() {
+                if self.slots[id].report.is_some() {
+                    continue;
+                }
+                let walls: Vec<f64> = match self.slots[id].session.as_ref() {
+                    Some(session) => session.trainer.last_exec_wall_s.clone(),
+                    None => self.slots[id].exec_wall_s.clone(),
+                };
+                if walls.is_empty() {
+                    continue;
+                }
+                let tracker = self.slots[id]
+                    .straggler
+                    .get_or_insert_with(|| StragglerTracker::new(factor, 3));
+                tracker.observe(&walls);
+                if let Some(slot) = tracker.check() {
+                    crate::warnlog!(
+                        "cluster",
+                        "round {round}: job {id} executor {slot} is a persistent \
+                         straggler — flagging the job degraded"
+                    );
+                    self.scheduler.mark_degraded(id);
+                }
+            }
+        }
         let mut mailed = 0u64;
         for alloc in self.scheduler.replan() {
             let id = alloc.job_id;
@@ -887,15 +985,18 @@ impl<'e> ClusterRuntime<'e> {
                     placement.n_gpus()
                 );
                 let full_rebuild = self.full_rebuild;
+                let faults = self.faults.clone();
                 let slot = &mut self.slots[id];
-                let session = SessionBuilder::new(self.engine, slot.job.cfg.clone(), placement)
+                let mut builder = SessionBuilder::new(self.engine, slot.job.cfg.clone(), placement)
                     .steps(slot.job.steps)
                     .log_every(0)
                     .director(Box::new(MailboxDirector::new(slot.mailbox.clone())))
                     .shared_uploads(Arc::clone(&self.uploads))
-                    .full_rebuild(full_rebuild)
-                    .build()?;
-                slot.session = Some(session);
+                    .full_rebuild(full_rebuild);
+                if let Some(plan) = faults {
+                    builder = builder.fault_plan(plan).recovery(RecoveryMode::Snapshot);
+                }
+                slot.session = Some(builder.build()?);
                 slot.started = Some(Instant::now());
             } else if self.slots[id].session.is_none() && self.slots[id].paused_ckpt.is_some() {
                 // a paused job won GPUs back: rebuild its session from the
@@ -909,17 +1010,20 @@ impl<'e> ClusterRuntime<'e> {
                     placement.n_gpus()
                 );
                 let full_rebuild = self.full_rebuild;
+                let faults = self.faults.clone();
                 let slot = &mut self.slots[id];
                 let path = slot.paused_ckpt.take().expect("paused_ckpt checked above");
-                let session = SessionBuilder::new(self.engine, slot.job.cfg.clone(), placement)
+                let mut builder = SessionBuilder::new(self.engine, slot.job.cfg.clone(), placement)
                     .steps(slot.job.steps)
                     .log_every(0)
                     .director(Box::new(MailboxDirector::new(slot.mailbox.clone())))
                     .shared_uploads(Arc::clone(&self.uploads))
                     .full_rebuild(full_rebuild)
-                    .resume_from(path)
-                    .build()?;
-                slot.session = Some(session);
+                    .resume_from(path);
+                if let Some(plan) = faults {
+                    builder = builder.fault_plan(plan).recovery(RecoveryMode::Snapshot);
+                }
+                slot.session = Some(builder.build()?);
                 if let Some(c) = self.colocation.as_mut() {
                     c.resumes += 1;
                 }

@@ -11,11 +11,11 @@ pub mod determinism;
 pub mod session;
 pub mod trainer;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, CheckpointError};
 pub use cluster::{
     reference_fingerprint, ClusterJob, ClusterJobReport, ClusterReport, ClusterRuntime,
 };
 pub use colocate::{Colocation, ColocationReport, PartitionMode, PauseRecord, ServingTrace};
 pub use determinism::Determinism;
-pub use session::{ElasticSession, SessionBuilder, SessionReport};
+pub use session::{ElasticSession, RecoveryMode, RecoveryStats, SessionBuilder, SessionReport};
 pub use trainer::{TrainConfig, Trainer};

@@ -25,15 +25,50 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::exec::executor::Placement;
+use crate::exec::fault::{FaultPlan, StepError};
 use crate::metrics::MetricSink;
 use crate::runtime::{Engine, UploadCache};
 use crate::sched::director::{
     ElasticEvent, ResourceDirector, StaticScheduleDirector, StepObservation,
 };
+use crate::train::checkpoint::{Checkpoint, CheckpointError};
+use crate::train::trainer::TrainState;
 use crate::train::{TrainConfig, Trainer};
+
+/// How the session answers a typed [`StepError`] (executor lost, barrier
+/// timeout) surfacing from the data plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryMode {
+    /// Propagate the error — fail-stop.
+    Off,
+    /// Roll back to a pre-step snapshot taken every mini-batch (an
+    /// on-demand rollback point, independent of checkpoint cadence) and
+    /// replay. Recovery loses no committed steps.
+    Snapshot,
+    /// Roll back to the newest *loadable* checkpoint (torn files are
+    /// skipped via their typed error) and silently replay forward — the
+    /// classic checkpoint/restart baseline.
+    Checkpoint,
+}
+
+/// Cumulative recovery latency, split by phase: detect (wall-clock of the
+/// failed step call, up to the barrier timeout), rollback (state restore +
+/// worker rebuild), replay (re-running steps to the failure point).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RecoveryStats {
+    pub detect_s: f64,
+    pub rollback_s: f64,
+    pub replay_s: f64,
+}
+
+impl RecoveryStats {
+    pub fn total_s(&self) -> f64 {
+        self.detect_s + self.rollback_s + self.replay_s
+    }
+}
 
 /// What a finished (or stopped) session reports back.
 #[derive(Debug, Clone)]
@@ -61,6 +96,10 @@ pub struct SessionReport {
     pub observed_rate: f64,
     /// True when the director issued [`ElasticEvent::Stop`].
     pub stopped_early: bool,
+    /// Fault recoveries performed (0 under [`RecoveryMode::Off`]).
+    pub recoveries: u64,
+    /// Previously-committed steps re-run during recoveries.
+    pub replayed_steps: u64,
 }
 
 /// Builder for [`ElasticSession`]. Construction is the only place the
@@ -80,6 +119,8 @@ pub struct SessionBuilder<'e> {
     resume_from: Option<PathBuf>,
     shared_uploads: Option<Arc<UploadCache>>,
     full_rebuild: bool,
+    fault_plan: Option<Arc<FaultPlan>>,
+    recovery: RecoveryMode,
 }
 
 impl<'e> SessionBuilder<'e> {
@@ -101,6 +142,8 @@ impl<'e> SessionBuilder<'e> {
             resume_from: None,
             shared_uploads: None,
             full_rebuild: false,
+            fault_plan: None,
+            recovery: RecoveryMode::Off,
         }
     }
 
@@ -160,6 +203,20 @@ impl<'e> SessionBuilder<'e> {
         self
     }
 
+    /// Inject a deterministic chaos schedule into the trainer's mini-batch
+    /// path (kills, delays, torn checkpoints). `None` in production.
+    pub fn fault_plan(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
+    /// How the session reacts to a typed executor loss (see
+    /// [`RecoveryMode`]). Default: [`RecoveryMode::Off`] — fail-stop.
+    pub fn recovery(mut self, mode: RecoveryMode) -> Self {
+        self.recovery = mode;
+        self
+    }
+
     /// Apply [`ElasticEvent::Reconfigure`] via the full teardown-and-rebuild
     /// path ([`Trainer::reconfigure_full`]) instead of the incremental one.
     /// An oracle knob: tests run the same schedule both ways to pin the
@@ -184,6 +241,8 @@ impl<'e> SessionBuilder<'e> {
             resume_from,
             shared_uploads,
             full_rebuild,
+            fault_plan,
+            recovery,
         } = self;
         let mut trainer = match resume_from {
             Some(path) => Trainer::resume(engine, cfg, placement, &path)?,
@@ -192,6 +251,13 @@ impl<'e> SessionBuilder<'e> {
         if let Some(cache) = shared_uploads {
             trainer.use_shared_uploads(engine, cache)?;
         }
+        if let Some(plan) = fault_plan {
+            trainer.set_fault_plan(plan);
+        }
+        // the rollback point of last resort: the state the session was
+        // built on, for a failure before any snapshot/checkpoint exists
+        let initial_state =
+            if recovery != RecoveryMode::Off { Some(trainer.snapshot()) } else { None };
         let start_step = trainer.state.step;
         Ok(ElasticSession {
             engine,
@@ -209,6 +275,13 @@ impl<'e> SessionBuilder<'e> {
             stopped: false,
             start_step,
             full_rebuild,
+            recovery,
+            snapshot: None,
+            initial_state,
+            written_checkpoints: Vec::new(),
+            recoveries: 0,
+            replayed_steps: 0,
+            recovery_stats: RecoveryStats::default(),
         })
     }
 }
@@ -241,6 +314,22 @@ pub struct ElasticSession<'e> {
     start_step: u64,
     /// Oracle knob: route reconfigures through the full-rebuild path.
     full_rebuild: bool,
+    /// Fault reaction policy ([`SessionBuilder::recovery`]).
+    recovery: RecoveryMode,
+    /// Pre-step snapshot — refreshed before every mini-batch under
+    /// [`RecoveryMode::Snapshot`], the zero-loss rollback point.
+    snapshot: Option<TrainState>,
+    /// The state the session was built on — rollback of last resort when
+    /// no snapshot or loadable checkpoint exists.
+    initial_state: Option<TrainState>,
+    /// Checkpoints this session wrote, oldest first — the rollback search
+    /// order is newest-first, skipping torn files by their typed error.
+    written_checkpoints: Vec<PathBuf>,
+    recoveries: u64,
+    /// Previously-committed steps re-run during recoveries (the goodput
+    /// tax of checkpoint-cadence rollback).
+    replayed_steps: u64,
+    recovery_stats: RecoveryStats,
 }
 
 impl<'e> ElasticSession<'e> {
@@ -260,6 +349,7 @@ impl<'e> ElasticSession<'e> {
                 wall_s: self.trainer.last_step_wall_s,
                 placement: &self.trainer.placement,
                 reconfigs: self.reconfigs,
+                exec_wall_s: &self.trainer.last_exec_wall_s,
             };
             self.director.direct(&obs)
         };
@@ -272,7 +362,19 @@ impl<'e> ElasticSession<'e> {
                 return Ok(None);
             }
         }
-        let loss = self.trainer.step(self.engine)?;
+        if self.recovery == RecoveryMode::Snapshot {
+            self.snapshot = Some(self.trainer.snapshot());
+        }
+        let t_step = Instant::now();
+        let loss = match self.trainer.step(self.engine) {
+            Ok(loss) => loss,
+            Err(err) if self.recovery != RecoveryMode::Off
+                && err.downcast_ref::<StepError>().is_some() =>
+            {
+                self.recover(err, t_step.elapsed().as_secs_f64())?
+            }
+            Err(err) => return Err(err),
+        };
         self.sink.push("train_loss", step as f64, loss as f64);
         if self.log_every > 0 && step % self.log_every == 0 {
             crate::info!("session", "step {step:5} loss {loss:.4}");
@@ -331,6 +433,8 @@ impl<'e> ElasticSession<'e> {
             wall_s,
             observed_rate: if wall_s > 0.0 { steps_run as f64 / wall_s } else { 0.0 },
             stopped_early: self.stopped,
+            recoveries: self.recoveries,
+            replayed_steps: self.replayed_steps,
         }
     }
 
@@ -356,6 +460,7 @@ impl<'e> ElasticSession<'e> {
             ElasticEvent::Checkpoint(path) => {
                 self.trainer.checkpoint(&path)?;
                 crate::info!("session", "checkpoint written to {}", path.display());
+                self.written_checkpoints.push(path);
             }
             ElasticEvent::Eval => {
                 // label = index of the last completed step whose params are
@@ -372,6 +477,104 @@ impl<'e> ElasticSession<'e> {
             }
         }
         Ok(())
+    }
+
+    /// Recovery as an elastic event (paper §3.2 applied to faults): roll
+    /// back to the nearest consistent state — the pre-step snapshot under
+    /// [`RecoveryMode::Snapshot`], else the newest loadable checkpoint
+    /// (torn files are skipped via their typed error) — rebuild the
+    /// workers, and silently replay the per-EST deterministic streams up
+    /// to and through the failed step. D0/D1 make the replay bitwise: the
+    /// recovered timeline, future checkpoints included, is
+    /// indistinguishable from an unfailed one.
+    fn recover(&mut self, err: anyhow::Error, detect_s: f64) -> Result<f32> {
+        let failed_step = self.trainer.state.step;
+        crate::warnlog!("session", "step {failed_step}: {err:#} — recovering");
+        self.recovery_stats.detect_s += detect_s;
+
+        let t0 = Instant::now();
+        let state = self.rollback_state()?;
+        crate::info!(
+            "session",
+            "rolling back from step {failed_step} to step {} and replaying",
+            state.step
+        );
+        self.trainer.restore_from_state(state)?;
+        self.recoveries += 1;
+        self.recovery_stats.rollback_s += t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let mut loss = f32::NAN;
+        while self.trainer.state.step <= failed_step {
+            let replaying = self.trainer.state.step < failed_step;
+            match self.trainer.step(self.engine) {
+                Ok(l) => {
+                    loss = l;
+                    if replaying {
+                        self.replayed_steps += 1;
+                    }
+                }
+                Err(e) if e.downcast_ref::<StepError>().is_some() => {
+                    // another injected fault inside the replay window
+                    // (fire-once flags keep already-fired ones quiet, but
+                    // a fault the first pass never reached can still
+                    // trigger): roll back again and keep replaying
+                    crate::warnlog!(
+                        "session",
+                        "step {}: {e:#} during replay — rolling back again",
+                        self.trainer.state.step
+                    );
+                    let state = self.rollback_state()?;
+                    self.trainer.restore_from_state(state)?;
+                    self.recoveries += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        self.recovery_stats.replay_s += t1.elapsed().as_secs_f64();
+        Ok(loss)
+    }
+
+    /// The newest consistent state to roll back to, by preference:
+    /// pre-step snapshot, newest loadable checkpoint, the build-time
+    /// initial state.
+    fn rollback_state(&mut self) -> Result<TrainState> {
+        if self.recovery == RecoveryMode::Snapshot {
+            if let Some(s) = &self.snapshot {
+                return Ok(s.clone());
+            }
+        }
+        for path in self.written_checkpoints.iter().rev() {
+            match Checkpoint::load(path) {
+                Ok(state) => return Ok(state),
+                Err(e) if e.downcast_ref::<CheckpointError>().is_some() => {
+                    crate::warnlog!(
+                        "session",
+                        "skipping unusable checkpoint {}: {e:#}",
+                        path.display()
+                    );
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        self.initial_state
+            .clone()
+            .ok_or_else(|| anyhow!("no rollback point: no snapshot, checkpoint, or initial state"))
+    }
+
+    /// Recoveries performed (one per rollback, including mid-replay ones).
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries
+    }
+
+    /// Previously-committed steps re-run during recoveries.
+    pub fn replayed_steps(&self) -> u64 {
+        self.replayed_steps
+    }
+
+    /// Cumulative detect/rollback/replay latency across all recoveries.
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        self.recovery_stats
     }
 
     fn run_eval(&mut self, step: u64) -> Result<()> {

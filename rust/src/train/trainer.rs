@@ -33,6 +33,7 @@ use crate::data::{DeterministicSampler, SharedDataWorkers, SyntheticCorpus};
 use crate::est::{EstContext, StagedGrads};
 use crate::exec::devices::DeviceType;
 use crate::exec::executor::{ExecTiming, KeyMode, Placement, PlacementDelta};
+use crate::exec::fault::FaultPlan;
 use crate::exec::pool::{
     ExecutorOutput, ExecutorPool, ExecutorWorker, RunMode, SlotPlan, StepInputs,
 };
@@ -156,11 +157,17 @@ pub struct Trainer {
     pub loss_history: Vec<f32>,
     /// timing of the last mini-batch per executor slot (for benches)
     pub last_timing: Vec<ExecTiming>,
+    /// wall-clock of the last mini-batch per executor slot — the
+    /// per-device signal the straggler EWMA consumes
+    pub last_exec_wall_s: Vec<f64>,
     /// executor-phase wall-clock of the last step: max over concurrent
     /// executors — the parallel critical path
     pub last_step_wall_s: f64,
     /// sum of per-executor wall-clocks — what a sequential loop would pay
     pub last_step_serial_s: f64,
+    /// chaos hook: deterministic fault schedule injected into every
+    /// mini-batch's `StepInputs` (None in production runs)
+    fault: Option<Arc<FaultPlan>>,
 }
 
 impl Trainer {
@@ -222,9 +229,19 @@ impl Trainer {
             groups: Vec::new(),
             loss_history: Vec::new(),
             last_timing: Vec::new(),
+            last_exec_wall_s: Vec::new(),
             last_step_wall_s: 0.0,
             last_step_serial_s: 0.0,
+            fault: None,
         })
+    }
+
+    /// Arm a deterministic fault schedule: every subsequent mini-batch
+    /// consults `plan` on the executor path (kills, delays) and every
+    /// checkpoint consults it for torn-write injection. Shared via `Arc`
+    /// so the driver (session, bench) can watch the same plan's state.
+    pub fn set_fault_plan(&mut self, plan: Arc<FaultPlan>) {
+        self.fault = Some(plan);
     }
 
     fn key_mode(&self) -> KeyMode {
@@ -394,21 +411,26 @@ impl Trainer {
                 d2,
                 key_mode,
                 aug_rate,
+                fault: self.fault.as_deref(),
             };
             self.pool.step_into(&inp, &mut self.outs)?;
         }
 
         let n_exec = self.placement.executors.len();
         self.last_timing.resize_with(n_exec, ExecTiming::default);
+        self.last_exec_wall_s.clear();
+        self.last_exec_wall_s.resize(n_exec, 0.0);
         self.slot_table.reset(self.cfg.max_p);
         let mut wall = 0.0f64;
         let mut serial = 0.0f64;
         {
-            let Trainer { outs, slot_table, last_timing, spare_staged, .. } = self;
+            let Trainer { outs, slot_table, last_timing, last_exec_wall_s, spare_staged, .. } =
+                self;
             for mut out in outs.drain(..) {
                 serial += out.wall_s;
                 wall = wall.max(out.wall_s);
                 last_timing[out.slot] = std::mem::take(&mut out.timing);
+                last_exec_wall_s[out.slot] = out.wall_s;
                 for sg in out.staged.drain(..) {
                     slot_table.insert(sg)?;
                 }
@@ -629,7 +651,50 @@ impl Trainer {
     pub fn checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
         self.sync_contexts_from_pool();
         self.state.data_items = self.checkpoint_data_items();
+        if let Some(plan) = &self.fault {
+            if plan.fire_torn(self.state.step) {
+                // chaos: simulate a crash mid-write — a truncated file at
+                // the destination, exactly what the atomic tmp+rename path
+                // prevents and what the loader must reject as Torn
+                return crate::train::Checkpoint::save_torn(path, &self.state);
+            }
+        }
         crate::train::Checkpoint::save(path, &self.state)
+    }
+
+    /// The on-demand *in-memory* checkpoint: the pre-step snapshot the
+    /// recovery path rolls back to. Pure state — cheap next to a step, and
+    /// bitwise-faithful (it is exactly what `checkpoint` would persist).
+    pub fn snapshot(&mut self) -> TrainState {
+        self.sync_contexts_from_pool();
+        self.state.data_items = self.checkpoint_data_items();
+        self.state.clone()
+    }
+
+    /// Roll this trainer back to a previously captured [`TrainState`]
+    /// (snapshot or loaded checkpoint) on the *current* placement: the
+    /// recovery half of fault handling. A rollback is not a restart — the
+    /// restart counter is left exactly as captured, so a recovered
+    /// timeline (its future checkpoints included) is byte-identical to an
+    /// unfailed one. The executor pool is fully rebuilt: a lost worker's
+    /// thread, queues and channel are all abandoned with the old pool.
+    pub fn restore_from_state(&mut self, state: TrainState) -> Result<()> {
+        anyhow::ensure!(
+            state.est_contexts.len() == self.cfg.max_p,
+            "snapshot hosts {} ESTs, cfg.max_p = {}",
+            state.est_contexts.len(),
+            self.cfg.max_p
+        );
+        self.state = state;
+        let restart = self.state.restart_count;
+        let (data_seed, init) = if self.cfg.determinism.d0 {
+            (self.cfg.effective_seed(), DataInit::Restore(self.state.data_items.clone()))
+        } else {
+            // unfixed world: prefetched batches are lost, streams reseeded
+            (self.cfg.effective_seed() ^ (restart + 1), DataInit::Prefill(self.state.step))
+        };
+        self.rebuild_workers(data_seed, init);
+        Ok(())
     }
 
     /// Rebuild a trainer from a checkpoint under a (possibly different)

@@ -1,0 +1,419 @@
+//! The chaos plane end to end: deterministic fault schedules (kills,
+//! delays, torn checkpoints) injected into real elastic jobs, recovered as
+//! elastic events — and every recovered run must land **bitwise** on its
+//! unfailed fixed-placement sequential reference (params, momenta, and the
+//! bytes of every checkpoint written after recovery). Plus the straggler
+//! path: a persistently slow executor provably triggers migration within K
+//! decide epochs, intra-job (AIMaster) and inter-job (Degraded replan).
+//!
+//! Cluster-level tests honor `EASYSCALE_CHAOS_JOB_THREADS` (CI runs them
+//! under the round-robin and concurrent drivers).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use easyscale::exec::{DeviceType, Fault, FaultKind, FaultPlan, Placement, RunMode};
+use easyscale::model::workload::Workload;
+use easyscale::runtime::Engine;
+use easyscale::sched::{
+    AiMasterDirector, ElasticEvent, Mailbox, MailboxDirector, ResourceDirector,
+    StaticScheduleDirector, StepObservation,
+};
+use easyscale::train::{
+    reference_fingerprint, Checkpoint, CheckpointError, ClusterJob, ClusterRuntime, Colocation,
+    Determinism, RecoveryMode, ServingTrace, SessionBuilder, TrainConfig,
+};
+
+#[cfg(not(feature = "pjrt"))]
+fn tiny() -> Option<Engine> {
+    Some(Engine::synthetic("tiny").unwrap())
+}
+
+#[cfg(feature = "pjrt")]
+fn tiny() -> Option<Engine> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !d.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/tiny not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(&d).unwrap())
+}
+
+const V: DeviceType = DeviceType::V100;
+
+fn cfg(det: Determinism) -> TrainConfig {
+    TrainConfig { determinism: det, ..TrainConfig::new(4) }
+}
+
+/// Cluster driver selector for CI: 1 = round-robin (default), 0/N =
+/// concurrent runner threads.
+fn chaos_job_threads() -> usize {
+    std::env::var("EASYSCALE_CHAOS_JOB_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// An injected mid-mini-batch kill recovers from the pre-step snapshot and
+/// the run ends bitwise on the unfailed reference — fingerprint AND the
+/// bytes of the final checkpoint (recovery is a rollback, not a restart:
+/// nothing in the persisted state may betray that a failure ever happened).
+#[test]
+fn kill_recovers_bitwise_with_identical_checkpoint_bytes() {
+    let Some(engine) = tiny() else { return };
+    let dir = tmp_dir("easyscale_chaos_kill");
+    let reference = reference_fingerprint(&engine, &cfg(Determinism::D1), 8).unwrap();
+
+    let run = |faults: Option<Arc<FaultPlan>>, ckpt: PathBuf| {
+        let mut builder =
+            SessionBuilder::new(&engine, cfg(Determinism::D1), Placement::homogeneous(V, 2, 4))
+                .steps(8)
+                .log_every(0)
+                .final_checkpoint(ckpt);
+        if let Some(plan) = faults {
+            builder = builder.fault_plan(plan).recovery(RecoveryMode::Snapshot);
+        }
+        let mut session = builder.build().unwrap();
+        session.run().unwrap()
+    };
+
+    let plan = Arc::new(FaultPlan::new(vec![Fault {
+        executor: 1,
+        step: 3,
+        kind: FaultKind::Kill,
+    }]));
+    let chaos = run(Some(plan.clone()), dir.join("chaos.ckpt"));
+    let unfailed = run(None, dir.join("unfailed.ckpt"));
+
+    assert_eq!(plan.pending(), 0, "the kill must actually fire");
+    assert_eq!(chaos.recoveries, 1);
+    assert_eq!(
+        chaos.replayed_steps, 0,
+        "snapshot recovery rolls back to the failed step itself — no committed step is re-run"
+    );
+    assert_eq!(chaos.steps_run, 8);
+    assert_eq!(unfailed.recoveries, 0);
+    assert_eq!(chaos.fingerprint, reference, "recovered run drifted from the reference");
+    assert_eq!(unfailed.fingerprint, reference);
+    assert_eq!(
+        std::fs::read(dir.join("chaos.ckpt")).unwrap(),
+        std::fs::read(dir.join("unfailed.ckpt")).unwrap(),
+        "a recovered run's checkpoint bytes must be indistinguishable from an unfailed one's"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Kills crossed with an elastic shrink/grow schedule, through both the
+/// incremental reconfigure path and the full-rebuild oracle: recovery and
+/// reconfiguration compose without losing the bitwise guarantee.
+#[test]
+fn kills_crossed_with_reconfigure_schedule_match_reference() {
+    let Some(engine) = tiny() else { return };
+    let reference = reference_fingerprint(&engine, &cfg(Determinism::D1), 9).unwrap();
+    for full_rebuild in [false, true] {
+        // a fresh plan per run: fire-once markers are per-plan
+        let plan = Arc::new(FaultPlan::new(vec![
+            // fires while the schedule has shrunk the job to 2 executors
+            Fault { executor: 1, step: 3, kind: FaultKind::Kill },
+            // fires after it grew back to 4
+            Fault { executor: 0, step: 6, kind: FaultKind::Kill },
+        ]));
+        let director = StaticScheduleDirector::new(vec![
+            (2, Placement::homogeneous(V, 2, 4)),
+            (5, Placement::homogeneous(V, 4, 4)),
+        ]);
+        let mut session =
+            SessionBuilder::new(&engine, cfg(Determinism::D1), Placement::homogeneous(V, 4, 4))
+                .steps(9)
+                .log_every(0)
+                .director(Box::new(director))
+                .full_rebuild(full_rebuild)
+                .fault_plan(plan.clone())
+                .recovery(RecoveryMode::Snapshot)
+                .build()
+                .unwrap();
+        let report = session.run().unwrap();
+        assert_eq!(plan.pending(), 0, "both kills must fire (full_rebuild={full_rebuild})");
+        assert_eq!(report.recoveries, 2, "full_rebuild={full_rebuild}");
+        assert_eq!(report.reconfigs, 2, "full_rebuild={full_rebuild}");
+        assert_eq!(
+            report.fingerprint, reference,
+            "kills across reconfigurations drifted (full_rebuild={full_rebuild})"
+        );
+    }
+}
+
+/// Delay faults scale the reported wall-clock but never the computation:
+/// no recovery fires and the bits match the reference exactly.
+#[test]
+fn delay_faults_are_bitwise_neutral() {
+    let Some(engine) = tiny() else { return };
+    let reference = reference_fingerprint(&engine, &cfg(Determinism::D1), 6).unwrap();
+    let plan = Arc::new(FaultPlan::new(vec![
+        Fault { executor: 0, step: 2, kind: FaultKind::Delay(8.0) },
+        Fault { executor: 1, step: 4, kind: FaultKind::Delay(8.0) },
+    ]));
+    let mut session =
+        SessionBuilder::new(&engine, cfg(Determinism::D1), Placement::homogeneous(V, 2, 4))
+            .steps(6)
+            .log_every(0)
+            .fault_plan(plan.clone())
+            .recovery(RecoveryMode::Snapshot)
+            .build()
+            .unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(plan.pending(), 0, "both delays must fire");
+    assert_eq!(report.recoveries, 0, "a slow executor is not a dead executor");
+    assert_eq!(report.fingerprint, reference);
+}
+
+/// Checkpoint-mode recovery with a torn file in the rollback chain: the
+/// torn checkpoint is rejected with its typed error and silently skipped,
+/// the older intact one loads, the committed gap is replayed — and every
+/// checkpoint written *after* recovery is byte-identical to the unfailed
+/// run's.
+#[test]
+fn torn_checkpoint_is_typed_and_skipped_in_rollback() {
+    let Some(engine) = tiny() else { return };
+    let chaos_dir = tmp_dir("easyscale_chaos_torn");
+    let ref_dir = tmp_dir("easyscale_chaos_torn_ref");
+
+    let plan = Arc::new(FaultPlan::new(vec![
+        // tears the step-4 cadence checkpoint (first write at or after 3)
+        Fault { executor: 0, step: 3, kind: FaultKind::TornCheckpoint },
+        Fault { executor: 1, step: 5, kind: FaultKind::Kill },
+    ]));
+    let mut chaos =
+        SessionBuilder::new(&engine, cfg(Determinism::D1), Placement::homogeneous(V, 2, 4))
+            .steps(8)
+            .log_every(0)
+            .checkpoint_every(2, chaos_dir.clone())
+            .fault_plan(plan.clone())
+            .recovery(RecoveryMode::Checkpoint)
+            .build()
+            .unwrap();
+    let report = chaos.run().unwrap();
+    assert_eq!(plan.pending(), 0, "torn + kill must both fire");
+
+    // the torn file is a typed, identifiable rejection — not garbage-in
+    let err = Checkpoint::load(&chaos_dir.join("step4.ckpt")).unwrap_err();
+    match err.downcast_ref::<CheckpointError>() {
+        Some(CheckpointError::Torn { .. }) => {}
+        other => panic!("expected CheckpointError::Torn, got {other:?} ({err:#})"),
+    }
+
+    // rollback skipped step4 (torn), landed on step2, replayed 2/3/4
+    assert_eq!(report.recoveries, 1);
+    assert_eq!(report.replayed_steps, 3, "steps 2,3,4 were committed and re-run");
+    assert_eq!(
+        report.fingerprint,
+        reference_fingerprint(&engine, &cfg(Determinism::D1), 8).unwrap()
+    );
+
+    let mut reference =
+        SessionBuilder::new(&engine, cfg(Determinism::D1), Placement::homogeneous(V, 2, 4))
+            .steps(8)
+            .log_every(0)
+            .checkpoint_every(2, ref_dir.clone())
+            .build()
+            .unwrap();
+    reference.run().unwrap();
+    for name in ["step6.ckpt", "step8.ckpt"] {
+        assert_eq!(
+            std::fs::read(chaos_dir.join(name)).unwrap(),
+            std::fs::read(ref_dir.join(name)).unwrap(),
+            "post-recovery checkpoint {name} differs from the unfailed run's bytes"
+        );
+    }
+    std::fs::remove_dir_all(&chaos_dir).ok();
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
+
+/// The intra-job straggler path, pinned to its K: an executor whose EWMA
+/// wall stays over factor x median trips the AIMaster migration on exactly
+/// the 3rd decide epoch, dealing its ESTs onto the survivors and revoking
+/// the suspect GPU.
+#[test]
+fn straggler_triggers_migration_within_k_decide_epochs() {
+    let p3 = Placement::homogeneous(V, 3, 3);
+    let mut director = AiMasterDirector::new(Workload::Bert, Determinism::D1, &p3, [0, 0, 0], 1)
+        .with_straggler(2.0);
+    let mut migrated = None;
+    for step in 0..=6u64 {
+        let obs = StepObservation {
+            step,
+            steps_total: 100,
+            loss: 1.0,
+            wall_s: 0.03,
+            placement: &p3,
+            reconfigs: 0,
+            // slot 2 runs 8x the median — a persistent straggler
+            exec_wall_s: &[0.01, 0.01, 0.08],
+        };
+        for ev in director.direct(&obs) {
+            if let ElasticEvent::Reconfigure(p) = ev {
+                migrated = Some((step, p));
+            }
+        }
+        if migrated.is_some() {
+            break;
+        }
+    }
+    let (step, placement) = migrated.expect("persistent straggler must trigger a migration");
+    assert_eq!(step, 3, "K=3 consecutive decide epochs, decide_every=1: migration at step 3");
+    assert_eq!(director.migrations(), 1);
+    assert_eq!(placement.executors.len(), 2, "the slow executor is dropped");
+    let mut ranks: Vec<usize> =
+        placement.executors.iter().flat_map(|e| e.est_ranks.iter().copied()).collect();
+    ranks.sort_unstable();
+    assert_eq!(ranks, vec![0, 1, 2], "every EST rank survives the migration");
+    assert_eq!(director.held(), [2, 0, 0], "the suspect GPU is revoked, not re-held");
+}
+
+/// The inter-job straggler path, wired end to end: injected delay faults
+/// make one executor persistently slow, the cluster runtime flags the job
+/// Degraded, the scheduler migrates it onto the free alternative type-mix
+/// ahead of any thresholded upgrade — and the job still lands bitwise on
+/// its reference. The unarmed control proves the reconfiguration came from
+/// the straggler path: same delays, no detection, zero reconfigs.
+#[test]
+fn cluster_straggler_flags_degraded_and_migrates() {
+    let Some(engine) = tiny() else { return };
+    let job = || ClusterJob {
+        workload: Workload::Bert,
+        cfg: TrainConfig {
+            seed: 7,
+            determinism: Determinism::D1_D2,
+            run_mode: RunMode::Sequential,
+            ..TrainConfig::new(4)
+        },
+        steps: 12,
+    };
+    // executor 3 runs 12x slow for the first 8 mini-batches
+    let delays = || {
+        Arc::new(FaultPlan::new(
+            (0..8)
+                .map(|s| Fault { executor: 3, step: s, kind: FaultKind::Delay(12.0) })
+                .collect(),
+        ))
+    };
+    let reference = reference_fingerprint(&engine, &job().cfg, 12).unwrap();
+
+    let mut armed = ClusterRuntime::new(&engine, [4, 4, 0], 1)
+        .with_job_threads(chaos_job_threads())
+        .with_faults(delays())
+        .with_straggler(3.0);
+    armed.submit(job());
+    let armed_report = armed.run().unwrap();
+    assert_eq!(armed_report.jobs[0].report.fingerprint, reference, "migration broke the bits");
+    assert_eq!(armed_report.jobs[0].report.steps_run, 12);
+    assert!(
+        armed_report.reconfigs >= 1,
+        "a persistent straggler must migrate the job: {armed_report:?}"
+    );
+
+    let mut control = ClusterRuntime::new(&engine, [4, 4, 0], 1)
+        .with_job_threads(chaos_job_threads())
+        .with_faults(delays());
+    control.submit(job());
+    let control_report = control.run().unwrap();
+    assert_eq!(control_report.jobs[0].report.fingerprint, reference);
+    assert_eq!(
+        control_report.reconfigs, 0,
+        "without straggler detection the slow executor is tolerated: {control_report:?}"
+    );
+}
+
+/// A serving pause's `mailbox.clear()` drops only the stale pre-pause
+/// mail; a Reconfigure granted afterwards is delivered intact and in
+/// order. This is the seam that makes pause-then-regrant safe.
+#[test]
+fn mailbox_clear_cannot_drop_a_later_granted_reconfigure() {
+    let mailbox = Mailbox::new();
+    let stale = Placement::homogeneous(V, 4, 4);
+    let granted = Placement::homogeneous(V, 2, 4);
+    mailbox.push(ElasticEvent::Reconfigure(stale.clone()));
+    mailbox.clear();
+    assert!(mailbox.is_empty(), "clear drops the stale pre-pause mail");
+    mailbox.push(ElasticEvent::Reconfigure(granted.clone()));
+    assert_eq!(mailbox.len(), 1);
+
+    let mut director = MailboxDirector::new(mailbox.clone());
+    let obs = StepObservation {
+        step: 1,
+        steps_total: 10,
+        loss: 1.0,
+        wall_s: 0.01,
+        placement: &stale,
+        reconfigs: 0,
+        exec_wall_s: &[],
+    };
+    let events = director.direct(&obs);
+    assert_eq!(
+        events,
+        vec![ElasticEvent::Reconfigure(granted)],
+        "the post-clear grant must be delivered exactly once"
+    );
+    assert!(mailbox.is_empty());
+    assert_eq!(
+        director.direct(&obs),
+        vec![ElasticEvent::Continue],
+        "a drained mailbox yields Continue, never a replayed grant"
+    );
+}
+
+/// Resume-after-pause under an in-flight fault: the serving tier reclaims
+/// the whole fleet (checkpointed pause), hands it back (resume), and an
+/// injected kill then strikes the resumed session — which must recover
+/// from its pre-step snapshot and still finish bitwise on the undisturbed
+/// reference, with the pause/resume and the recovery both on the record.
+#[test]
+fn resume_after_pause_recovers_in_flight_fault_bitwise() {
+    let Some(engine) = tiny() else { return };
+    let dir = tmp_dir("easyscale_chaos_pause");
+    let job = ClusterJob {
+        workload: Workload::Bert,
+        cfg: TrainConfig {
+            seed: 42,
+            determinism: Determinism::D1_D2,
+            run_mode: RunMode::Sequential,
+            ..TrainConfig::new(4)
+        },
+        steps: 8,
+    };
+    let reference = reference_fingerprint(&engine, &job.cfg, 8).unwrap();
+    // epoch 1 takes the whole 4-GPU fleet (pause), epoch 2 returns it
+    // (resume); the kill lands well after the resume
+    let trace = ServingTrace::new(vec![0, 4, 0]);
+    let plan = Arc::new(FaultPlan::new(vec![Fault {
+        executor: 0,
+        step: 5,
+        kind: FaultKind::Kill,
+    }]));
+    let mut rt = ClusterRuntime::new(&engine, [2, 1, 1], 1)
+        .with_job_threads(chaos_job_threads())
+        .with_colocation(Colocation::new(trace))
+        .with_pause_dir(dir.clone())
+        .with_faults(plan.clone());
+    rt.submit(job);
+    let report = rt.run().unwrap();
+
+    assert_eq!(plan.pending(), 0, "the kill must fire in the resumed session");
+    let colo = report.colocation.as_ref().expect("co-located run must report");
+    assert!(colo.pauses >= 1, "the full reclaim must pause the job: {colo:?}");
+    assert!(colo.resumes >= 1, "the hand-back must resume it: {colo:?}");
+    assert!(report.total_recoveries() >= 1, "the in-flight kill must be recovered");
+    assert_eq!(report.jobs[0].report.steps_run, 8, "no step may be lost across pause+fault");
+    assert_eq!(
+        report.jobs[0].report.fingerprint, reference,
+        "pause + resume + recovery drifted from the undisturbed reference"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
