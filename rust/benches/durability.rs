@@ -1,0 +1,235 @@
+//! Durability bench: what the write-ahead journal costs, and what a
+//! whole-process crash-restart costs to recover from.
+//!
+//! Three measurements, all gated on the bitwise guarantee (a journaled or
+//! resumed run that drifted from its reference records nothing):
+//!
+//! 1. **Append hot path**: steady-state journal appends must allocate
+//!    nothing — pinned with the counting global allocator, not eyeballed.
+//! 2. **Journal overhead per decide epoch**: the same multi-job cluster
+//!    run with and without `--journal`, identical bits required; the
+//!    wall-clock delta over the number of durability barriers is the
+//!    fsync + serialization tax per epoch.
+//! 3. **Resume latency**, split load-journal → replay-grants →
+//!    load-checkpoints → silent-replay, for a crash at the middle
+//!    barrier of the journaled run.
+//!
+//! The record is written to `rust/BENCH_durability.json`.
+//!
+//!     cargo bench --bench durability
+
+use std::path::{Path, PathBuf};
+
+use easyscale::model::workload::Workload;
+use easyscale::runtime::Engine;
+use easyscale::sched::AllocationChange;
+use easyscale::train::{
+    reference_fingerprint, BarrierRecord, ClusterJob, ClusterRuntime, Determinism, Journal,
+    JournalEvent, JournalMeta, TrainConfig,
+};
+use easyscale::util::bench::{heap_allocs, BenchRecord, CountingAlloc, Table};
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const STEPS: [u64; 2] = [16, 12];
+const ARRIVALS: [u64; 2] = [0, 1];
+const DECIDE_EVERY: u64 = 2;
+
+fn job(i: usize) -> ClusterJob {
+    let workload = [Workload::Bert, Workload::Electra][i];
+    let cfg = TrainConfig {
+        seed: 42 + i as u64,
+        determinism: Determinism::D1_D2,
+        ..TrainConfig::new(4)
+    };
+    ClusterJob { workload, cfg, steps: STEPS[i] }
+}
+
+fn build<'e>(engine: &'e Engine, journal: Option<&Path>) -> ClusterRuntime<'e> {
+    let mut rt = ClusterRuntime::new(engine, [2, 1, 1], DECIDE_EVERY);
+    if let Some(dir) = journal {
+        rt = rt.with_journal(dir.to_path_buf()).unwrap();
+    }
+    for i in 0..2 {
+        rt.submit_at(job(i), ARRIVALS[i]);
+    }
+    rt
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn copy_dir(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+}
+
+/// Steady-state appends of both record shapes must be allocation-free:
+/// the writer's scratch buffer and nesting stack are long-lived, numbers
+/// format straight into the buffer, and each commit is one `write(2)`.
+fn pin_append_allocs() -> (u64, u64) {
+    let dir = tmp_dir("easyscale_bench_durability_alloc");
+    let mut j = Journal::create(&dir).unwrap();
+    j.append_meta(&JournalMeta {
+        version: 1,
+        fleet: [2, 1, 1],
+        decide_every: DECIDE_EVERY,
+        job_threads: 1,
+        full_rebuild: false,
+        straggler_factor: None,
+        colocate: None,
+        faults: Vec::new(),
+    })
+    .unwrap();
+    let ev = JournalEvent::Grant {
+        round: 4,
+        job: 1,
+        held: [2, 0, 1],
+        change: AllocationChange::Reallocated,
+    };
+    let barrier = BarrierRecord {
+        round: 4,
+        decisions: 3,
+        reconfigs: 1,
+        fleet: [2, 1, 1],
+        available: [0, 1, 0],
+        fired: vec![true, false],
+        colo: None,
+        jobs: Vec::new(),
+    };
+    // warm the scratch buffer and the writer's nesting stack past their
+    // high-water marks
+    for _ in 0..16 {
+        j.append_event(&ev).unwrap();
+        j.append_barrier(&barrier).unwrap();
+    }
+    let before = heap_allocs();
+    for _ in 0..256 {
+        j.append_event(&ev).unwrap();
+    }
+    let event_allocs = heap_allocs() - before;
+    let before = heap_allocs();
+    for _ in 0..64 {
+        j.append_barrier(&barrier).unwrap();
+    }
+    let barrier_allocs = heap_allocs() - before;
+    j.sync().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    (event_allocs, barrier_allocs)
+}
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = match Engine::open(&root, "tiny") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP durability bench: no engine available ({e:#})");
+            return;
+        }
+    };
+
+    // ---- 1. the append hot path allocates nothing ----
+    let (event_allocs, barrier_allocs) = pin_append_allocs();
+    println!("== append hot path: {event_allocs} event / {barrier_allocs} barrier allocs ==");
+    assert_eq!(event_allocs, 0, "steady-state event appends must not allocate");
+    assert_eq!(barrier_allocs, 0, "steady-state barrier appends must not allocate");
+
+    // ---- 2. journal overhead per decide epoch ----
+    let want: Vec<u64> = (0..2)
+        .map(|i| reference_fingerprint(&engine, &job(i).cfg, STEPS[i]).unwrap())
+        .collect();
+    let journal_dir = tmp_dir("easyscale_bench_durability_run");
+    let journaled = build(&engine, Some(&journal_dir)).run().unwrap();
+    let plain = build(&engine, None).run().unwrap();
+    for i in 0..2 {
+        assert_eq!(
+            journaled.jobs[i].report.fingerprint, want[i],
+            "job {i}: journaling changed the bits"
+        );
+        assert_eq!(plain.jobs[i].report.fingerprint, want[i]);
+    }
+    let loaded = Journal::load(&journal_dir).unwrap();
+    let epochs = loaded.barrier_offsets.len() as u64;
+    assert!(epochs >= 2, "overhead needs several barriers, got {epochs}");
+    let overhead_s = journaled.wall_s - plain.wall_s;
+    let per_epoch_ms = overhead_s * 1e3 / epochs as f64;
+    println!(
+        "== journal overhead: {:.3}s journaled vs {:.3}s plain over {epochs} epochs \
+         ({per_epoch_ms:.3} ms/epoch) ==",
+        journaled.wall_s, plain.wall_s
+    );
+
+    // ---- 3. resume latency, crash at the middle barrier ----
+    let k = loaded.barrier_offsets.len() / 2;
+    let crash_dir = tmp_dir("easyscale_bench_durability_crash");
+    copy_dir(&journal_dir, &crash_dir);
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(crash_dir.join("journal.jsonl"))
+        .unwrap()
+        .set_len(loaded.barrier_offsets[k])
+        .unwrap();
+    let barrier = Journal::load(&crash_dir).unwrap().barrier.unwrap();
+    for j in &barrier.jobs {
+        let _ = std::fs::remove_file(crash_dir.join(format!("job{}_final.ckpt", j.id)));
+    }
+    let mut rt = ClusterRuntime::resume(&engine, &crash_dir).unwrap();
+    let stats = rt.resume_stats().expect("resumed runtime reports stats");
+    let resumed = rt.run().unwrap();
+    for i in 0..2 {
+        assert_eq!(
+            resumed.jobs[i].report.fingerprint, want[i],
+            "job {i}: crash-restart changed the bits"
+        );
+    }
+    let resume_total_s =
+        stats.load_journal_s + stats.replay_grants_s + stats.load_ckpt_s + stats.replay_steps_s;
+    let mut table = Table::new(&[
+        "phase", "load journal ms", "replay grants ms", "load ckpt ms", "replay steps ms",
+        "replayed", "total ms",
+    ]);
+    table.row(&[
+        format!("barrier {k} of {epochs}"),
+        format!("{:.3}", stats.load_journal_s * 1e3),
+        format!("{:.3}", stats.replay_grants_s * 1e3),
+        format!("{:.3}", stats.load_ckpt_s * 1e3),
+        format!("{:.3}", stats.replay_steps_s * 1e3),
+        format!("{}", stats.replayed_steps),
+        format!("{:.3}", resume_total_s * 1e3),
+    ]);
+    table.print();
+
+    let mut rec = BenchRecord::new("durability");
+    rec.str_field("fleet", "v100:2,p100:1,t4:1")
+        .u64_field("decide_every", DECIDE_EVERY)
+        .u64_field("epochs", epochs)
+        .u64_field("append_event_allocs", event_allocs)
+        .u64_field("append_barrier_allocs", barrier_allocs)
+        .f64_field("wall_journaled_s", journaled.wall_s)
+        .f64_field("wall_plain_s", plain.wall_s)
+        .f64_field("journal_overhead_ms_per_epoch", per_epoch_ms)
+        .usize_field("resume_barrier", k)
+        .f64_field("resume_total_s", resume_total_s);
+    rec.row(|row| {
+        row.str("phase", "resume_split")
+            .f64("load_journal_s", stats.load_journal_s)
+            .f64("replay_grants_s", stats.replay_grants_s)
+            .f64("load_ckpt_s", stats.load_ckpt_s)
+            .f64("replay_steps_s", stats.replay_steps_s)
+            .u64("replayed_steps", stats.replayed_steps);
+    });
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_durability.json");
+    rec.finish(&out).unwrap();
+    println!("durability record written to {}", out.display());
+
+    std::fs::remove_dir_all(&journal_dir).ok();
+    std::fs::remove_dir_all(&crash_dir).ok();
+}

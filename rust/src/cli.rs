@@ -32,8 +32,8 @@ use crate::sim::serving::{run_serving_sim, ServingDemand, ServingSimConfig};
 use crate::sim::simulator::{rate_scale_from_observation, ElasticSim, SchedulerKind};
 use crate::sim::trace::{gen_trace, write_trace_csv, TraceCsvReader};
 use crate::train::{
-    reference_fingerprint, ClusterJob, ClusterRuntime, Colocation, Determinism, ServingTrace,
-    SessionBuilder, TrainConfig,
+    reference_fingerprint, ClusterJob, ClusterReport, ClusterRuntime, Colocation, Determinism,
+    ServingTrace, SessionBuilder, TrainConfig,
 };
 use crate::util::argparse::Args;
 
@@ -104,6 +104,17 @@ SUBCOMMANDS
     --straggler-factor F  flag an executor Degraded when its EWMA step wall
                       exceeds F x the median for 3 consecutive decide
                       epochs; the next replan migrates the job off it
+    --journal DIR     write-ahead journal: every scheduling event and a
+                      per-decide-epoch barrier (scheduler snapshot + per-job
+                      durability checkpoints, fsynced) land in DIR, arming
+                      whole-process crash recovery via --resume
+    --resume DIR      rebuild a journaled run after a crash and continue it:
+                      decisions are read back (not re-planned), checkpoints
+                      load, per-EST steps silently replay to the crash
+                      point — under d1(+d2) the finish is bitwise identical
+                      to the undisturbed run. Pass the same --artifacts and
+                      --preset as the original run; job flags come from the
+                      journal
   plan              print planner configurations for a workload
     --workload NAME   Table-1 model (default: Bert)
     --max-p N         (default: 8)  --gpus SPEC (default: v100:1,t4:1)
@@ -272,6 +283,13 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// N concurrent elastic jobs on one shared heterogeneous fleet: a thin
 /// adapter over [`crate::train::ClusterRuntime`].
 fn cmd_cluster(args: &Args) -> Result<()> {
+    if let Some(dir) = args.get("resume") {
+        if args.get("journal").is_some() {
+            bail!("--journal starts a fresh journaled run; --resume continues one (pick one)");
+        }
+        let dir = dir.to_string();
+        return cmd_cluster_resume(args, Path::new(&dir));
+    }
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let preset = args.str_or("preset", "tiny");
     let n_jobs = args.usize_or("jobs", 3)?;
@@ -333,6 +351,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             bail!("--straggler-factor must be a finite number >= 1.0 (got {s})");
         }
         rt = rt.with_straggler(factor);
+    }
+    if let Some(dir) = args.get("journal") {
+        crate::info!("cluster", "journal: durable control plane armed in {dir}");
+        rt = rt.with_journal(PathBuf::from(dir))?;
     }
     if colocate {
         let trace = match args.get("serving-trace") {
@@ -427,7 +449,80 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         }
     }
     let report = rt.run()?;
+    print_cluster_report(&report, chaos);
 
+    if args.flag("verify") {
+        // each job's fixed-placement sequential V100 reference — the
+        // paper's consistency oracle, shared with tests and the bench
+        let mut all_ok = true;
+        for j in &report.jobs {
+            let cfg = TrainConfig {
+                seed: seed + j.job_id as u64,
+                determinism: det,
+                ..TrainConfig::new(max_p)
+            };
+            let reference = reference_fingerprint(&engine, &cfg, steps)?;
+            let ok = reference == j.report.fingerprint;
+            all_ok &= ok;
+            println!(
+                "verify job {}: reference {reference:16x} -> {}",
+                j.job_id,
+                if ok { "bitwise identical" } else { "DRIFT" }
+            );
+        }
+        if !all_ok {
+            bail!("verification failed: at least one job drifted from its reference");
+        }
+    }
+    Ok(())
+}
+
+/// `cluster --resume DIR`: the whole run configuration comes from the
+/// journal, so only the engine flags (and `--verify`) are read here.
+fn cmd_cluster_resume(args: &Args, dir: &Path) -> Result<()> {
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let preset = args.str_or("preset", "tiny");
+    let engine = Engine::open(&artifacts, &preset)?;
+    crate::info!("cluster", "resuming journaled run from {}", dir.display());
+    let mut rt = ClusterRuntime::resume(&engine, dir)?;
+    if let Some(s) = rt.resume_stats() {
+        crate::info!(
+            "cluster",
+            "resume: journal {:.3}s | grants {:.3}s | checkpoints {:.3}s | \
+             silent replay {:.3}s ({} step(s))",
+            s.load_journal_s,
+            s.replay_grants_s,
+            s.load_ckpt_s,
+            s.replay_steps_s,
+            s.replayed_steps
+        );
+    }
+    let report = rt.run()?;
+    let chaos = report.total_recoveries() > 0 || report.total_replayed() > 0;
+    print_cluster_report(&report, chaos);
+    if args.flag("verify") {
+        // same oracle as a fresh run: each job's fixed-placement
+        // sequential V100 reference, re-derived from the journaled config
+        let mut all_ok = true;
+        for j in &report.jobs {
+            let job = rt.job(j.job_id);
+            let reference = reference_fingerprint(&engine, &job.cfg, job.steps)?;
+            let ok = reference == j.report.fingerprint;
+            all_ok &= ok;
+            println!(
+                "verify job {}: reference {reference:16x} -> {}",
+                j.job_id,
+                if ok { "bitwise identical" } else { "DRIFT" }
+            );
+        }
+        if !all_ok {
+            bail!("verification failed: at least one job drifted from its reference");
+        }
+    }
+    Ok(())
+}
+
+fn print_cluster_report(report: &ClusterReport, chaos: bool) {
     println!(
         "{:>4} | {:>16} | {:>6} | {:>10} | {:>18} | {:>16}",
         "job", "workload", "steps", "final loss", "final GPUs [V,P,T]", "fingerprint"
@@ -474,31 +569,6 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             c.lends, c.reclaims, c.shrinks, c.pauses, c.resumes
         );
     }
-
-    if args.flag("verify") {
-        // each job's fixed-placement sequential V100 reference — the
-        // paper's consistency oracle, shared with tests and the bench
-        let mut all_ok = true;
-        for j in &report.jobs {
-            let cfg = TrainConfig {
-                seed: seed + j.job_id as u64,
-                determinism: det,
-                ..TrainConfig::new(max_p)
-            };
-            let reference = reference_fingerprint(&engine, &cfg, steps)?;
-            let ok = reference == j.report.fingerprint;
-            all_ok &= ok;
-            println!(
-                "verify job {}: reference {reference:16x} -> {}",
-                j.job_id,
-                if ok { "bitwise identical" } else { "DRIFT" }
-            );
-        }
-        if !all_ok {
-            bail!("verification failed: at least one job drifted from its reference");
-        }
-    }
-    Ok(())
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
@@ -794,6 +864,36 @@ mod tests {
             "cluster", "--preset", "tiny", "--faults", "/nonexistent/faults.csv"
         ]))
         .is_err());
+    }
+
+    /// The durable-control-plane smoke: a journaled run completes and
+    /// verifies; resuming its journal truncates back to the last barrier,
+    /// replays the tail and still verifies bitwise; the flag pair is
+    /// mutually exclusive and a missing journal dir is a clean error.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn cluster_journal_and_resume_smoke() {
+        let dir = std::env::temp_dir()
+            .join(format!("easyscale_cli_journal_test_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let dir_s = dir.to_str().unwrap().to_string();
+        let run = main_with(argv(&[
+            "cluster", "--preset", "tiny", "--jobs", "2", "--steps", "6",
+            "--max-p", "4", "--fleet", "v100:2,p100:1,t4:1", "--decide-every", "2",
+            "--sequential", "--journal", &dir_s, "--verify",
+        ]));
+        assert!(run.is_ok(), "journaled run failed: {run:?}");
+        assert!(dir.join("journal.jsonl").exists(), "journal file must land in the dir");
+        let resumed = main_with(argv(&[
+            "cluster", "--preset", "tiny", "--resume", &dir_s, "--verify",
+        ]));
+        assert!(resumed.is_ok(), "resume of a completed journal failed: {resumed:?}");
+        assert!(main_with(argv(&[
+            "cluster", "--preset", "tiny", "--journal", &dir_s, "--resume", &dir_s,
+        ]))
+        .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(main_with(argv(&["cluster", "--preset", "tiny", "--resume", &dir_s])).is_err());
     }
 
     /// The ROADMAP loop-closer: export a gen_trace arrival schedule, then

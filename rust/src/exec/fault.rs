@@ -37,6 +37,11 @@ pub enum FaultKind {
     /// The next checkpoint write at or after `step` is truncated
     /// mid-stream, simulating a crash between write and rename.
     TornCheckpoint,
+    /// Durability-plane storage blips: the next journal/checkpoint barrier
+    /// at or after `step` sees this many consecutive I/O failures before
+    /// storage comes back. Within the retry budget the write just retries;
+    /// past it the runtime degrades the job instead of crashing.
+    IoTransient(u32),
 }
 
 /// One scheduled fault: `kind` fires on `executor` at global step `step`.
@@ -50,13 +55,15 @@ pub struct Fault {
 }
 
 impl Fault {
-    /// One CSV line: `executor,step,kind,factor` (factor is only
-    /// meaningful for `delay`; written as 0 otherwise).
+    /// One CSV line: `executor,step,kind,factor` (factor carries the
+    /// delay multiplier for `delay` and the failure count for `io`;
+    /// written as 0 otherwise).
     pub fn to_csv_line(&self) -> String {
         match self.kind {
             FaultKind::Kill => format!("{},{},kill,0", self.executor, self.step),
             FaultKind::Delay(f) => format!("{},{},delay,{:.3}", self.executor, self.step, f),
             FaultKind::TornCheckpoint => format!("{},{},torn,0", self.executor, self.step),
+            FaultKind::IoTransient(n) => format!("{},{},io,{}", self.executor, self.step, n),
         }
     }
 }
@@ -90,6 +97,17 @@ impl FaultPlan {
         &self.faults
     }
 
+    /// Rebuild a plan from the CSV lines of [`Fault::to_csv_line`] — the
+    /// form the cluster journal persists a schedule in, so `--resume`
+    /// re-arms the exact same faults.
+    pub fn from_csv_lines<S: AsRef<str>>(lines: &[S]) -> anyhow::Result<FaultPlan> {
+        let mut faults = Vec::with_capacity(lines.len());
+        for (i, line) in lines.iter().enumerate() {
+            faults.push(parse_fault_line(line.as_ref(), i + 1)?);
+        }
+        Ok(FaultPlan::new(faults))
+    }
+
     /// Re-arm every fault (a fresh run over the same schedule).
     pub fn reset(&self) {
         for f in &self.fired {
@@ -110,7 +128,7 @@ impl FaultPlan {
             if f.executor != slot || f.step != step {
                 continue;
             }
-            if matches!(f.kind, FaultKind::TornCheckpoint) {
+            if matches!(f.kind, FaultKind::TornCheckpoint | FaultKind::IoTransient(_)) {
                 continue;
             }
             if self.fired[i]
@@ -138,6 +156,46 @@ impl FaultPlan {
             }
         }
         false
+    }
+
+    /// Fire the first un-fired `IoTransient` scheduled at or before
+    /// `step` — the durability barrier asks this before its checkpoint
+    /// and journal writes. Returns the number of consecutive failures
+    /// the storage layer should simulate.
+    pub fn fire_io(&self, step: u64) -> Option<u32> {
+        for (i, f) in self.faults.iter().enumerate() {
+            let FaultKind::IoTransient(n) = f.kind else { continue };
+            if f.step > step {
+                continue;
+            }
+            if self.fired[i]
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return Some(n);
+            }
+        }
+        None
+    }
+
+    /// The fired markers as plain bools, in schedule order — what a
+    /// durability barrier persists so a crash-restart replay does not
+    /// re-fire faults the reference run already consumed.
+    pub fn fired_snapshot(&self) -> Vec<bool> {
+        self.fired.iter().map(|f| f.load(Ordering::Acquire)).collect()
+    }
+
+    /// Restore markers captured by [`Self::fired_snapshot`]. The snapshot
+    /// must describe this exact schedule (same length).
+    pub fn restore_fired(&self, fired: &[bool]) {
+        assert_eq!(
+            fired.len(),
+            self.fired.len(),
+            "fired snapshot does not match this fault schedule"
+        );
+        for (slot, &v) in self.fired.iter().zip(fired) {
+            slot.store(v, Ordering::Release);
+        }
     }
 
     /// A seeded random fault trace over `n_exec` executors and `steps`
@@ -199,6 +257,13 @@ fn parse_fault_line(line: &str, ln: usize) -> anyhow::Result<Fault> {
             FaultKind::Delay(factor)
         }
         "torn" => FaultKind::TornCheckpoint,
+        "io" => {
+            anyhow::ensure!(
+                factor >= 1.0 && factor.fract() == 0.0 && factor <= u32::MAX as f64,
+                "fault line {ln}: io failure count must be a positive integer"
+            );
+            FaultKind::IoTransient(factor as u32)
+        }
         other => anyhow::bail!("fault line {ln}: unknown kind '{other}'"),
     };
     Ok(Fault { executor, step, kind })
@@ -340,6 +405,49 @@ mod tests {
         assert!(parse_fault_line("x,2,kill,0", 1).is_err());
         assert!(parse_fault_line("1,2,delay,0", 1).is_err());
         assert!(parse_fault_line("1,2,delay,3.5", 1).is_ok());
+        assert!(parse_fault_line("0,4,io,2", 1).is_ok());
+        assert!(parse_fault_line("0,4,io,0", 1).is_err(), "zero failures is meaningless");
+        assert!(parse_fault_line("0,4,io,1.5", 1).is_err(), "a failure count is integral");
+    }
+
+    #[test]
+    fn io_transient_fires_once_at_or_after_its_step() {
+        let plan = FaultPlan::new(vec![
+            Fault { executor: 0, step: 3, kind: FaultKind::IoTransient(2) },
+            Fault { executor: 0, step: 3, kind: FaultKind::Kill },
+        ]);
+        assert_eq!(plan.fire(0, 3), Some(FaultKind::Kill), "fire() skips io faults");
+        assert_eq!(plan.fire_io(2), None, "not due yet");
+        assert_eq!(plan.fire_io(5), Some(2));
+        assert_eq!(plan.fire_io(5), None, "io fault fires once");
+        // csv round trip keeps the failure count
+        let line = Fault { executor: 1, step: 7, kind: FaultKind::IoTransient(4) }.to_csv_line();
+        assert_eq!(line, "1,7,io,4");
+        let back = parse_fault_line(&line, 1).unwrap();
+        assert_eq!(back.kind, FaultKind::IoTransient(4));
+    }
+
+    #[test]
+    fn fired_snapshot_roundtrips() {
+        let plan = FaultPlan::new(vec![
+            Fault { executor: 0, step: 1, kind: FaultKind::Kill },
+            Fault { executor: 0, step: 2, kind: FaultKind::TornCheckpoint },
+            Fault { executor: 0, step: 3, kind: FaultKind::IoTransient(1) },
+        ]);
+        assert_eq!(plan.fire(0, 1), Some(FaultKind::Kill));
+        assert!(plan.fire_torn(2));
+        let snap = plan.fired_snapshot();
+        assert_eq!(snap, vec![true, true, false]);
+
+        // a freshly parsed plan restored from the snapshot must not
+        // re-fire what the original run already consumed
+        let lines: Vec<String> = plan.faults().iter().map(|f| f.to_csv_line()).collect();
+        let restored = FaultPlan::from_csv_lines(&lines).unwrap();
+        restored.restore_fired(&snap);
+        assert_eq!(restored.fire(0, 1), None, "kill already fired pre-snapshot");
+        assert!(!restored.fire_torn(2), "torn already fired pre-snapshot");
+        assert_eq!(restored.fire_io(3), Some(1), "io still pending");
+        assert_eq!(restored.fired_snapshot(), vec![true, true, true]);
     }
 
     #[test]

@@ -413,13 +413,32 @@ fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
 fn barrier_timeout() -> Duration {
     static TIMEOUT: OnceLock<Duration> = OnceLock::new();
     *TIMEOUT.get_or_init(|| {
-        let secs = std::env::var("EASYSCALE_BARRIER_TIMEOUT_S")
-            .ok()
-            .and_then(|v| v.parse::<f64>().ok())
-            .filter(|v| *v > 0.0)
-            .unwrap_or(30.0);
-        Duration::from_secs_f64(secs)
+        let raw = std::env::var("EASYSCALE_BARRIER_TIMEOUT_S").ok();
+        let (timeout, ignored) = barrier_timeout_from(raw.as_deref());
+        if ignored {
+            crate::warnlog!(
+                "pool",
+                "ignoring invalid EASYSCALE_BARRIER_TIMEOUT_S={:?}; using {}s",
+                raw.unwrap_or_default(),
+                timeout.as_secs_f64()
+            );
+        }
+        timeout
     })
+}
+
+/// Resolve the raw env value to a timeout plus whether an invalid value
+/// was ignored. `inf`/`nan` parse as `f64` but are not representable as
+/// a `Duration` (`Duration::from_secs_f64` panics), so the filter is
+/// *finite and positive*, not just positive.
+fn barrier_timeout_from(raw: Option<&str>) -> (Duration, bool) {
+    match raw {
+        None => (Duration::from_secs_f64(30.0), false),
+        Some(v) => match v.parse::<f64>().ok().filter(|v| v.is_finite() && *v > 0.0) {
+            Some(secs) => (Duration::from_secs_f64(secs), false),
+            None => (Duration::from_secs_f64(30.0), true),
+        },
+    }
 }
 
 /// Pool locks are only ever taken between steps (by the trainer) or by the
@@ -826,6 +845,17 @@ mod tests {
     use super::*;
     use crate::exec::devices::DeviceType;
     use crate::exec::executor::Placement;
+
+    #[test]
+    fn barrier_timeout_rejects_nonfinite_and_nonpositive() {
+        let thirty = Duration::from_secs_f64(30.0);
+        assert_eq!(barrier_timeout_from(None), (thirty, false));
+        assert_eq!(barrier_timeout_from(Some("2.5")), (Duration::from_secs_f64(2.5), false));
+        // `inf`/`nan` parse as f64 but would panic Duration::from_secs_f64
+        for bad in ["inf", "+inf", "-inf", "nan", "0", "-3", "soon", ""] {
+            assert_eq!(barrier_timeout_from(Some(bad)), (thirty, true), "raw {bad:?}");
+        }
+    }
 
     /// Upload via the shared-upload cache instead of a private
     /// `upload_params`, so every pool test incidentally covers the

@@ -504,6 +504,59 @@ impl ClusterScheduler {
         held
     }
 
+    // -- journal replay ----------------------------------------------------
+
+    /// Re-seat the fleet accounting from a journal barrier. Replay reads
+    /// these numbers back rather than re-deriving them: the journaled
+    /// grants *are* the decisions, and re-planning could fork the
+    /// schedule. Restores both totals wholesale; call before any
+    /// [`ClusterScheduler::restore_job`].
+    pub fn restore_fleet(&mut self, fleet: GpuVector, available: GpuVector) {
+        debug_assert!((0..3).all(|i| available[i] <= fleet[i]));
+        self.fleet = fleet;
+        self.available = available;
+    }
+
+    /// Re-seat one job from a journal barrier: phase, FIFO arrival key,
+    /// preemption count, degraded flag and held GPUs, exactly as
+    /// journaled. Held GPUs are *not* debited from `available` — the
+    /// barrier's `available` (restored via
+    /// [`ClusterScheduler::restore_fleet`]) already excludes them.
+    pub fn restore_job(
+        &mut self,
+        id: usize,
+        phase: JobPhase,
+        arrival: f64,
+        held: GpuVector,
+        preemptions: u64,
+        degraded: bool,
+    ) {
+        let j = &mut self.jobs[id];
+        j.phase = phase;
+        j.arrival = arrival;
+        j.preemptions = preemptions;
+        j.degraded = degraded;
+        // follows the degraded-migration precedent: the master's holding
+        // is authoritative scheduler state, set directly during replay
+        j.master.held = held;
+    }
+
+    /// Strip a running job of its GPUs and send it back to the queue —
+    /// the graceful-degradation path when its durability I/O stays down
+    /// past the retry budget. Counts as a preemption; the free pool
+    /// reabsorbs the GPUs for the next replan.
+    pub fn requeue(&mut self, id: usize) -> GpuVector {
+        if self.jobs[id].phase != JobPhase::Running {
+            return [0, 0, 0];
+        }
+        let held = self.jobs[id].master.held;
+        self.jobs[id].master.revoke(held);
+        self.release(held).expect("a requeued job's GPUs fit back into the fleet");
+        self.jobs[id].phase = JobPhase::Queued;
+        self.jobs[id].preemptions += 1;
+        held
+    }
+
     // -- the replanning policy ---------------------------------------------
 
     /// One replanning round over all managed jobs (paper §3.4.2): FIFO

@@ -688,6 +688,13 @@ impl Mailbox {
     pub fn clear(&self) {
         self.lock().clear();
     }
+
+    /// Clone the undelivered events in delivery order — the durability
+    /// journal snapshots mailed-but-unapplied reconfigures at each
+    /// barrier so `--resume` can re-mail them verbatim.
+    pub fn snapshot(&self) -> Vec<ElasticEvent> {
+        self.lock().iter().cloned().collect()
+    }
 }
 
 /// Drains its [`Mailbox`] before every mini-batch, in pushed order.

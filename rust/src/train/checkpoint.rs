@@ -73,6 +73,19 @@ fn parse_hex16(s: &str) -> Result<u64> {
     u64::from_str_radix(s, 16).context("bad hex state")
 }
 
+/// Fsync a directory so a just-committed rename (or create) of an entry
+/// inside it survives power loss. Shared by checkpoint saves and the
+/// cluster journal. On platforms where directories cannot be opened for
+/// sync (e.g. Windows) this degrades to a no-op.
+pub(crate) fn fsync_dir(dir: &Path) -> Result<()> {
+    match std::fs::File::open(dir) {
+        Ok(d) => d
+            .sync_all()
+            .with_context(|| format!("fsyncing directory {}", dir.display())),
+        Err(_) => Ok(()),
+    }
+}
+
 #[derive(Debug)]
 pub struct Checkpoint;
 
@@ -124,6 +137,12 @@ impl Checkpoint {
         std::fs::rename(&tmp, path).with_context(|| {
             format!("committing checkpoint {} -> {}", tmp.display(), path.display())
         })?;
+        // the rename is only durable once the *directory entry* is on
+        // disk; without this a power failure can roll back to the old
+        // file (or to nothing) after save() already reported success
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            fsync_dir(dir)?;
+        }
         Ok(())
     }
 
@@ -203,6 +222,12 @@ impl Checkpoint {
     }
 
     pub fn load(path: &Path) -> Result<TrainState> {
+        // a stray tmp sibling is a crash that died before its rename;
+        // the bytes under `path` are authoritative, so sweep the residue
+        let tmp = Self::tmp_path(path);
+        if tmp.exists() && std::fs::remove_file(&tmp).is_ok() {
+            crate::warnlog!("checkpoint", "swept stale {}", tmp.display());
+        }
         let mut f = std::io::BufReader::new(
             std::fs::File::open(path)
                 .with_context(|| format!("opening checkpoint {}", path.display()))?,
@@ -385,6 +410,23 @@ mod tests {
         for (a, b) in state.momenta.iter().zip(&loaded.momenta) {
             assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
         }
+    }
+
+    /// Satellite: a crash between tmp-write and rename leaves a stray
+    /// `.tmp` next to the (old) checkpoint; load must sweep it so the
+    /// directory never accumulates residue across restarts.
+    #[test]
+    fn load_sweeps_stale_tmp_sibling() {
+        let dir = std::env::temp_dir().join("easyscale_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stale.ckpt");
+        let state = sample_state();
+        Checkpoint::save(&path, &state).unwrap();
+        let tmp = Checkpoint::tmp_path(&path);
+        std::fs::write(&tmp, b"half-written residue").unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.step, state.step);
+        assert!(!tmp.exists(), "stale .tmp must be swept on load");
     }
 
     #[test]

@@ -26,12 +26,12 @@
 //! fixed-placement sequential reference no matter how the fleet was
 //! shuffled underneath it (`tests/cluster.rs`).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::exec::{DeviceType, FaultPlan, Placement, RunMode};
 use crate::model::workload::Workload;
@@ -41,9 +41,16 @@ use crate::sched::director::{
     placement_from_config, ElasticEvent, Mailbox, MailboxDirector, StragglerTracker,
 };
 use crate::sched::plan::{GpuVector, JobSpec};
-use crate::train::colocate::{Colocation, ColocationReport, PauseRecord};
+use crate::train::checkpoint::CheckpointError;
+use crate::train::colocate::{Colocation, ColocationReport, PauseRecord, PartitionMode, ServingTrace};
+use crate::train::determinism::Determinism;
+use crate::train::journal::{
+    BarrierJob, BarrierRecord, ColoCounters, ColoMeta, Journal, JournalEvent, JournalMeta,
+    JournalSubmit, RetiredReport, JOURNAL_VERSION,
+};
 use crate::train::session::{ElasticSession, RecoveryMode, SessionReport};
 use crate::train::{SessionBuilder, TrainConfig, Trainer};
+use crate::util::retry::{with_retry, RetryPolicy};
 
 /// The paper's consistency oracle for one job configuration: `max_p`
 /// workers on `max_p` V100s, sequential executors, straight through —
@@ -120,6 +127,58 @@ impl ClusterReport {
     }
 }
 
+fn retired_from(r: &SessionReport) -> RetiredReport {
+    RetiredReport {
+        steps_run: r.steps_run,
+        final_step: r.final_step,
+        first_loss: r.first_loss,
+        final_loss: r.final_loss,
+        fingerprint: r.fingerprint,
+        reconfigs: r.reconfigs,
+        evals: r.evals,
+        wall_s: r.wall_s,
+        observed_rate: r.observed_rate,
+        stopped_early: r.stopped_early,
+        recoveries: r.recoveries,
+        replayed_steps: r.replayed_steps,
+    }
+}
+
+fn report_from_retired(r: &RetiredReport) -> SessionReport {
+    SessionReport {
+        steps_run: r.steps_run,
+        final_step: r.final_step,
+        first_loss: r.first_loss,
+        final_loss: r.final_loss,
+        fingerprint: r.fingerprint,
+        reconfigs: r.reconfigs,
+        evals: r.evals,
+        wall_s: r.wall_s,
+        observed_rate: r.observed_rate,
+        stopped_early: r.stopped_early,
+        recoveries: r.recoveries,
+        replayed_steps: r.replayed_steps,
+    }
+}
+
+/// Where a `--resume` spent its recovery wall-clock, split by phase —
+/// the latency breakdown `BENCH_durability.json` reports.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ResumeStats {
+    /// Reading and parsing the journal.
+    pub load_journal_s: f64,
+    /// Re-seating scheduler/fleet/slot state from the barrier record
+    /// (the "replay grants" phase — decisions read back, not re-derived).
+    pub replay_grants_s: f64,
+    /// Loading per-job durability checkpoints.
+    pub load_ckpt_s: f64,
+    /// Silently replaying per-EST steps from each checkpoint to the
+    /// barrier step.
+    pub replay_steps_s: f64,
+    /// Mini-batches re-run during that silent replay, across all jobs.
+    pub replayed_steps: u64,
+}
+
 struct Slot<'e> {
     job: ClusterJob,
     /// Built when the scheduler first grants GPUs; torn down at budget.
@@ -156,6 +215,10 @@ struct Slot<'e> {
     prior_first_loss: Option<f32>,
     prior_recoveries: u64,
     prior_replayed: u64,
+    /// Recovery totals as of the last journal barrier — the deltas become
+    /// [`JournalEvent::Recovery`] audit records at the next one.
+    journaled_recoveries: u64,
+    journaled_replayed: u64,
 }
 
 /// What one serving-fleet retune did. The scheduler side (lend/reclaim,
@@ -179,9 +242,14 @@ enum RunnerCmd {
     /// Serving reclaim took every GPU: checkpoint to `path`, report the
     /// segment run so far, tear the session down and exit.
     Pause { path: PathBuf },
-    /// Assemble the final report (with the driver-measured wall-clock)
-    /// and exit.
-    Retire { wall_s: f64 },
+    /// Durability barrier: write a checkpoint to `path` (retried; the
+    /// first `inject` attempts fail, simulating an `IoTransient` storage
+    /// outage) and report the session's barrier-relevant state. The
+    /// runner stays alive.
+    Checkpoint { path: PathBuf, inject: u32 },
+    /// Assemble the final report (with the driver-measured wall-clock),
+    /// write a final checkpoint when the journal wants one, and exit.
+    Retire { wall_s: f64, final_ckpt: Option<PathBuf> },
 }
 
 /// What a job-runner thread reports back to the driver.
@@ -195,7 +263,18 @@ enum RunnerReply {
         error: Option<anyhow::Error>,
     },
     Paused { report: Box<SessionReport>, error: Option<anyhow::Error> },
-    Retired(Box<SessionReport>),
+    /// Answer to [`RunnerCmd::Checkpoint`]: the segment report plus the
+    /// trainer state the barrier record needs. `error` is set when the
+    /// injected outage outlasted the retry budget (the checkpoint was
+    /// NOT written) — the driver degrades the job.
+    Checkpointed {
+        report: Box<SessionReport>,
+        step: u64,
+        restart_count: u64,
+        placement: Box<Placement>,
+        error: Option<String>,
+    },
+    Retired { report: Box<SessionReport>, error: Option<anyhow::Error> },
 }
 
 /// The driver's handle to one persistent job-runner thread.
@@ -249,9 +328,34 @@ fn job_runner(
                 let _ = replies.send(RunnerReply::Paused { report: Box::new(report), error });
                 return;
             }
-            RunnerCmd::Retire { wall_s } => {
+            RunnerCmd::Checkpoint { path, inject } => {
+                // same bounded-backoff policy the inline driver uses, so
+                // both drivers degrade at the same injected outage length
+                let error = with_retry(&crate::util::retry::RetryPolicy::default(), |attempt| {
+                    if attempt < inject {
+                        Err(anyhow::anyhow!("injected transient I/O failure"))
+                    } else {
+                        session.trainer.checkpoint(&path)
+                    }
+                })
+                .err()
+                .map(|e| format!("{e:#}"));
+                let reply = RunnerReply::Checkpointed {
+                    report: Box::new(session.report(0.0)),
+                    step: session.trainer.state.step,
+                    restart_count: session.trainer.state.restart_count,
+                    placement: Box::new(session.trainer.placement.clone()),
+                    error,
+                };
+                if replies.send(reply).is_err() {
+                    return;
+                }
+            }
+            RunnerCmd::Retire { wall_s, final_ckpt } => {
+                let error = final_ckpt.and_then(|p| session.trainer.checkpoint(&p).err());
                 let report = session.report(wall_s);
-                let _ = replies.send(RunnerReply::Retired(Box::new(report)));
+                let _ = replies
+                    .send(RunnerReply::Retired { report: Box::new(report), error });
                 return;
             }
         }
@@ -286,6 +390,32 @@ pub struct ClusterRuntime<'e> {
     /// a job whose slowest executor EWMA exceeds `factor` x its median for
     /// 3 consecutive decide epochs is flagged `Degraded` to the scheduler.
     straggler_factor: Option<f64>,
+    /// The durable control plane ([`ClusterRuntime::with_journal`] /
+    /// [`ClusterRuntime::resume`]): events + barriers land here.
+    journal: Option<Journal>,
+    /// Set once the meta + submit prologue is on disk (immediately on
+    /// resume — the prologue is already journaled).
+    meta_written: bool,
+    /// Events accumulated since the last barrier, flushed (in order)
+    /// right before each barrier record.
+    pending_events: Vec<JournalEvent>,
+    /// Fault fired-markers as of the last barrier — diffed against the
+    /// live snapshot to journal `FaultFired` audit events.
+    prev_fired: Vec<bool>,
+    /// Round the run (re)starts at: 0 fresh, the barrier round on resume.
+    start_round: u64,
+    /// True when this runtime was rebuilt by [`ClusterRuntime::resume`]:
+    /// the boundary work at `start_round` already happened before the
+    /// crash and must not run again.
+    resumed: bool,
+    /// Decision/reconfiguration counters accumulated before the resume
+    /// point (the journaled totals continue, not restart).
+    decisions_base: u64,
+    reconfigs_base: u64,
+    /// Retry budget for journal appends and barrier checkpoints.
+    retry: RetryPolicy,
+    /// Filled by [`ClusterRuntime::resume`].
+    resume_stats: Option<ResumeStats>,
 }
 
 /// Distinguishes concurrent runtimes' default pause directories within one
@@ -310,6 +440,16 @@ impl<'e> ClusterRuntime<'e> {
             pause_dir: None,
             faults: None,
             straggler_factor: None,
+            journal: None,
+            meta_written: false,
+            pending_events: Vec::new(),
+            prev_fired: Vec::new(),
+            start_round: 0,
+            resumed: false,
+            decisions_base: 0,
+            reconfigs_base: 0,
+            retry: RetryPolicy::default(),
+            resume_stats: None,
         }
     }
 
@@ -356,6 +496,30 @@ impl<'e> ClusterRuntime<'e> {
     pub fn with_pause_dir(mut self, dir: PathBuf) -> Self {
         self.pause_dir = Some(dir);
         self
+    }
+
+    /// Arm the durable control plane: every consistency-relevant event
+    /// and a per-decide-epoch barrier (scheduler snapshot + per-job
+    /// durability checkpoints) land in `dir`, from which
+    /// [`ClusterRuntime::resume`] can rebuild the whole runtime after a
+    /// process kill. Forces the pause dir to `dir` so paused-job
+    /// checkpoints are co-durable with the journal that references them.
+    pub fn with_journal(mut self, dir: PathBuf) -> Result<Self> {
+        self.journal = Some(Journal::create(&dir)?);
+        self.pause_dir = Some(dir);
+        Ok(self)
+    }
+
+    /// The resume latency split, when this runtime came from
+    /// [`ClusterRuntime::resume`].
+    pub fn resume_stats(&self) -> Option<ResumeStats> {
+        self.resume_stats
+    }
+
+    /// A submitted job's spec (e.g. for `cluster --resume --verify`,
+    /// which re-derives each job's sequential reference fingerprint).
+    pub fn job(&self, id: usize) -> &ClusterJob {
+        &self.slots[id].job
     }
 
     /// The co-location outcome accumulated so far (final after `run`).
@@ -423,6 +587,8 @@ impl<'e> ClusterRuntime<'e> {
             prior_first_loss: None,
             prior_recoveries: 0,
             prior_replayed: 0,
+            journaled_recoveries: 0,
+            journaled_replayed: 0,
         });
         id
     }
@@ -435,6 +601,9 @@ impl<'e> ClusterRuntime<'e> {
             if !self.slots[id].arrived && self.slots[id].arrival_round <= round {
                 self.slots[id].arrived = true;
                 self.scheduler.arrive(id, self.slots[id].arrival_round as f64);
+                if self.journal.is_some() {
+                    self.pending_events.push(JournalEvent::Arrive { round, job: id });
+                }
             }
         }
     }
@@ -463,6 +632,9 @@ impl<'e> ClusterRuntime<'e> {
             self.scheduler.fleet().iter().sum::<usize>() > 0,
             "cluster fleet holds zero GPUs"
         );
+        if self.journal.is_some() && !self.meta_written {
+            self.write_run_prologue()?;
+        }
         if self.job_threads != 1 {
             self.run_concurrent()
         } else {
@@ -470,21 +642,82 @@ impl<'e> ClusterRuntime<'e> {
         }
     }
 
+    /// Make the run's configuration durable before the first round: one
+    /// `meta` record plus one `submit` per job, fsynced. Everything
+    /// resume needs that is not per-barrier state lives here.
+    fn write_run_prologue(&mut self) -> Result<()> {
+        let meta = JournalMeta {
+            version: JOURNAL_VERSION,
+            fleet: self.scheduler.fleet(),
+            decide_every: self.decide_every,
+            job_threads: self.job_threads,
+            full_rebuild: self.full_rebuild,
+            straggler_factor: self.straggler_factor,
+            colocate: self.colocation.as_ref().map(|c| ColoMeta {
+                static_mode: c.mode == PartitionMode::Static,
+                demand: c.trace.demand.clone(),
+            }),
+            faults: self
+                .faults
+                .as_ref()
+                .map(|p| p.faults().iter().map(|f| f.to_csv_line()).collect())
+                .unwrap_or_default(),
+        };
+        let journal = self.journal.as_mut().expect("prologue only with a journal");
+        journal.append_meta(&meta)?;
+        for (id, slot) in self.slots.iter().enumerate() {
+            let cfg = &slot.job.cfg;
+            let (sequential, threads) = match cfg.run_mode {
+                RunMode::Sequential => (true, 0),
+                RunMode::Parallel { max_threads } => (false, max_threads),
+            };
+            journal.append_submit(&JournalSubmit {
+                id,
+                workload: slot.job.workload.profile().name.to_string(),
+                arrival_round: slot.arrival_round,
+                steps: slot.job.steps,
+                seed: cfg.seed,
+                max_p: cfg.max_p,
+                lr: cfg.lr,
+                dataset_size: cfg.dataset_size,
+                bucket_cap_bytes: cfg.bucket_cap_bytes,
+                aug_rate: cfg.aug_rate,
+                run_nonce: cfg.run_nonce,
+                d0: cfg.determinism.d0,
+                d1: cfg.determinism.d1,
+                d2: cfg.determinism.d2,
+                sequential,
+                threads,
+            })?;
+        }
+        journal.sync()?;
+        self.meta_written = true;
+        if let Some(plan) = self.faults.as_ref() {
+            self.prev_fired = plan.fired_snapshot();
+        }
+        Ok(())
+    }
+
     /// The single-threaded driver: every round steps each placed job once,
     /// in submission order.
     fn run_round_robin(&mut self) -> Result<ClusterReport> {
         let t0 = Instant::now();
-        let mut decisions = 0u64;
-        let mut reconfigs = 0u64;
-        let mut round = 0u64;
+        let mut decisions = self.decisions_base;
+        let mut reconfigs = self.reconfigs_base;
+        let mut round = self.start_round;
         let mut need_decide = false;
         loop {
             self.admit(round);
+            // a resumed run starts AT its barrier: the retune/replan for
+            // `start_round` happened before the crash and is baked into
+            // the restored state — running it again would double-decide
+            let resumed_here = self.resumed && round == self.start_round;
             // at most one replanning round per step round: the boundary
             // cadence and the post-finish fallback used to be able to both
-            // fire in the same round, double-counting `decisions`
-            let mut decided_this_round = false;
-            if round % self.decide_every == 0 || need_decide {
+            // fire in the same round, double-counting `decisions` (a
+            // resumed start round counts as already decided)
+            let mut decided_this_round = resumed_here;
+            if (round % self.decide_every == 0 || need_decide) && !resumed_here {
                 // serving first: the fleet must reflect this epoch's demand
                 // (and reclaimed-to-zero jobs must be physically paused)
                 // before replanning can hand GPUs out
@@ -496,6 +729,7 @@ impl<'e> ClusterRuntime<'e> {
                 reconfigs += self.decide(round, &mut decisions)?;
                 need_decide = false;
                 decided_this_round = true;
+                self.journal_barrier_inline(round, decisions, reconfigs)?;
             }
             let mut progressed = false;
             for id in 0..self.slots.len() {
@@ -506,7 +740,7 @@ impl<'e> ClusterRuntime<'e> {
                 match step {
                     Some(_) => progressed = true,
                     None => {
-                        self.retire(id);
+                        self.retire(id, round)?;
                         need_decide = true; // redistribute immediately
                     }
                 }
@@ -543,6 +777,7 @@ impl<'e> ClusterRuntime<'e> {
                 // either, the fleet is unusable
                 if !decided_this_round {
                     reconfigs += self.decide(round, &mut decisions)?;
+                    self.journal_barrier_inline(round, decisions, reconfigs)?;
                 }
                 ensure!(
                     self.slots.iter().any(|s| s.session.is_some()),
@@ -571,45 +806,54 @@ impl<'e> ClusterRuntime<'e> {
         let rounds = self.decide_every;
         let cap = self.job_threads;
         let n = self.slots.len();
-        let mut decisions = 0u64;
-        let mut reconfigs = 0u64;
+        let mut decisions = self.decisions_base;
+        let mut reconfigs = self.reconfigs_base;
         std::thread::scope(|scope| -> Result<()> {
             let mut runners: Vec<Option<JobRunner>> = (0..n).map(|_| None).collect();
-            let mut epoch = 0u64;
+            let start_epoch = self.start_round / rounds;
+            let mut epoch = start_epoch;
             loop {
                 let round = epoch * rounds;
-                self.admit(round);
-                // serving first: retune the fleet and physically pause any
-                // job reclaimed to zero before the replanning barrier below
-                // can hand GPUs back out. Runners are idle between barriers,
-                // so the Pause command is answered immediately.
-                let retune = self.retune_fleet(round)?;
-                for id in retune.pauses {
-                    let path = self.pause_path(id, round)?;
-                    let runner = runners[id]
-                        .take()
-                        .ok_or_else(|| anyhow::anyhow!("paused job {id} has no runner"))?;
-                    runner
-                        .cmd
-                        .send(RunnerCmd::Pause { path: path.clone() })
-                        .map_err(|_| anyhow::anyhow!("job {id} runner thread is gone"))?;
-                    match runner.reply.recv() {
-                        Ok(RunnerReply::Paused { report, error }) => {
-                            if let Some(e) = error {
-                                return Err(e);
+                // a resumed run starts AT its barrier epoch: the retune,
+                // replan and barrier record for this round predate the
+                // crash and are baked into the restored state — only the
+                // runner spawn below must still happen
+                let resumed_here = self.resumed && epoch == start_epoch;
+                if !resumed_here {
+                    self.admit(round);
+                    // serving first: retune the fleet and physically pause
+                    // any job reclaimed to zero before the replanning
+                    // barrier below can hand GPUs back out. Runners are
+                    // idle between barriers, so the Pause command is
+                    // answered immediately.
+                    let retune = self.retune_fleet(round)?;
+                    for id in retune.pauses {
+                        let path = self.pause_path(id, round)?;
+                        let runner = runners[id]
+                            .take()
+                            .ok_or_else(|| anyhow::anyhow!("paused job {id} has no runner"))?;
+                        runner
+                            .cmd
+                            .send(RunnerCmd::Pause { path: path.clone() })
+                            .map_err(|_| anyhow::anyhow!("job {id} runner thread is gone"))?;
+                        match runner.reply.recv() {
+                            Ok(RunnerReply::Paused { report, error }) => {
+                                if let Some(e) = error {
+                                    return Err(e);
+                                }
+                                self.note_pause(id, round, path, &report);
                             }
-                            self.note_pause(id, path, &report);
-                        }
-                        _ => {
-                            return Err(anyhow::anyhow!(
-                                "job {id} runner failed to acknowledge its pause"
-                            ));
+                            _ => {
+                                return Err(anyhow::anyhow!(
+                                    "job {id} runner failed to acknowledge its pause"
+                                ));
+                            }
                         }
                     }
+                    reconfigs += retune.mailed;
+                    // the scheduling barrier: observe rates, replan, mail
+                    reconfigs += self.decide(round, &mut decisions)?;
                 }
-                reconfigs += retune.mailed;
-                // the scheduling barrier: observe rates, replan, mail events
-                reconfigs += self.decide(round, &mut decisions)?;
                 // newly placed sessions move onto fresh persistent runners
                 for id in 0..n {
                     if let Some(session) = self.slots[id].session.take() {
@@ -618,6 +862,12 @@ impl<'e> ClusterRuntime<'e> {
                         scope.spawn(move || job_runner(session, cmd_rx, rep_tx));
                         runners[id] = Some(JobRunner { cmd: cmd_tx, reply: rep_rx });
                     }
+                }
+                if !resumed_here {
+                    // the durability barrier: sessions are parked on their
+                    // (idle) runners, so checkpoints land at exactly the
+                    // step the round-robin driver would cut them at
+                    self.journal_barrier_concurrent(round, decisions, reconfigs, &mut runners)?;
                 }
                 let active: Vec<usize> = (0..n)
                     .filter(|&id| runners[id].is_some() && self.slots[id].report.is_none())
@@ -695,13 +945,30 @@ impl<'e> ClusterRuntime<'e> {
                         .map(|t| t.elapsed().as_secs_f64())
                         .unwrap_or(0.0);
                     let runner = runners[id].take().expect("finished job without runner");
+                    let final_ckpt = self
+                        .journal
+                        .as_ref()
+                        .map(|j| j.dir().join(format!("job{id}_final.ckpt")));
                     runner
                         .cmd
-                        .send(RunnerCmd::Retire { wall_s: wall })
+                        .send(RunnerCmd::Retire { wall_s: wall, final_ckpt })
                         .map_err(|_| anyhow::anyhow!("job {id} runner thread is gone"))?;
                     match runner.reply.recv() {
-                        Ok(RunnerReply::Retired(report)) => {
-                            self.slots[id].report = Some(self.merged_report(id, *report));
+                        Ok(RunnerReply::Retired { report, error }) => {
+                            if let Some(e) = error {
+                                return Err(e.context(format!("job {id} final checkpoint")));
+                            }
+                            let merged = self.merged_report(id, *report);
+                            if self.journal.is_some() {
+                                self.pending_events.push(JournalEvent::Retire {
+                                    round,
+                                    job: id,
+                                    final_gpus: self.slots[id].final_gpus,
+                                    ckpt: Some(format!("job{id}_final.ckpt")),
+                                    report: retired_from(&merged),
+                                });
+                            }
+                            self.slots[id].report = Some(merged);
                         }
                         _ => {
                             return Err(anyhow::anyhow!(
@@ -734,14 +1001,35 @@ impl<'e> ClusterRuntime<'e> {
     }
 
     /// A job hit its step budget: take its report, tear the session down,
-    /// return its GPUs to the pool.
-    fn retire(&mut self, id: usize) {
+    /// return its GPUs to the pool. With the journal armed, a final
+    /// checkpoint makes the finished model durable and a `Retire` record
+    /// carries the report, so resume never re-runs a finished job.
+    fn retire(&mut self, id: usize, round: u64) -> Result<()> {
         self.slots[id].final_gpus = self.scheduler.held(id);
-        let session = self.slots[id].session.take().unwrap();
+        let mut session = self.slots[id].session.take().unwrap();
+        let ckpt = match self.journal.as_ref() {
+            Some(j) => {
+                let name = format!("job{id}_final.ckpt");
+                session.trainer.checkpoint(&j.dir().join(&name))?;
+                Some(name)
+            }
+            None => None,
+        };
         let wall = self.slots[id].started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
-        self.slots[id].report = Some(self.merged_report(id, session.report(wall)));
+        let report = self.merged_report(id, session.report(wall));
+        if self.journal.is_some() {
+            self.pending_events.push(JournalEvent::Retire {
+                round,
+                job: id,
+                final_gpus: self.slots[id].final_gpus,
+                ckpt,
+                report: retired_from(&report),
+            });
+        }
+        self.slots[id].report = Some(report);
         let released = self.scheduler.finish(id);
         crate::info!("cluster", "job {id} finished, released {released:?} GPUs");
+        Ok(())
     }
 
     /// Fold progress from sessions torn down at serving pauses into the
@@ -770,6 +1058,14 @@ impl<'e> ClusterRuntime<'e> {
         decisions: u64,
         reconfigs: u64,
     ) -> Result<ClusterReport> {
+        // events since the last barrier (late retirements, mostly) still
+        // belong on the durable record of a *completed* run
+        if let Some(journal) = self.journal.as_mut() {
+            for ev in self.pending_events.drain(..) {
+                journal.append_event(&ev)?;
+            }
+            journal.sync()?;
+        }
         let mut jobs = Vec::with_capacity(self.slots.len());
         for (id, slot) in self.slots.iter_mut().enumerate() {
             let report = slot.report.take().with_context(|| format!("job {id} has no report"))?;
@@ -806,7 +1102,15 @@ impl<'e> ClusterRuntime<'e> {
 
     /// Bookkeeping shared by both drivers once a job's session has been
     /// checkpointed and torn down for a serving pause.
-    fn note_pause(&mut self, id: usize, path: PathBuf, report: &SessionReport) {
+    fn note_pause(&mut self, id: usize, round: u64, path: PathBuf, report: &SessionReport) {
+        if self.journal.is_some() {
+            let ckpt = path
+                .file_name()
+                .and_then(|s| s.to_str())
+                .unwrap_or("pause.ckpt")
+                .to_string();
+            self.pending_events.push(JournalEvent::Pause { round, job: id, ckpt });
+        }
         let slot = &mut self.slots[id];
         slot.prior_steps += report.steps_run;
         slot.prior_reconfigs += report.reconfigs;
@@ -843,7 +1147,7 @@ impl<'e> ClusterRuntime<'e> {
         session.trainer.checkpoint(&path)?;
         let report = session.report(0.0);
         drop(session);
-        self.note_pause(id, path, &report);
+        self.note_pause(id, round, path, &report);
         Ok(())
     }
 
@@ -905,6 +1209,10 @@ impl<'e> ClusterRuntime<'e> {
             colo.reclaims += 1;
             colo.shrinks += shrinks;
         }
+        if self.journal.is_some() && (lend.iter().any(|&n| n > 0) || take.iter().any(|&n| n > 0)) {
+            self.pending_events
+                .push(JournalEvent::Retune { round, fleet: self.scheduler.fleet() });
+        }
         Ok(out)
     }
 
@@ -960,6 +1268,14 @@ impl<'e> ClusterRuntime<'e> {
         let mut mailed = 0u64;
         for alloc in self.scheduler.replan() {
             let id = alloc.job_id;
+            if self.journal.is_some() {
+                self.pending_events.push(JournalEvent::Grant {
+                    round,
+                    job: id,
+                    held: alloc.held,
+                    change: alloc.change,
+                });
+            }
             let Some(config) = alloc.config.clone() else {
                 crate::warnlog!(
                     "cluster",
@@ -1027,6 +1343,9 @@ impl<'e> ClusterRuntime<'e> {
                 if let Some(c) = self.colocation.as_mut() {
                     c.resumes += 1;
                 }
+                if self.journal.is_some() {
+                    self.pending_events.push(JournalEvent::Resume { round, job: id });
+                }
             } else {
                 crate::info!(
                     "cluster",
@@ -1049,5 +1368,514 @@ impl<'e> ClusterRuntime<'e> {
             self.colocation.as_mut().unwrap().record_epoch(epoch, training);
         }
         Ok(mailed)
+    }
+
+    /// Consecutive injected I/O failures this barrier should simulate:
+    /// consumes the first armed [`crate::exec::FaultKind::IoTransient`]
+    /// whose round has come. Gated on the *round* clock, which both
+    /// drivers — and a resumed run — agree on exactly.
+    fn io_injection(&self, round: u64) -> u32 {
+        self.faults.as_ref().and_then(|p| p.fire_io(round)).unwrap_or(0)
+    }
+
+    /// The durability barrier under the round-robin driver: one retried
+    /// checkpoint per live session, degrade-and-pause any job whose
+    /// injected outage outlasted the retry budget, then flush the ordered
+    /// audit events plus the barrier record and fsync. Runs right after
+    /// [`Self::decide`] mails its reconfigures — mailed-but-unapplied
+    /// placements are journaled in each job's `pending` list so a resume
+    /// re-mails them before its first step.
+    fn journal_barrier_inline(&mut self, round: u64, decisions: u64, reconfigs: u64) -> Result<()> {
+        if self.journal.is_none() {
+            return Ok(());
+        }
+        let n = self.slots.len();
+        let mut injected = self.io_injection(round);
+        let retry = self.retry;
+        let dir = self.journal.as_ref().expect("journal checked above").dir().to_path_buf();
+        let mut ckpts: Vec<Option<String>> = vec![None; n];
+        let mut reports: Vec<Option<SessionReport>> = (0..n).map(|_| None).collect();
+        let mut states: Vec<Option<(u64, u64, Placement)>> = (0..n).map(|_| None).collect();
+        let mut degraded: Vec<usize> = Vec::new();
+        for id in 0..n {
+            let Some(session) = self.slots[id].session.as_mut() else { continue };
+            let name = format!("job{id}_b{round}.ckpt");
+            let path = dir.join(&name);
+            let wrote = with_retry(&retry, |_| {
+                if injected > 0 {
+                    injected -= 1;
+                    Err(anyhow!("injected transient I/O failure"))
+                } else {
+                    session.trainer.checkpoint(&path)
+                }
+            });
+            reports[id] = Some(session.report(0.0));
+            states[id] = Some((
+                session.trainer.state.step,
+                session.trainer.state.restart_count,
+                session.trainer.placement.clone(),
+            ));
+            match wrote {
+                Ok(()) => ckpts[id] = Some(name),
+                Err(e) => {
+                    crate::warnlog!(
+                        "cluster",
+                        "round {round}: job {id} barrier checkpoint failed past the \
+                         retry budget ({e:#}) — degrading and pausing the job"
+                    );
+                    degraded.push(id);
+                }
+            }
+        }
+        for id in degraded {
+            self.degrade_job(id, round);
+            self.pause_job_inline(id, round)?;
+            reports[id] = None;
+            states[id] = None;
+        }
+        self.journal_progress_events(round, &reports);
+        let record = self.build_barrier(round, decisions, reconfigs, ckpts, &reports, &mut states);
+        self.flush_barrier(record)
+    }
+
+    /// [`Self::journal_barrier_inline`] for the concurrent driver: the
+    /// sessions live on their runner threads, so the checkpoint pass is a
+    /// `Checkpoint` command per runner — sequential, in job-id order, so
+    /// the injected outage is consumed identically run after run — and a
+    /// degraded job is paused through its runner.
+    #[cfg(not(feature = "pjrt"))]
+    fn journal_barrier_concurrent(
+        &mut self,
+        round: u64,
+        decisions: u64,
+        reconfigs: u64,
+        runners: &mut [Option<JobRunner>],
+    ) -> Result<()> {
+        if self.journal.is_none() {
+            return Ok(());
+        }
+        let n = self.slots.len();
+        let mut injected = self.io_injection(round);
+        let attempts = self.retry.attempts.max(1);
+        let dir = self.journal.as_ref().expect("journal checked above").dir().to_path_buf();
+        let mut ckpts: Vec<Option<String>> = vec![None; n];
+        let mut reports: Vec<Option<SessionReport>> = (0..n).map(|_| None).collect();
+        let mut states: Vec<Option<(u64, u64, Placement)>> = (0..n).map(|_| None).collect();
+        let mut degraded: Vec<usize> = Vec::new();
+        for id in 0..n {
+            if self.slots[id].report.is_some() {
+                continue;
+            }
+            let Some(runner) = runners[id].as_ref() else { continue };
+            let name = format!("job{id}_b{round}.ckpt");
+            let inject = injected;
+            runner
+                .cmd
+                .send(RunnerCmd::Checkpoint { path: dir.join(&name), inject })
+                .map_err(|_| anyhow!("job {id} runner thread is gone"))?;
+            match runner.reply.recv() {
+                Ok(RunnerReply::Checkpointed { report, step, restart_count, placement, error }) => {
+                    // the runner consumed one injected failure per attempt
+                    injected -= inject.min(attempts);
+                    reports[id] = Some(*report);
+                    states[id] = Some((step, restart_count, *placement));
+                    match error {
+                        None => ckpts[id] = Some(name),
+                        Some(e) => {
+                            crate::warnlog!(
+                                "cluster",
+                                "round {round}: job {id} barrier checkpoint failed past \
+                                 the retry budget ({e}) — degrading and pausing the job"
+                            );
+                            degraded.push(id);
+                        }
+                    }
+                }
+                _ => return Err(anyhow!("job {id} runner failed to acknowledge its checkpoint")),
+            }
+        }
+        for id in degraded {
+            self.degrade_job(id, round);
+            let path = self.pause_path(id, round)?;
+            let runner = runners[id]
+                .take()
+                .ok_or_else(|| anyhow!("degraded job {id} has no runner"))?;
+            runner
+                .cmd
+                .send(RunnerCmd::Pause { path: path.clone() })
+                .map_err(|_| anyhow!("job {id} runner thread is gone"))?;
+            match runner.reply.recv() {
+                Ok(RunnerReply::Paused { report, error }) => {
+                    if let Some(e) = error {
+                        return Err(e);
+                    }
+                    self.note_pause(id, round, path, &report);
+                }
+                _ => return Err(anyhow!("job {id} runner failed to acknowledge its pause")),
+            }
+            reports[id] = None;
+            states[id] = None;
+        }
+        self.journal_progress_events(round, &reports);
+        let record = self.build_barrier(round, decisions, reconfigs, ckpts, &reports, &mut states);
+        self.flush_barrier(record)
+    }
+
+    /// Storage outlasted the retry budget for this job's barrier
+    /// checkpoint: flag it degraded and return its GPUs to the pool — the
+    /// checkpointed pause that follows parks it on disk until the
+    /// scheduler re-seats it (degraded-first, next replan it fits).
+    fn degrade_job(&mut self, id: usize, round: u64) {
+        self.scheduler.mark_degraded(id);
+        let released = self.scheduler.requeue(id);
+        crate::info!(
+            "cluster",
+            "round {round}: job {id} degraded by storage outage, released {released:?} GPUs"
+        );
+        self.pending_events.push(JournalEvent::Degraded { round, job: id });
+    }
+
+    /// Journal the audit deltas only the driver can see: faults that fired
+    /// since the last barrier, and per-job recovery totals that grew.
+    fn journal_progress_events(&mut self, round: u64, reports: &[Option<SessionReport>]) {
+        if let Some(plan) = self.faults.as_ref() {
+            let fired = plan.fired_snapshot();
+            for (index, &now) in fired.iter().enumerate() {
+                if now && !self.prev_fired.get(index).copied().unwrap_or(false) {
+                    self.pending_events.push(JournalEvent::FaultFired { round, index });
+                }
+            }
+            self.prev_fired = fired;
+        }
+        for id in 0..self.slots.len() {
+            if self.slots[id].report.is_some() {
+                continue;
+            }
+            let live = reports[id].as_ref();
+            let acc_rec = self.slots[id].prior_recoveries + live.map_or(0, |r| r.recoveries);
+            let acc_rep = self.slots[id].prior_replayed + live.map_or(0, |r| r.replayed_steps);
+            let (seen_rec, seen_rep) =
+                (self.slots[id].journaled_recoveries, self.slots[id].journaled_replayed);
+            if acc_rec > seen_rec || acc_rep > seen_rep {
+                self.pending_events.push(JournalEvent::Recovery {
+                    round,
+                    job: id,
+                    recoveries: acc_rec - seen_rec,
+                    replayed: acc_rep - seen_rep,
+                });
+            }
+            self.slots[id].journaled_recoveries = acc_rec;
+            self.slots[id].journaled_replayed = acc_rep;
+        }
+    }
+
+    /// Assemble the barrier record from scheduler/slot state plus the
+    /// per-job trainer state the checkpoint pass captured.
+    fn build_barrier(
+        &self,
+        round: u64,
+        decisions: u64,
+        reconfigs: u64,
+        mut ckpts: Vec<Option<String>>,
+        reports: &[Option<SessionReport>],
+        states: &mut Vec<Option<(u64, u64, Placement)>>,
+    ) -> BarrierRecord {
+        let mut jobs = Vec::with_capacity(self.slots.len());
+        for id in 0..self.slots.len() {
+            let slot = &self.slots[id];
+            let live = reports[id].as_ref();
+            let (step, restart_count, placement) = match states[id].take() {
+                Some((s, r, p)) => (Some(s), Some(r), Some(p)),
+                None => (None, None, None),
+            };
+            let pending: Vec<Placement> = slot
+                .mailbox
+                .snapshot()
+                .into_iter()
+                .filter_map(|ev| match ev {
+                    ElasticEvent::Reconfigure(p) => Some(p),
+                    _ => None,
+                })
+                .collect();
+            jobs.push(BarrierJob {
+                id,
+                phase: self.scheduler.phase(id),
+                arrival: slot.arrival_round as f64,
+                arrived: slot.arrived,
+                preemptions: self.scheduler.preemptions(id),
+                degraded: self.scheduler.is_degraded(id),
+                held: self.scheduler.held(id),
+                started: slot.started.is_some(),
+                step,
+                restart_count,
+                ckpt: ckpts[id].take(),
+                paused_ckpt: slot
+                    .paused_ckpt
+                    .as_deref()
+                    .and_then(|p| p.file_name())
+                    .and_then(|s| s.to_str())
+                    .map(str::to_string),
+                placement,
+                pending,
+                acc_steps: slot.prior_steps + live.map_or(0, |r| r.steps_run),
+                acc_reconfigs: slot.prior_reconfigs + live.map_or(0, |r| r.reconfigs),
+                acc_evals: slot.prior_evals + live.map_or(0, |r| r.evals),
+                acc_recoveries: slot.journaled_recoveries,
+                acc_replayed: slot.journaled_replayed,
+                first_loss: slot
+                    .prior_first_loss
+                    .or(live.and_then(|r| (!r.first_loss.is_nan()).then_some(r.first_loss))),
+            });
+        }
+        BarrierRecord {
+            round,
+            decisions,
+            reconfigs,
+            fleet: self.scheduler.fleet(),
+            available: self.scheduler.available,
+            fired: self.prev_fired.clone(),
+            colo: self.colocation.as_ref().map(|c| ColoCounters {
+                lends: c.lends,
+                reclaims: c.reclaims,
+                shrinks: c.shrinks,
+                pauses: c.pauses,
+                resumes: c.resumes,
+            }),
+            jobs,
+        }
+    }
+
+    /// Flush buffered audit events (in order) and the barrier record in
+    /// one batch, then fsync — the all-or-nothing durability point a
+    /// resume truncates back to.
+    fn flush_barrier(&mut self, record: BarrierRecord) -> Result<()> {
+        let journal = self.journal.as_mut().expect("barrier flushed without a journal");
+        for ev in self.pending_events.drain(..) {
+            journal.append_event(&ev)?;
+        }
+        journal.append_barrier(&record)?;
+        journal.sync()
+    }
+
+    /// Rebuild a crashed run from its journal directory: re-derive the
+    /// configuration from the prologue, re-seat the scheduler from the
+    /// newest barrier record (decisions are read back, never re-planned),
+    /// load each running job's barrier checkpoint and silently replay its
+    /// per-EST steps to the barrier step, then re-mail the placements the
+    /// barrier had granted but not yet applied. Calling
+    /// [`ClusterRuntime::run`] afterwards continues the schedule — and
+    /// under D1(+D2) finishes with final params and checkpoint bytes
+    /// bitwise identical to the undisturbed run (`tests/durability.rs`).
+    pub fn resume(engine: &'e Engine, dir: &Path) -> Result<ClusterRuntime<'e>> {
+        let t_load = Instant::now();
+        let loaded = Journal::load(dir)?;
+        if let Some(tail) = &loaded.dropped_tail {
+            crate::warnlog!(
+                "cluster",
+                "resume: dropped torn journal tail in {} ({tail})",
+                dir.display()
+            );
+        }
+        let load_journal_s = t_load.elapsed().as_secs_f64();
+        let meta = &loaded.meta;
+        let mut rt = ClusterRuntime::new(engine, meta.fleet, meta.decide_every)
+            .with_job_threads(meta.job_threads)
+            .with_full_rebuild(meta.full_rebuild);
+        if let Some(factor) = meta.straggler_factor {
+            rt = rt.with_straggler(factor);
+        }
+        if !meta.faults.is_empty() {
+            let plan = FaultPlan::from_csv_lines(&meta.faults)?;
+            if let Some(b) = &loaded.barrier {
+                // faults the reference run consumed before the barrier
+                // must not fire again mid-replay or after
+                plan.restore_fired(&b.fired);
+            }
+            rt = rt.with_faults(Arc::new(plan));
+        }
+        if let Some(colo) = &meta.colocate {
+            let trace = ServingTrace::new(colo.demand.clone());
+            let policy = if colo.static_mode {
+                Colocation::static_partition(trace)
+            } else {
+                Colocation::new(trace)
+            };
+            rt = rt.with_colocation(policy);
+        }
+        for s in &loaded.submits {
+            let workload = Workload::by_name(&s.workload)
+                .ok_or_else(|| anyhow!("journal names unknown workload {:?}", s.workload))?;
+            let cfg = TrainConfig {
+                seed: s.seed,
+                lr: s.lr,
+                dataset_size: s.dataset_size,
+                bucket_cap_bytes: s.bucket_cap_bytes,
+                aug_rate: s.aug_rate,
+                run_nonce: s.run_nonce,
+                determinism: Determinism { d0: s.d0, d1: s.d1, d2: s.d2 },
+                run_mode: if s.sequential {
+                    RunMode::Sequential
+                } else {
+                    RunMode::Parallel { max_threads: s.threads }
+                },
+                ..TrainConfig::new(s.max_p)
+            };
+            let id = rt.submit_at(ClusterJob { workload, cfg, steps: s.steps }, s.arrival_round);
+            ensure!(id == s.id, "journal submits out of order: slot {id}, record says {}", s.id);
+        }
+        let mut stats = ResumeStats { load_journal_s, ..ResumeStats::default() };
+        let Some(barrier) = &loaded.barrier else {
+            // crashed before the first barrier: truncate any partial
+            // events and start over from round 0 — everything before the
+            // first barrier is re-derived from the prologue
+            rt.journal = Some(Journal::open_append(dir, loaded.resume_offset)?);
+            rt.pause_dir = Some(dir.to_path_buf());
+            rt.meta_written = true;
+            rt.resume_stats = Some(stats);
+            return Ok(rt);
+        };
+        // the last Retire per job carries its merged final report; only
+        // jobs the barrier says are Finished consume one (a retirement
+        // after the barrier is not yet durable — it gets truncated away
+        // and re-derived)
+        let mut retires: Vec<Option<(GpuVector, SessionReport)>> =
+            (0..rt.slots.len()).map(|_| None).collect();
+        for ev in &loaded.events {
+            if let JournalEvent::Retire { job, final_gpus, report, .. } = ev {
+                if *job < retires.len() {
+                    retires[*job] = Some((*final_gpus, report_from_retired(report)));
+                }
+            }
+        }
+        let t_grants = Instant::now();
+        rt.scheduler.restore_fleet(barrier.fleet, barrier.available);
+        for j in &barrier.jobs {
+            rt.scheduler.restore_job(j.id, j.phase, j.arrival, j.held, j.preemptions, j.degraded);
+            let slot = &mut rt.slots[j.id];
+            slot.arrived = j.arrived;
+            slot.started = j.started.then(Instant::now);
+            slot.paused_ckpt = j.paused_ckpt.as_ref().map(|name| dir.join(name));
+            slot.prior_steps = j.acc_steps;
+            slot.prior_reconfigs = j.acc_reconfigs;
+            slot.prior_evals = j.acc_evals;
+            slot.prior_recoveries = j.acc_recoveries;
+            slot.prior_replayed = j.acc_replayed;
+            slot.prior_first_loss = j.first_loss.filter(|l| !l.is_nan());
+            slot.journaled_recoveries = j.acc_recoveries;
+            slot.journaled_replayed = j.acc_replayed;
+            if j.phase == JobPhase::Finished {
+                let (final_gpus, report) = retires[j.id].take().with_context(|| {
+                    format!("job {} finished at the barrier but journaled no Retire", j.id)
+                })?;
+                slot.final_gpus = final_gpus;
+                slot.report = Some(report);
+            }
+        }
+        if let (Some(c), Some(counters)) = (rt.colocation.as_mut(), barrier.colo) {
+            c.lends = counters.lends;
+            c.reclaims = counters.reclaims;
+            c.shrinks = counters.shrinks;
+            c.pauses = counters.pauses;
+            c.resumes = counters.resumes;
+        }
+        stats.replay_grants_s = t_grants.elapsed().as_secs_f64();
+        for j in &barrier.jobs {
+            if j.step.is_some() {
+                rt.rebuild_session(dir, j, &mut stats).with_context(|| {
+                    format!("resume: rebuilding job {} at barrier round {}", j.id, barrier.round)
+                })?;
+            }
+        }
+        rt.decisions_base = barrier.decisions;
+        rt.reconfigs_base = barrier.reconfigs;
+        rt.prev_fired = barrier.fired.clone();
+        rt.start_round = barrier.round;
+        rt.resumed = true;
+        rt.journal = Some(Journal::open_append(dir, loaded.resume_offset)?);
+        rt.pause_dir = Some(dir.to_path_buf());
+        rt.meta_written = true;
+        rt.resume_stats = Some(stats);
+        Ok(rt)
+    }
+
+    /// Rebuild one running job's session at the barrier: load its
+    /// durability checkpoint (or, if that checkpoint itself is torn —
+    /// the fault plan tears barrier checkpoints like any other — fall
+    /// back to a from-scratch build) and silently replay per-EST steps to
+    /// the barrier step. Faults and recovery are attached only *after*
+    /// the replay so already-consumed faults cannot mis-fire, and the
+    /// progress baseline is rebased so replayed work is not double
+    /// counted against the journaled accumulators.
+    fn rebuild_session(&mut self, dir: &Path, j: &BarrierJob, stats: &mut ResumeStats) -> Result<()> {
+        let step = j.step.expect("rebuild_session called for a session-less job");
+        let placement = j
+            .placement
+            .clone()
+            .ok_or_else(|| anyhow!("running job {} journaled no placement", j.id))?;
+        let slot = &self.slots[j.id];
+        let cfg = slot.job.cfg.clone();
+        let steps_budget = slot.job.steps;
+        let mailbox = slot.mailbox.clone();
+        let builder = || {
+            SessionBuilder::new(self.engine, cfg.clone(), placement.clone())
+                .steps(steps_budget)
+                .log_every(0)
+                .director(Box::new(MailboxDirector::new(mailbox.clone())))
+                .shared_uploads(Arc::clone(&self.uploads))
+                .full_rebuild(self.full_rebuild)
+        };
+        let t_ckpt = Instant::now();
+        let mut session = match j.ckpt.as_ref() {
+            Some(name) => {
+                let path = dir.join(name);
+                match builder().resume_from(path.clone()).build() {
+                    Ok(s) => Some(s),
+                    Err(e) if e.downcast_ref::<CheckpointError>().is_some() => {
+                        crate::warnlog!(
+                            "cluster",
+                            "resume: job {} barrier checkpoint {} unusable ({e:#}) — \
+                             replaying from scratch",
+                            j.id,
+                            path.display()
+                        );
+                        None
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            None => None,
+        };
+        stats.load_ckpt_s += t_ckpt.elapsed().as_secs_f64();
+        let mut session = match session.take() {
+            Some(s) => s,
+            // last resort: replay the whole prefix — bitwise-equal under
+            // D1 because per-EST state is placement-independent
+            None => builder().build()?,
+        };
+        let t_replay = Instant::now();
+        while session.trainer.state.step < step {
+            let stepped = session.step_once()?;
+            ensure!(
+                stepped.is_some(),
+                "resume: job {} replay hit its budget at step {} (barrier wants {step})",
+                j.id,
+                session.trainer.state.step
+            );
+            stats.replayed_steps += 1;
+        }
+        stats.replay_steps_s += t_replay.elapsed().as_secs_f64();
+        if let Some(plan) = self.faults.clone() {
+            session.trainer.set_fault_plan(plan);
+            session.arm_recovery(RecoveryMode::Snapshot);
+        }
+        for p in &j.pending {
+            mailbox.push(ElasticEvent::Reconfigure(p.clone()));
+        }
+        session.rebase_progress();
+        if let Some(rc) = j.restart_count {
+            session.trainer.state.restart_count = rc;
+        }
+        self.slots[j.id].session = Some(session);
+        Ok(())
     }
 }

@@ -1,0 +1,1541 @@
+//! The durable control plane: an append-only write-ahead journal for the
+//! multi-job cluster runtime.
+//!
+//! The runtime process itself is a single point of failure: workers dying
+//! mid-step are recoverable elastic events, but losing the coordinator
+//! loses the scheduler state, the in-flight elastic decisions and every
+//! session. The journal closes that hole. `cluster --journal <dir>` arms
+//! it: one JSONL file (`journal.jsonl`) records the run's configuration
+//! (meta + one submit per job), every consistency-relevant cluster event
+//! (arrivals, replan grants, retunes, pauses/resumes, fault firings,
+//! recovery rollbacks, retirements), and — at every decide-epoch barrier —
+//! a full snapshot of scheduler/slot state alongside per-job durability
+//! checkpoints. `cluster --resume <dir>` rebuilds the whole runtime from
+//! the newest complete barrier and continues; EasyScale's D1 guarantee
+//! makes the result bitwise-identical to the undisturbed run.
+//!
+//! Records are streamed through the PR 8 [`JsonWriter`]/[`PullParser`]
+//! pair — no JSON tree is ever materialized on either path, and the
+//! writer's scratch buffer is long-lived, so a steady-state append
+//! allocates nothing. Each record commits as a *single* `write(2)` of
+//! `json + '\n'`; a crash mid-append leaves at most one torn final line,
+//! which [`Journal::load`] drops with a typed warning (the journal is a
+//! write-ahead log: a dropped tail only loses decisions that will be
+//! re-derived deterministically from the previous barrier).
+//!
+//! What replay *reads back* vs *re-derives* is a deliberate split:
+//! scheduler seats, fleet accounting, fault fired-flags, per-job progress
+//! accumulators, current/pending placements and checkpoint names are read
+//! back from the barrier record (decisions are journaled, not re-derived,
+//! so wall-clock-dependent observations cannot fork the schedule);
+//! straggler EWMAs, planner calibration and everything after the barrier
+//! are re-derived by re-running the deterministic decide loop.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::exec::executor::{ExecutorSpec, Placement};
+use crate::exec::devices::DeviceType;
+use crate::sched::{AllocationChange, GpuVector, JobPhase};
+use crate::util::json::{JsonEvent, JsonWriter, PullParser};
+use crate::util::retry::{with_retry, RetryPolicy};
+
+/// The journal file inside a `--journal`/`--resume` directory.
+pub const JOURNAL_FILE: &str = "journal.jsonl";
+
+/// Journal schema version — bump on any incompatible record change.
+pub const JOURNAL_VERSION: u64 = 1;
+
+/// Typed journal failures, distinguishable through `anyhow` downcasts.
+/// A *torn tail* is deliberately not here: a truncated final record is
+/// normal crash residue and is dropped with a warning, not an error.
+#[derive(Debug)]
+pub enum JournalError {
+    /// No complete `meta` record — the journal was cut before the run's
+    /// configuration became durable, so there is nothing to resume.
+    MissingMeta { path: PathBuf },
+    /// A record *before* the final one failed to parse: real corruption,
+    /// not a torn append.
+    Corrupt { path: PathBuf, line: usize, detail: String },
+}
+
+impl std::fmt::Display for JournalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JournalError::MissingMeta { path } => {
+                write!(f, "journal {} holds no complete meta record", path.display())
+            }
+            JournalError::Corrupt { path, line, detail } => {
+                write!(f, "journal {} corrupt at record {line}: {detail}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for JournalError {}
+
+// ---------------------------------------------------------------------------
+// record types
+// ---------------------------------------------------------------------------
+
+/// Run-level configuration, journaled once before the first round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalMeta {
+    pub version: u64,
+    /// The full machine fleet at submit time (pre-colocation carves).
+    pub fleet: GpuVector,
+    pub decide_every: u64,
+    pub job_threads: usize,
+    pub full_rebuild: bool,
+    pub straggler_factor: Option<f64>,
+    pub colocate: Option<ColoMeta>,
+    /// The fault schedule as [`crate::exec::Fault::to_csv_line`] lines.
+    pub faults: Vec<String>,
+}
+
+/// Colocation policy inputs (the trace itself, so `--resume` needs no
+/// side files).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColoMeta {
+    pub static_mode: bool,
+    pub demand: Vec<usize>,
+}
+
+/// One submitted job — everything needed to reconstruct its
+/// [`crate::train::cluster::ClusterJob`] exactly. Float hyperparameters
+/// travel as raw bits so the round trip is exact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalSubmit {
+    pub id: usize,
+    pub workload: String,
+    pub arrival_round: u64,
+    pub steps: u64,
+    pub seed: u64,
+    pub max_p: usize,
+    pub lr: f32,
+    pub dataset_size: usize,
+    pub bucket_cap_bytes: usize,
+    pub aug_rate: f64,
+    pub run_nonce: u64,
+    pub d0: bool,
+    pub d1: bool,
+    pub d2: bool,
+    pub sequential: bool,
+    pub threads: usize,
+}
+
+/// The audit stream: every consistency-relevant cluster event, buffered
+/// between barriers and flushed (in order) right before each barrier
+/// record. Replay ignores events after the last barrier — they are
+/// re-derived — but the stream is the durable account of *why* the
+/// cluster looks the way each barrier says it does.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JournalEvent {
+    Arrive { round: u64, job: usize },
+    Grant { round: u64, job: usize, held: GpuVector, change: AllocationChange },
+    Retune { round: u64, fleet: GpuVector },
+    Pause { round: u64, job: usize, ckpt: String },
+    Resume { round: u64, job: usize },
+    /// Fault `index` (into the meta schedule) fired since the last barrier.
+    FaultFired { round: u64, index: usize },
+    /// In-process rollback/replay recoveries observed since the last barrier.
+    Recovery { round: u64, job: usize, recoveries: u64, replayed: u64 },
+    Degraded { round: u64, job: usize },
+    Retire {
+        round: u64,
+        job: usize,
+        final_gpus: GpuVector,
+        ckpt: Option<String>,
+        report: RetiredReport,
+    },
+}
+
+/// A finished job's merged report — enough to rebuild its
+/// [`crate::train::SessionReport`] on resume without re-running it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetiredReport {
+    pub steps_run: u64,
+    pub final_step: u64,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    pub fingerprint: u64,
+    pub reconfigs: u64,
+    pub evals: u64,
+    pub wall_s: f64,
+    pub observed_rate: f64,
+    pub stopped_early: bool,
+    pub recoveries: u64,
+    pub replayed_steps: u64,
+}
+
+/// Per-epoch colocation counters, restored on resume so the final
+/// [`crate::train::ColocationReport`] stays cumulative.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ColoCounters {
+    pub lends: u64,
+    pub reclaims: u64,
+    pub shrinks: u64,
+    pub pauses: u64,
+    pub resumes: u64,
+}
+
+/// A durability barrier: the complete resume point cut right after a
+/// decide boundary (grants mailed but not yet applied — each running
+/// job's checkpoint is at the pre-application step, and its mailed
+/// placements ride in `pending`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BarrierRecord {
+    pub round: u64,
+    pub decisions: u64,
+    pub reconfigs: u64,
+    /// Training fleet after this boundary's retune.
+    pub fleet: GpuVector,
+    pub available: GpuVector,
+    /// Fault fired-markers, in meta-schedule order.
+    pub fired: Vec<bool>,
+    pub colo: Option<ColoCounters>,
+    pub jobs: Vec<BarrierJob>,
+}
+
+/// One job's seat in a barrier. Checkpoint names are relative to the
+/// journal directory so the whole directory can be moved or copied.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BarrierJob {
+    pub id: usize,
+    pub phase: JobPhase,
+    pub arrival: f64,
+    pub arrived: bool,
+    pub preemptions: u64,
+    pub degraded: bool,
+    pub held: GpuVector,
+    /// Whether the slot ever built a session (`started` timestamp set).
+    pub started: bool,
+    /// Current trainer step (running jobs only).
+    pub step: Option<u64>,
+    /// Trainer restart_count at the barrier — replay lands here so
+    /// checkpoint headers stay byte-identical to the reference.
+    pub restart_count: Option<u64>,
+    /// This barrier's durability checkpoint (running jobs only).
+    pub ckpt: Option<String>,
+    /// Standing pause checkpoint (paused jobs only).
+    pub paused_ckpt: Option<String>,
+    /// The placement the session is *currently running* (pre-pending).
+    pub placement: Option<Placement>,
+    /// Mailed-but-unapplied reconfigure placements, in mailbox order.
+    pub pending: Vec<Placement>,
+    /// Merged progress accumulators (prior paused segments + live
+    /// session), folded into `prior_*` on resume.
+    pub acc_steps: u64,
+    pub acc_reconfigs: u64,
+    pub acc_evals: u64,
+    pub acc_recoveries: u64,
+    pub acc_replayed: u64,
+    pub first_loss: Option<f32>,
+}
+
+/// Everything a complete-prefix load yields. `resume_offset` is the byte
+/// offset just past the newest record replay consumes (last barrier, or
+/// the submit prefix when no barrier landed) — `--resume` truncates
+/// there, discarding the audit suffix it is about to re-derive.
+#[derive(Debug)]
+pub struct LoadedJournal {
+    pub meta: JournalMeta,
+    pub submits: Vec<JournalSubmit>,
+    pub events: Vec<JournalEvent>,
+    pub barrier: Option<BarrierRecord>,
+    /// End offset of every barrier record, in order (the crash-restart
+    /// test matrix truncates at each of these).
+    pub barrier_offsets: Vec<u64>,
+    pub resume_offset: u64,
+    /// Detail of a dropped torn final record, if any.
+    pub dropped_tail: Option<String>,
+}
+
+// ---------------------------------------------------------------------------
+// the writer
+// ---------------------------------------------------------------------------
+
+/// A shared, reusable byte buffer behind `Write` — the seam that lets one
+/// long-lived [`JsonWriter`] serialize every record into the same
+/// allocation while the journal keeps hold of the bytes for the commit
+/// write. Consecutive root-level values are exactly what the writer
+/// emits between `clear()`s.
+#[derive(Debug, Clone, Default)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<u8>> {
+        self.0.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.lock().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// The append-only journal. Appends are buffered-then-committed as one
+/// `write(2)` each; durability is explicit via [`Journal::sync`], which
+/// the runtime calls at decide-epoch barriers (the only points replay
+/// can land on anyway).
+#[derive(Debug)]
+pub struct Journal {
+    dir: PathBuf,
+    file: std::fs::File,
+    buf: SharedBuf,
+    writer: JsonWriter<SharedBuf>,
+    retry: RetryPolicy,
+}
+
+impl Journal {
+    /// Start a fresh journal in `dir` (created if missing; an existing
+    /// journal file is truncated).
+    pub fn create(dir: &Path) -> Result<Journal> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating journal dir {}", dir.display()))?;
+        let path = dir.join(JOURNAL_FILE);
+        let file = std::fs::File::create(&path)
+            .with_context(|| format!("creating journal {}", path.display()))?;
+        // make the directory entry itself durable before the first append
+        super::checkpoint::fsync_dir(dir)?;
+        Ok(Journal::from_file(dir, file))
+    }
+
+    /// Reopen an existing journal for appending, truncating it to
+    /// `resume_offset` first (dropping any torn tail *and* the audit
+    /// suffix a resume is about to re-derive — the journal stays one
+    /// consistent timeline).
+    pub fn open_append(dir: &Path, resume_offset: u64) -> Result<Journal> {
+        let path = dir.join(JOURNAL_FILE);
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        file.set_len(resume_offset)
+            .with_context(|| format!("truncating journal {} to {resume_offset}", path.display()))?;
+        use std::io::Seek;
+        let mut file = file;
+        file.seek(std::io::SeekFrom::End(0))?;
+        Ok(Journal::from_file(dir, file))
+    }
+
+    fn from_file(dir: &Path, file: std::fs::File) -> Journal {
+        let buf = SharedBuf::default();
+        Journal {
+            dir: dir.to_path_buf(),
+            file,
+            buf: buf.clone(),
+            writer: JsonWriter::new(buf),
+            retry: RetryPolicy::default(),
+        }
+    }
+
+    /// The directory checkpoint names in records are relative to.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn append_meta(&mut self, m: &JournalMeta) -> Result<()> {
+        write_meta(&mut self.writer, m)?;
+        self.commit_line()
+    }
+
+    pub fn append_submit(&mut self, s: &JournalSubmit) -> Result<()> {
+        write_submit(&mut self.writer, s)?;
+        self.commit_line()
+    }
+
+    pub fn append_event(&mut self, e: &JournalEvent) -> Result<()> {
+        write_event(&mut self.writer, e)?;
+        self.commit_line()
+    }
+
+    pub fn append_barrier(&mut self, b: &BarrierRecord) -> Result<()> {
+        write_barrier(&mut self.writer, b)?;
+        self.commit_line()
+    }
+
+    /// Make everything appended so far durable (fdatasync, retried).
+    pub fn sync(&mut self) -> Result<()> {
+        with_retry(&self.retry, |_| self.file.sync_data())
+            .with_context(|| format!("fsyncing journal in {}", self.dir.display()))
+    }
+
+    /// Commit the record the writer just serialized: append the newline
+    /// and hand the whole line to the kernel as one write, so a crash
+    /// leaves either the full record or a droppable torn tail.
+    fn commit_line(&mut self) -> Result<()> {
+        let mut buf = self.buf.lock();
+        buf.push(b'\n');
+        let res = with_retry(&self.retry, |_| self.file.write_all(&buf));
+        buf.clear();
+        res.with_context(|| format!("appending to journal in {}", self.dir.display()))
+    }
+
+    // -- loading ------------------------------------------------------------
+
+    /// Parse the journal in `dir` into its newest complete prefix. A torn
+    /// final record (crash mid-append) is dropped with a typed warning;
+    /// a broken record anywhere *else* is [`JournalError::Corrupt`].
+    pub fn load(dir: &Path) -> Result<LoadedJournal> {
+        let path = dir.join(JOURNAL_FILE);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading journal {}", path.display()))?;
+
+        let mut meta = None;
+        let mut submits = Vec::new();
+        let mut events = Vec::new();
+        let mut barrier = None;
+        let mut barrier_offsets = Vec::new();
+        let mut resume_offset = 0u64;
+        let mut dropped_tail = None;
+
+        // complete records are the '\n'-terminated lines; anything after
+        // the final newline is by construction a torn append
+        let mut start = 0usize;
+        let mut line_no = 0usize;
+        while start < bytes.len() {
+            let Some(nl) = bytes[start..].iter().position(|&b| b == b'\n') else {
+                dropped_tail = Some(format!(
+                    "record {} truncated mid-append ({} byte(s) past the final newline)",
+                    line_no + 1,
+                    bytes.len() - start
+                ));
+                break;
+            };
+            let line = &bytes[start..start + nl];
+            let end = (start + nl + 1) as u64;
+            line_no += 1;
+            let last = start + nl + 1 >= bytes.len();
+            match parse_record(line) {
+                Ok(Record::Meta(m)) => {
+                    if meta.is_some() {
+                        return Err(corrupt(&path, line_no, "duplicate meta record"));
+                    }
+                    meta = Some(m);
+                    resume_offset = end;
+                }
+                Ok(Record::Submit(s)) => {
+                    submits.push(s);
+                    resume_offset = resume_offset.max(end);
+                }
+                Ok(Record::Event(e)) => events.push(e),
+                Ok(Record::Barrier(b)) => {
+                    barrier = Some(b);
+                    barrier_offsets.push(end);
+                    resume_offset = end;
+                }
+                Err(e) if last => {
+                    // a final record that fails to parse is crash residue
+                    // (a partial write that happened to end at a newline
+                    // boundary): drop it like an unterminated tail
+                    dropped_tail = Some(format!("record {line_no} unparseable: {e:#}"));
+                }
+                Err(e) => return Err(corrupt(&path, line_no, &format!("{e:#}"))),
+            }
+            start += nl + 1;
+        }
+
+        if let Some(detail) = &dropped_tail {
+            crate::warnlog!("journal", "{}: dropped torn tail: {detail}", path.display());
+        }
+        let Some(meta) = meta else {
+            return Err(JournalError::MissingMeta { path }.into());
+        };
+        Ok(LoadedJournal {
+            meta,
+            submits,
+            events,
+            barrier,
+            barrier_offsets,
+            resume_offset,
+            dropped_tail,
+        })
+    }
+}
+
+fn corrupt(path: &Path, line: usize, detail: &str) -> anyhow::Error {
+    JournalError::Corrupt { path: path.to_path_buf(), line, detail: detail.to_string() }.into()
+}
+
+// ---------------------------------------------------------------------------
+// serialization
+// ---------------------------------------------------------------------------
+
+enum Record {
+    Meta(JournalMeta),
+    Submit(JournalSubmit),
+    Event(JournalEvent),
+    Barrier(BarrierRecord),
+}
+
+type W<'a> = &'a mut JsonWriter<SharedBuf>;
+
+fn write_gpu3(w: W<'_>, v: &GpuVector) -> std::io::Result<()> {
+    w.begin_arr()?;
+    for &n in v {
+        w.uint(n as u64)?;
+    }
+    w.end_arr()
+}
+
+fn write_opt_str(w: W<'_>, v: Option<&str>) -> std::io::Result<()> {
+    match v {
+        Some(s) => w.str(s),
+        None => w.null(),
+    }
+}
+
+fn write_placement(w: W<'_>, p: &Placement) -> std::io::Result<()> {
+    w.begin_arr()?;
+    for ex in &p.executors {
+        w.begin_obj()?;
+        w.key("dev")?;
+        w.str(ex.device.name())?;
+        w.key("ranks")?;
+        w.begin_arr()?;
+        for &r in &ex.est_ranks {
+            w.uint(r as u64)?;
+        }
+        w.end_arr()?;
+        w.end_obj()?;
+    }
+    w.end_arr()
+}
+
+fn phase_name(p: JobPhase) -> &'static str {
+    match p {
+        JobPhase::Pending => "pending",
+        JobPhase::Queued => "queued",
+        JobPhase::Running => "running",
+        JobPhase::Finished => "finished",
+    }
+}
+
+fn change_name(c: AllocationChange) -> &'static str {
+    match c {
+        AllocationChange::Started => "started",
+        AllocationChange::Reallocated => "reallocated",
+        AllocationChange::Preempted => "preempted",
+    }
+}
+
+fn write_meta(w: W<'_>, m: &JournalMeta) -> std::io::Result<()> {
+    w.begin_obj()?;
+    w.key("t")?;
+    w.str("meta")?;
+    w.key("version")?;
+    w.uint(m.version)?;
+    w.key("fleet")?;
+    write_gpu3(w, &m.fleet)?;
+    w.key("decide_every")?;
+    w.uint(m.decide_every)?;
+    w.key("job_threads")?;
+    w.uint(m.job_threads as u64)?;
+    w.key("full_rebuild")?;
+    w.bool(m.full_rebuild)?;
+    w.key("straggler_bits")?;
+    match m.straggler_factor {
+        Some(f) => w.uint(f.to_bits())?,
+        None => w.null()?,
+    }
+    w.key("colocate")?;
+    match &m.colocate {
+        Some(c) => {
+            w.begin_obj()?;
+            w.key("static")?;
+            w.bool(c.static_mode)?;
+            w.key("demand")?;
+            w.begin_arr()?;
+            for &d in &c.demand {
+                w.uint(d as u64)?;
+            }
+            w.end_arr()?;
+            w.end_obj()?;
+        }
+        None => w.null()?,
+    }
+    w.key("faults")?;
+    w.begin_arr()?;
+    for line in &m.faults {
+        w.str(line)?;
+    }
+    w.end_arr()?;
+    w.end_obj()
+}
+
+fn write_submit(w: W<'_>, s: &JournalSubmit) -> std::io::Result<()> {
+    w.begin_obj()?;
+    w.key("t")?;
+    w.str("submit")?;
+    w.key("id")?;
+    w.uint(s.id as u64)?;
+    w.key("workload")?;
+    w.str(&s.workload)?;
+    w.key("arrival_round")?;
+    w.uint(s.arrival_round)?;
+    w.key("steps")?;
+    w.uint(s.steps)?;
+    w.key("seed")?;
+    w.uint(s.seed)?;
+    w.key("max_p")?;
+    w.uint(s.max_p as u64)?;
+    w.key("lr_bits")?;
+    w.uint(s.lr.to_bits() as u64)?;
+    w.key("dataset_size")?;
+    w.uint(s.dataset_size as u64)?;
+    w.key("bucket_cap")?;
+    w.uint(s.bucket_cap_bytes as u64)?;
+    w.key("aug_bits")?;
+    w.uint(s.aug_rate.to_bits())?;
+    w.key("run_nonce")?;
+    w.uint(s.run_nonce)?;
+    w.key("d0")?;
+    w.bool(s.d0)?;
+    w.key("d1")?;
+    w.bool(s.d1)?;
+    w.key("d2")?;
+    w.bool(s.d2)?;
+    w.key("sequential")?;
+    w.bool(s.sequential)?;
+    w.key("threads")?;
+    w.uint(s.threads as u64)?;
+    w.end_obj()
+}
+
+fn write_event(w: W<'_>, e: &JournalEvent) -> std::io::Result<()> {
+    w.begin_obj()?;
+    w.key("t")?;
+    match e {
+        JournalEvent::Arrive { round, job } => {
+            w.str("arrive")?;
+            w.key("round")?;
+            w.uint(*round)?;
+            w.key("job")?;
+            w.uint(*job as u64)?;
+        }
+        JournalEvent::Grant { round, job, held, change } => {
+            w.str("grant")?;
+            w.key("round")?;
+            w.uint(*round)?;
+            w.key("job")?;
+            w.uint(*job as u64)?;
+            w.key("held")?;
+            write_gpu3(w, held)?;
+            w.key("change")?;
+            w.str(change_name(*change))?;
+        }
+        JournalEvent::Retune { round, fleet } => {
+            w.str("retune")?;
+            w.key("round")?;
+            w.uint(*round)?;
+            w.key("fleet")?;
+            write_gpu3(w, fleet)?;
+        }
+        JournalEvent::Pause { round, job, ckpt } => {
+            w.str("pause")?;
+            w.key("round")?;
+            w.uint(*round)?;
+            w.key("job")?;
+            w.uint(*job as u64)?;
+            w.key("ckpt")?;
+            w.str(ckpt)?;
+        }
+        JournalEvent::Resume { round, job } => {
+            w.str("resume")?;
+            w.key("round")?;
+            w.uint(*round)?;
+            w.key("job")?;
+            w.uint(*job as u64)?;
+        }
+        JournalEvent::FaultFired { round, index } => {
+            w.str("fault")?;
+            w.key("round")?;
+            w.uint(*round)?;
+            w.key("index")?;
+            w.uint(*index as u64)?;
+        }
+        JournalEvent::Recovery { round, job, recoveries, replayed } => {
+            w.str("recovery")?;
+            w.key("round")?;
+            w.uint(*round)?;
+            w.key("job")?;
+            w.uint(*job as u64)?;
+            w.key("recoveries")?;
+            w.uint(*recoveries)?;
+            w.key("replayed")?;
+            w.uint(*replayed)?;
+        }
+        JournalEvent::Degraded { round, job } => {
+            w.str("degraded")?;
+            w.key("round")?;
+            w.uint(*round)?;
+            w.key("job")?;
+            w.uint(*job as u64)?;
+        }
+        JournalEvent::Retire { round, job, final_gpus, ckpt, report } => {
+            w.str("retire")?;
+            w.key("round")?;
+            w.uint(*round)?;
+            w.key("job")?;
+            w.uint(*job as u64)?;
+            w.key("final_gpus")?;
+            write_gpu3(w, final_gpus)?;
+            w.key("ckpt")?;
+            write_opt_str(w, ckpt.as_deref())?;
+            w.key("steps_run")?;
+            w.uint(report.steps_run)?;
+            w.key("final_step")?;
+            w.uint(report.final_step)?;
+            w.key("first_bits")?;
+            w.uint(report.first_loss.to_bits() as u64)?;
+            w.key("final_bits")?;
+            w.uint(report.final_loss.to_bits() as u64)?;
+            w.key("fingerprint")?;
+            w.uint(report.fingerprint)?;
+            w.key("reconfigs")?;
+            w.uint(report.reconfigs)?;
+            w.key("evals")?;
+            w.uint(report.evals)?;
+            w.key("wall_bits")?;
+            w.uint(report.wall_s.to_bits())?;
+            w.key("rate_bits")?;
+            w.uint(report.observed_rate.to_bits())?;
+            w.key("stopped_early")?;
+            w.bool(report.stopped_early)?;
+            w.key("recoveries")?;
+            w.uint(report.recoveries)?;
+            w.key("replayed")?;
+            w.uint(report.replayed_steps)?;
+        }
+    }
+    w.end_obj()
+}
+
+fn write_barrier(w: W<'_>, b: &BarrierRecord) -> std::io::Result<()> {
+    w.begin_obj()?;
+    w.key("t")?;
+    w.str("barrier")?;
+    w.key("round")?;
+    w.uint(b.round)?;
+    w.key("decisions")?;
+    w.uint(b.decisions)?;
+    w.key("reconfigs")?;
+    w.uint(b.reconfigs)?;
+    w.key("fleet")?;
+    write_gpu3(w, &b.fleet)?;
+    w.key("available")?;
+    write_gpu3(w, &b.available)?;
+    w.key("fired")?;
+    w.begin_arr()?;
+    for &f in &b.fired {
+        w.bool(f)?;
+    }
+    w.end_arr()?;
+    w.key("colo")?;
+    match &b.colo {
+        Some(c) => {
+            w.begin_obj()?;
+            w.key("lends")?;
+            w.uint(c.lends)?;
+            w.key("reclaims")?;
+            w.uint(c.reclaims)?;
+            w.key("shrinks")?;
+            w.uint(c.shrinks)?;
+            w.key("pauses")?;
+            w.uint(c.pauses)?;
+            w.key("resumes")?;
+            w.uint(c.resumes)?;
+            w.end_obj()?;
+        }
+        None => w.null()?,
+    }
+    w.key("jobs")?;
+    w.begin_arr()?;
+    for j in &b.jobs {
+        w.begin_obj()?;
+        w.key("id")?;
+        w.uint(j.id as u64)?;
+        w.key("phase")?;
+        w.str(phase_name(j.phase))?;
+        w.key("arrival_bits")?;
+        w.uint(j.arrival.to_bits())?;
+        w.key("arrived")?;
+        w.bool(j.arrived)?;
+        w.key("preemptions")?;
+        w.uint(j.preemptions)?;
+        w.key("degraded")?;
+        w.bool(j.degraded)?;
+        w.key("held")?;
+        write_gpu3(w, &j.held)?;
+        w.key("started")?;
+        w.bool(j.started)?;
+        w.key("step")?;
+        match j.step {
+            Some(s) => w.uint(s)?,
+            None => w.null()?,
+        }
+        w.key("restart_count")?;
+        match j.restart_count {
+            Some(r) => w.uint(r)?,
+            None => w.null()?,
+        }
+        w.key("ckpt")?;
+        write_opt_str(w, j.ckpt.as_deref())?;
+        w.key("paused_ckpt")?;
+        write_opt_str(w, j.paused_ckpt.as_deref())?;
+        w.key("placement")?;
+        match &j.placement {
+            Some(p) => write_placement(w, p)?,
+            None => w.null()?,
+        }
+        w.key("pending")?;
+        w.begin_arr()?;
+        for p in &j.pending {
+            write_placement(w, p)?;
+        }
+        w.end_arr()?;
+        w.key("acc_steps")?;
+        w.uint(j.acc_steps)?;
+        w.key("acc_reconfigs")?;
+        w.uint(j.acc_reconfigs)?;
+        w.key("acc_evals")?;
+        w.uint(j.acc_evals)?;
+        w.key("acc_recoveries")?;
+        w.uint(j.acc_recoveries)?;
+        w.key("acc_replayed")?;
+        w.uint(j.acc_replayed)?;
+        w.key("first_bits")?;
+        match j.first_loss {
+            Some(l) => w.uint(l.to_bits() as u64)?,
+            None => w.null()?,
+        }
+        w.end_obj()?;
+    }
+    w.end_arr()?;
+    w.end_obj()
+}
+
+// ---------------------------------------------------------------------------
+// parsing
+// ---------------------------------------------------------------------------
+
+type P<'a, 'b> = &'b mut PullParser<'a>;
+
+fn is_null(p: P<'_, '_>) -> Result<bool> {
+    if matches!(p.peek_event()?, JsonEvent::Null) {
+        p.next_event()?;
+        return Ok(true);
+    }
+    Ok(false)
+}
+
+fn parse_gpu3(p: P<'_, '_>) -> Result<GpuVector> {
+    p.expect_arr_start()?;
+    let mut v = [0usize; 3];
+    let mut i = 0;
+    while p.arr_next()? {
+        anyhow::ensure!(i < 3, "gpu vector longer than 3");
+        v[i] = p.expect_usize()?;
+        i += 1;
+    }
+    anyhow::ensure!(i == 3, "gpu vector shorter than 3");
+    Ok(v)
+}
+
+fn parse_opt_str(p: P<'_, '_>) -> Result<Option<String>> {
+    if is_null(p)? {
+        return Ok(None);
+    }
+    Ok(Some(p.expect_str()?.into_owned()))
+}
+
+fn parse_placement(p: P<'_, '_>) -> Result<Placement> {
+    p.expect_arr_start()?;
+    let mut executors = Vec::new();
+    while p.arr_next()? {
+        p.expect_obj_start()?;
+        let (mut device, mut ranks) = (None, None);
+        while let Some(k) = p.next_key()? {
+            match k.as_ref() {
+                "dev" => device = Some(DeviceType::parse(p.expect_str()?.as_ref())?),
+                "ranks" => {
+                    let mut v = Vec::new();
+                    p.expect_arr_start()?;
+                    while p.arr_next()? {
+                        v.push(p.expect_usize()?);
+                    }
+                    ranks = Some(v);
+                }
+                _ => p.skip_value()?,
+            }
+        }
+        executors.push(ExecutorSpec {
+            device: device.ok_or_else(|| anyhow!("placement executor missing dev"))?,
+            est_ranks: ranks.ok_or_else(|| anyhow!("placement executor missing ranks"))?,
+        });
+    }
+    Ok(Placement { executors })
+}
+
+fn parse_phase(s: &str) -> Result<JobPhase> {
+    Ok(match s {
+        "pending" => JobPhase::Pending,
+        "queued" => JobPhase::Queued,
+        "running" => JobPhase::Running,
+        "finished" => JobPhase::Finished,
+        other => bail!("unknown job phase '{other}'"),
+    })
+}
+
+fn parse_change(s: &str) -> Result<AllocationChange> {
+    Ok(match s {
+        "started" => AllocationChange::Started,
+        "reallocated" => AllocationChange::Reallocated,
+        "preempted" => AllocationChange::Preempted,
+        other => bail!("unknown allocation change '{other}'"),
+    })
+}
+
+fn parse_record(line: &[u8]) -> Result<Record> {
+    let mut p = PullParser::new(line);
+    p.expect_obj_start()?;
+    let tag = match p.next_key()? {
+        Some(k) if k.as_ref() == "t" => p.expect_str()?.into_owned(),
+        _ => bail!("record does not lead with a 't' tag"),
+    };
+    let rec = match tag.as_str() {
+        "meta" => Record::Meta(parse_meta(&mut p)?),
+        "submit" => Record::Submit(parse_submit(&mut p)?),
+        "barrier" => Record::Barrier(parse_barrier(&mut p)?),
+        other => Record::Event(parse_event(other, &mut p)?),
+    };
+    p.expect_done()?;
+    Ok(rec)
+}
+
+fn parse_meta(p: P<'_, '_>) -> Result<JournalMeta> {
+    let mut version = None;
+    let mut fleet = None;
+    let mut decide_every = None;
+    let mut job_threads = 1usize;
+    let mut full_rebuild = false;
+    let mut straggler_factor = None;
+    let mut colocate = None;
+    let mut faults = Vec::new();
+    while let Some(k) = p.next_key()? {
+        match k.as_ref() {
+            "version" => version = Some(p.expect_u64()?),
+            "fleet" => fleet = Some(parse_gpu3(p)?),
+            "decide_every" => decide_every = Some(p.expect_u64()?),
+            "job_threads" => job_threads = p.expect_usize()?,
+            "full_rebuild" => full_rebuild = p.expect_bool()?,
+            "straggler_bits" => {
+                if !is_null(p)? {
+                    straggler_factor = Some(f64::from_bits(p.expect_u64()?));
+                }
+            }
+            "colocate" => {
+                if !is_null(p)? {
+                    p.expect_obj_start()?;
+                    let (mut static_mode, mut demand) = (false, Vec::new());
+                    while let Some(ck) = p.next_key()? {
+                        match ck.as_ref() {
+                            "static" => static_mode = p.expect_bool()?,
+                            "demand" => {
+                                p.expect_arr_start()?;
+                                while p.arr_next()? {
+                                    demand.push(p.expect_usize()?);
+                                }
+                            }
+                            _ => p.skip_value()?,
+                        }
+                    }
+                    colocate = Some(ColoMeta { static_mode, demand });
+                }
+            }
+            "faults" => {
+                p.expect_arr_start()?;
+                while p.arr_next()? {
+                    faults.push(p.expect_str()?.into_owned());
+                }
+            }
+            _ => p.skip_value()?,
+        }
+    }
+    let version = version.ok_or_else(|| anyhow!("meta missing version"))?;
+    anyhow::ensure!(
+        version == JOURNAL_VERSION,
+        "journal version {version} unsupported (this build reads {JOURNAL_VERSION})"
+    );
+    Ok(JournalMeta {
+        version,
+        fleet: fleet.ok_or_else(|| anyhow!("meta missing fleet"))?,
+        decide_every: decide_every.ok_or_else(|| anyhow!("meta missing decide_every"))?,
+        job_threads,
+        full_rebuild,
+        straggler_factor,
+        colocate,
+        faults,
+    })
+}
+
+fn parse_submit(p: P<'_, '_>) -> Result<JournalSubmit> {
+    let mut s = JournalSubmit {
+        id: usize::MAX,
+        workload: String::new(),
+        arrival_round: 0,
+        steps: 0,
+        seed: 0,
+        max_p: 0,
+        lr: 0.0,
+        dataset_size: 0,
+        bucket_cap_bytes: 0,
+        aug_rate: 0.0,
+        run_nonce: 0,
+        d0: false,
+        d1: false,
+        d2: false,
+        sequential: false,
+        threads: 0,
+    };
+    while let Some(k) = p.next_key()? {
+        match k.as_ref() {
+            "id" => s.id = p.expect_usize()?,
+            "workload" => s.workload = p.expect_str()?.into_owned(),
+            "arrival_round" => s.arrival_round = p.expect_u64()?,
+            "steps" => s.steps = p.expect_u64()?,
+            "seed" => s.seed = p.expect_u64()?,
+            "max_p" => s.max_p = p.expect_usize()?,
+            "lr_bits" => s.lr = f32::from_bits(u32::try_from(p.expect_u64()?)?),
+            "dataset_size" => s.dataset_size = p.expect_usize()?,
+            "bucket_cap" => s.bucket_cap_bytes = p.expect_usize()?,
+            "aug_bits" => s.aug_rate = f64::from_bits(p.expect_u64()?),
+            "run_nonce" => s.run_nonce = p.expect_u64()?,
+            "d0" => s.d0 = p.expect_bool()?,
+            "d1" => s.d1 = p.expect_bool()?,
+            "d2" => s.d2 = p.expect_bool()?,
+            "sequential" => s.sequential = p.expect_bool()?,
+            "threads" => s.threads = p.expect_usize()?,
+            _ => p.skip_value()?,
+        }
+    }
+    anyhow::ensure!(s.id != usize::MAX, "submit missing id");
+    anyhow::ensure!(!s.workload.is_empty(), "submit missing workload");
+    anyhow::ensure!(s.max_p > 0, "submit missing max_p");
+    Ok(s)
+}
+
+fn parse_event(tag: &str, p: P<'_, '_>) -> Result<JournalEvent> {
+    let mut round = 0u64;
+    let mut job = 0usize;
+    let mut held = [0usize; 3];
+    let mut fleet = [0usize; 3];
+    let mut change = AllocationChange::Started;
+    let mut ckpt: Option<String> = None;
+    let mut index = 0usize;
+    let mut recoveries = 0u64;
+    let mut replayed = 0u64;
+    let mut final_gpus = [0usize; 3];
+    let mut report = RetiredReport {
+        steps_run: 0,
+        final_step: 0,
+        first_loss: f32::NAN,
+        final_loss: f32::NAN,
+        fingerprint: 0,
+        reconfigs: 0,
+        evals: 0,
+        wall_s: 0.0,
+        observed_rate: 0.0,
+        stopped_early: false,
+        recoveries: 0,
+        replayed_steps: 0,
+    };
+    while let Some(k) = p.next_key()? {
+        match k.as_ref() {
+            "round" => round = p.expect_u64()?,
+            "job" => job = p.expect_usize()?,
+            "held" => held = parse_gpu3(p)?,
+            "fleet" => fleet = parse_gpu3(p)?,
+            "change" => change = parse_change(p.expect_str()?.as_ref())?,
+            "ckpt" => ckpt = parse_opt_str(p)?,
+            "index" => index = p.expect_usize()?,
+            "recoveries" => recoveries = p.expect_u64()?,
+            "replayed" => replayed = p.expect_u64()?,
+            "final_gpus" => final_gpus = parse_gpu3(p)?,
+            "steps_run" => report.steps_run = p.expect_u64()?,
+            "final_step" => report.final_step = p.expect_u64()?,
+            "first_bits" => report.first_loss = f32::from_bits(u32::try_from(p.expect_u64()?)?),
+            "final_bits" => report.final_loss = f32::from_bits(u32::try_from(p.expect_u64()?)?),
+            "fingerprint" => report.fingerprint = p.expect_u64()?,
+            "reconfigs" => report.reconfigs = p.expect_u64()?,
+            "evals" => report.evals = p.expect_u64()?,
+            "wall_bits" => report.wall_s = f64::from_bits(p.expect_u64()?),
+            "rate_bits" => report.observed_rate = f64::from_bits(p.expect_u64()?),
+            "stopped_early" => report.stopped_early = p.expect_bool()?,
+            _ => p.skip_value()?,
+        }
+    }
+    Ok(match tag {
+        "arrive" => JournalEvent::Arrive { round, job },
+        "grant" => JournalEvent::Grant { round, job, held, change },
+        "retune" => JournalEvent::Retune { round, fleet },
+        "pause" => JournalEvent::Pause {
+            round,
+            job,
+            ckpt: ckpt.ok_or_else(|| anyhow!("pause event missing ckpt"))?,
+        },
+        "resume" => JournalEvent::Resume { round, job },
+        "fault" => JournalEvent::FaultFired { round, index },
+        "recovery" => JournalEvent::Recovery { round, job, recoveries, replayed },
+        "degraded" => JournalEvent::Degraded { round, job },
+        "retire" => {
+            report.recoveries = recoveries;
+            report.replayed_steps = replayed;
+            JournalEvent::Retire { round, job, final_gpus, ckpt, report }
+        }
+        other => bail!("unknown journal record type '{other}'"),
+    })
+}
+
+fn parse_barrier(p: P<'_, '_>) -> Result<BarrierRecord> {
+    let mut b = BarrierRecord {
+        round: 0,
+        decisions: 0,
+        reconfigs: 0,
+        fleet: [0; 3],
+        available: [0; 3],
+        fired: Vec::new(),
+        colo: None,
+        jobs: Vec::new(),
+    };
+    while let Some(k) = p.next_key()? {
+        match k.as_ref() {
+            "round" => b.round = p.expect_u64()?,
+            "decisions" => b.decisions = p.expect_u64()?,
+            "reconfigs" => b.reconfigs = p.expect_u64()?,
+            "fleet" => b.fleet = parse_gpu3(p)?,
+            "available" => b.available = parse_gpu3(p)?,
+            "fired" => {
+                p.expect_arr_start()?;
+                while p.arr_next()? {
+                    b.fired.push(p.expect_bool()?);
+                }
+            }
+            "colo" => {
+                if !is_null(p)? {
+                    p.expect_obj_start()?;
+                    let mut c = ColoCounters::default();
+                    while let Some(ck) = p.next_key()? {
+                        match ck.as_ref() {
+                            "lends" => c.lends = p.expect_u64()?,
+                            "reclaims" => c.reclaims = p.expect_u64()?,
+                            "shrinks" => c.shrinks = p.expect_u64()?,
+                            "pauses" => c.pauses = p.expect_u64()?,
+                            "resumes" => c.resumes = p.expect_u64()?,
+                            _ => p.skip_value()?,
+                        }
+                    }
+                    b.colo = Some(c);
+                }
+            }
+            "jobs" => {
+                p.expect_arr_start()?;
+                while p.arr_next()? {
+                    b.jobs.push(parse_barrier_job(p)?);
+                }
+            }
+            _ => p.skip_value()?,
+        }
+    }
+    Ok(b)
+}
+
+fn parse_barrier_job(p: P<'_, '_>) -> Result<BarrierJob> {
+    p.expect_obj_start()?;
+    let mut j = BarrierJob {
+        id: usize::MAX,
+        phase: JobPhase::Pending,
+        arrival: 0.0,
+        arrived: false,
+        preemptions: 0,
+        degraded: false,
+        held: [0; 3],
+        started: false,
+        step: None,
+        restart_count: None,
+        ckpt: None,
+        paused_ckpt: None,
+        placement: None,
+        pending: Vec::new(),
+        acc_steps: 0,
+        acc_reconfigs: 0,
+        acc_evals: 0,
+        acc_recoveries: 0,
+        acc_replayed: 0,
+        first_loss: None,
+    };
+    while let Some(k) = p.next_key()? {
+        match k.as_ref() {
+            "id" => j.id = p.expect_usize()?,
+            "phase" => j.phase = parse_phase(p.expect_str()?.as_ref())?,
+            "arrival_bits" => j.arrival = f64::from_bits(p.expect_u64()?),
+            "arrived" => j.arrived = p.expect_bool()?,
+            "preemptions" => j.preemptions = p.expect_u64()?,
+            "degraded" => j.degraded = p.expect_bool()?,
+            "held" => j.held = parse_gpu3(p)?,
+            "started" => j.started = p.expect_bool()?,
+            "step" => {
+                if !is_null(p)? {
+                    j.step = Some(p.expect_u64()?);
+                }
+            }
+            "restart_count" => {
+                if !is_null(p)? {
+                    j.restart_count = Some(p.expect_u64()?);
+                }
+            }
+            "ckpt" => j.ckpt = parse_opt_str(p)?,
+            "paused_ckpt" => j.paused_ckpt = parse_opt_str(p)?,
+            "placement" => {
+                if !is_null(p)? {
+                    j.placement = Some(parse_placement(p)?);
+                }
+            }
+            "pending" => {
+                p.expect_arr_start()?;
+                while p.arr_next()? {
+                    j.pending.push(parse_placement(p)?);
+                }
+            }
+            "acc_steps" => j.acc_steps = p.expect_u64()?,
+            "acc_reconfigs" => j.acc_reconfigs = p.expect_u64()?,
+            "acc_evals" => j.acc_evals = p.expect_u64()?,
+            "acc_recoveries" => j.acc_recoveries = p.expect_u64()?,
+            "acc_replayed" => j.acc_replayed = p.expect_u64()?,
+            "first_bits" => {
+                if !is_null(p)? {
+                    j.first_loss = Some(f32::from_bits(u32::try_from(p.expect_u64()?)?));
+                }
+            }
+            _ => p.skip_value()?,
+        }
+    }
+    anyhow::ensure!(j.id != usize::MAX, "barrier job missing id");
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("easyscale_journal_{name}"));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_meta() -> JournalMeta {
+        JournalMeta {
+            version: JOURNAL_VERSION,
+            fleet: [2, 1, 1],
+            decide_every: 3,
+            job_threads: 1,
+            full_rebuild: false,
+            straggler_factor: Some(2.5),
+            colocate: Some(ColoMeta { static_mode: false, demand: vec![0, 2, 1] }),
+            faults: vec!["0,2,kill,0".into(), "0,4,io,2".into()],
+        }
+    }
+
+    fn sample_submit(id: usize) -> JournalSubmit {
+        JournalSubmit {
+            id,
+            workload: "Bert".into(),
+            arrival_round: id as u64,
+            steps: 12,
+            seed: 42 + id as u64,
+            max_p: 4,
+            lr: 0.05,
+            dataset_size: 8192,
+            bucket_cap_bytes: 1 << 20,
+            aug_rate: 0.02,
+            run_nonce: 7,
+            d0: true,
+            d1: true,
+            d2: true,
+            sequential: true,
+            threads: 0,
+        }
+    }
+
+    fn sample_barrier(round: u64) -> BarrierRecord {
+        BarrierRecord {
+            round,
+            decisions: 2,
+            reconfigs: 1,
+            fleet: [2, 1, 1],
+            available: [0, 1, 0],
+            fired: vec![true, false],
+            colo: Some(ColoCounters { lends: 1, reclaims: 2, shrinks: 1, pauses: 0, resumes: 0 }),
+            jobs: vec![
+                BarrierJob {
+                    id: 0,
+                    phase: JobPhase::Running,
+                    arrival: 0.0,
+                    arrived: true,
+                    preemptions: 1,
+                    degraded: false,
+                    held: [2, 0, 1],
+                    started: true,
+                    step: Some(6),
+                    restart_count: Some(2),
+                    ckpt: Some("job0_b3.ckpt".into()),
+                    paused_ckpt: None,
+                    placement: Some(Placement::homogeneous(DeviceType::V100, 2, 4)),
+                    pending: vec![Placement::heterogeneous(&[
+                        (DeviceType::V100, 2),
+                        (DeviceType::T4, 2),
+                    ])],
+                    acc_steps: 6,
+                    acc_reconfigs: 1,
+                    acc_evals: 0,
+                    acc_recoveries: 1,
+                    acc_replayed: 1,
+                    first_loss: Some(4.25),
+                },
+                BarrierJob {
+                    id: 1,
+                    phase: JobPhase::Queued,
+                    arrival: 1.0,
+                    arrived: true,
+                    preemptions: 0,
+                    degraded: true,
+                    held: [0, 0, 0],
+                    started: true,
+                    step: None,
+                    restart_count: None,
+                    ckpt: None,
+                    paused_ckpt: Some("job1_round2.ckpt".into()),
+                    placement: None,
+                    pending: Vec::new(),
+                    acc_steps: 3,
+                    acc_reconfigs: 0,
+                    acc_evals: 0,
+                    acc_recoveries: 0,
+                    acc_replayed: 0,
+                    first_loss: Some(f32::NAN),
+                },
+            ],
+        }
+    }
+
+    fn write_sample(dir: &Path) -> Journal {
+        let mut j = Journal::create(dir).unwrap();
+        j.append_meta(&sample_meta()).unwrap();
+        j.append_submit(&sample_submit(0)).unwrap();
+        j.append_submit(&sample_submit(1)).unwrap();
+        j.append_event(&JournalEvent::Arrive { round: 0, job: 0 }).unwrap();
+        j.append_event(&JournalEvent::Grant {
+            round: 0,
+            job: 0,
+            held: [2, 0, 0],
+            change: AllocationChange::Started,
+        })
+        .unwrap();
+        j.append_barrier(&sample_barrier(0)).unwrap();
+        j.append_event(&JournalEvent::Retune { round: 3, fleet: [1, 1, 1] }).unwrap();
+        j.append_event(&JournalEvent::Pause { round: 3, job: 1, ckpt: "job1_round2.ckpt".into() })
+            .unwrap();
+        j.append_event(&JournalEvent::FaultFired { round: 3, index: 0 }).unwrap();
+        j.append_event(&JournalEvent::Recovery { round: 3, job: 0, recoveries: 1, replayed: 1 })
+            .unwrap();
+        j.append_barrier(&sample_barrier(3)).unwrap();
+        j.append_event(&JournalEvent::Retire {
+            round: 5,
+            job: 0,
+            final_gpus: [2, 0, 1],
+            ckpt: Some("job0_final.ckpt".into()),
+            report: RetiredReport {
+                steps_run: 12,
+                final_step: 12,
+                first_loss: 4.25,
+                final_loss: 1.5,
+                fingerprint: 0xDEAD_BEEF_CAFE_F00D,
+                reconfigs: 2,
+                evals: 0,
+                wall_s: 1.25,
+                observed_rate: 9.6,
+                stopped_early: false,
+                recoveries: 1,
+                replayed_steps: 1,
+            },
+        })
+        .unwrap();
+        j.sync().unwrap();
+        j
+    }
+
+    #[test]
+    fn roundtrip_full_journal() {
+        let dir = tmp_dir("roundtrip");
+        write_sample(&dir);
+        let loaded = Journal::load(&dir).unwrap();
+        assert_eq!(loaded.meta, sample_meta());
+        assert_eq!(loaded.submits, vec![sample_submit(0), sample_submit(1)]);
+        assert_eq!(loaded.barrier_offsets.len(), 2);
+        assert!(loaded.dropped_tail.is_none());
+        let b = loaded.barrier.expect("last barrier");
+        let want = sample_barrier(3);
+        assert_eq!(b.round, want.round);
+        assert_eq!(b.fired, want.fired);
+        assert_eq!(b.colo, want.colo);
+        // float fields travel as bits: NaN survives, exact values match
+        assert_eq!(b.jobs[0], want.jobs[0]);
+        assert_eq!(b.jobs[1].id, 1);
+        assert!(b.jobs[1].first_loss.unwrap().is_nan());
+        assert_eq!(b.jobs[1].paused_ckpt.as_deref(), Some("job1_round2.ckpt"));
+        // the retire after the last barrier is an *event*, past resume_offset
+        assert!(matches!(loaded.events.last(), Some(JournalEvent::Retire { job: 0, .. })));
+        assert_eq!(loaded.resume_offset, loaded.barrier_offsets[1]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_with_prefix_intact() {
+        let dir = tmp_dir("torn");
+        write_sample(&dir);
+        let path = dir.join(JOURNAL_FILE);
+        let bytes = std::fs::read(&path).unwrap();
+        // cut the final record in half (well past the last barrier)
+        let cut = bytes.len() - 20;
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let loaded = Journal::load(&dir).unwrap();
+        assert!(loaded.dropped_tail.is_some(), "torn tail must be reported");
+        assert_eq!(loaded.barrier_offsets.len(), 2, "complete prefix unaffected");
+        assert_eq!(loaded.submits.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The satellite property test: truncating a valid journal at *every*
+    /// byte offset must yield either a typed error (no complete meta yet)
+    /// or a loadable prefix whose barriers are a prefix of the original's
+    /// — never a panic, never an invented record.
+    #[test]
+    fn truncate_at_every_byte_offset_never_panics() {
+        let dir = tmp_dir("every_byte");
+        write_sample(&dir);
+        let path = dir.join(JOURNAL_FILE);
+        let bytes = std::fs::read(&path).unwrap();
+        let full = Journal::load(&dir).unwrap();
+        crate::util::logging::set_level(crate::util::logging::Level::Error);
+        for cut in 0..=bytes.len() {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            match Journal::load(&dir) {
+                Ok(prefix) => {
+                    assert!(
+                        prefix.barrier_offsets.len() <= full.barrier_offsets.len(),
+                        "cut {cut}: more barriers than the original"
+                    );
+                    for (a, b) in prefix.barrier_offsets.iter().zip(&full.barrier_offsets) {
+                        assert_eq!(a, b, "cut {cut}: barrier offsets must be a prefix");
+                    }
+                    assert!(
+                        prefix.resume_offset <= cut as u64,
+                        "cut {cut}: resume offset past the data"
+                    );
+                    assert_eq!(prefix.meta, full.meta, "cut {cut}: meta must be intact");
+                }
+                Err(e) => {
+                    // only the typed no-meta error is acceptable: every
+                    // longer prefix ends in at most one torn record
+                    assert!(
+                        matches!(
+                            e.downcast_ref::<JournalError>(),
+                            Some(JournalError::MissingMeta { .. })
+                        ),
+                        "cut {cut}: unexpected error: {e:#}"
+                    );
+                }
+            }
+        }
+        crate::util::logging::set_level(crate::util::logging::Level::Info);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_before_the_tail_is_a_typed_error() {
+        let dir = tmp_dir("corrupt");
+        write_sample(&dir);
+        let path = dir.join(JOURNAL_FILE);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines[1] = "{\"t\":\"submit\",garbage";
+        std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+        let err = Journal::load(&dir).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<JournalError>(), Some(JournalError::Corrupt { line: 2, .. })),
+            "want Corrupt at record 2, got: {err:#}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_append_truncates_to_the_resume_offset() {
+        let dir = tmp_dir("reopen");
+        write_sample(&dir);
+        let loaded = Journal::load(&dir).unwrap();
+        let mut j = Journal::open_append(&dir, loaded.resume_offset).unwrap();
+        j.append_event(&JournalEvent::Arrive { round: 9, job: 1 }).unwrap();
+        j.append_barrier(&sample_barrier(9)).unwrap();
+        j.sync().unwrap();
+        let reloaded = Journal::load(&dir).unwrap();
+        // the post-barrier retire event was truncated away; the new
+        // timeline continues from the old resume point
+        assert!(!reloaded
+            .events
+            .iter()
+            .any(|e| matches!(e, JournalEvent::Retire { .. })));
+        assert_eq!(reloaded.barrier_offsets.len(), 3);
+        assert_eq!(reloaded.barrier.unwrap().round, 9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Appends reuse one long-lived writer + buffer: once warmed, the
+    /// scratch buffer must never grow again. (The heap-allocation pin
+    /// itself lives in `benches/durability.rs`, which installs the
+    /// counting global allocator.)
+    #[test]
+    fn steady_state_appends_reuse_one_buffer() {
+        let dir = tmp_dir("alloc");
+        let mut j = Journal::create(&dir).unwrap();
+        j.append_meta(&sample_meta()).unwrap();
+        let ev = JournalEvent::Grant {
+            round: 1,
+            job: 0,
+            held: [2, 0, 1],
+            change: AllocationChange::Reallocated,
+        };
+        // warm the buffer past its high-water mark
+        for _ in 0..16 {
+            j.append_event(&ev).unwrap();
+        }
+        let warm = j.buf.lock().capacity();
+        for _ in 0..64 {
+            j.append_event(&ev).unwrap();
+        }
+        assert_eq!(j.buf.lock().capacity(), warm, "steady-state appends must reuse the buffer");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

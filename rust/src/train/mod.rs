@@ -8,12 +8,18 @@ pub mod checkpoint;
 pub mod cluster;
 pub mod colocate;
 pub mod determinism;
+pub mod journal;
 pub mod session;
 pub mod trainer;
 
 pub use checkpoint::{Checkpoint, CheckpointError};
 pub use cluster::{
     reference_fingerprint, ClusterJob, ClusterJobReport, ClusterReport, ClusterRuntime,
+    ResumeStats,
+};
+pub use journal::{
+    BarrierJob, BarrierRecord, ColoCounters, ColoMeta, Journal, JournalError, JournalEvent,
+    JournalMeta, JournalSubmit, LoadedJournal, RetiredReport,
 };
 pub use colocate::{Colocation, ColocationReport, PartitionMode, PauseRecord, ServingTrace};
 pub use determinism::Determinism;

@@ -562,6 +562,38 @@ impl<'e> ElasticSession<'e> {
             .ok_or_else(|| anyhow!("no rollback point: no snapshot, checkpoint, or initial state"))
     }
 
+    /// Mini-batches run since build (or since the last
+    /// [`Self::rebase_progress`]) — what `report().steps_run` will say.
+    pub fn steps_run(&self) -> u64 {
+        self.trainer.state.step - self.start_step
+    }
+
+    /// Reset the `steps_run` baseline to the current step and zero the
+    /// segment counters (evals, recoveries, replayed steps). The journal
+    /// resume path silently replays a session from its checkpoint to the
+    /// barrier step before handing it back to the cluster driver; the
+    /// replayed steps — and any evals they triggered — already count in
+    /// the journaled accumulators, so the live report must start from the
+    /// barrier, not the checkpoint.
+    pub fn rebase_progress(&mut self) {
+        self.start_step = self.trainer.state.step;
+        self.evals = 0;
+        self.recoveries = 0;
+        self.replayed_steps = 0;
+    }
+
+    /// Switch on fault recovery after build — the journal resume path
+    /// builds sessions with recovery off so injected faults cannot
+    /// mis-fire mid-replay, then arms the journaled mode once the trainer
+    /// stands at the barrier step. Takes the rollback-of-last-resort
+    /// snapshot now, exactly as [`SessionBuilder::build`] would have.
+    pub fn arm_recovery(&mut self, mode: RecoveryMode) {
+        self.recovery = mode;
+        if mode != RecoveryMode::Off && self.initial_state.is_none() {
+            self.initial_state = Some(self.trainer.snapshot());
+        }
+    }
+
     /// Recoveries performed (one per rollback, including mid-replay ones).
     pub fn recoveries(&self) -> u64 {
         self.recoveries

@@ -7,4 +7,5 @@ pub mod bench;
 pub mod json;
 pub mod logging;
 pub mod propcheck;
+pub mod retry;
 pub mod rng;

@@ -1,0 +1,130 @@
+//! Bounded-exponential-backoff retry for durability-plane I/O.
+//!
+//! Journal appends and durability-barrier checkpoints go through
+//! [`with_retry`] so a transient storage hiccup (simulated by
+//! [`crate::exec::FaultKind::IoTransient`]) costs a few bounded sleeps
+//! instead of a failed run. The budget is deliberately small: storage
+//! that stays down past it is *not* retried forever — the cluster
+//! runtime degrades the affected job through the checkpointed-pause
+//! path instead (see `train/cluster.rs`).
+
+use std::time::Duration;
+
+/// A bounded retry budget: `attempts` total tries, exponential backoff
+/// from `base_delay` doubling per retry, clamped at `max_delay`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts (first try included). At least 1 is always made.
+    pub attempts: u32,
+    pub base_delay: Duration,
+    pub max_delay: Duration,
+}
+
+impl Default for RetryPolicy {
+    /// 3 attempts, 1ms -> 2ms backoff (capped 50ms): enough to ride out
+    /// a transient blip without stalling a decide barrier noticeably.
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 3,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(50),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The sleep before retry number `attempt + 1` (i.e. after failed
+    /// attempt index `attempt`, 0-based): `base * 2^attempt`, clamped.
+    pub fn delay_for(&self, attempt: u32) -> Duration {
+        let factor = 1u64
+            .checked_shl(attempt)
+            .unwrap_or(u64::MAX)
+            .min(u32::MAX as u64) as u32;
+        self.base_delay.saturating_mul(factor).min(self.max_delay)
+    }
+}
+
+/// Run `op` until it succeeds or the budget is spent, sleeping the
+/// policy's backoff between tries. `op` receives the 0-based attempt
+/// index; the last error is returned verbatim when the budget runs out.
+pub fn with_retry<T, E, F>(policy: &RetryPolicy, mut op: F) -> Result<T, E>
+where
+    F: FnMut(u32) -> Result<T, E>,
+{
+    let mut attempt = 0u32;
+    loop {
+        match op(attempt) {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                attempt += 1;
+                if attempt >= policy.attempts.max(1) {
+                    return Err(e);
+                }
+                std::thread::sleep(policy.delay_for(attempt - 1));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A zero-sleep policy so tests never wait on the clock.
+    fn fast(attempts: u32) -> RetryPolicy {
+        RetryPolicy { attempts, base_delay: Duration::ZERO, max_delay: Duration::ZERO }
+    }
+
+    #[test]
+    fn backoff_doubles_and_clamps() {
+        let p = RetryPolicy {
+            attempts: 8,
+            base_delay: Duration::from_millis(2),
+            max_delay: Duration::from_millis(9),
+        };
+        assert_eq!(p.delay_for(0), Duration::from_millis(2));
+        assert_eq!(p.delay_for(1), Duration::from_millis(4));
+        assert_eq!(p.delay_for(2), Duration::from_millis(8));
+        assert_eq!(p.delay_for(3), Duration::from_millis(9), "clamped at max");
+        assert_eq!(p.delay_for(63), Duration::from_millis(9));
+        assert_eq!(p.delay_for(64), Duration::from_millis(9), "shift overflow saturates");
+    }
+
+    #[test]
+    fn succeeds_after_transient_failures() {
+        let mut calls = 0u32;
+        let out: Result<u32, &str> = with_retry(&fast(3), |attempt| {
+            calls += 1;
+            assert_eq!(attempt + 1, calls, "attempt index is 0-based");
+            if attempt < 2 {
+                Err("transient")
+            } else {
+                Ok(42)
+            }
+        });
+        assert_eq!(out, Ok(42));
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn exhaustion_returns_the_last_error() {
+        let mut calls = 0u32;
+        let out: Result<(), String> = with_retry(&fast(3), |attempt| {
+            calls += 1;
+            Err(format!("down ({attempt})"))
+        });
+        assert_eq!(out, Err("down (2)".to_string()));
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn at_least_one_attempt_even_with_zero_budget() {
+        let mut calls = 0u32;
+        let out: Result<u8, &str> = with_retry(&fast(0), |_| {
+            calls += 1;
+            Ok(7)
+        });
+        assert_eq!(out, Ok(7));
+        assert_eq!(calls, 1);
+    }
+}

@@ -1,0 +1,325 @@
+//! The durability plane end to end: a journaled multi-job cluster run is
+//! killed at **every** decide-epoch barrier in turn and restarted with
+//! `ClusterRuntime::resume` — and every restarted run must land **bitwise**
+//! on the undisturbed reference (per-job fingerprints, step counts, and
+//! the bytes of every final checkpoint), with kills, delays, torn
+//! checkpoints, transient I/O outages, and serving co-location retunes all
+//! in flight. Plus the degradation path: a storage outage that outlasts
+//! the retry budget must checkpoint-pause the job instead of crashing the
+//! run, and the job must still finish bitwise once storage returns.
+//!
+//! Cluster-level tests honor `EASYSCALE_CHAOS_JOB_THREADS` (CI runs them
+//! under the round-robin and concurrent drivers).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use easyscale::exec::{Fault, FaultKind, FaultPlan};
+use easyscale::model::workload::Workload;
+use easyscale::runtime::Engine;
+use easyscale::sched::JobPhase;
+use easyscale::train::{
+    reference_fingerprint, ClusterJob, ClusterRuntime, Colocation, Determinism, Journal,
+    JournalEvent, ServingTrace, TrainConfig,
+};
+
+#[cfg(not(feature = "pjrt"))]
+fn tiny() -> Option<Engine> {
+    Some(Engine::synthetic("tiny").unwrap())
+}
+
+#[cfg(feature = "pjrt")]
+fn tiny() -> Option<Engine> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !d.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/tiny not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(&d).unwrap())
+}
+
+/// Cluster driver selector for CI: 1 = round-robin (default), 0/N =
+/// concurrent runner threads.
+fn chaos_job_threads() -> usize {
+    std::env::var("EASYSCALE_CHAOS_JOB_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Journal directories are flat (journal.jsonl + checkpoints).
+fn copy_dir(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+}
+
+const STEPS: [u64; 3] = [10, 8, 6];
+const ARRIVALS: [u64; 3] = [0, 1, 3];
+
+/// A heterogeneous 3-job mix: distinct workloads, budgets, arrivals, and
+/// seeds, so nothing about the schedule is symmetric.
+fn job(i: usize) -> ClusterJob {
+    let workload = [Workload::Bert, Workload::Electra, Workload::NeuMf][i];
+    let cfg = TrainConfig {
+        seed: 42 + i as u64,
+        determinism: Determinism::D1_D2,
+        ..TrainConfig::new(4)
+    };
+    ClusterJob { workload, cfg, steps: STEPS[i] }
+}
+
+/// The full chaos menu: an in-flight kill, a persistent-ish delay, a torn
+/// durability checkpoint (so one barrier's checkpoint is unloadable and
+/// resume must fall back to silent replay from scratch), and a transient
+/// I/O outage *within* the retry budget (so the barrier write succeeds on
+/// retry without degrading anyone).
+fn fault_plan() -> Arc<FaultPlan> {
+    Arc::new(FaultPlan::new(vec![
+        Fault { executor: 1, step: 3, kind: FaultKind::Kill },
+        Fault { executor: 0, step: 4, kind: FaultKind::Delay(6.0) },
+        Fault { executor: 0, step: 5, kind: FaultKind::TornCheckpoint },
+        Fault { executor: 0, step: 4, kind: FaultKind::IoTransient(2) },
+    ]))
+}
+
+fn build<'e>(engine: &'e Engine, dir: &Path) -> ClusterRuntime<'e> {
+    let mut rt = ClusterRuntime::new(engine, [2, 1, 1], 2)
+        .with_job_threads(chaos_job_threads())
+        .with_colocation(Colocation::new(ServingTrace::new(vec![0, 2, 0])))
+        .with_faults(fault_plan())
+        .with_journal(dir.to_path_buf())
+        .unwrap();
+    for i in 0..3 {
+        rt.submit_at(job(i), ARRIVALS[i]);
+    }
+    rt
+}
+
+/// The acceptance matrix: run a journaled reference to completion, then
+/// for every barrier the journal recorded, simulate a whole-process crash
+/// right after that barrier's fsync (truncate a copy of the journal there,
+/// delete the final checkpoints the crashed process never wrote) and
+/// resume. Every resumed run must reproduce the reference bit for bit.
+#[test]
+fn kill_at_every_decide_epoch_resumes_bitwise() {
+    let Some(engine) = tiny() else { return };
+    let base = tmp_dir("easyscale_durability_matrix");
+    let ref_dir = base.join("reference");
+
+    let mut rt = build(&engine, &ref_dir);
+    let ref_report = rt.run().unwrap();
+    assert!(
+        ref_report.total_recoveries() >= 1,
+        "the kill must actually fire in the reference run: {ref_report:?}"
+    );
+    let mut want_fp = [0u64; 3];
+    for i in 0..3 {
+        want_fp[i] = reference_fingerprint(&engine, &job(i).cfg, STEPS[i]).unwrap();
+        assert_eq!(
+            ref_report.jobs[i].report.fingerprint, want_fp[i],
+            "job {i}: journaled chaos run drifted from its sequential reference"
+        );
+        assert_eq!(ref_report.jobs[i].report.steps_run, STEPS[i]);
+    }
+    let ref_final: Vec<Vec<u8>> = (0..3)
+        .map(|i| std::fs::read(ref_dir.join(format!("job{i}_final.ckpt"))).unwrap())
+        .collect();
+
+    let loaded = Journal::load(&ref_dir).unwrap();
+    assert!(loaded.dropped_tail.is_none(), "clean shutdown must leave no torn tail");
+    assert!(
+        loaded.barrier_offsets.len() >= 3,
+        "the matrix needs several decide epochs, got {}",
+        loaded.barrier_offsets.len()
+    );
+
+    for (k, cut) in loaded.barrier_offsets.iter().enumerate() {
+        let crash = base.join(format!("crash_{k}"));
+        copy_dir(&ref_dir, &crash);
+        // the crash: everything past barrier k's fsync is gone
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(crash.join("journal.jsonl"))
+            .unwrap()
+            .set_len(*cut)
+            .unwrap();
+        let truncated = Journal::load(&crash).unwrap();
+        assert_eq!(truncated.resume_offset, *cut, "cut {k}: barrier k must be the resume point");
+        let barrier = truncated.barrier.expect("truncation keeps barrier k");
+        // strictness: the crashed process never wrote the final checkpoints
+        // of still-running jobs — resume must not be rescued by files from
+        // the reference run's future
+        for j in &barrier.jobs {
+            if j.phase != JobPhase::Finished {
+                let _ = std::fs::remove_file(crash.join(format!("job{}_final.ckpt", j.id)));
+            }
+        }
+
+        let mut rt = ClusterRuntime::resume(&engine, &crash).unwrap();
+        let stats = rt.resume_stats().expect("a resumed runtime reports its stats");
+        let report = rt.run().unwrap();
+        for i in 0..3 {
+            assert_eq!(
+                report.jobs[i].report.fingerprint, want_fp[i],
+                "cut {k}: job {i} drifted after crash-restart (stats: {stats:?})"
+            );
+            assert_eq!(
+                report.jobs[i].report.steps_run, STEPS[i],
+                "cut {k}: job {i} lost or duplicated steps"
+            );
+            assert_eq!(
+                std::fs::read(crash.join(format!("job{i}_final.ckpt"))).unwrap(),
+                ref_final[i],
+                "cut {k}: job {i} final checkpoint bytes diverged from the reference"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// A mid-journal torn tail (the crash landed *inside* a barrier append,
+/// before the first barrier completed) degenerates to a cold restart: the
+/// journal keeps the prologue, drops the torn record, and resume re-runs
+/// the whole schedule — still bitwise.
+#[test]
+fn torn_first_barrier_resumes_from_scratch_bitwise() {
+    let Some(engine) = tiny() else { return };
+    let base = tmp_dir("easyscale_durability_torn");
+    let ref_dir = base.join("reference");
+
+    let mut rt = build(&engine, &ref_dir);
+    let ref_report = rt.run().unwrap();
+    let loaded = Journal::load(&ref_dir).unwrap();
+
+    let crash = base.join("crash");
+    copy_dir(&ref_dir, &crash);
+    // chop mid-way through the first barrier record
+    let cut = loaded.barrier_offsets[0] - 7;
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(crash.join("journal.jsonl"))
+        .unwrap()
+        .set_len(cut)
+        .unwrap();
+    let truncated = Journal::load(&crash).unwrap();
+    assert!(truncated.dropped_tail.is_some(), "the partial barrier is a torn tail");
+    assert!(truncated.barrier.is_none(), "no durable barrier survived");
+    for i in 0..3 {
+        let _ = std::fs::remove_file(crash.join(format!("job{i}_final.ckpt")));
+    }
+
+    let mut rt = ClusterRuntime::resume(&engine, &crash).unwrap();
+    let report = rt.run().unwrap();
+    for i in 0..3 {
+        assert_eq!(
+            report.jobs[i].report.fingerprint, ref_report.jobs[i].report.fingerprint,
+            "job {i}: cold restart drifted from the reference"
+        );
+        assert_eq!(
+            std::fs::read(crash.join(format!("job{i}_final.ckpt"))).unwrap(),
+            std::fs::read(ref_dir.join(format!("job{i}_final.ckpt"))).unwrap(),
+            "job {i}: cold-restart final checkpoint bytes diverged"
+        );
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// A storage outage longer than the retry budget must not crash the run:
+/// the job is marked Degraded and checkpoint-paused, the journal records
+/// both, and once the (one-shot) outage passes the scheduler re-grants
+/// the job, which finishes bitwise on its reference.
+#[test]
+fn storage_outage_past_retry_budget_degrades_then_finishes_bitwise() {
+    let Some(engine) = tiny() else { return };
+    let dir = tmp_dir("easyscale_durability_degrade");
+    let reference = reference_fingerprint(&engine, &job(0).cfg, STEPS[0]).unwrap();
+
+    let plan = Arc::new(FaultPlan::new(vec![Fault {
+        executor: 0,
+        step: 2,
+        kind: FaultKind::IoTransient(10),
+    }]));
+    let mut rt = ClusterRuntime::new(&engine, [2, 0, 0], 2)
+        .with_job_threads(chaos_job_threads())
+        .with_faults(plan.clone())
+        .with_journal(dir.clone())
+        .unwrap();
+    rt.submit(job(0));
+    let report = rt.run().unwrap();
+
+    assert_eq!(plan.pending(), 0, "the outage must fire at a durability barrier");
+    assert_eq!(
+        report.jobs[0].report.fingerprint, reference,
+        "degrade + checkpointed-pause + re-grant drifted from the reference"
+    );
+    assert_eq!(report.jobs[0].report.steps_run, STEPS[0], "no step may be lost to the outage");
+
+    let loaded = Journal::load(&dir).unwrap();
+    assert!(
+        loaded.events.iter().any(|e| matches!(e, JournalEvent::Degraded { job: 0, .. })),
+        "the journal must record the degradation: {:?}",
+        loaded.events
+    );
+    assert!(
+        loaded.events.iter().any(|e| matches!(e, JournalEvent::Pause { job: 0, .. })),
+        "a past-budget outage checkpoint-pauses the job: {:?}",
+        loaded.events
+    );
+    let grants = loaded
+        .events
+        .iter()
+        .filter(|e| matches!(e, JournalEvent::Grant { job: 0, .. }))
+        .count();
+    assert!(
+        grants >= 2,
+        "the job must be re-granted after the outage (initial + re-grant), got {grants}: {:?}",
+        loaded.events
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Fired-fault flags round-trip through the journal: the barrier persists
+/// exactly the flags the live plan reports, and a plan rebuilt from the
+/// journal's own CSV lines + flags neither re-fires consumed faults nor
+/// disarms pending ones.
+#[test]
+fn fired_fault_flags_roundtrip_through_the_journal() {
+    let Some(engine) = tiny() else { return };
+    let dir = tmp_dir("easyscale_durability_fired");
+
+    let plan = Arc::new(FaultPlan::new(vec![
+        Fault { executor: 0, step: 1, kind: FaultKind::Kill },
+        Fault { executor: 0, step: 100, kind: FaultKind::Kill },
+    ]));
+    let mut rt = ClusterRuntime::new(&engine, [2, 0, 0], 2)
+        .with_job_threads(chaos_job_threads())
+        .with_faults(plan.clone())
+        .with_journal(dir.clone())
+        .unwrap();
+    rt.submit(job(2));
+    rt.run().unwrap();
+
+    let fired = plan.fired_snapshot();
+    assert_eq!(fired, vec![true, false], "exactly the due kill fires");
+
+    let loaded = Journal::load(&dir).unwrap();
+    let barrier = loaded.barrier.expect("a completed run leaves a barrier");
+    assert_eq!(barrier.fired, fired, "the barrier must persist the live fired flags");
+
+    let restored = FaultPlan::from_csv_lines(&loaded.meta.faults).unwrap();
+    restored.restore_fired(&barrier.fired);
+    assert_eq!(restored.fired_snapshot(), fired);
+    assert_eq!(restored.pending(), 1, "the future kill stays armed after restore");
+    assert_eq!(restored.fire(0, 1), None, "the consumed kill must not re-fire");
+    std::fs::remove_dir_all(&dir).ok();
+}
